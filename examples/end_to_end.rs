@@ -1,0 +1,80 @@
+//! End-to-end driver (DESIGN.md §validation): exercises every layer of the
+//! stack on a real small workload and reports the paper's headline metric.
+//!
+//! Pipeline proven here:
+//!   L1 Pallas kernels → L2 JAX graph → `make artifacts` (HLO text)
+//!   → Rust PJRT runtime → CREST coordinator (Algorithm 1)
+//!   → full-vs-budgeted training with loss curves → relative error + speedup.
+//!
+//! Writes a JSON transcript (reports/end_to_end.json) recorded in
+//! EXPERIMENTS.md.
+//!
+//!   cargo run --release --example end_to_end -- [--variant cifar10-proxy]
+
+use anyhow::{Context, Result};
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coordinator::run_experiment;
+use crest::data::{generate, SynthSpec};
+use crest::metrics::relative_error_pct;
+use crest::report::Table;
+use crest::runtime::Runtime;
+use crest::util::cli::Cli;
+use crest::util::json::Json;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("end_to_end", "full-stack training driver")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("seed", "1", "seed")
+        .opt("epochs-full", "50", "full-run epochs")
+        .opt("out", "reports/end_to_end.json", "JSON transcript path")
+        .parse(&args)?;
+    let variant = p.str("variant");
+    let seed = p.u64("seed")?;
+
+    let rt = Runtime::load(std::path::Path::new("artifacts"), &variant)?;
+    let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
+    println!("== end-to-end: {variant}, n={} ==", splits.train.n());
+
+    let mut transcript = Vec::new();
+    let mut table = Table::new(&[
+        "method", "budget", "test acc", "rel err %", "backprops", "wall (s)", "loss curve",
+    ]);
+    let mut full_acc = 0.0f32;
+    for (method, budget) in [
+        (MethodKind::Full, 1.0f32),
+        (MethodKind::Random, 0.1),
+        (MethodKind::Crest, 0.1),
+    ] {
+        let mut cfg = ExperimentConfig::preset(&variant, method, seed)?;
+        cfg.epochs_full = p.usize("epochs-full")?;
+        cfg.budget_frac = budget;
+        let rep = run_experiment(&rt, &splits, cfg)?;
+        if method == MethodKind::Full {
+            full_acc = rep.final_test_acc;
+        }
+        let curve: Vec<String> =
+            rep.history.iter().map(|h| format!("{:.2}", h.test_loss)).collect();
+        println!("loss curve [{}]: {}", rep.method, curve.join(" "));
+        table.row(&[
+            rep.method.clone(),
+            format!("{:.0}%", budget * 100.0),
+            format!("{:.4}", rep.final_test_acc),
+            format!("{:.2}", relative_error_pct(rep.final_test_acc * 100.0, full_acc * 100.0)),
+            format!("{}", rep.backprops),
+            format!("{:.2}", rep.total_secs),
+            format!("{} pts", rep.history.len()),
+        ]);
+        transcript.push(rep.to_json());
+    }
+    print!("{}", table.render());
+
+    let out = p.str("out");
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, Json::Arr(transcript).to_string_pretty())?;
+    println!("transcript written to {out}");
+    Ok(())
+}

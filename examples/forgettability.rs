@@ -1,0 +1,82 @@
+//! Forgettability analysis (paper §5.2 "Importance of Examples"): relate
+//! what CREST selects to ground-truth example structure — difficulty,
+//! sub-cluster redundancy and label noise are known for the synthetic
+//! proxies, so the paper's Fig. 5/7 story can be checked directly.
+//!
+//!   cargo run --release --example forgettability
+
+use anyhow::{Context, Result};
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coordinator::run_experiment;
+use crest::data::{generate, SynthSpec};
+use crest::report::Table;
+use crest::runtime::Runtime;
+use crest::util::cli::Cli;
+use crest::util::stats;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("forgettability", "selection vs example structure")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("seed", "1", "seed")
+        .parse(&args)?;
+    let variant = p.str("variant");
+    let seed = p.u64("seed")?;
+    let rt = Runtime::load(std::path::Path::new("artifacts"), &variant)?;
+    let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
+    let ds = &splits.train;
+
+    let cfg = ExperimentConfig::preset(&variant, MethodKind::Crest, seed)?;
+    let rep = run_experiment(&rt, &splits, cfg)?;
+
+    // selection counts vs ground-truth difficulty quartiles
+    println!("# selection frequency by ground-truth difficulty quartile");
+    let mut order: Vec<usize> = (0..ds.n()).collect();
+    order.sort_by(|&a, &b| ds.difficulty[a].partial_cmp(&ds.difficulty[b]).unwrap());
+    let mut table = Table::new(&["difficulty quartile", "mean selections", "mean difficulty"]);
+    for q in 0..4 {
+        let lo = q * ds.n() / 4;
+        let hi = (q + 1) * ds.n() / 4;
+        let sel: Vec<f32> =
+            order[lo..hi].iter().map(|&i| rep.selection_counts[i] as f32).collect();
+        let diff: Vec<f32> = order[lo..hi].iter().map(|&i| ds.difficulty[i]).collect();
+        table.row(&[
+            format!("Q{} ({})", q + 1, ["easiest", "easy", "hard", "hardest"][q]),
+            format!("{:.2}", stats::mean(&sel)),
+            format!("{:.3}", stats::mean(&diff)),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // forgettability of selected examples over time (Fig. 5 series)
+    println!("\n# mean final forgettability of selected examples over training");
+    let third = rep.forget_of_selected.len().max(1) / 3;
+    for (name, range) in [
+        ("early third", 0..third),
+        ("middle third", third..2 * third),
+        ("final third", 2 * third..rep.forget_of_selected.len()),
+    ] {
+        let scores: Vec<f32> =
+            rep.forget_of_selected[range].iter().map(|&(_, s)| s).collect();
+        println!("{name:>14}: {:.3}", stats::mean(&scores));
+    }
+
+    // exclusion vs ground truth
+    println!("\n# who gets excluded as 'learned'?");
+    if rep.excluded_indices.is_empty() {
+        println!("(nothing excluded)");
+    } else {
+        let exc_diff: Vec<f32> =
+            rep.excluded_indices.iter().map(|&i| ds.difficulty[i]).collect();
+        let noisy = rep.excluded_indices.iter().filter(|&&i| ds.is_noisy[i]).count();
+        println!(
+            "excluded {} examples; mean difficulty {:.3} (dataset mean {:.3}); {} noisy",
+            rep.excluded_indices.len(),
+            stats::mean(&exc_diff),
+            stats::mean(&ds.difficulty),
+            noisy
+        );
+    }
+    Ok(())
+}

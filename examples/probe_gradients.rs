@@ -1,0 +1,87 @@
+//! Diagnostic: bias/variance of mini-batch gradient estimators at several
+//! checkpoints along training (the measurement behind paper Figs. 1c/1d/9).
+//!
+//! Compares, against the full-data gradient:
+//!   random-m     unweighted random mini-batches of size m
+//!   random-r     unweighted random subsets of size r (large-batch ref)
+//!   crest-mb     weighted facility-location mini-batch coresets from
+//!                random subsets of size r
+//!
+//! Usage: cargo run --release --example probe_gradients -- [--variant V]
+
+use anyhow::{Context, Result};
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coreset::facility;
+use crest::coreset::MiniBatchCoreset;
+use crest::data::{generate, SynthSpec};
+use crest::metrics::gradprobe;
+use crest::model::init_params;
+use crest::opt::LrSchedule;
+use crest::runtime::Runtime;
+use crest::train::TrainState;
+use crest::util::cli::Cli;
+use crest::util::rng::Rng;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Cli::new("probe_gradients", "gradient bias/variance probes")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("artifacts", "artifacts", "artifact root")
+        .opt("seed", "1", "seed")
+        .opt("samples", "24", "mini-batches per estimate")
+        .parse(&args)?;
+    let variant = p.str("variant");
+    let seed = p.u64("seed")?;
+    let rt = Runtime::load(std::path::Path::new(&p.str("artifacts")), &variant)?;
+    let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
+    let ds = &splits.train;
+    let cfg = ExperimentConfig::preset(&variant, MethodKind::Random, seed)?;
+    let k_samples = p.usize("samples")?;
+
+    let m = rt.man.m;
+    let r = rt.man.r;
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;
+    let sched = LrSchedule::paper_default(cfg.base_lr);
+    let total = 800usize;
+
+    println!("{:>6} {:>12} {:>12} {:>12} {:>12} {:>12}", "step",
+             "rand-m bias", "rand-m var", "crest bias", "crest var", "|∇L|");
+    let checkpoints = [0usize, 50, 150, 400, 799];
+    let mut next_cp = 0;
+    for step in 0..total {
+        if next_cp < checkpoints.len() && step == checkpoints[next_cp] {
+            next_cp += 1;
+            let full = gradprobe::full_gradient(&rt, &state.params, ds)?;
+            let mut rng_a = rng.split();
+            let rand_stats = gradprobe::bias_variance(&rt, &state.params, ds, &full,
+                k_samples, || {
+                    let idx = rng_a.sample_indices(ds.n(), m);
+                    (idx, vec![1.0; m])
+                })?;
+            let mut rng_b = rng.split();
+            // crest mini-batch coresets: fresh V_p each draw
+            let mut crest_sampler = || -> (Vec<usize>, Vec<f32>) {
+                let pool = rng_b.sample_indices(ds.n(), r);
+                let (x, y) = ds.batch(&pool);
+                let (gl, al, _) = rt.grad_embed(&state.params, &x, &y).unwrap();
+                let sel = facility::facility_location_prod(&al, &gl, m);
+                let mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
+                (mb.idx, mb.gamma)
+            };
+            let crest_stats = gradprobe::bias_variance(&rt, &state.params, ds, &full,
+                k_samples, &mut crest_sampler)?;
+            println!(
+                "{:>6} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>12.4}",
+                step, rand_stats.bias, rand_stats.variance,
+                crest_stats.bias, crest_stats.variance, rand_stats.full_norm
+            );
+        }
+        // advance training with random batches
+        let idx = rng.sample_indices(ds.n(), m);
+        let lr = sched.lr_at(step, total);
+        state.step_batch(&rt, ds, &idx, &vec![1.0; m], lr, cfg.weight_decay)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart — the smallest complete use of the public API:
+//! load a variant's AOT artifacts, generate its proxy corpus, train with
+//! CREST under a 10% budget, and print the result.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::{Context, Result};
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coordinator::run_experiment;
+use crest::data::{generate, SynthSpec};
+use crest::runtime::Runtime;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+
+    // 1. runtime: compile the HLO artifacts once (PJRT CPU client)
+    let rt = Runtime::load(std::path::Path::new("artifacts"), variant)?;
+    println!("{}", rt.describe());
+
+    // 2. data: the variant's synthetic proxy corpus
+    let splits = generate(&SynthSpec::preset(variant, seed).context("preset")?);
+    println!(
+        "data: {} train / {} val / {} test, {} classes",
+        splits.train.n(),
+        splits.val.n(),
+        splits.test.n(),
+        splits.train.classes
+    );
+
+    // 3. train with CREST at a 10% backprop budget
+    let cfg = ExperimentConfig::preset(variant, MethodKind::Crest, seed)?;
+    let report = run_experiment(&rt, &splits, cfg)?;
+    println!(
+        "CREST: test acc {:.4} in {} steps ({} coreset updates, {} examples excluded)",
+        report.final_test_acc, report.steps, report.n_selection_updates, report.n_excluded
+    );
+
+    // 4. compare against the Random baseline at the same budget
+    let cfg = ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let random = run_experiment(&rt, &splits, cfg)?;
+    println!("Random: test acc {:.4} in {} steps", random.final_test_acc, random.steps);
+    Ok(())
+}

@@ -1,0 +1,211 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + manifest.json.
+
+HLO text (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts [--variant cifar10-proxy]
+
+Layout produced:
+    artifacts/<variant>/{train_step,grad_embed,eval_chunk,hess_probe,
+                         select_greedy}.hlo.txt
+    artifacts/<variant>/manifest.json   # shapes + dtypes the Rust side needs
+    artifacts/manifest.json             # index of variants
+
+Python runs exactly once (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import VARIANTS, VariantSpec
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_f32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _spec_i32(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def artifact_plan(spec: VariantSpec):
+    """(name, fn, arg_specs, io_doc) for every artifact of one variant."""
+    p, d, m, r, e, c = (
+        spec.p_dim, spec.d_in, spec.m, spec.r, spec.eval_chunk, spec.classes,
+    )
+    h = spec.hidden[-1]  # penultimate width (selection embedding)
+    return [
+        (
+            "train_step",
+            model.make_train_step(spec),
+            [_spec_f32(p), _spec_f32(p), _spec_f32(m, d), _spec_i32(m),
+             _spec_f32(m), _spec_f32(), _spec_f32()],
+            {
+                "inputs": [
+                    {"name": "params", "dtype": "f32", "shape": [p]},
+                    {"name": "momentum", "dtype": "f32", "shape": [p]},
+                    {"name": "x", "dtype": "f32", "shape": [m, d]},
+                    {"name": "y", "dtype": "i32", "shape": [m]},
+                    {"name": "gamma", "dtype": "f32", "shape": [m]},
+                    {"name": "lr", "dtype": "f32", "shape": []},
+                    {"name": "wd", "dtype": "f32", "shape": []},
+                ],
+                "outputs": [
+                    {"name": "params", "dtype": "f32", "shape": [p]},
+                    {"name": "momentum", "dtype": "f32", "shape": [p]},
+                    {"name": "mean_loss", "dtype": "f32", "shape": []},
+                    {"name": "per_ex_loss", "dtype": "f32", "shape": [m]},
+                ],
+            },
+        ),
+        (
+            "grad_embed",
+            model.make_grad_embed(spec),
+            [_spec_f32(p), _spec_f32(r, d), _spec_i32(r)],
+            {
+                "inputs": [
+                    {"name": "params", "dtype": "f32", "shape": [p]},
+                    {"name": "x", "dtype": "f32", "shape": [r, d]},
+                    {"name": "y", "dtype": "i32", "shape": [r]},
+                ],
+                "outputs": [
+                    {"name": "grad_l", "dtype": "f32", "shape": [r, c]},
+                    {"name": "act", "dtype": "f32", "shape": [r, h]},
+                    {"name": "per_ex_loss", "dtype": "f32", "shape": [r]},
+                ],
+            },
+        ),
+        (
+            "eval_chunk",
+            model.make_eval_chunk(spec),
+            [_spec_f32(p), _spec_f32(e, d), _spec_i32(e)],
+            {
+                "inputs": [
+                    {"name": "params", "dtype": "f32", "shape": [p]},
+                    {"name": "x", "dtype": "f32", "shape": [e, d]},
+                    {"name": "y", "dtype": "i32", "shape": [e]},
+                ],
+                "outputs": [
+                    {"name": "sum_loss", "dtype": "f32", "shape": []},
+                    {"name": "n_correct", "dtype": "f32", "shape": []},
+                    {"name": "per_ex_loss", "dtype": "f32", "shape": [e]},
+                    {"name": "correct", "dtype": "f32", "shape": [e]},
+                ],
+            },
+        ),
+        (
+            "hess_probe",
+            model.make_hess_probe(spec),
+            [_spec_f32(p), _spec_f32(r, d), _spec_i32(r), _spec_f32(p)],
+            {
+                "inputs": [
+                    {"name": "params", "dtype": "f32", "shape": [p]},
+                    {"name": "x", "dtype": "f32", "shape": [r, d]},
+                    {"name": "y", "dtype": "i32", "shape": [r]},
+                    {"name": "z", "dtype": "f32", "shape": [p]},
+                ],
+                "outputs": [
+                    {"name": "hz", "dtype": "f32", "shape": [p]},
+                    {"name": "grad", "dtype": "f32", "shape": [p]},
+                    {"name": "mean_loss", "dtype": "f32", "shape": []},
+                ],
+            },
+        ),
+        (
+            "select_greedy",
+            model.make_select_greedy(spec),
+            [_spec_f32(r, c), _spec_f32(r, h)],
+            {
+                "inputs": [
+                    {"name": "grad_l", "dtype": "f32", "shape": [r, c]},
+                    {"name": "act", "dtype": "f32", "shape": [r, h]},
+                ],
+                "outputs": [
+                    {"name": "indices", "dtype": "i32", "shape": [m]},
+                    {"name": "weights", "dtype": "f32", "shape": [m]},
+                ],
+            },
+        ),
+    ]
+
+
+def variant_manifest(spec: VariantSpec, artifacts: dict) -> dict:
+    return {
+        "name": spec.name,
+        "d_in": spec.d_in,
+        "hidden": list(spec.hidden),
+        "classes": spec.classes,
+        "m": spec.m,
+        "r": spec.r,
+        "eval_chunk": spec.eval_chunk,
+        "p_dim": spec.p_dim,
+        "momentum": spec.momentum,
+        "layer_shapes": [[i, o] for i, o in spec.layer_shapes],
+        "artifacts": artifacts,
+    }
+
+
+def lower_variant(spec: VariantSpec, out_dir: str, verbose: bool = True) -> dict:
+    vdir = os.path.join(out_dir, spec.name)
+    os.makedirs(vdir, exist_ok=True)
+    artifacts = {}
+    for name, fn, arg_specs, io_doc in artifact_plan(spec):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(vdir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": fname, **io_doc}
+        if verbose:
+            print(f"  {spec.name}/{fname}: {len(text)} chars", file=sys.stderr)
+    manifest = variant_manifest(spec, artifacts)
+    with open(os.path.join(vdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variant", action="append", default=None,
+                    help="variant name(s); default: all")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    names = args.variant or list(VARIANTS)
+    os.makedirs(args.out_dir, exist_ok=True)
+    index = {"variants": []}
+    for name in names:
+        if name not in VARIANTS:
+            ap.error(f"unknown variant {name!r}; known: {sorted(VARIANTS)}")
+        lower_variant(VARIANTS[name], args.out_dir, verbose=not args.quiet)
+        index["variants"].append(name)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(index, f, indent=2)
+    if not args.quiet:
+        print(f"wrote {len(names)} variants to {args.out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,70 @@
+"""Model/dataset variant specifications shared by the AOT pipeline.
+
+Each variant mirrors one of the paper's dataset/model pairs (Table 4),
+scaled to the CPU-only proxy substrate described in DESIGN.md §2/§6.
+The Rust coordinator reads the same numbers from artifacts/<v>/manifest.json,
+so this file is the single source of truth for shapes.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """One model/dataset variant: shapes fixed at AOT-lowering time."""
+
+    name: str
+    d_in: int  # input feature dimension
+    hidden: List[int]  # hidden layer widths
+    classes: int  # number of classes
+    m: int  # mini-batch (coreset) size — paper's m
+    r: int  # random-subset size — paper's r
+    eval_chunk: int  # examples per eval_chunk artifact call
+    momentum: float = 0.9
+
+    @property
+    def layer_shapes(self) -> List[tuple]:
+        """(in, out) for every dense layer, last layer included."""
+        dims = [self.d_in] + list(self.hidden) + [self.classes]
+        return [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+
+    @property
+    def p_dim(self) -> int:
+        """Total flat parameter count (weights + biases)."""
+        return sum(i * o + o for i, o in self.layer_shapes)
+
+    def param_offsets(self):
+        """[(w_off, w_shape, b_off, b_len)] per layer into the flat vector."""
+        out, off = [], 0
+        for i, o in self.layer_shapes:
+            w_off = off
+            off += i * o
+            b_off = off
+            off += o
+            out.append((w_off, (i, o), b_off, o))
+        return out
+
+
+# The four paper datasets, proxied (DESIGN.md §6). r follows the paper's
+# r = 0.01·n (vision) and r ≈ 0.005·n (SNLI) scaling against our proxy n.
+VARIANTS = {
+    "cifar10-proxy": VariantSpec(
+        name="cifar10-proxy", d_in=64, hidden=[128, 64], classes=10,
+        m=32, r=256, eval_chunk=512,
+    ),
+    "cifar100-proxy": VariantSpec(
+        name="cifar100-proxy", d_in=96, hidden=[256, 128], classes=20,
+        m=32, r=256, eval_chunk=512,
+    ),
+    "tinyimagenet-proxy": VariantSpec(
+        name="tinyimagenet-proxy", d_in=128, hidden=[256, 128], classes=40,
+        m=32, r=320, eval_chunk=512,
+    ),
+    "snli-proxy": VariantSpec(
+        name="snli-proxy", d_in=96, hidden=[256], classes=3,
+        m=32, r=128, eval_chunk=512,
+    ),
+}
+
+DEFAULT_VARIANT = "cifar10-proxy"

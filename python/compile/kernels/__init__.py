@@ -1,0 +1,8 @@
+# L1: Pallas kernels for the paper's selection hot-spots (interpret=True).
+from .pairwise import pairwise_sqdist
+from .pairwise_prod import pairwise_gradprod
+from .lastlayer import lastlayer_grad
+from .fl_gains import fl_gains
+from . import ref
+
+__all__ = ["pairwise_sqdist", "pairwise_gradprod", "lastlayer_grad", "fl_gains", "ref"]

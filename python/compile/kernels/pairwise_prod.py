@@ -1,0 +1,64 @@
+"""Pallas kernel: pairwise distances between last-layer *weight* gradients.
+
+The last-layer weight gradient of example i factorizes as the outer product
+`a_i ⊗ g_i` (penultimate activation × logit gradient). Its pairwise squared
+Frobenius distance factorizes too:
+
+    ||a1 g1^T - a2 g2^T||_F^2
+        = |a1|^2|g1|^2 + |a2|^2|g2|^2 - 2 (a1·a2)(g1·g2)
+
+so the full distance matrix needs only two MXU-shaped Gram matrices
+(A A^T and G G^T) and an elementwise combine — never the h·c-dimensional
+outer products. This is the selection metric CREST/CRAIG use for deep
+networks: unlike plain (p - y), it distinguishes examples whose class-error
+profiles coincide but whose representations differ.
+
+Tiling matches pairwise.py: 2-D grid of (T, T) output tiles; each program
+holds one row panel and one column panel of both A and G in VMEM
+(4·(64·(h+c))·4 B ≈ 172 KiB for h=128, c=40). interpret=True on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 64
+
+
+def _prod_kernel(ar_ref, gr_ref, ac_ref, gc_ref, o_ref):
+    ar, gr = ar_ref[...], gr_ref[...]  # (T, h), (T, c) row panels
+    ac, gc = ac_ref[...], gc_ref[...]  # (T, h), (T, c) column panels
+    sq_r = jnp.sum(ar * ar, axis=1) * jnp.sum(gr * gr, axis=1)  # |a|^2|g|^2
+    sq_c = jnp.sum(ac * ac, axis=1) * jnp.sum(gc * gc, axis=1)
+    aa = jnp.dot(ar, ac.T, preferred_element_type=jnp.float32)  # MXU
+    gg = jnp.dot(gr, gc.T, preferred_element_type=jnp.float32)  # MXU
+    d = sq_r[:, None] + sq_c[None, :] - 2.0 * aa * gg
+    o_ref[...] = jnp.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def pairwise_gradprod(a: jnp.ndarray, g: jnp.ndarray, tile: int = TILE) -> jnp.ndarray:
+    """D[r, r] with D[i,j] = ||a_i g_i^T - a_j g_j^T||_F^2."""
+    r, h = a.shape
+    r2, c = g.shape
+    if r != r2:
+        raise ValueError(f"row mismatch {r} vs {r2}")
+    t = min(tile, r)
+    if r % t != 0:
+        raise ValueError(f"rows {r} not divisible by tile {t}")
+    grid = (r // t, r // t)
+    return pl.pallas_call(
+        _prod_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, h), lambda i, j: (i, 0)),
+            pl.BlockSpec((t, c), lambda i, j: (i, 0)),
+            pl.BlockSpec((t, h), lambda i, j: (j, 0)),
+            pl.BlockSpec((t, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(a, g, a, g)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a reference implementation here written in
+plain jax.numpy with no Pallas, no tiling, no tricks. pytest asserts
+allclose(kernel, ref) across shape/dtype sweeps (hypothesis).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist_ref(g: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distance matrix D[i,j] = ||g_i - g_j||^2.
+
+    The facility-location objective (paper Eq. 5/11) needs pairwise normed
+    gradient differences; squared distance preserves the argmin structure
+    and avoids the sqrt on the hot path.
+    """
+    diff = g[:, None, :] - g[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def lastlayer_grad_ref(logits: jnp.ndarray, y_onehot: jnp.ndarray):
+    """Per-example softmax cross-entropy loss and last-layer gradient p - y.
+
+    This is the paper's g^L (gradient of the loss w.r.t. the last layer's
+    pre-softmax input), the low-dimensional selection embedding of
+    Katharopoulos & Fleuret (2018) used by Eq. (11).
+    """
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.sum(y_onehot * logz, axis=-1)
+    grad = jnp.exp(logz) - y_onehot
+    return loss, grad
+
+
+def pairwise_gradprod_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the last-layer weight-gradient distance: materializes the
+    outer products a_i g_i^T explicitly (O(r^2·h·c), test-only)."""
+    outer = a[:, :, None] * g[:, None, :]  # (r, h, c)
+    flat = outer.reshape(a.shape[0], -1)
+    diff = flat[:, None, :] - flat[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def fl_gains_ref(dist: jnp.ndarray, mind: jnp.ndarray) -> jnp.ndarray:
+    """Marginal facility-location gains for every candidate.
+
+    gains[j] = sum_i max(mind[i] - D[j,i], 0): how much adding candidate j
+    reduces the total min-distance of the ground set. One lazy-greedy step
+    evaluated for all candidates at once (the selection hot loop).
+    """
+    return jnp.sum(jnp.maximum(mind[None, :] - dist, 0.0), axis=1)
+
+
+def greedy_select_ref(g: jnp.ndarray, m: int):
+    """Reference facility-location greedy over gradient embeddings.
+
+    Returns (indices[m], weights[m]) where weights[j] counts the ground-set
+    elements whose nearest selected medoid is j (the per-element step sizes
+    gamma_j of CRAIG / Eq. 4).
+    """
+    d = pairwise_sqdist_ref(g)
+    r = g.shape[0]
+    mind = jnp.full((r,), jnp.float32(1e9))
+    idxs = []
+    for _ in range(m):
+        gains = fl_gains_ref(d, mind)
+        j = int(jnp.argmax(gains))
+        idxs.append(j)
+        mind = jnp.minimum(mind, d[j])
+    idxs_arr = jnp.array(idxs, jnp.int32)
+    assign = jnp.argmin(d[idxs_arr, :], axis=0)
+    weights = jnp.zeros((m,), jnp.float32).at[assign].add(1.0)
+    return idxs_arr, weights

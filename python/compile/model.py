@@ -1,0 +1,196 @@
+"""L2: the JAX compute graph — MLP fwd/bwd over a flat parameter vector.
+
+Every function here is AOT-lowered by aot.py to one HLO-text artifact that
+the Rust coordinator executes via PJRT; Python never runs at training time.
+
+The model keeps its parameters as a single flat f32 vector so the Rust side
+can do the CREST quadratic bookkeeping (EMA gradients, Hutchinson Hessian
+diagonal, F^l(delta) evaluation — paper Eq. 6-10) with plain vector math
+and no layout knowledge beyond the manifest offsets.
+
+Artifacts per variant (shapes fixed at lowering time; see configs.py):
+
+  train_step   (params, mom, x[m,d], y[m], gamma[m], lr) ->
+               (params', mom', mean_loss, per_ex_loss[m])
+  grad_embed   (params, x[r,d], y[r]) ->
+               (gL[r,c], act[r,h], per_ex_loss[r])
+  eval_chunk   (params, x[e,d], y[e]) ->
+               (sum_loss, n_correct, per_ex_loss[e], correct[e])
+  hess_probe   (params, x[r,d], y[r], z[p]) -> (Hz[p], grad[p], mean_loss)
+  select_greedy(gL[r,c], act[r,h]) -> (indices[m], weights[m])
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import VariantSpec
+from .kernels import fl_gains, lastlayer_grad, pairwise_gradprod
+
+
+# ---------------------------------------------------------------------------
+# Parameter (un)flattening
+# ---------------------------------------------------------------------------
+
+def unflatten(spec: VariantSpec, params: jnp.ndarray):
+    """Flat f32[p_dim] -> [(W[i,o], b[o])] per dense layer."""
+    layers = []
+    for w_off, (i, o), b_off, b_len in spec.param_offsets():
+        w = params[w_off:w_off + i * o].reshape(i, o)
+        b = params[b_off:b_off + b_len]
+        layers.append((w, b))
+    return layers
+
+
+def forward(spec: VariantSpec, params: jnp.ndarray, x: jnp.ndarray):
+    """MLP forward: returns (logits[b, classes], last_hidden[b, h])."""
+    layers = unflatten(spec, params)
+    h = x
+    for w, b in layers[:-1]:
+        h = jax.nn.relu(h @ w + b)
+    w, b = layers[-1]
+    return h @ w + b, h
+
+
+def _per_example_loss(spec: VariantSpec, params, x, y):
+    """CE loss, logit gradient, and penultimate activation per example.
+
+    (grad, act) together define the last-layer weight gradient a ⊗ g — the
+    selection embedding (see kernels/pairwise_prod.py)."""
+    logits, act = forward(spec, params, x)
+    y1h = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+    loss, grad = lastlayer_grad(logits, y1h)
+    return loss, grad, act
+
+
+def weighted_mean_loss(spec: VariantSpec, params, x, y, gamma):
+    """(1/m) sum_j gamma_j * CE_j — CREST's weighted coreset objective.
+
+    Differentiable through the Pallas kernel would require a custom VJP;
+    instead the loss recomputes log-softmax with plain jnp (XLA fuses it),
+    while the *embedding* path uses the kernel. Both agree to float32 eps
+    (asserted by tests).
+    """
+    logits, _ = forward(spec, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    y1h = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+    ce = -jnp.sum(y1h * logp, axis=-1)
+    return jnp.mean(gamma * ce), ce
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points
+# ---------------------------------------------------------------------------
+
+def make_train_step(spec: VariantSpec):
+    """SGD + momentum + weight decay on the weighted loss (paper Eq. 2 with
+    gamma weights; decoupled L2 on all parameters, the standard pipeline's
+    regularizer)."""
+
+    def train_step(params, mom, x, y, gamma, lr, wd):
+        (loss, ce), grads = jax.value_and_grad(
+            lambda p: weighted_mean_loss(spec, p, x, y, gamma), has_aux=True
+        )(params)
+        grads = grads + wd * params
+        mom_new = spec.momentum * mom + grads
+        params_new = params - lr * mom_new
+        return params_new, mom_new, loss, ce
+
+    return train_step
+
+
+def make_grad_embed(spec: VariantSpec):
+    """Selection embeddings for a size-r subset (Eq. 11): logit gradients
+    g = p - y, penultimate activations a, and per-example losses."""
+
+    def grad_embed(params, x, y):
+        loss, grad, act = _per_example_loss(spec, params, x, y)
+        return grad, act, loss
+
+    return grad_embed
+
+
+def make_eval_chunk(spec: VariantSpec):
+    """Loss sum / correct count over one evaluation chunk."""
+
+    def eval_chunk(params, x, y):
+        logits, _ = forward(spec, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        y1h = jax.nn.one_hot(y, spec.classes, dtype=jnp.float32)
+        ce = -jnp.sum(y1h * logp, axis=-1)
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == y).astype(jnp.float32)
+        return jnp.sum(ce), jnp.sum(correct), ce, correct
+
+    return eval_chunk
+
+
+def make_hess_probe(spec: VariantSpec):
+    """Hutchinson probe (paper Eq. 7): Hz plus the mean gradient.
+
+    Hz = d/dw (g(w) . z) — one extra backprop through the gradient. The Rust
+    side forms diag(H) ~ E[z * Hz] over Rademacher z and applies the EMA
+    smoothing of Eq. (8)-(9).
+    """
+
+    def mean_loss(p, x, y):
+        ones = jnp.ones((x.shape[0],), jnp.float32)
+        loss, _ = weighted_mean_loss(spec, p, x, y, ones)
+        return loss
+
+    def hess_probe(params, x, y, z):
+        loss, grad = jax.value_and_grad(mean_loss)(params, x, y)
+        hz = jax.grad(lambda p: jnp.vdot(jax.grad(mean_loss)(p, x, y), z))(params)
+        return hz, grad, loss
+
+    return hess_probe
+
+
+def make_select_greedy(spec: VariantSpec):
+    """In-graph facility-location greedy (compiled alternative to host greedy).
+
+    Selects m medoids from the r gradient embeddings via lax.fori_loop,
+    calling the L1 kernels for the distance matrix and per-step gains.
+    Returns the selected indices and the CRAIG gamma weights (cluster sizes).
+    """
+
+    def select_greedy(g, a):
+        d = pairwise_gradprod(a, g)
+        r = g.shape[0]
+        big = jnp.float32(1e9)
+
+        def body(i, state):
+            mind, idxs = state
+            gains = fl_gains(d, mind)
+            j = jnp.argmax(gains).astype(jnp.int32)
+            mind = jnp.minimum(mind, d[j])
+            idxs = idxs.at[i].set(j)
+            return mind, idxs
+
+        mind0 = jnp.full((r,), big)
+        idxs0 = jnp.zeros((spec.m,), jnp.int32)
+        _, idxs = jax.lax.fori_loop(0, spec.m, body, (mind0, idxs0))
+        assign = jnp.argmin(d[idxs, :], axis=0)
+        weights = jnp.zeros((spec.m,), jnp.float32).at[assign].add(1.0)
+        return idxs, weights
+
+    return select_greedy
+
+
+# ---------------------------------------------------------------------------
+# Host-side init (mirrored in Rust; used by python tests only)
+# ---------------------------------------------------------------------------
+
+def init_params(spec: VariantSpec, key) -> jnp.ndarray:
+    """He-normal weights, zero biases, as a flat vector (test-side only).
+
+    The Rust coordinator performs its own identical-by-construction init
+    (He-normal from its PCG32); exact bit equality with this function is
+    not required — both are valid draws from the same distribution.
+    """
+    parts = []
+    for (i, o) in spec.layer_shapes:
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (i, o), jnp.float32) * jnp.sqrt(2.0 / i)
+        parts.append(w.reshape(-1))
+        parts.append(jnp.zeros((o,), jnp.float32))
+    return jnp.concatenate(parts)

@@ -1,0 +1,18 @@
+"""Shared pytest config: hypothesis profile for jit-heavy kernel tests.
+
+Kernel calls trace+compile on first execution, so wall-clock per example is
+dominated by compilation; deadlines are disabled and example counts kept
+moderate. ``derandomize=True`` keeps CI runs reproducible.
+"""
+
+import os
+import sys
+
+import hypothesis
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")

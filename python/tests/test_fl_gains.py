@@ -1,0 +1,60 @@
+"""L1 kernel vs oracle: facility-location marginal gains."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels import fl_gains, pairwise_sqdist
+from compile.kernels.ref import fl_gains_ref, pairwise_sqdist_ref
+
+
+def _case(seed, r=64, c=8):
+    rs = np.random.RandomState(seed)
+    g = rs.randn(r, c).astype(np.float32)
+    d = np.asarray(pairwise_sqdist_ref(jnp.asarray(g)))
+    mind = rs.uniform(0, 20, size=r).astype(np.float32)
+    return d, mind
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       r=st.sampled_from([16, 64, 128, 256, 320]))
+def test_matches_ref(seed, r):
+    d, mind = _case(seed, r=r)
+    got = np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind)))
+    want = np.asarray(fl_gains_ref(jnp.asarray(d), jnp.asarray(mind)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gains_nonnegative(seed):
+    d, mind = _case(seed)
+    gains = np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind)))
+    assert (gains >= 0).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gains_shrink_after_update(seed):
+    """Submodularity: once mins are tightened by any selection, every
+    candidate's marginal gain can only decrease."""
+    d, mind = _case(seed)
+    g0 = np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind)))
+    j = int(np.argmax(g0))
+    mind2 = np.minimum(mind, d[j])
+    g1 = np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind2)))
+    assert (g1 <= g0 + 1e-4).all()
+
+
+def test_selected_candidate_gain_drops_to_zero():
+    d, mind = _case(3)
+    j = int(np.argmax(np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind)))))
+    mind2 = np.minimum(mind, d[j])
+    g1 = np.asarray(fl_gains(jnp.asarray(d), jnp.asarray(mind2)))
+    assert g1[j] == pytest.approx(0.0, abs=1e-5)
+
+
+def test_zero_mind_means_zero_gain():
+    d, _ = _case(11)
+    gains = np.asarray(fl_gains(jnp.asarray(d), jnp.zeros(64, np.float32)))
+    np.testing.assert_allclose(gains, 0.0, atol=1e-6)

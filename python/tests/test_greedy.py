@@ -1,0 +1,91 @@
+"""In-graph greedy selection (select_greedy artifact) vs reference greedy."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+import numpy as _np
+
+from compile import model
+from compile.configs import VariantSpec
+from compile.kernels.ref import greedy_select_ref, pairwise_sqdist_ref
+
+
+def _tiny_spec(r=64, c=8, m=8):
+    return VariantSpec(name="t", d_in=4, hidden=[4], classes=c, m=m, r=r,
+                       eval_chunk=16)
+
+
+def _unit_act(r, h=4):
+    """Constant activations: the product metric reduces to h-scaled
+    Euclidean distance on g, so the Euclidean reference greedy applies."""
+    return jnp.ones((r, h), jnp.float32)
+
+
+def _fl_cost(g, idxs):
+    d = np.asarray(pairwise_sqdist_ref(jnp.asarray(g)))
+    return float(d[np.asarray(idxs), :].min(axis=0).sum())
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matches_reference_greedy(seed):
+    """Kernel greedy and oracle greedy may break float ties differently;
+    their facility-location objective values must agree tightly."""
+    spec = _tiny_spec()
+    g = np.random.RandomState(seed).randn(spec.r, spec.classes)
+    g = jnp.asarray(g.astype(np.float32))
+    idxs, w = jax.jit(model.make_select_greedy(spec))(g, _unit_act(spec.r))
+    idxs_ref, w_ref = greedy_select_ref(g, spec.m)
+    cost, cost_ref = _fl_cost(g, idxs), _fl_cost(g, idxs_ref)
+    assert cost <= cost_ref * 1.02 + 1e-4
+    assert float(np.asarray(w).sum()) == float(np.asarray(w_ref).sum())
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       r=st.sampled_from([16, 64, 128]),
+       m=st.sampled_from([4, 8, 16]))
+def test_weights_sum_to_r(seed, r, m):
+    """Gamma weights are cluster sizes: they partition the ground set."""
+    spec = _tiny_spec(r=r, m=m)
+    g = jnp.asarray(np.random.RandomState(seed).randn(r, spec.classes)
+                    .astype(np.float32))
+    _, w = jax.jit(model.make_select_greedy(spec))(g, _unit_act(r))
+    assert float(np.asarray(w).sum()) == float(r)
+    assert (np.asarray(w) >= 0).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_indices_in_range(seed):
+    spec = _tiny_spec()
+    g = jnp.asarray(np.random.RandomState(seed).randn(spec.r, spec.classes)
+                    .astype(np.float32))
+    idxs, _ = jax.jit(model.make_select_greedy(spec))(g, _unit_act(spec.r))
+    idxs = np.asarray(idxs)
+    assert ((idxs >= 0) & (idxs < spec.r)).all()
+
+
+def test_greedy_achieves_near_optimal_coverage():
+    """Facility-location greedy is (1 - 1/e)-optimal; on a clustered input
+    it must recover ~one medoid per cluster (full coverage)."""
+    rs = np.random.RandomState(0)
+    centers = rs.randn(8, 8).astype(np.float32) * 20
+    g = np.repeat(centers, 8, axis=0) + rs.randn(64, 8).astype(np.float32) * 0.01
+    spec = _tiny_spec(r=64, m=8)
+    idxs, w = jax.jit(model.make_select_greedy(spec))(jnp.asarray(g), _unit_act(64))
+    clusters = set(int(i) // 8 for i in np.asarray(idxs))
+    assert len(clusters) == 8  # one medoid per cluster
+    np.testing.assert_allclose(np.asarray(w), 8.0)  # balanced weights
+
+
+def test_greedy_reduces_facility_location_cost():
+    """Total min-distance after selection is tiny vs before on clustered data."""
+    rs = np.random.RandomState(1)
+    centers = rs.randn(4, 8).astype(np.float32) * 10
+    g = np.repeat(centers, 16, axis=0) + rs.randn(64, 8).astype(np.float32) * 0.05
+    spec = _tiny_spec(r=64, m=4)
+    idxs, _ = jax.jit(model.make_select_greedy(spec))(jnp.asarray(g), _unit_act(64))
+    d = np.asarray(pairwise_sqdist_ref(jnp.asarray(g)))
+    cost = d[np.asarray(idxs), :].min(axis=0).sum()
+    assert cost < 0.05 * d.mean() * 64

@@ -1,0 +1,84 @@
+"""L1 kernel vs oracle: fused softmax-CE loss + last-layer gradient."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels import lastlayer_grad
+from compile.kernels.ref import lastlayer_grad_ref
+
+
+def _cases():
+    return st.tuples(
+        st.sampled_from([2, 32, 64, 128, 256]),  # batch
+        st.sampled_from([2, 3, 10, 20, 40]),  # classes
+        st.integers(0, 2**31 - 1),
+    )
+
+
+def _random_case(b, c, seed):
+    rs = np.random.RandomState(seed)
+    logits = rs.randn(b, c).astype(np.float32) * 3.0
+    y = rs.randint(0, c, size=b)
+    y1h = np.eye(c, dtype=np.float32)[y]
+    return jnp.asarray(logits), jnp.asarray(y1h)
+
+
+@given(case=_cases())
+def test_matches_ref(case):
+    b, c, seed = case
+    logits, y1h = _random_case(b, c, seed)
+    loss, grad = lastlayer_grad(logits, y1h)
+    loss_ref, grad_ref = lastlayer_grad_ref(logits, y1h)
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(grad_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(case=_cases())
+def test_gradient_is_autodiff_gradient(case):
+    """The fused p - y must equal jax.grad of CE w.r.t. logits."""
+    b, c, seed = case
+    logits, y1h = _random_case(b, c, seed)
+
+    def ce_sum(z):
+        return -jnp.sum(y1h * jax.nn.log_softmax(z, axis=-1))
+
+    want = jax.grad(ce_sum)(logits)
+    _, got = lastlayer_grad(logits, y1h)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gradient_rows_sum_to_zero():
+    logits, y1h = _random_case(64, 10, 7)
+    _, grad = lastlayer_grad(logits, y1h)
+    np.testing.assert_allclose(np.asarray(grad).sum(axis=1), 0.0, atol=1e-5)
+
+
+def test_numerical_stability_large_logits():
+    """No overflow for logits far outside float32 exp range."""
+    logits = jnp.asarray([[500.0, -500.0, 0.0]] * 64, jnp.float32)
+    y1h = jnp.asarray([[0.0, 1.0, 0.0]] * 64, jnp.float32)
+    loss, grad = lastlayer_grad(logits, y1h)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.isfinite(np.asarray(grad)).all()
+    assert float(loss[0]) == pytest.approx(1000.0, rel=1e-4)
+
+
+def test_perfect_prediction_small_loss_and_grad():
+    c = 10
+    logits = jnp.asarray(np.eye(c, dtype=np.float32)[np.arange(64) % c] * 50.0)
+    y1h = jnp.asarray(np.eye(c, dtype=np.float32)[np.arange(64) % c])
+    loss, grad = lastlayer_grad(logits, y1h)
+    assert float(np.max(np.asarray(loss))) < 1e-4
+    assert float(np.max(np.abs(np.asarray(grad)))) < 1e-4
+
+
+def test_rejects_non_divisible_rows():
+    with pytest.raises(ValueError):
+        lastlayer_grad(jnp.zeros((100, 4)), jnp.zeros((100, 4)))

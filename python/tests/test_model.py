@@ -1,0 +1,170 @@
+"""L2 model graph: shapes, gradients, Hessian probe, training dynamics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import VARIANTS, VariantSpec
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return VariantSpec(name="tiny", d_in=6, hidden=[8], classes=3, m=8, r=16,
+                       eval_chunk=16)
+
+
+def _data(spec, n, seed=0):
+    rs = np.random.RandomState(seed)
+    x = rs.randn(n, spec.d_in).astype(np.float32)
+    y = rs.randint(0, spec.classes, size=n).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_param_offsets_cover_vector(tiny):
+    offs = tiny.param_offsets()
+    total = 0
+    for w_off, (i, o), b_off, b_len in offs:
+        assert w_off == total
+        total += i * o
+        assert b_off == total
+        total += b_len
+    assert total == tiny.p_dim
+
+
+def test_unflatten_roundtrip(tiny):
+    p = jnp.arange(tiny.p_dim, dtype=jnp.float32)
+    layers = model.unflatten(tiny, p)
+    flat = jnp.concatenate(
+        [jnp.concatenate([w.reshape(-1), b]) for w, b in layers])
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(p))
+
+
+def test_forward_shapes(tiny):
+    params = model.init_params(tiny, jax.random.PRNGKey(0))
+    x, _ = _data(tiny, 8)
+    logits, h = model.forward(tiny, params, x)
+    assert logits.shape == (8, tiny.classes)
+    assert h.shape == (8, tiny.hidden[-1])
+
+
+def test_train_step_decreases_loss(tiny):
+    params = model.init_params(tiny, jax.random.PRNGKey(0))
+    mom = jnp.zeros_like(params)
+    x, y = _data(tiny, tiny.m)
+    gamma = jnp.ones((tiny.m,), jnp.float32)
+    step = jax.jit(model.make_train_step(tiny))
+    first = None
+    for _ in range(60):
+        params, mom, loss, _ = step(params, mom, x, y, gamma, jnp.float32(0.05), jnp.float32(0.0))
+        first = float(loss) if first is None else first
+    assert float(loss) < 0.5 * first
+
+
+def test_train_step_gamma_scales_gradient(tiny):
+    """gamma=0 must freeze the parameters (weighted objective honors weights)."""
+    params = model.init_params(tiny, jax.random.PRNGKey(1))
+    mom = jnp.zeros_like(params)
+    x, y = _data(tiny, tiny.m)
+    step = jax.jit(model.make_train_step(tiny))
+    p2, _, _, _ = step(params, mom, x, y, jnp.zeros((tiny.m,)), jnp.float32(0.1), jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(p2), np.asarray(params), atol=1e-7)
+
+
+def test_grad_embed_matches_autodiff(tiny):
+    """Kernel-produced g^L equals jax.grad of CE w.r.t. logits per example."""
+    params = model.init_params(tiny, jax.random.PRNGKey(2))
+    x, y = _data(tiny, tiny.r)
+    grads, act, loss = jax.jit(model.make_grad_embed(tiny))(params, x, y)
+    assert act.shape == (tiny.r, tiny.hidden[-1])
+
+    def per_ex(p, xi, yi):
+        logits, _ = model.forward(tiny, p, xi[None])
+        return -jax.nn.log_softmax(logits)[0, yi]
+
+    for i in [0, 3, 7]:
+        logits, _ = model.forward(tiny, params, x[i][None])
+        want = jax.grad(
+            lambda z: -jax.nn.log_softmax(z)[0, y[i]])(logits)
+        np.testing.assert_allclose(np.asarray(grads[i]), np.asarray(want[0]),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(loss[i]), float(per_ex(params, x[i], y[i])),
+                                   rtol=1e-5)
+
+
+def test_eval_chunk_counts(tiny):
+    params = model.init_params(tiny, jax.random.PRNGKey(3))
+    x, y = _data(tiny, tiny.eval_chunk)
+    s, nc, per, corr = jax.jit(model.make_eval_chunk(tiny))(params, x, y)
+    np.testing.assert_allclose(float(s), float(np.asarray(per).sum()), rtol=1e-5)
+    np.testing.assert_allclose(float(nc), float(np.asarray(corr).sum()), rtol=1e-6)
+    assert set(np.unique(np.asarray(corr))) <= {0.0, 1.0}
+
+
+def test_hess_probe_grad_matches_value_and_grad(tiny):
+    params = model.init_params(tiny, jax.random.PRNGKey(4))
+    x, y = _data(tiny, tiny.r)
+    z = jnp.zeros((tiny.p_dim,), jnp.float32)
+    hz, grad, loss = jax.jit(model.make_hess_probe(tiny))(params, x, y, z)
+    # z = 0 -> Hz = 0
+    np.testing.assert_allclose(np.asarray(hz), 0.0, atol=1e-6)
+
+    def mean_loss(p):
+        ones = jnp.ones((tiny.r,), jnp.float32)
+        l, _ = model.weighted_mean_loss(tiny, p, x, y, ones)
+        return l
+
+    want = jax.grad(mean_loss)(params)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(want),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(float(loss), float(mean_loss(params)), rtol=1e-5)
+
+
+def test_hess_probe_is_linear_operator(tiny):
+    """H(az1 + bz2) = aHz1 + bHz2 — the probe really is a matvec."""
+    params = model.init_params(tiny, jax.random.PRNGKey(5))
+    x, y = _data(tiny, tiny.r)
+    rs = np.random.RandomState(0)
+    z1 = jnp.asarray(rs.randn(tiny.p_dim).astype(np.float32))
+    z2 = jnp.asarray(rs.randn(tiny.p_dim).astype(np.float32))
+    probe = jax.jit(model.make_hess_probe(tiny))
+    h1, _, _ = probe(params, x, y, z1)
+    h2, _, _ = probe(params, x, y, z2)
+    h3, _, _ = probe(params, x, y, 2.0 * z1 - 0.5 * z2)
+    np.testing.assert_allclose(np.asarray(h3),
+                               2.0 * np.asarray(h1) - 0.5 * np.asarray(h2),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_hutchinson_estimates_hessian_diagonal(tiny):
+    """E[z * Hz] over Rademacher z converges to diag(H) (paper Eq. 7)."""
+    params = model.init_params(tiny, jax.random.PRNGKey(6))
+    x, y = _data(tiny, tiny.r)
+
+    def mean_loss(p):
+        ones = jnp.ones((tiny.r,), jnp.float32)
+        l, _ = model.weighted_mean_loss(tiny, p, x, y, ones)
+        return l
+
+    exact = jnp.diag(jax.hessian(mean_loss)(params))
+    probe = jax.jit(model.make_hess_probe(tiny))
+    rs = np.random.RandomState(0)
+    est = np.zeros(tiny.p_dim, np.float64)
+    k = 300
+    for _ in range(k):
+        z = rs.choice([-1.0, 1.0], size=tiny.p_dim).astype(np.float32)
+        hz, _, _ = probe(params, x, y, jnp.asarray(z))
+        est += z * np.asarray(hz)
+    est /= k
+    # statistical agreement in norm, not element-wise
+    num = np.linalg.norm(est - np.asarray(exact))
+    den = np.linalg.norm(np.asarray(exact)) + 1e-8
+    assert num / den < 0.35
+
+
+def test_all_variant_specs_consistent():
+    for spec in VARIANTS.values():
+        assert spec.p_dim == sum(i * o + o for i, o in spec.layer_shapes)
+        assert spec.r % 64 == 0 or spec.r < 64, spec.name
+        assert spec.m <= spec.r

@@ -1,0 +1,70 @@
+"""L1 kernel vs oracle: pairwise squared-L2 distances (hypothesis sweep)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis.extra import numpy as hnp
+
+from compile.kernels import pairwise_sqdist
+from compile.kernels.ref import pairwise_sqdist_ref
+
+
+def _rows():
+    # rows must divide by the tile (64) or be below one tile
+    return st.sampled_from([4, 16, 63, 64, 128, 192, 256, 320])
+
+
+def _cols():
+    return st.sampled_from([1, 3, 10, 20, 40, 64])
+
+
+@given(r=_rows(), c=_cols(), seed=st.integers(0, 2**31 - 1))
+def test_matches_ref(r, c, seed):
+    g = np.random.RandomState(seed).randn(r, c).astype(np.float32)
+    got = np.asarray(pairwise_sqdist(jnp.asarray(g)))
+    want = np.asarray(pairwise_sqdist_ref(jnp.asarray(g)))
+    np.testing.assert_allclose(got, np.maximum(want, 0.0), rtol=1e-4, atol=1e-4)
+
+
+@given(r=_rows(), c=_cols(), seed=st.integers(0, 2**31 - 1))
+def test_symmetric_nonneg_zero_diag(r, c, seed):
+    g = np.random.RandomState(seed).randn(r, c).astype(np.float32)
+    d = np.asarray(pairwise_sqdist(jnp.asarray(g)))
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d, d.T, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-4)
+
+
+@given(
+    g=hnp.arrays(
+        np.float32,
+        st.tuples(st.sampled_from([8, 64]), st.sampled_from([2, 10])),
+        elements=st.floats(-50, 50, width=32),
+    )
+)
+def test_adversarial_values(g):
+    """Large / repeated / zero values: the a2+b2-2ab expansion must stay sane."""
+    got = np.asarray(pairwise_sqdist(jnp.asarray(g)))
+    want = np.maximum(np.asarray(pairwise_sqdist_ref(jnp.asarray(g))), 0.0)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+
+
+def test_identical_rows_distance_zero():
+    g = np.ones((64, 10), np.float32) * 3.5
+    d = np.asarray(pairwise_sqdist(jnp.asarray(g)))
+    np.testing.assert_allclose(d, 0.0, atol=1e-4)
+
+
+def test_rejects_non_divisible_rows():
+    with pytest.raises(ValueError):
+        pairwise_sqdist(jnp.zeros((100, 4)))  # 100 % 64 != 0
+
+
+def test_jit_composes():
+    """The kernel must lower inside a surrounding jit (the AOT path)."""
+    f = jax.jit(lambda g: pairwise_sqdist(g).sum())
+    g = np.random.RandomState(0).randn(64, 10).astype(np.float32)
+    assert np.isfinite(float(f(jnp.asarray(g))))

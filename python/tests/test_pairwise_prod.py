@@ -1,0 +1,63 @@
+"""L1 kernel vs oracle: last-layer weight-gradient pairwise distances."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile.kernels import pairwise_gradprod
+from compile.kernels.ref import pairwise_gradprod_ref
+
+
+def _case(r, h, c, seed):
+    rs = np.random.RandomState(seed)
+    a = rs.randn(r, h).astype(np.float32)
+    g = rs.randn(r, c).astype(np.float32)
+    return jnp.asarray(a), jnp.asarray(g)
+
+
+@given(r=st.sampled_from([4, 16, 64, 128]),
+       h=st.sampled_from([4, 64, 128]),
+       c=st.sampled_from([3, 10, 40]),
+       seed=st.integers(0, 2**31 - 1))
+def test_matches_materialized_outer_products(r, h, c, seed):
+    a, g = _case(r, h, c, seed)
+    got = np.asarray(pairwise_gradprod(a, g))
+    want = np.maximum(np.asarray(pairwise_gradprod_ref(a, g)), 0.0)
+    # float32 cancellation error scales with the |a|^2|g|^2 magnitudes
+    scale = float(want.max()) + 1.0
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-5 * scale)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_symmetric_nonneg_zero_diag(seed):
+    a, g = _case(64, 16, 5, seed)
+    d = np.asarray(pairwise_gradprod(a, g))
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d, d.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-5 * (float(d.max()) + 1.0))
+
+
+def test_identical_rows_zero_distance():
+    a = jnp.ones((64, 8), jnp.float32) * 2.0
+    g = jnp.ones((64, 4), jnp.float32) * -0.5
+    d = np.asarray(pairwise_gradprod(a, g))
+    np.testing.assert_allclose(d, 0.0, atol=1e-3)
+
+
+def test_zero_gradient_row_distance_is_other_norm():
+    """If g_i = 0 the outer product vanishes: d(i,j) = |a_j|^2 |g_j|^2."""
+    a = jnp.ones((4, 2), jnp.float32)
+    g = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [0.0, 2.0], [0.0, 0.0]], jnp.float32)
+    d = np.asarray(pairwise_gradprod(a, g))
+    assert d[0, 1] == pytest.approx(2.0, rel=1e-4)  # |a|^2=2, |g|^2=1
+    assert d[0, 2] == pytest.approx(8.0, rel=1e-4)
+    assert d[0, 3] == pytest.approx(0.0, abs=1e-5)
+
+
+def test_rejects_shape_mismatch():
+    with pytest.raises(ValueError):
+        pairwise_gradprod(jnp.zeros((8, 2)), jnp.zeros((9, 2)))
+    with pytest.raises(ValueError):
+        pairwise_gradprod(jnp.zeros((100, 2)), jnp.zeros((100, 2)))  # 100 % 64

@@ -1,0 +1,110 @@
+//! Figure 1 — the CRAIG pathology that motivates CREST.
+//!
+//! (a) test-accuracy curves: CRAIG's per-epoch 10% coresets vs Random vs
+//!     Full (CRAIG fluctuates well below Random);
+//! (b) gradient error of a stale coreset: ‖g_{t,S} − ∇L(w_t)‖ grows within
+//!     a few iterations of selection;
+//! (c,d) bias and variance of weighted mini-batches from the stale coreset
+//!     vs CREST mini-batch coresets vs random mini-batches.
+
+use anyhow::Result;
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::coordinator::sources::full_embeddings;
+use crest::coreset::{craig, facility, MiniBatchCoreset};
+use crest::metrics::gradprobe;
+use crest::model::init_params;
+use crest::opt::LrSchedule;
+use crest::runtime::Runtime;
+use crest::train::TrainState;
+use crest::util::rng::Rng;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+    let ds = &splits.train;
+
+    // ---------------- (a) accuracy curves ----------------
+    println!("# Fig 1a — test accuracy vs step (10% budget)");
+    println!("{:>8} {:>10} {:>10} {:>10}", "step", "craig", "random", "full");
+    let craig_rep = sc::cell(&rt, &splits, variant, MethodKind::Craig, seed, |_| {})?;
+    let rand_rep = sc::cell(&rt, &splits, variant, MethodKind::Random, seed, |_| {})?;
+    let full_rep = sc::cell(&rt, &splits, variant, MethodKind::Full, seed, |_| {})?;
+    for i in 0..craig_rep.history.len().min(rand_rep.history.len()) {
+        let c = &craig_rep.history[i];
+        let r = &rand_rep.history[i];
+        // full has 10x more steps; show its value at the same eval index
+        let f = full_rep.history.get(i).map(|p| p.test_acc).unwrap_or(f32::NAN);
+        println!("{:>8} {:>10.4} {:>10.4} {:>10.4}", c.step, c.test_acc, r.test_acc, f);
+    }
+
+    // ------------- (b,c,d) stale-coreset gradient quality -------------
+    println!("\n# Fig 1b/1c/1d — stale CRAIG coreset vs CREST mini-batch coresets");
+    let mut rng = Rng::new(seed ^ 0x51);
+    let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;
+    let (m, r) = (rt.man.m, rt.man.r);
+    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let sched = LrSchedule::paper_default(cfg.base_lr);
+    let total = 400usize;
+    // select a CRAIG coreset ONCE at step 0 (the stale coreset of Fig. 1b)
+    let (gl0, al0, _) = full_embeddings(&rt, &state.params, ds)?;
+    let k = ds.n() / 10;
+    let stale = craig::craig_select(&al0, &gl0, k, &mut rng);
+    let stale_gamma = craig::craig_batch_gamma(&stale);
+
+    let stale_coreset_grad = |rt: &Runtime, state: &TrainState| -> Result<Vec<f32>> {
+        // weighted coreset mean gradient, chunked over m-batches
+        let mut acc = vec![0.0f64; rt.man.p_dim];
+        let chunks = stale.idx.len() / m;
+        for c in 0..chunks {
+            let idx: Vec<usize> = stale.idx[c * m..(c + 1) * m].to_vec();
+            let gam: Vec<f32> = stale_gamma[c * m..(c + 1) * m].to_vec();
+            let g = gradprobe::batch_gradient(rt, &state.params, ds, &idx, &gam)?;
+            for (a, &v) in acc.iter_mut().zip(&g) {
+                *a += v as f64 / chunks as f64;
+            }
+        }
+        Ok(acc.into_iter().map(|v| v as f32).collect())
+    };
+
+    println!("{:>6} {:>12} {:>12} {:>12} {:>12} {:>12} {:>12}", "step",
+             "stale err", "craig bias", "craig var", "crest bias", "crest var", "|∇L|");
+    let checkpoints = [0usize, 20, 60, 150, 399];
+    let k_samples = 16;
+    let mut cp = 0;
+    for step in 0..total {
+        if cp < checkpoints.len() && step == checkpoints[cp] {
+            cp += 1;
+            let full = gradprobe::full_gradient(&rt, &state.params, ds)?;
+            let stale_err = gradprobe::gradient_error(&stale_coreset_grad(&rt, &state)?, &full);
+            let mut rng_a = rng.split();
+            let craig_stats = gradprobe::bias_variance(&rt, &state.params, ds, &full,
+                k_samples, || {
+                    // weighted mini-batch sampled from the stale coreset
+                    let picks = rng_a.sample_indices(stale.idx.len(), m);
+                    let idx: Vec<usize> = picks.iter().map(|&p| stale.idx[p]).collect();
+                    let gam: Vec<f32> = picks.iter().map(|&p| stale_gamma[p]).collect();
+                    (idx, gam)
+                })?;
+            let mut rng_b = rng.split();
+            let crest_stats = gradprobe::bias_variance(&rt, &state.params, ds, &full,
+                k_samples, || {
+                    let pool = rng_b.sample_indices(ds.n(), r);
+                    let (x, y) = ds.batch(&pool);
+                    let (gl, al, _) = rt.grad_embed(&state.params, &x, &y).unwrap();
+                    let sel = facility::facility_location_prod(&al, &gl, m);
+                    let mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
+                    (mb.idx, mb.gamma)
+                })?;
+            println!("{:>6} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>12.4} {:>12.4}",
+                     step, stale_err, craig_stats.bias, craig_stats.variance,
+                     crest_stats.bias, crest_stats.variance, craig_stats.full_norm);
+        }
+        let idx = rng.sample_indices(ds.n(), m);
+        let lr = sched.lr_at(step, total);
+        state.step_batch(&rt, ds, &idx, &vec![1.0; m], lr, cfg.weight_decay)?;
+    }
+    Ok(())
+}

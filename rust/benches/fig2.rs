@@ -1,0 +1,56 @@
+//! Figure 2 — normalized wall-clock run time vs test accuracy for CREST,
+//! Random and the baselines, per variant (the speedup headline).
+//!
+//! Two cost axes are reported: wall-clock on this substrate, and the
+//! hardware-independent backprop count (DESIGN.md §2 — on the paper's GPU
+//! testbed training dominates; on a tiny-MLP CPU substrate selection
+//! overhead weighs more, so backprops are the primary speedup metric).
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    println!("# Fig 2 — accuracy and cost, normalized to full-data training");
+    let methods = [
+        MethodKind::Full,
+        MethodKind::Random,
+        MethodKind::Crest,
+        MethodKind::Craig,
+    ];
+    for variant in sc::variants() {
+        let seed = 1;
+        let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
+        let mut table = Table::new(&[
+            "method", "test acc", "norm acc", "norm wall", "norm backprops", "backprop speedup",
+        ]);
+        let mut full: Option<(f32, f64, u64)> = None;
+        for &method in &methods {
+            // CRAIG's full-data selection is prohibitively slow on the two
+            // larger corpora — the paper makes the same scaling argument
+            // (it cannot run on SNLI at all).
+            if method == MethodKind::Craig && splits.train.n() > 10_000 {
+                table.row(&["craig".into(), "-".into(), "(does not scale)".into(),
+                            "-".into(), "-".into(), "-".into()]);
+                continue;
+            }
+            let rep = sc::cell(&rt, &splits, &variant, method, seed, |_| {})?;
+            if method == MethodKind::Full {
+                full = Some((rep.final_test_acc, rep.total_secs, rep.backprops));
+            }
+            let (fa, fs, fb) = full.expect("full runs first");
+            table.row(&[
+                rep.method.clone(),
+                format!("{:.4}", rep.final_test_acc),
+                format!("{:.3}", rep.final_test_acc / fa),
+                format!("{:.3}", rep.total_secs / fs),
+                format!("{:.3}", rep.backprops as f64 / fb as f64),
+                format!("{:.1}x", fb as f64 / rep.backprops as f64),
+            ]);
+        }
+        println!("\n## {variant}");
+        print!("{}", table.render());
+    }
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Figure 3 — CREST vs greedy mini-batch selection: how much of the
+//! per-step-greedy accuracy does CREST keep, with what fraction of its
+//! selection updates?
+//!
+//! Expected shape (paper): CREST preserves ~95-99% of greedy's accuracy
+//! with a few % of its update count.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+use crest::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    println!("# Fig 3 — normalized accuracy and update count vs greedy-per-batch ({} seeds)",
+             sc::seeds().len());
+    let mut table = Table::new(&[
+        "variant", "acc ratio (crest/greedy)", "update ratio", "crest updates", "greedy updates",
+    ]);
+    for variant in sc::variants() {
+        let (mut accs, mut upds) = (Vec::new(), Vec::new());
+        let (mut cu, mut gu) = (Vec::new(), Vec::new());
+        for seed in sc::seeds() {
+            let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
+            let crest_rep = sc::cell(&rt, &splits, &variant, MethodKind::Crest, seed, |_| {})?;
+            let greedy_rep =
+                sc::cell(&rt, &splits, &variant, MethodKind::GreedyPerBatch, seed, |_| {})?;
+            accs.push(crest_rep.final_test_acc / greedy_rep.final_test_acc.max(1e-6));
+            upds.push(crest_rep.n_selection_updates as f32
+                / greedy_rep.n_selection_updates.max(1) as f32);
+            cu.push(crest_rep.n_selection_updates as f32);
+            gu.push(greedy_rep.n_selection_updates as f32);
+        }
+        table.row(&[
+            variant.clone(),
+            format!("{:.3}", stats::mean(&accs)),
+            format!("{:.3}", stats::mean(&upds)),
+            format!("{:.0}", stats::mean(&cu)),
+            format!("{:.0}", stats::mean(&gu)),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Figure 4 — (left) cumulative coreset updates over training for CREST:
+//! updates concentrate early and flatten as the quadratic regions grow;
+//! (right) final accuracy vs total update count for the quadratic,
+//! first-order, and unsmoothed variants.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+
+    println!("# Fig 4 (left) — cumulative coreset updates vs iteration (CREST, {variant})");
+    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let total_steps = rep.steps.max(1);
+    println!("{:>10} {:>10}", "iteration", "updates");
+    let buckets = 10;
+    for b in 1..=buckets {
+        let cutoff = total_steps * b / buckets;
+        let count = rep.update_steps.iter().filter(|&&s| s < cutoff).count();
+        println!("{:>10} {:>10}", cutoff, count);
+    }
+    // T1 growth across the run
+    if !rep.t1_history.is_empty() {
+        println!("\nT1 adaptations (step, T1): {:?}", &rep.t1_history
+            [..rep.t1_history.len().min(12)]);
+    }
+
+    println!("\n# Fig 4 (right) — accuracy vs total updates, model-variant ablation");
+    let mut table = Table::new(&["variant", "test acc", "# updates"]);
+    let cells: [(&str, Box<dyn Fn(&mut crest::config::ExperimentConfig)>); 3] = [
+        ("quadratic (CREST)", Box::new(|_| {})),
+        ("first-order", Box::new(|c| c.crest.second_order = false)),
+        ("no smoothing", Box::new(|c| c.crest.smooth = false)),
+    ];
+    for (name, patch) in cells {
+        let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, patch)?;
+        table.row(&[
+            name.to_string(),
+            format!("{:.4}", rep.final_test_acc),
+            format!("{}", rep.n_selection_updates),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

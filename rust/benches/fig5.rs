@@ -1,0 +1,54 @@
+//! Figure 5 — average forgettability score of the examples CREST selects,
+//! over the course of training, with and without learned-example exclusion,
+//! against the Random baseline.
+//!
+//! Expected shape (paper): CREST's selected examples get *harder* over
+//! training (score rises); exclusion amplifies the effect; Random stays
+//! flat at the dataset mean.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+
+fn series(rep: &crest::report::RunReport, buckets: usize) -> Vec<f32> {
+    // bucket the (step, score) series into equal step ranges
+    let total = rep.steps.max(1);
+    let mut sums = vec![0.0f64; buckets];
+    let mut counts = vec![0usize; buckets];
+    for &(step, score) in &rep.forget_of_selected {
+        let b = (step * buckets / total).min(buckets - 1);
+        sums[b] += score as f64;
+        counts[b] += 1;
+    }
+    (0..buckets)
+        .map(|b| if counts[b] > 0 { (sums[b] / counts[b] as f64) as f32 } else { f32::NAN })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+
+    let crest_ex = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let crest_no =
+        sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |c| c.crest.exclude = false)?;
+    let random = sc::cell(&rt, &splits, variant, MethodKind::Random, seed, |_| {})?;
+
+    println!("# Fig 5 — mean final forgettability of selected examples ({variant})");
+    println!("{:>12} {:>16} {:>16} {:>12}", "train frac", "crest+exclude", "crest no-excl", "random");
+    let buckets = 8;
+    let (a, b, c) = (series(&crest_ex, buckets), series(&crest_no, buckets), series(&random, buckets));
+    for i in 0..buckets {
+        println!(
+            "{:>12.2} {:>16.3} {:>16.3} {:>12.3}",
+            (i as f32 + 0.5) / buckets as f32,
+            a[i],
+            b[i],
+            c[i]
+        );
+    }
+    println!("\n(excluded by end: with-exclusion {} / {} examples)",
+             crest_ex.n_excluded, splits.train.n());
+    Ok(())
+}

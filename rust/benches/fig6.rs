@@ -1,0 +1,88 @@
+//! Figure 6 — (a) the union of the P mini-batch coresets captures the full
+//! gradient better than individual coresets (errors cancel); (b) the
+//! normalized bias ε = ‖E[ξ]‖/‖∇L‖ stays < 1 for CREST across training but
+//! blows up for stale CRAIG coresets (the convergence condition of
+//! Theorem 4.1 Case 1 vs Case 2).
+
+use anyhow::Result;
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::coordinator::sources::full_embeddings;
+use crest::coreset::{craig, facility, MiniBatchCoreset};
+use crest::metrics::gradprobe;
+use crest::model::init_params;
+use crest::opt::LrSchedule;
+use crest::train::TrainState;
+use crest::util::rng::Rng;
+use crest::util::stats;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+    let ds = &splits.train;
+    let (m, r, p_dim) = (rt.man.m, rt.man.r, rt.man.p_dim);
+    let p_count = 5usize;
+
+    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let sched = LrSchedule::paper_default(cfg.base_lr);
+    let mut rng = Rng::new(seed ^ 0x66);
+    let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;
+
+    // stale CRAIG coreset selected at step 0 (for panel b)
+    let (gl0, al0, _) = full_embeddings(&rt, &state.params, ds)?;
+    let stale = craig::craig_select(&al0, &gl0, ds.n() / 10, &mut rng);
+    let stale_gamma = craig::craig_batch_gamma(&stale);
+
+    println!("# Fig 6a/6b — coreset-union error and normalized bias ε ({variant})");
+    println!("{:>6} {:>14} {:>14} {:>12} {:>12} {:>10}", "step",
+             "mean indiv err", "union err", "ε crest", "ε craig", "|∇L|");
+    let total = 400usize;
+    let checkpoints = [0usize, 20, 60, 150, 399];
+    let mut cp = 0;
+    for step in 0..total {
+        if cp < checkpoints.len() && step == checkpoints[cp] {
+            cp += 1;
+            let full = gradprobe::full_gradient(&rt, &state.params, ds)?;
+            let full_norm = stats::norm2(&full);
+            // P mini-batch coresets: individual + union errors
+            let mut union = vec![0.0f64; p_dim];
+            let mut indiv_errs = Vec::new();
+            for _ in 0..p_count {
+                let pool = rng.sample_indices(ds.n(), r);
+                let (x, y) = ds.batch(&pool);
+                let (gl, al, _) = rt.grad_embed(&state.params, &x, &y)?;
+                let sel = facility::facility_location_prod(&al, &gl, m);
+                let mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
+                let g = gradprobe::batch_gradient(&rt, &state.params, ds, &mb.idx, &mb.gamma)?;
+                indiv_errs.push(gradprobe::gradient_error(&g, &full) as f32);
+                for (u, &v) in union.iter_mut().zip(&g) {
+                    *u += v as f64 / p_count as f64;
+                }
+            }
+            let union_f: Vec<f32> = union.iter().map(|&v| v as f32).collect();
+            let union_err = gradprobe::gradient_error(&union_f, &full);
+            // normalized bias ε for crest (union) and the stale craig coreset
+            let eps_crest = union_err / full_norm.max(1e-9);
+            let mut craig_acc = vec![0.0f64; p_dim];
+            let chunks = stale.idx.len() / m;
+            for c in 0..chunks {
+                let idx: Vec<usize> = stale.idx[c * m..(c + 1) * m].to_vec();
+                let gam: Vec<f32> = stale_gamma[c * m..(c + 1) * m].to_vec();
+                let g = gradprobe::batch_gradient(&rt, &state.params, ds, &idx, &gam)?;
+                for (a, &v) in craig_acc.iter_mut().zip(&g) {
+                    *a += v as f64 / chunks as f64;
+                }
+            }
+            let craig_f: Vec<f32> = craig_acc.iter().map(|&v| v as f32).collect();
+            let eps_craig = gradprobe::gradient_error(&craig_f, &full) / full_norm.max(1e-9);
+            println!("{:>6} {:>14.4} {:>14.4} {:>12.3} {:>12.3} {:>10.4}",
+                     step, stats::mean(&indiv_errs), union_err, eps_crest, eps_craig, full_norm);
+        }
+        let idx = rng.sample_indices(ds.n(), m);
+        let lr = sched.lr_at(step, total);
+        state.step_batch(&rt, ds, &idx, &vec![1.0; m], lr, cfg.weight_decay)?;
+    }
+    Ok(())
+}

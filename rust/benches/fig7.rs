@@ -1,0 +1,44 @@
+//! Figure 7 — (a) accuracy of the examples CREST dropped as "learned",
+//! tracked after they stop being trained on; (b) distribution of how often
+//! each example appears in a training batch (long-tailed: not all examples
+//! matter equally).
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+
+    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+
+    println!("# Fig 7a — accuracy of dropped examples over training ({variant})");
+    if rep.dropped_acc_history.is_empty() {
+        println!("(no examples were excluded in this run)");
+    } else {
+        println!("{:>8} {:>14}", "step", "dropped acc");
+        for &(step, acc) in &rep.dropped_acc_history {
+            println!("{:>8} {:>14.4}", step, acc);
+        }
+    }
+    println!("excluded by end: {} / {}", rep.n_excluded, splits.train.n());
+
+    println!("\n# Fig 7b — selection-count distribution (times in a training batch)");
+    let counts = &rep.selection_counts;
+    let max = counts.iter().copied().max().unwrap_or(0) as usize;
+    // histogram over count buckets
+    let buckets = [0usize, 1, 2, 4, 8, 16, 32, 64, usize::MAX];
+    println!("{:>12} {:>10}", "times", "examples");
+    for w in buckets.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let n = counts.iter().filter(|&&c| (c as usize) >= lo && (c as usize) < hi).count();
+        let label = if hi == usize::MAX { format!("{lo}+") } else { format!("{lo}-{}", hi - 1) };
+        println!("{:>12} {:>10}", label, n);
+    }
+    println!("max selections of one example: {max}");
+    let never = counts.iter().filter(|&&c| c == 0).count();
+    println!("never selected: {} / {} (the redundant mass)", never, counts.len());
+    Ok(())
+}

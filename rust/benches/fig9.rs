@@ -1,0 +1,80 @@
+//! Figure 9 — gradient variance of CREST mini-batch coresets (size m from
+//! size-r subsets) vs random batches of size m vs random subsets of size r,
+//! at several checkpoints along training.
+//!
+//! Expected shape (paper): Var(crest-mb) ≈ Var(random-r) ≪ Var(random-m).
+
+use anyhow::Result;
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::coreset::{facility, MiniBatchCoreset};
+use crest::metrics::gradprobe;
+use crest::model::init_params;
+use crest::opt::LrSchedule;
+use crest::train::TrainState;
+use crest::util::rng::Rng;
+
+fn main() -> Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    let seed = 1;
+    let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+    let ds = &splits.train;
+    let (m, r, p_dim) = (rt.man.m, rt.man.r, rt.man.p_dim);
+    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let sched = LrSchedule::paper_default(cfg.base_lr);
+    let mut rng = Rng::new(seed ^ 0x99);
+    let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;
+
+    println!("# Fig 9 — gradient variance of three estimators ({variant}, m={m}, r={r})");
+    println!("{:>6} {:>14} {:>14} {:>14}", "step", "random-m", "crest-mb", "random-r");
+    let total = 400usize;
+    let checkpoints = [0usize, 50, 150, 399];
+    let k_samples = 16;
+    let mut cp = 0;
+    for step in 0..total {
+        if cp < checkpoints.len() && step == checkpoints[cp] {
+            cp += 1;
+            let full = gradprobe::full_gradient(&rt, &state.params, ds)?;
+            let mut rng_a = rng.split();
+            let rand_m = gradprobe::bias_variance(&rt, &state.params, ds, &full, k_samples,
+                || (rng_a.sample_indices(ds.n(), m), vec![1.0; m]))?;
+            let mut rng_b = rng.split();
+            let crest_mb = gradprobe::bias_variance(&rt, &state.params, ds, &full, k_samples,
+                || {
+                    let pool = rng_b.sample_indices(ds.n(), r);
+                    let (x, y) = ds.batch(&pool);
+                    let (gl, al, _) = rt.grad_embed(&state.params, &x, &y).unwrap();
+                    let sel = facility::facility_location_prod(&al, &gl, m);
+                    let mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
+                    (mb.idx, mb.gamma)
+                })?;
+            // random-r: exact mean of r/m chunked batch gradients per draw
+            let mut rng_c = rng.split();
+            let mut var_acc = 0.0f64;
+            for _ in 0..k_samples {
+                let pool = rng_c.sample_indices(ds.n(), r);
+                let mut g = vec![0.0f64; p_dim];
+                for chunk in pool.chunks(m) {
+                    let gi = gradprobe::batch_gradient(&rt, &state.params, ds, chunk,
+                                                       &vec![1.0; m])?;
+                    for (a, &v) in g.iter_mut().zip(&gi) {
+                        *a += v as f64 / (r / m) as f64;
+                    }
+                }
+                let mut dev2 = 0.0f64;
+                for (a, &f) in g.iter().zip(&full) {
+                    dev2 += (a - f as f64) * (a - f as f64);
+                }
+                var_acc += dev2 / k_samples as f64;
+            }
+            println!("{:>6} {:>14.4} {:>14.4} {:>14.4}",
+                     step, rand_m.variance, crest_mb.variance, var_acc);
+        }
+        let idx = rng.sample_indices(ds.n(), m);
+        let lr = sched.lr_at(step, total);
+        state.step_batch(&rt, ds, &idx, &vec![1.0; m], lr, cfg.weight_decay)?;
+    }
+    println!("\nexpected shape: crest-mb ≈ random-r ≪ random-m");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Table 1 — Relative error (%) of each method vs full-data training at a
+//! 10% budget, per variant, plus the tuned (τ, h) pairs (Table 6).
+//!
+//! Expected shape (paper): CREST ≤ Random < GRADMATCH < CRAIG, GLISTER
+//! worst; SGD† well above Random.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+use crest::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let methods = [
+        MethodKind::SgdTruncated,
+        MethodKind::Random,
+        MethodKind::Craig,
+        MethodKind::GradMatch,
+        MethodKind::Glister,
+        MethodKind::Crest,
+    ];
+    println!("# Table 1 — relative error (%) @ 10% budget (mean±std over {} seeds)",
+             sc::seeds().len());
+    let mut table = Table::new(&[
+        "variant", "sgd†", "random", "craig", "gradmatch", "glister", "crest", "full acc",
+    ]);
+    for variant in sc::variants() {
+        let mut rel: Vec<Vec<f32>> = vec![Vec::new(); methods.len()];
+        let mut full_accs = Vec::new();
+        for seed in sc::seeds() {
+            let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
+            let full = sc::cell(&rt, &splits, &variant, MethodKind::Full, seed, |_| {})?;
+            full_accs.push(full.final_test_acc * 100.0);
+            for (mi, &method) in methods.iter().enumerate() {
+                let rep = sc::cell(&rt, &splits, &variant, method, seed, |_| {})?;
+                rel[mi].push(sc::rel_err(rep.final_test_acc, full.final_test_acc));
+            }
+        }
+        let mut row = vec![variant.clone()];
+        row.extend(rel.iter().map(|v| sc::fmt_mean_std(v)));
+        row.push(format!("{:.2}", stats::mean(&full_accs)));
+        table.row(&row);
+    }
+    print!("{}", table.render());
+
+    println!("\n# Table 6 — tuned hyperparameters per variant");
+    let mut t6 = Table::new(&["variant", "tau", "h"]);
+    for variant in sc::variants() {
+        let cfg = crest::config::ExperimentConfig::preset(&variant, MethodKind::Crest, 0)?;
+        t6.row(&[variant.clone(), format!("{}", cfg.tau), format!("{}", cfg.h_mult)]);
+    }
+    print!("{}", t6.render());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Table 2 — Average wall-clock time of CREST's components on the
+//! cifar100 proxy: per-mini-batch selection (CREST vs CRAIG-style
+//! full-data selection), quadratic loss approximation, and ρ-check.
+//!
+//! Expected shape (paper): CREST selection ≫ faster than CRAIG selection;
+//! the ρ-check is the most expensive CREST component.
+
+use std::time::Instant;
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::coordinator::sources::full_embeddings;
+use crest::coreset::facility;
+use crest::coreset::MiniBatchCoreset;
+use crest::model::init_params;
+use crest::report::Table;
+use crest::runtime::Runtime;
+use crest::train::TrainState;
+use crest::util::rng::Rng;
+
+fn crest_selection_time(rt: &Runtime, splits: &crest::data::Splits) -> anyhow::Result<(f64, f64)> {
+    // time one mini-batch coreset selection (embedding + greedy) and one
+    // CRAIG-style full-data selection, at matched model state
+    let mut rng = Rng::new(7);
+    let state = TrainState::new(rt, &init_params(&rt.man, &mut rng))?;
+    let ds = &splits.train;
+    let (r, m) = (rt.man.r, rt.man.m);
+    // CREST: selection of ONE mini-batch coreset from one random subset
+    let reps = 8;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let pool = rng.sample_indices(ds.n(), r);
+        let (x, y) = ds.batch(&pool);
+        let (gl, al, _) = rt.grad_embed(&state.params, &x, &y)?;
+        let sel = facility::facility_location_prod(&al, &gl, m);
+        let _ = MiniBatchCoreset::from_selection(&sel, &pool, m);
+    }
+    let crest_sel = t0.elapsed().as_secs_f64() / reps as f64;
+    // CRAIG: full-data embedding + stochastic greedy for k = 10% of n,
+    // amortized per mini-batch drawn from it (k/m batches per epoch)
+    let k = ds.n() / 10;
+    let t0 = Instant::now();
+    let (gl, al, _) = full_embeddings(rt, &state.params, ds)?;
+    let _sel = crest::coreset::craig::craig_select(&al, &gl, k, &mut rng);
+    let craig_total = t0.elapsed().as_secs_f64();
+    let craig_per_batch = craig_total / (k as f64 / m as f64);
+    Ok((crest_sel, craig_per_batch))
+}
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar100-proxy";
+    println!("# Table 2 — mean component times, {variant} (batch size = m)");
+    let Some((rt, splits)) = sc::load(variant, 1) else { return Ok(()) };
+    let (crest_sel, craig_sel) = crest_selection_time(&rt, &splits)?;
+
+    // loss approximation + checking threshold measured inside a real run
+    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, 1, |_| {})?;
+    let n_up = rep.n_selection_updates.max(1) as f64;
+    let n_checks = rep.rho_history.len().max(1) as f64;
+
+    let mut table = Table::new(&["step", "time (seconds)"]);
+    table.row(&["selection (CREST, per mini-batch)".into(), format!("{crest_sel:.4}")]);
+    table.row(&["selection (CRAIG, per mini-batch equiv)".into(), format!("{craig_sel:.4}")]);
+    table.row(&["loss approximation (per update)".into(),
+                format!("{:.4}", rep.approx_secs / n_up)]);
+    table.row(&["checking threshold (per ρ-check)".into(),
+                format!("{:.4}", rep.check_secs / n_checks)]);
+    print!("{}", table.render());
+    println!("\n(CREST updates: {}, ρ-checks: {})", rep.n_selection_updates, rep.rho_history.len());
+    Ok(())
+}

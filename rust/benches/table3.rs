@@ -1,0 +1,43 @@
+//! Table 3 — Ablation of CREST's components on the cifar10 proxy:
+//! CREST-FIRST (first-order model), w/o smoothing, w/o exclusion, full.
+//!
+//! Expected shape (paper): full CREST has the lowest relative error with
+//! the fewest coreset updates; first-order and unsmoothed variants update
+//! more and do worse.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+use crest::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let variant = "cifar10-proxy";
+    println!("# Table 3 — CREST component ablations, {variant} ({} seeds)", sc::seeds().len());
+    let rows: [(&str, Box<dyn Fn(&mut crest::config::ExperimentConfig)>); 4] = [
+        ("CREST-FIRST", Box::new(|c| c.crest.second_order = false)),
+        ("CREST w/o smooth", Box::new(|c| c.crest.smooth = false)),
+        ("CREST w/o excluding", Box::new(|c| c.crest.exclude = false)),
+        ("CREST", Box::new(|_| {})),
+    ];
+    let mut table = Table::new(&["algorithm", "rel. error %", "# updates"]);
+    let mut per_row: Vec<(Vec<f32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); rows.len()];
+    for seed in sc::seeds() {
+        let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
+        let full = sc::cell(&rt, &splits, variant, MethodKind::Full, seed, |_| {})?;
+        for (ri, (_, patch)) in rows.iter().enumerate() {
+            let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |c| patch(c))?;
+            per_row[ri].0.push(sc::rel_err(rep.final_test_acc, full.final_test_acc));
+            per_row[ri].1.push(rep.n_selection_updates as f32);
+        }
+    }
+    for (ri, (name, _)) in rows.iter().enumerate() {
+        table.row(&[
+            name.to_string(),
+            sc::fmt_mean_std(&per_row[ri].0),
+            format!("{:.0}", stats::mean(&per_row[ri].1)),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

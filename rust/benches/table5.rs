@@ -1,0 +1,40 @@
+//! Table 5 — Relative error at a 20% training budget (vs 10% in Table 1):
+//! CREST vs Random vs SGD† on the three vision proxies.
+//!
+//! Expected shape (paper): with a larger budget both CREST and Random get
+//! close to full training (2-4% rel. error) while SGD† still lags badly;
+//! CREST's edge over Random shrinks.
+
+use crest::bench_util::scenario as sc;
+use crest::config::MethodKind;
+use crest::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    println!("# Table 5 — relative error (%) @ 20% budget ({} seeds)", sc::seeds().len());
+    let methods = [MethodKind::Crest, MethodKind::Random, MethodKind::SgdTruncated];
+    let mut table = Table::new(&["variant", "crest", "random", "sgd†"]);
+    let variants: Vec<String> = sc::variants()
+        .into_iter()
+        .filter(|v| v != "snli-proxy") // paper Table 5 is vision-only
+        .collect();
+    for variant in variants {
+        let mut rel = vec![Vec::new(); methods.len()];
+        for seed in sc::seeds() {
+            let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
+            let full = sc::cell(&rt, &splits, &variant, MethodKind::Full, seed, |_| {})?;
+            for (mi, &m) in methods.iter().enumerate() {
+                let rep = sc::cell(&rt, &splits, &variant, m, seed, |c| c.budget_frac = 0.20)?;
+                rel[mi].push(sc::rel_err(rep.final_test_acc, full.final_test_acc));
+            }
+        }
+        table.row(&[
+            variant.clone(),
+            sc::fmt_mean_std(&rel[0]),
+            sc::fmt_mean_std(&rel[1]),
+            sc::fmt_mean_std(&rel[2]),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}

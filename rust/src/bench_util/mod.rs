@@ -1,0 +1,101 @@
+//! Micro-benchmark harness (criterion replacement for the offline registry).
+//!
+//! Warmup + timed repetitions with median ± MAD reporting; benches under
+//! `rust/benches/` use `harness = false` and drive this directly.
+
+pub mod scenario;
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub median_secs: f64,
+    pub mad_secs: f64,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} {:>12} {:>12}",
+            self.name,
+            format_secs(self.median_secs),
+            format!("±{}", format_secs(self.mad_secs)),
+            format!("min {}", format_secs(self.min_secs)),
+        )
+    }
+}
+
+/// Human-scaled seconds.
+pub fn format_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured calls and `reps` measured calls.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(reps > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64() as f32);
+    }
+    BenchResult {
+        name: name.to_string(),
+        reps,
+        median_secs: stats::median(&times) as f64,
+        mad_secs: stats::mad(&times) as f64,
+        mean_secs: stats::mean(&times) as f64,
+        min_secs: times.iter().cloned().fold(f32::INFINITY, f32::min) as f64,
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.median_secs > 0.0);
+        assert!(r.min_secs <= r.median_secs);
+        assert_eq!(r.reps, 5);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn format_scales() {
+        assert!(format_secs(2.5).ends_with('s'));
+        assert!(format_secs(2.5e-3).ends_with("ms"));
+        assert!(format_secs(2.5e-6).ends_with("µs"));
+        assert!(format_secs(2.5e-10).ends_with("ns"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Shared glue for the paper-reproduction benches (`rust/benches/*.rs`).
+//!
+//! Each bench regenerates one table or figure. They all need the same
+//! setup — load a variant's runtime, generate its proxy corpus, run
+//! experiment cells — and the same scale knobs:
+//!
+//! * `CREST_BENCH_SEEDS`   seeds per cell (default 2)
+//! * `CREST_BENCH_EPOCHS`  full-run epochs (default 50)
+//! * `CREST_BENCH_VARIANTS` comma list (default cifar10-proxy,cifar100-proxy)
+//! * `CREST_BENCH_FULL=1`   all four variants, 3 seeds
+//!
+//! A bench exits 0 with a notice when artifacts are missing, so
+//! `cargo bench` stays usable before `make artifacts`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, MethodKind};
+use crate::coordinator::run_experiment;
+use crate::data::{generate, Splits, SynthSpec};
+use crate::report::RunReport;
+use crate::runtime::Runtime;
+use crate::util::stats;
+
+pub fn artifact_root() -> PathBuf {
+    std::env::var("CREST_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+pub fn seeds() -> Vec<u64> {
+    let n: usize = std::env::var("CREST_BENCH_SEEDS").ok().and_then(|s| s.parse().ok())
+        .unwrap_or(if full_scale() { 3 } else { 2 });
+    (1..=n as u64).collect()
+}
+
+pub fn epochs_full() -> usize {
+    std::env::var("CREST_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(50)
+}
+
+pub fn full_scale() -> bool {
+    std::env::var("CREST_BENCH_FULL").is_ok()
+}
+
+pub fn variants() -> Vec<String> {
+    if let Ok(v) = std::env::var("CREST_BENCH_VARIANTS") {
+        return v.split(',').map(|s| s.trim().to_string()).collect();
+    }
+    if full_scale() {
+        crate::config::ALL_VARIANTS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec!["cifar10-proxy".to_string(), "cifar100-proxy".to_string()]
+    }
+}
+
+/// Load a variant's runtime + data, or None (with a notice) when artifacts
+/// are absent.
+pub fn load(variant: &str, seed: u64) -> Option<(Runtime, Splits)> {
+    let root = artifact_root();
+    match Runtime::load(&root, variant) {
+        Ok(rt) => {
+            let splits = generate(&SynthSpec::preset(variant, seed)?);
+            Some((rt, splits))
+        }
+        Err(e) => {
+            println!("[skip] {variant}: artifacts not available ({e:#}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+/// Run one experiment cell with config tweaks applied by `patch`.
+pub fn cell(
+    rt: &Runtime,
+    splits: &Splits,
+    variant: &str,
+    method: MethodKind,
+    seed: u64,
+    patch: impl FnOnce(&mut ExperimentConfig),
+) -> Result<RunReport> {
+    let mut cfg = ExperimentConfig::preset(variant, method, seed)?;
+    cfg.epochs_full = epochs_full();
+    patch(&mut cfg);
+    run_experiment(rt, splits, cfg)
+}
+
+/// Mean ± std of an accuracy list, formatted like the paper's tables.
+pub fn fmt_mean_std(vals: &[f32]) -> String {
+    format!("{:.2}±{:.1}", stats::mean(vals), stats::stddev(vals))
+}
+
+/// Relative error (%) per paper Table 1 definition.
+pub fn rel_err(acc_coreset: f32, acc_full: f32) -> f32 {
+    crate::metrics::relative_error_pct(acc_coreset * 100.0, acc_full * 100.0)
+}

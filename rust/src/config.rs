@@ -1,0 +1,307 @@
+//! Experiment configuration: method selection, budgets, CREST knobs,
+//! per-variant presets (paper §5 + Table 6), JSON round-trip.
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Which training method drives the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    /// Full-data mini-batch SGD (the accuracy reference).
+    Full,
+    /// Random mini-batches under the budget (paper's Random baseline:
+    /// LR schedule compressed into the budget so both decays happen).
+    Random,
+    /// Standard pipeline truncated at the budget (paper's SGD†: LR schedule
+    /// laid out for the *full* horizon, so no decay is reached).
+    SgdTruncated,
+    /// This paper (Algorithm 1).
+    Crest,
+    /// CRAIG: 10% coreset from full data at every epoch (Mirzasoleiman'20).
+    Craig,
+    /// GRADMATCH: OMP gradient matching per epoch (Killamsetty'21a).
+    GradMatch,
+    /// GLISTER: validation-gradient greedy per epoch (Killamsetty'21b).
+    Glister,
+    /// Ablation of Fig. 3: fresh greedy mini-batch from a random subset at
+    /// every step (maximal update count).
+    GreedyPerBatch,
+}
+
+impl MethodKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MethodKind::Full => "full",
+            MethodKind::Random => "random",
+            MethodKind::SgdTruncated => "sgd-truncated",
+            MethodKind::Crest => "crest",
+            MethodKind::Craig => "craig",
+            MethodKind::GradMatch => "gradmatch",
+            MethodKind::Glister => "glister",
+            MethodKind::GreedyPerBatch => "greedy-per-batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MethodKind> {
+        Ok(match s {
+            "full" => MethodKind::Full,
+            "random" => MethodKind::Random,
+            "sgd-truncated" | "sgd" => MethodKind::SgdTruncated,
+            "crest" => MethodKind::Crest,
+            "craig" => MethodKind::Craig,
+            "gradmatch" => MethodKind::GradMatch,
+            "glister" => MethodKind::Glister,
+            "greedy-per-batch" | "greedy" => MethodKind::GreedyPerBatch,
+            _ => bail!("unknown method {s:?}"),
+        })
+    }
+
+    pub fn all() -> &'static [MethodKind] {
+        &[
+            MethodKind::Full,
+            MethodKind::Random,
+            MethodKind::SgdTruncated,
+            MethodKind::Crest,
+            MethodKind::Craig,
+            MethodKind::GradMatch,
+            MethodKind::Glister,
+            MethodKind::GreedyPerBatch,
+        ]
+    }
+}
+
+/// CREST-specific switches (ablations of Table 3 / Fig. 4).
+#[derive(Debug, Clone, Copy)]
+pub struct CrestOptions {
+    /// Use the curvature term in F^l (false = CREST-FIRST ablation).
+    pub second_order: bool,
+    /// Smooth gradient/curvature with EMAs (false = w/o-smoothing ablation).
+    pub smooth: bool,
+    /// Drop learned examples (false = w/o-excluding ablation).
+    pub exclude: bool,
+}
+
+impl Default for CrestOptions {
+    fn default() -> Self {
+        CrestOptions { second_order: true, smooth: true, exclude: true }
+    }
+}
+
+/// One experiment: a (variant, method, budget, seed) cell plus knobs.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub variant: String,
+    pub method: MethodKind,
+    /// Training budget as a fraction of the full run's backprops.
+    pub budget_frac: f32,
+    /// Epochs of the full-data reference run.
+    pub epochs_full: usize,
+    pub seed: u64,
+    pub base_lr: f32,
+    /// Decoupled L2 weight decay applied inside train_step.
+    pub weight_decay: f32,
+    pub momentum_warmup: bool,
+    // ---- CREST knobs (paper Table 6 / §5 "CREST Setup") ----
+    /// ρ threshold τ.
+    pub tau: f32,
+    /// exclusion threshold α.
+    pub alpha: f32,
+    /// T₁ multiplier h.
+    pub h_mult: f32,
+    /// P = b·T₁ multiplier b.
+    pub b_mult: usize,
+    /// exclusion window / ρ-check cadence T₂ (iterations).
+    pub t2: usize,
+    /// Exclusion only starts after this fraction of the budget: dropping
+    /// interpolated examples is safe once the model is past the rapid
+    /// early-drift phase (paper §4.3 "later stages of training").
+    pub exclude_after_frac: f32,
+    /// clamp for the adaptive T₁.
+    pub max_t1: usize,
+    /// clamp for the number of simultaneous mini-batch coresets P.
+    pub max_p: usize,
+    /// EMA parameters β₁, β₂ (Eq. 8–9).
+    pub beta1: f32,
+    pub beta2: f32,
+    pub crest: CrestOptions,
+    /// LR multiplier for methods training on variance-reduced mini-batch
+    /// coresets (CREST / greedy-per-batch). `None` = the Theorem 4.1 step
+    /// size ratio √(r/m); baselines always run the unscaled schedule.
+    pub coreset_lr_scale: Option<f32>,
+    /// Use the XLA in-graph greedy instead of host lazy greedy.
+    pub compiled_selection: bool,
+    /// Host-side selection worker threads (P subproblems in parallel).
+    pub selection_threads: usize,
+    /// Number of evaluation points along training (history resolution).
+    pub eval_points: usize,
+}
+
+impl ExperimentConfig {
+    /// Per-variant preset mirroring paper §5 and Table 6.
+    pub fn preset(variant: &str, method: MethodKind, seed: u64) -> Result<ExperimentConfig> {
+        // τ/h tuned per variant the same way the paper tunes its Table 6
+        // values (τ from the observed ρ scale after warmup; h from the
+        // curvature-decay rate). Our loss scale differs from ResNet/CIFAR,
+        // so the numbers differ from the paper's — see EXPERIMENTS.md.
+        let (tau, h_mult) = match variant {
+            "cifar10-proxy" => (0.01, 1.0),
+            "cifar100-proxy" => (0.01, 4.0),
+            "tinyimagenet-proxy" => (0.005, 1.0),
+            "snli-proxy" => (0.01, 2.0),
+            _ => bail!("unknown variant {variant:?}"),
+        };
+        Ok(ExperimentConfig {
+            variant: variant.to_string(),
+            method,
+            budget_frac: 0.10,
+            epochs_full: 50,
+            seed,
+            base_lr: 0.01,
+            weight_decay: 5e-4,
+            momentum_warmup: true,
+            tau,
+            alpha: 0.1,
+            h_mult,
+            b_mult: 5,
+            t2: 20,
+            exclude_after_frac: 0.4,
+            max_t1: 64,
+            max_p: 20,
+            beta1: 0.9,
+            beta2: 0.999,
+            crest: CrestOptions::default(),
+            coreset_lr_scale: None,
+            compiled_selection: false,
+            selection_threads: 4,
+            eval_points: 16,
+        })
+    }
+
+    /// Shrink the workload for fast tests/benches: fewer reference epochs.
+    pub fn quick(mut self, epochs_full: usize) -> Self {
+        self.epochs_full = epochs_full;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("variant", self.variant.as_str())
+            .set("method", self.method.name())
+            .set("budget_frac", self.budget_frac)
+            .set("epochs_full", self.epochs_full)
+            .set("seed", self.seed)
+            .set("base_lr", self.base_lr)
+            .set("tau", self.tau)
+            .set("alpha", self.alpha)
+            .set("h_mult", self.h_mult)
+            .set("b_mult", self.b_mult)
+            .set("t2", self.t2)
+            .set("second_order", self.crest.second_order)
+            .set("smooth", self.crest.smooth)
+            .set("exclude", self.crest.exclude)
+            .set("compiled_selection", self.compiled_selection)
+    }
+
+    /// Apply overrides parsed from JSON (partial object).
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("budget_frac") {
+            self.budget_frac = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("epochs_full") {
+            self.epochs_full = v.as_usize()?;
+        }
+        if let Some(v) = j.get("seed") {
+            self.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.get("base_lr") {
+            self.base_lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("tau") {
+            self.tau = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("alpha") {
+            self.alpha = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("h_mult") {
+            self.h_mult = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("b_mult") {
+            self.b_mult = v.as_usize()?;
+        }
+        if let Some(v) = j.get("t2") {
+            self.t2 = v.as_usize()?;
+        }
+        if let Some(v) = j.get("second_order") {
+            self.crest.second_order = v.as_bool()?;
+        }
+        if let Some(v) = j.get("smooth") {
+            self.crest.smooth = v.as_bool()?;
+        }
+        if let Some(v) = j.get("exclude") {
+            self.crest.exclude = v.as_bool()?;
+        }
+        if let Some(v) = j.get("compiled_selection") {
+            self.compiled_selection = v.as_bool()?;
+        }
+        if let Some(v) = j.get("method") {
+            self.method = MethodKind::parse(v.as_str()?)?;
+        }
+        Ok(())
+    }
+}
+
+pub const ALL_VARIANTS: [&str; 4] =
+    ["cifar10-proxy", "cifar100-proxy", "tinyimagenet-proxy", "snli-proxy"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_tuned_table6() {
+        let c = ExperimentConfig::preset("cifar10-proxy", MethodKind::Crest, 0).unwrap();
+        assert_eq!(c.tau, 0.01);
+        assert_eq!(c.h_mult, 1.0);
+        let c = ExperimentConfig::preset("cifar100-proxy", MethodKind::Crest, 0).unwrap();
+        assert_eq!(c.tau, 0.01);
+        assert_eq!(c.h_mult, 4.0);
+        let c = ExperimentConfig::preset("snli-proxy", MethodKind::Crest, 0).unwrap();
+        assert_eq!(c.tau, 0.01);
+        assert_eq!(c.h_mult, 2.0);
+        assert_eq!(c.b_mult, 5);
+        assert_eq!(c.t2, 20);
+        assert_eq!(c.alpha, 0.1);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        assert!(ExperimentConfig::preset("cifar11", MethodKind::Crest, 0).is_err());
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in MethodKind::all() {
+            assert_eq!(MethodKind::parse(m.name()).unwrap(), *m);
+        }
+        assert!(MethodKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_overrides() {
+        let mut c = ExperimentConfig::preset("cifar10-proxy", MethodKind::Crest, 0).unwrap();
+        let j = Json::parse(
+            r#"{"tau": 0.2, "exclude": false, "method": "craig", "epochs_full": 5}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.tau, 0.2);
+        assert!(!c.crest.exclude);
+        assert_eq!(c.method, MethodKind::Craig);
+        assert_eq!(c.epochs_full, 5);
+        // serialized form parses back
+        let s = c.to_json().to_string_pretty();
+        let j2 = Json::parse(&s).unwrap();
+        assert_eq!(j2.get("method").unwrap().as_str().unwrap(), "craig");
+    }
+}

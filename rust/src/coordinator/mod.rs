@@ -1,0 +1,219 @@
+//! The coordinator — the paper's L3 contribution.
+//!
+//! Owns the end-to-end run of one experiment cell: data, budget, learning
+//! -rate schedule, method dispatch (CREST / CRAIG / GRADMATCH / GLISTER /
+//! Random / SGD† / greedy-per-batch), evaluation cadence, forgettability
+//! bookkeeping, and the phase-time accounting behind Table 2 / Fig. 2.
+//!
+//! CREST itself (Algorithm 1) lives in `crest_source`: piece-wise quadratic
+//! modeling (`quadratic`), mini-batch coresets from random subsets
+//! (`coreset::facility`, parallelized over the P subproblems with scoped
+//! threads), and learned-example exclusion (`exclusion`).
+
+pub mod sources;
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{ExperimentConfig, MethodKind};
+use crate::data::Splits;
+use crate::metrics::forget::ForgetTracker;
+use crate::model::init_params;
+use crate::opt::{Budget, LrSchedule};
+use crate::report::{EvalPoint, RunReport};
+use crate::runtime::Runtime;
+use crate::train::{evaluate, TrainState};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimers;
+
+use sources::SelectionRecord;
+
+/// Drives one experiment run.
+pub struct Coordinator<'a> {
+    pub rt: &'a Runtime,
+    pub splits: &'a Splits,
+    pub cfg: ExperimentConfig,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(rt: &'a Runtime, splits: &'a Splits, cfg: ExperimentConfig) -> Self {
+        Coordinator { rt, splits, cfg }
+    }
+
+    /// Total steps of the *full* reference run (LR-schedule horizon of SGD†).
+    fn full_steps(&self) -> usize {
+        self.splits.train.n() * self.cfg.epochs_full / self.rt.man.m
+    }
+
+    /// Run the configured method to budget exhaustion.
+    pub fn run(&self) -> Result<RunReport> {
+        let t_start = Instant::now();
+        let cfg = &self.cfg;
+        let rt = self.rt;
+        let ds = &self.splits.train;
+        let n = ds.n();
+        let m = rt.man.m;
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut init_rng = rng.split();
+        let mut source_rng = rng.split();
+
+        let budget_frac =
+            if cfg.method == MethodKind::Full { 1.0 } else { cfg.budget_frac };
+        let mut budget = Budget::fraction_of_full(n, cfg.epochs_full, budget_frac);
+        let steps_total = budget.steps(m).max(1);
+
+        // SGD† keeps the schedule laid out for the full horizon (so the
+        // decays are never reached inside the budget); everyone else
+        // compresses the schedule into their own horizon (paper §5 Evaluation).
+        let sched = LrSchedule::paper_default(cfg.base_lr);
+        let sched_horizon = match cfg.method {
+            MethodKind::SgdTruncated => self.full_steps(),
+            _ => steps_total,
+        };
+        // Variance-reduced coreset batches support the Theorem 4.1 step
+        // size: η ∝ √r instead of √m (the r/m speedup mechanism). Applies
+        // to CREST and the greedy-per-batch ablation only.
+        let lr_mult = match cfg.method {
+            MethodKind::Crest | MethodKind::GreedyPerBatch => cfg
+                .coreset_lr_scale
+                .unwrap_or(((rt.man.r as f32) / (rt.man.m as f32)).sqrt()),
+            _ => 1.0,
+        };
+
+        let mut state = TrainState::new(rt, &init_params(&rt.man, &mut init_rng))?;
+        let mut timers = PhaseTimers::new();
+        let mut forget = ForgetTracker::new(n);
+        let mut source =
+            sources::make_source(cfg, rt, ds, &self.splits.val, steps_total, &mut source_rng)?;
+
+        let eval_every = (steps_total / cfg.eval_points.max(1)).max(1);
+        let mut history: Vec<EvalPoint> = Vec::new();
+        let mut best_acc = 0.0f32;
+        let mut selections: Vec<SelectionRecord> = Vec::new();
+        let mut dropped_acc_history: Vec<(usize, f32)> = Vec::new();
+
+        let mut step = 0usize;
+        while budget.charge(m) {
+            let lr = sched.lr_at(step, sched_horizon) * lr_mult;
+            // ask the active method for the next weighted batch
+            let batch = source.next_batch(step, &mut state, &mut timers)?;
+            if let Some(rec) = batch.selection {
+                selections.push(rec);
+            }
+            forget.count_selection(&batch.idx);
+            let t0 = Instant::now();
+            let (_loss, per_ex) =
+                state.step_batch(rt, ds, &batch.idx, &batch.gamma, lr, cfg.weight_decay)?;
+            timers.add("train_step_host", t0.elapsed());
+            source.after_step(step, &batch.idx, &per_ex, &mut state, &mut timers)?;
+
+            // evaluation cadence
+            if step % eval_every == 0 || step + 1 == steps_total {
+                let t0 = Instant::now();
+                let test = evaluate(rt, &state.params, &self.splits.test)?;
+                let train = evaluate(rt, &state.params, ds)?;
+                timers.add("eval", t0.elapsed());
+                forget.observe_batch(
+                    &(0..n).collect::<Vec<_>>(),
+                    &train.per_ex_correct,
+                );
+                // Fig. 7a: do the dropped (excluded-as-learned) examples
+                // stay correctly classified?
+                let dropped = source.stats().excluded_indices;
+                if !dropped.is_empty() {
+                    let acc = dropped
+                        .iter()
+                        .map(|&i| train.per_ex_correct[i] as f64)
+                        .sum::<f64>() as f32
+                        / dropped.len() as f32;
+                    dropped_acc_history.push((step, acc));
+                }
+                best_acc = best_acc.max(test.accuracy);
+                history.push(EvalPoint {
+                    step,
+                    backprops: budget.used(),
+                    test_acc: test.accuracy,
+                    test_loss: test.mean_loss,
+                    train_acc: train.accuracy,
+                    wall_secs: t_start.elapsed().as_secs_f64(),
+                });
+            }
+            step += 1;
+        }
+
+        // final evaluation (always recorded)
+        let t0 = Instant::now();
+        let test = evaluate(rt, &state.params, &self.splits.test)?;
+        timers.add("eval", t0.elapsed());
+        best_acc = best_acc.max(test.accuracy);
+
+        // post-hoc Fig. 5 series: mean *final* forgettability of the
+        // examples each selection round picked.
+        let max_score = forget.max_observed_score().max(1);
+        let forget_of_selected: Vec<(usize, f32)> = selections
+            .iter()
+            .map(|s| (s.step, forget.mean_score(&s.selected, max_score)))
+            .collect();
+
+        let stats = source.stats();
+        let total_secs = t_start.elapsed().as_secs_f64();
+        let sel_secs = timers.total("selection").as_secs_f64();
+        let report = RunReport {
+            method: cfg.method.name().to_string(),
+            variant: cfg.variant.clone(),
+            seed: cfg.seed,
+            budget_frac,
+            final_test_acc: test.accuracy,
+            final_test_loss: test.mean_loss,
+            best_test_acc: best_acc,
+            steps: step,
+            backprops: budget.used(),
+            n_selection_updates: stats.n_updates,
+            selection_secs: sel_secs,
+            train_secs: timers.total("train_step_host").as_secs_f64(),
+            eval_secs: timers.total("eval").as_secs_f64(),
+            check_secs: timers.total("rho_check").as_secs_f64(),
+            approx_secs: timers.total("loss_approx").as_secs_f64(),
+            total_secs,
+            n_excluded: stats.n_excluded,
+            history,
+            rho_history: stats.rho_history,
+            t1_history: stats.t1_history,
+            update_steps: stats.update_steps,
+            forget_of_selected,
+            selection_counts: forget.selection_counts().to_vec(),
+            dropped_acc_history,
+            excluded_indices: stats.excluded_indices.clone(),
+            mean_step_secs: timers.mean_secs("train_step_host"),
+            mean_selection_secs: if stats.n_updates > 0 {
+                sel_secs / stats.n_updates as f64
+            } else {
+                0.0
+            },
+        };
+        log::info!(
+            "{}/{} seed={} acc={:.4} steps={} updates={} excl={} {:.2}s",
+            report.variant,
+            report.method,
+            report.seed,
+            report.final_test_acc,
+            report.steps,
+            report.n_selection_updates,
+            report.n_excluded,
+            report.total_secs
+        );
+        Ok(report)
+    }
+}
+
+/// Convenience: run one (variant, method, seed) cell against prepared
+/// splits and runtime.
+pub fn run_experiment(
+    rt: &Runtime,
+    splits: &Splits,
+    cfg: ExperimentConfig,
+) -> Result<RunReport> {
+    Coordinator::new(rt, splits, cfg).run()
+}

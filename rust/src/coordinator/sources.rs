@@ -1,0 +1,579 @@
+//! Batch sources: one per training method.
+//!
+//! A `BatchSource` hands the coordinator the next weighted mini-batch. All
+//! method-specific machinery — CREST's Algorithm 1, the per-epoch baseline
+//! reselections, greedy-per-batch — lives behind this interface so the
+//! outer loop (budget, LR, eval, forgettability) is shared.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ExperimentConfig, MethodKind};
+use crate::coreset::{craig, facility, glister, gradmatch, MiniBatchCoreset};
+use crate::data::Dataset;
+use crate::exclusion::ExclusionTracker;
+use crate::quadratic::{QuadOptions, QuadraticModel};
+use crate::runtime::Runtime;
+use crate::tensor::MatF32;
+use crate::train::TrainState;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::util::timer::PhaseTimers;
+
+/// What a source knows about one selection event (for Fig. 5 post-hoc).
+#[derive(Debug, Clone)]
+pub struct SelectionRecord {
+    pub step: usize,
+    pub selected: Vec<usize>,
+}
+
+/// One batch handed to the trainer.
+pub struct SourcedBatch {
+    pub idx: Vec<usize>,
+    pub gamma: Vec<f32>,
+    pub selection: Option<SelectionRecord>,
+}
+
+/// Aggregate statistics a source reports at the end of the run.
+#[derive(Debug, Clone, Default)]
+pub struct SourceStats {
+    pub n_updates: usize,
+    pub n_excluded: usize,
+    /// indices currently excluded as learned (Fig. 7a analysis)
+    pub excluded_indices: Vec<usize>,
+    pub rho_history: Vec<(usize, f32)>,
+    pub t1_history: Vec<(usize, usize)>,
+    pub update_steps: Vec<usize>,
+}
+
+pub trait BatchSource {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch>;
+
+    /// Hook after the weight update (CREST runs its ρ-check here).
+    fn after_step(
+        &mut self,
+        _step: usize,
+        _idx: &[usize],
+        _per_ex_loss: &[f32],
+        _state: &mut TrainState,
+        _timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    fn stats(&self) -> SourceStats;
+}
+
+/// Instantiate the source for the configured method.
+pub fn make_source<'a>(
+    cfg: &ExperimentConfig,
+    rt: &'a Runtime,
+    train: &'a Dataset,
+    val: &'a Dataset,
+    steps_total: usize,
+    rng: &mut Rng,
+) -> Result<Box<dyn BatchSource + 'a>> {
+    let src_rng = rng.split();
+    Ok(match cfg.method {
+        MethodKind::Full | MethodKind::Random | MethodKind::SgdTruncated => {
+            Box::new(RandomSource::new(train.n(), rt.man.m, src_rng))
+        }
+        MethodKind::GreedyPerBatch => {
+            Box::new(GreedyPerBatchSource { rt, train, rng: src_rng, n_updates: 0 })
+        }
+        MethodKind::Craig | MethodKind::GradMatch | MethodKind::Glister => {
+            let k = ((train.n() as f32 * cfg.budget_frac) as usize).max(rt.man.m);
+            let epoch_steps = (k / rt.man.m).max(1);
+            Box::new(EpochCoresetSource {
+                kind: cfg.method,
+                rt,
+                train,
+                val,
+                k,
+                epoch_steps,
+                into_epoch: 0,
+                entries: Vec::new(),
+                rng: src_rng,
+                n_updates: 0,
+                update_steps: Vec::new(),
+            })
+        }
+        MethodKind::Crest => Box::new(CrestSource::new(cfg, rt, train, steps_total, src_rng)),
+    })
+}
+
+// ---------------------------------------------------------------- random
+
+/// Epoch-shuffled unweighted batches (Random / Full / SGD†).
+struct RandomSource {
+    n: usize,
+    m: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl RandomSource {
+    fn new(n: usize, m: usize, rng: Rng) -> Self {
+        RandomSource { n, m, order: (0..n).collect(), cursor: n, rng }
+    }
+}
+
+impl BatchSource for RandomSource {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        _state: &mut TrainState,
+        _timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        if self.cursor.wrapping_add(self.m) > self.n {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+        }
+        let idx = self.order[self.cursor..self.cursor + self.m].to_vec();
+        self.cursor += self.m;
+        Ok(SourcedBatch {
+            gamma: vec![1.0; self.m],
+            selection: Some(SelectionRecord { step, selected: idx.clone() }),
+            idx,
+        })
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats::default()
+    }
+}
+
+// ------------------------------------------------------- epoch baselines
+
+/// CRAIG / GRADMATCH / GLISTER: reselect a size-k coreset from the full
+/// data at the start of every (budgeted) epoch, then stream weighted
+/// batches from it.
+struct EpochCoresetSource<'a> {
+    kind: MethodKind,
+    rt: &'a Runtime,
+    train: &'a Dataset,
+    val: &'a Dataset,
+    k: usize,
+    epoch_steps: usize,
+    into_epoch: usize,
+    /// (global index, batch gamma) shuffled each epoch
+    entries: Vec<(usize, f32)>,
+    rng: Rng,
+    n_updates: usize,
+    update_steps: Vec<usize>,
+}
+
+/// Embeddings of the full dataset, computed in r-chunks (tail wraps; the
+/// duplicate rows are overwritten by their earlier occurrence, so each
+/// example gets exactly one embedding).
+pub fn full_embeddings(
+    rt: &Runtime,
+    params: &xla::Literal,
+    ds: &Dataset,
+) -> Result<(MatF32, MatF32, Vec<f32>)> {
+    let r = rt.man.r;
+    let n = ds.n();
+    let h = *rt.man.hidden.last().expect("hidden layer");
+    let mut gl = MatF32::zeros(n, rt.man.classes);
+    let mut al = MatF32::zeros(n, h);
+    let mut losses = vec![0.0f32; n];
+    let mut start = 0;
+    while start < n {
+        let idx: Vec<usize> = (start..start + r).map(|i| i % n).collect();
+        let (x, y) = ds.batch(&idx);
+        let (g, a, l) = rt.grad_embed(params, &x, &y)?;
+        let valid = r.min(n - start);
+        for k in 0..valid {
+            gl.row_mut(start + k).copy_from_slice(g.row(k));
+            al.row_mut(start + k).copy_from_slice(a.row(k));
+            losses[start + k] = l[k];
+        }
+        start += valid;
+    }
+    Ok((gl, al, losses))
+}
+
+impl<'a> EpochCoresetSource<'a> {
+    fn reselect(
+        &mut self,
+        step: usize,
+        state: &TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let (gl, al, _) = full_embeddings(self.rt, &state.params, self.train)?;
+        let entries: Vec<(usize, f32)> = match self.kind {
+            MethodKind::Craig => {
+                let sel = craig::craig_select(&al, &gl, self.k, &mut self.rng);
+                let gamma = craig::craig_batch_gamma(&sel);
+                sel.idx.into_iter().zip(gamma).collect()
+            }
+            MethodKind::GradMatch => {
+                let sel = gradmatch::gradmatch_select(&gl, self.k, &mut self.rng);
+                // scale Σγ=n down to batch convention (mean 1 over coreset)
+                let k = sel.idx.len() as f32;
+                let sum: f32 = sel.gamma.iter().sum();
+                let scale = if sum > 0.0 { k / sum } else { 1.0 };
+                sel.idx.into_iter().zip(sel.gamma.into_iter().map(|g| g * scale)).collect()
+            }
+            MethodKind::Glister => {
+                // validation mean gradient from one r-chunk of val data
+                let r = self.rt.man.r;
+                let idx: Vec<usize> = (0..r).map(|i| i % self.val.n()).collect();
+                let (x, y) = self.val.batch(&idx);
+                let (gval, _, _) = self.rt.grad_embed(&state.params, &x, &y)?;
+                let vmean = gval.mean_row();
+                let sel = glister::glister_select(&gl, &vmean, self.k);
+                sel.idx.into_iter().zip(sel.gamma).collect()
+            }
+            _ => bail!("EpochCoresetSource misconfigured: {:?}", self.kind),
+        };
+        self.entries = entries;
+        self.rng.shuffle(&mut self.entries);
+        self.into_epoch = 0;
+        self.n_updates += 1;
+        self.update_steps.push(step);
+        timers.add("selection", t0.elapsed());
+        Ok(())
+    }
+}
+
+impl<'a> BatchSource for EpochCoresetSource<'a> {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        let fresh = self.entries.is_empty() || self.into_epoch >= self.epoch_steps;
+        if fresh {
+            self.reselect(step, state, timers)?;
+        }
+        let m = self.rt.man.m;
+        let start = (self.into_epoch * m) % self.entries.len().max(1);
+        let mut idx = Vec::with_capacity(m);
+        let mut gamma = Vec::with_capacity(m);
+        for j in 0..m {
+            let (i, g) = self.entries[(start + j) % self.entries.len()];
+            idx.push(i);
+            gamma.push(g);
+        }
+        self.into_epoch += 1;
+        let selection = fresh.then(|| SelectionRecord {
+            step,
+            selected: self.entries.iter().map(|&(i, _)| i).collect(),
+        });
+        Ok(SourcedBatch { idx, gamma, selection })
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            n_updates: self.n_updates,
+            update_steps: self.update_steps.clone(),
+            ..Default::default()
+        }
+    }
+}
+
+// ------------------------------------------------------ greedy-per-batch
+
+/// Fig. 3 ablation: fresh facility-location mini-batch from a new random
+/// subset at every single step (maximal selection effort).
+struct GreedyPerBatchSource<'a> {
+    rt: &'a Runtime,
+    train: &'a Dataset,
+    rng: Rng,
+    n_updates: usize,
+}
+
+impl<'a> BatchSource for GreedyPerBatchSource<'a> {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        let t0 = Instant::now();
+        let r = self.rt.man.r;
+        let m = self.rt.man.m;
+        let pool = self.rng.sample_indices(self.train.n(), r);
+        let (x, y) = self.train.batch(&pool);
+        let (gl, al, _) = self.rt.grad_embed(&state.params, &x, &y)?;
+        let sel = facility::facility_location_prod(&al, &gl, m);
+        let mut mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
+        if std::env::var("CREST_UNIT_GAMMA").is_ok() {
+            mb.gamma = vec![1.0; mb.gamma.len()];
+        }
+        self.n_updates += 1;
+        timers.add("selection", t0.elapsed());
+        Ok(SourcedBatch {
+            selection: Some(SelectionRecord { step, selected: mb.idx.clone() }),
+            idx: mb.idx,
+            gamma: mb.gamma,
+        })
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats { n_updates: self.n_updates, ..Default::default() }
+    }
+}
+
+// --------------------------------------------------------------- CREST
+
+/// Algorithm 1 (paper §4): the full CREST engine.
+pub struct CrestSource<'a> {
+    rt: &'a Runtime,
+    train: &'a Dataset,
+    rng: Rng,
+    // knobs
+    tau: f32,
+    h_mult: f32,
+    b_mult: usize,
+    t2: usize,
+    max_t1: usize,
+    max_p: usize,
+    compiled_selection: bool,
+    selection_threads: usize,
+    exclude: bool,
+    /// first step at which exclusion windows may close (§4.3 timing)
+    exclude_after: usize,
+    // state
+    quad: QuadraticModel,
+    excl: ExclusionTracker,
+    coresets: Vec<MiniBatchCoreset>,
+    update: bool,
+    t1: usize,
+    p: usize,
+    iters_since_select: usize,
+    anchor_params: Vec<f32>,
+    /// the fixed random sample V_r anchored with F^l: the ρ-check compares
+    /// F^l(δ) against the loss of the *same* subset so sampling noise does
+    /// not masquerade as model drift
+    vr_idx: Vec<usize>,
+    // stats
+    n_updates: usize,
+    rho_history: Vec<(usize, f32)>,
+    t1_history: Vec<(usize, usize)>,
+    update_steps: Vec<usize>,
+}
+
+impl<'a> CrestSource<'a> {
+    pub fn new(
+        cfg: &ExperimentConfig,
+        rt: &'a Runtime,
+        train: &'a Dataset,
+        steps_total: usize,
+        rng: Rng,
+    ) -> Self {
+        let opts = QuadOptions {
+            second_order: cfg.crest.second_order,
+            smooth: cfg.crest.smooth,
+        };
+        CrestSource {
+            rt,
+            train,
+            rng,
+            tau: cfg.tau,
+            h_mult: cfg.h_mult,
+            b_mult: cfg.b_mult.max(1),
+            t2: cfg.t2.max(1),
+            max_t1: cfg.max_t1.max(1),
+            max_p: cfg.max_p.max(1),
+            compiled_selection: cfg.compiled_selection,
+            selection_threads: cfg.selection_threads.max(1),
+            exclude: cfg.crest.exclude,
+            exclude_after: (steps_total as f32 * cfg.exclude_after_frac) as usize,
+            quad: QuadraticModel::new(rt.man.p_dim, cfg.beta1, cfg.beta2, opts),
+            excl: ExclusionTracker::new(train.n(), cfg.alpha, cfg.crest.exclude),
+            coresets: Vec::new(),
+            update: true,
+            t1: 1,
+            p: cfg.b_mult.max(1),
+            iters_since_select: 0,
+            anchor_params: Vec::new(),
+            vr_idx: Vec::new(),
+            n_updates: 0,
+            rho_history: Vec::new(),
+            t1_history: Vec::new(),
+            update_steps: Vec::new(),
+        }
+    }
+
+    /// Sample a size-r index set from the active pool (with replacement once
+    /// the pool shrinks below r).
+    fn sample_subset(&mut self, r: usize) -> Vec<usize> {
+        let pool = self.excl.active_pool();
+        if pool.len() >= r {
+            self.rng.sample_from_pool(&pool, r)
+        } else if pool.is_empty() {
+            (0..r).map(|_| self.rng.gen_range(self.train.n())).collect()
+        } else {
+            (0..r).map(|_| pool[self.rng.gen_range(pool.len())]).collect()
+        }
+    }
+
+    /// Selection round: P random subsets → P mini-batch coresets
+    /// (paper §4.2), then re-anchor the quadratic model (paper §4.1).
+    fn select(&mut self, step: usize, state: &TrainState, timers: &mut PhaseTimers) -> Result<()> {
+        let r = self.rt.man.r;
+        let m = self.rt.man.m;
+        // --- embeddings for P random subsets (XLA, serial) ---
+        let t0 = Instant::now();
+        let mut subsets: Vec<(Vec<usize>, MatF32, MatF32)> = Vec::with_capacity(self.p);
+        for _ in 0..self.p {
+            let idx = self.sample_subset(r);
+            let (x, y) = self.train.batch(&idx);
+            let (gl, al, losses) = self.rt.grad_embed(&state.params, &x, &y)?;
+            self.excl.observe_batch(&idx, &losses);
+            subsets.push((idx, gl, al));
+        }
+        // --- greedy per subset (host, parallel over P) ---
+        let coresets: Vec<MiniBatchCoreset> = if self.compiled_selection {
+            let mut out = Vec::with_capacity(self.p);
+            for (idx, gl, al) in &subsets {
+                let (sel_idx, w) = self.rt.select_greedy(gl, al)?;
+                let sel = facility::Selection { idx: sel_idx, gamma: w };
+                out.push(MiniBatchCoreset::from_selection(&sel, idx, m));
+            }
+            out
+        } else if self.selection_threads > 1 && subsets.len() > 1 {
+            let threads = self.selection_threads.min(subsets.len());
+            let chunks: Vec<&[(Vec<usize>, MatF32, MatF32)]> =
+                subsets.chunks(subsets.len().div_ceil(threads)).collect();
+            let results: Vec<Vec<MiniBatchCoreset>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = chunks
+                    .into_iter()
+                    .map(|chunk| {
+                        scope.spawn(move || {
+                            chunk
+                                .iter()
+                                .map(|(idx, gl, al)| {
+                                    let sel = facility::facility_location_prod(al, gl, m);
+                                    MiniBatchCoreset::from_selection(&sel, idx, m)
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("selection worker")).collect()
+            });
+            results.into_iter().flatten().collect()
+        } else {
+            subsets
+                .iter()
+                .map(|(idx, gl, al)| {
+                    let sel = facility::facility_location_prod(al, gl, m);
+                    MiniBatchCoreset::from_selection(&sel, idx, m)
+                })
+                .collect()
+        };
+        self.coresets = coresets;
+        timers.add("selection", t0.elapsed());
+
+        // --- quadratic re-anchor (Eq. 6-9): Hutchinson probe on a fresh
+        // random subset ---
+        let t0 = Instant::now();
+        let probe_idx = self.sample_subset(r);
+        let (px, py) = self.train.batch(&probe_idx);
+        let mut z = vec![0.0f32; self.rt.man.p_dim];
+        self.rng.rademacher_fill(&mut z);
+        let probe = self.rt.hess_probe(&state.params, &px, &py, &z)?;
+        let hdiag: Vec<f32> = z.iter().zip(&probe.hz).map(|(&zi, &hzi)| zi * hzi).collect();
+        self.quad.observe_grad(&probe.grad);
+        self.quad.observe_hdiag(&hdiag);
+        // anchor F^l on the probe subset's loss and keep the subset as V_r:
+        // the ρ-check re-evaluates the SAME subset at w+δ (Eq. 10)
+        self.quad.set_anchor(probe.mean_loss);
+        self.vr_idx = probe_idx;
+        self.anchor_params = state.params_host(self.rt)?;
+        timers.add("loss_approx", t0.elapsed());
+
+        self.update = false;
+        self.iters_since_select = 0;
+        self.n_updates += 1;
+        self.update_steps.push(step);
+        Ok(())
+    }
+}
+
+impl<'a> BatchSource for CrestSource<'a> {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        let selection = if self.update || self.coresets.is_empty() {
+            self.select(step, state, timers)?;
+            let union: Vec<usize> =
+                self.coresets.iter().flat_map(|c| c.idx.iter().copied()).collect();
+            Some(SelectionRecord { step, selected: union })
+        } else {
+            None
+        };
+        // train on a random member of the current coreset pool (§4.2)
+        let pick = self.rng.gen_range(self.coresets.len());
+        let c = &self.coresets[pick];
+        Ok(SourcedBatch { idx: c.idx.clone(), gamma: c.gamma.clone(), selection })
+    }
+
+    fn after_step(
+        &mut self,
+        step: usize,
+        _idx: &[usize],
+        _per_ex_loss: &[f32],
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        self.iters_since_select += 1;
+        // learned-example exclusion windows (§4.3); freeze once the pool
+        // cannot fill a random subset anymore
+        if self.exclude && step >= self.exclude_after && (step + 1) % self.t2 == 0 {
+            let pool = self.excl.active_pool();
+            if pool.len() > 2 * self.rt.man.r {
+                self.excl.end_window();
+            }
+        }
+        // ρ-check (Eq. 10) at the end of each T₁ block
+        if self.iters_since_select >= self.t1 && !self.update {
+            let t0 = Instant::now();
+            let (x, y) = self.train.batch(&self.vr_idx);
+            let (_, _, losses) = self.rt.grad_embed(&state.params, &x, &y)?;
+            self.excl.observe_batch(&self.vr_idx, &losses);
+            let l_r = stats::mean(&losses);
+            let now = state.params_host(self.rt)?;
+            let delta = stats::sub(&now, &self.anchor_params);
+            let rho = self.quad.rho(&delta, l_r);
+            self.rho_history.push((step, rho));
+            timers.add("rho_check", t0.elapsed());
+            if rho > self.tau {
+                self.update = true;
+                self.t1 = self.quad.adapt_t1(self.h_mult, self.max_t1);
+                self.p = (self.b_mult * self.t1).clamp(1, self.max_p);
+                self.t1_history.push((step, self.t1));
+            } else {
+                // quadratic still valid: keep the coresets another T₁ block
+                self.iters_since_select = 0;
+            }
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            n_updates: self.n_updates,
+            n_excluded: self.excl.n_excluded(),
+            excluded_indices: self.excl.excluded_indices(),
+            rho_history: self.rho_history.clone(),
+            t1_history: self.t1_history.clone(),
+            update_steps: self.update_steps.clone(),
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! Facility-location submodular maximization — the selection engine.
+//!
+//! Greedy maximization of `C - Σ_i min_{j∈S} ||g_i - g_j||²` (paper Eq. 5 /
+//! Eq. 11) with **lazy evaluation** (Minoux 1978): marginal gains are
+//! monotone non-increasing, so stale heap entries upper-bound true gains and
+//! most candidates are never re-scored. Gamma weights are cluster sizes —
+//! the per-element step sizes of Eq. (4).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::tensor::MatF32;
+
+/// Result of one selection: indices into the ground set + gamma weights.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    pub idx: Vec<usize>,
+    pub gamma: Vec<f32>,
+}
+
+impl Selection {
+    /// Scale gammas so a size-m weighted batch is an unbiased estimator of
+    /// the ground set's mean loss: γ' = γ · m / Σγ.
+    pub fn normalized_gamma(&self, m: usize) -> Vec<f32> {
+        let sum: f32 = self.gamma.iter().sum();
+        if sum <= 0.0 {
+            return vec![1.0; self.gamma.len()];
+        }
+        self.gamma.iter().map(|&g| g * m as f32 / sum).collect()
+    }
+}
+
+#[derive(PartialEq)]
+struct HeapItem {
+    gain: f32,
+    cand: usize,
+    /// selection round when this gain was computed (staleness marker)
+    round: usize,
+}
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.gain.partial_cmp(&other.gain).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// 4-lane unrolled dot product (auto-vectorizes well in release builds).
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// A squared-distance metric over a ground set of embeddings.
+pub trait SqDistMetric {
+    fn len(&self) -> usize;
+    fn sqdist(&self, i: usize, j: usize) -> f32;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Plain Euclidean metric over rows of one matrix, with precomputed squared
+/// norms (`‖a‖²+‖b‖²−2a·b`).
+pub struct EuclidMetric<'a> {
+    g: &'a MatF32,
+    sq: Vec<f32>,
+}
+
+impl<'a> EuclidMetric<'a> {
+    pub fn new(g: &'a MatF32) -> Self {
+        let sq = (0..g.rows)
+            .map(|i| g.row(i).iter().map(|&v| v * v).sum::<f32>())
+            .collect();
+        EuclidMetric { g, sq }
+    }
+}
+
+impl<'a> SqDistMetric for EuclidMetric<'a> {
+    fn len(&self) -> usize {
+        self.g.rows
+    }
+
+    #[inline]
+    fn sqdist(&self, i: usize, j: usize) -> f32 {
+        let dot = dot4(self.g.row(i), self.g.row(j));
+        (self.sq[i] + self.sq[j] - 2.0 * dot).max(0.0)
+    }
+}
+
+/// Last-layer *weight*-gradient metric: example i's gradient is the outer
+/// product `a_i ⊗ g_i`, whose pairwise Frobenius distance factorizes as
+/// `|a_i|²|g_i|² + |a_j|²|g_j|² − 2(a_i·a_j)(g_i·g_j)` — the same metric as
+/// the `pairwise_gradprod` Pallas kernel (see DESIGN.md §3).
+pub struct ProdMetric<'a> {
+    a: &'a MatF32,
+    g: &'a MatF32,
+    sq: Vec<f32>,
+}
+
+impl<'a> ProdMetric<'a> {
+    pub fn new(a: &'a MatF32, g: &'a MatF32) -> Self {
+        assert_eq!(a.rows, g.rows, "ProdMetric: row mismatch");
+        let sq = (0..a.rows)
+            .map(|i| {
+                let na: f32 = a.row(i).iter().map(|&v| v * v).sum();
+                let ng: f32 = g.row(i).iter().map(|&v| v * v).sum();
+                na * ng
+            })
+            .collect();
+        ProdMetric { a, g, sq }
+    }
+}
+
+impl<'a> SqDistMetric for ProdMetric<'a> {
+    fn len(&self) -> usize {
+        self.a.rows
+    }
+
+    #[inline]
+    fn sqdist(&self, i: usize, j: usize) -> f32 {
+        let aa = dot4(self.a.row(i), self.a.row(j));
+        let gg = dot4(self.g.row(i), self.g.row(j));
+        (self.sq[i] + self.sq[j] - 2.0 * aa * gg).max(0.0)
+    }
+}
+
+/// Marginal gain of candidate `j` given current min-distances.
+#[inline]
+fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..mind.len() {
+        let d = ctx.sqdist(j, i);
+        if d < mind[i] {
+            s += mind[i] - d;
+        }
+    }
+    s
+}
+
+/// Gain restricted to the still-uncovered elements. Elements whose
+/// min-distance has fallen below `floor` can contribute at most `floor`
+/// each, so skipping them changes any gain by < active_floor_mass — the
+/// hot-loop optimization behind EXPERIMENTS.md §Perf.
+#[inline]
+fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize) -> f32 {
+    // dense scan is faster until the list actually thins out
+    if active.len() == mind.len() {
+        return gain(ctx, mind, j);
+    }
+    let mut s = 0.0f32;
+    for &i in active {
+        let i = i as usize;
+        let d = ctx.sqdist(j, i);
+        if d < mind[i] {
+            s += mind[i] - d;
+        }
+    }
+    s
+}
+
+/// Rebuild the active-element list: keep elements whose residual
+/// min-distance is above a small fraction of the mean initial coverage.
+fn rebuild_active(mind: &[f32], floor: f32) -> Vec<u32> {
+    (0..mind.len()).filter(|&i| mind[i] > floor).map(|i| i as u32).collect()
+}
+
+/// Select `m` medoids from the rows of `g` (Euclidean metric) by lazy
+/// greedy facility location.
+pub fn facility_location(g: &MatF32, m: usize) -> Selection {
+    facility_location_metric(&EuclidMetric::new(g), m)
+}
+
+/// Facility location under the last-layer weight-gradient metric
+/// (activations `a` + logit gradients `g`).
+pub fn facility_location_prod(a: &MatF32, g: &MatF32, m: usize) -> Selection {
+    facility_location_metric(&ProdMetric::new(a, g), m)
+}
+
+/// Lazy-greedy facility location over any squared-distance metric.
+/// Returns gamma weights (cluster sizes summing to the ground-set size).
+pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
+    let r = ctx.len();
+    assert!(m >= 1 && m <= r, "facility_location: m={m} out of range for r={r}");
+    // Round 0 has no finite gains (empty assignment): the 1-medoid is the
+    // candidate minimizing total distance. Computed exhaustively.
+    let mut first = (0usize, f32::INFINITY);
+    for j in 0..r {
+        let mut tot = 0.0f32;
+        for i in 0..r {
+            tot += ctx.sqdist(j, i);
+        }
+        if tot < first.1 {
+            first = (j, tot);
+        }
+    }
+    let j0 = first.0;
+    let mut mind: Vec<f32> = (0..r).map(|i| ctx.sqdist(j0, i)).collect();
+    let mut idx = Vec::with_capacity(m);
+    idx.push(j0);
+    // covered-element skip threshold: a small fraction of the mean initial
+    // coverage (elements this close to a medoid cannot change greedy order)
+    let floor = 1e-4 * (mind.iter().map(|&v| v as f64).sum::<f64>() / r as f64) as f32;
+    let mut active = rebuild_active(&mind, floor);
+    // Seed the heap with *exact* round-1 gains (one full pass). Gains are
+    // monotone non-increasing from here, so stale heap entries are valid
+    // upper bounds — the lazy-greedy invariant.
+    let mut heap = BinaryHeap::with_capacity(r);
+    for j in 0..r {
+        if j == j0 {
+            continue;
+        }
+        heap.push(HeapItem { gain: gain_active(ctx, &mind, &active, j), cand: j, round: 1 });
+    }
+    let mut round = 1usize;
+    while idx.len() < m {
+        let top = heap.pop().expect("heap never empties before m selections");
+        if top.round == round {
+            // fresh gain: select
+            let j = top.cand;
+            for i in 0..r {
+                let d = ctx.sqdist(j, i);
+                if d < mind[i] {
+                    mind[i] = d;
+                }
+            }
+            idx.push(j);
+            round += 1;
+            if active.len() > 32 {
+                active = rebuild_active(&mind, floor);
+            }
+        } else {
+            // stale: re-score against current mins and push back
+            let gnew = gain_active(ctx, &mind, &active, top.cand);
+            heap.push(HeapItem { gain: gnew, cand: top.cand, round });
+        }
+    }
+    // gamma = cluster sizes under nearest-medoid assignment
+    let mut gamma = vec![0.0f32; m];
+    for i in 0..r {
+        let mut best = 0usize;
+        let mut bd = f32::INFINITY;
+        for (s, &j) in idx.iter().enumerate() {
+            let d = ctx.sqdist(j, i);
+            if d < bd {
+                bd = d;
+                best = s;
+            }
+        }
+        gamma[best] += 1.0;
+    }
+    Selection { idx, gamma }
+}
+
+/// Stochastic ("lazier than lazy") greedy of Mirzasoleiman et al. 2015:
+/// each step scores only a random candidate sample of size
+/// `s = (n/m)·ln(1/ε)`, giving a (1 − 1/e − ε) guarantee in O(n·ln(1/ε))
+/// gain evaluations — the standard way CRAIG scales to full-dataset
+/// selection (paper challenge C3).
+pub fn facility_location_stochastic<M: SqDistMetric>(
+    ctx: &M,
+    m: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Selection {
+    let r = ctx.len();
+    assert!(m >= 1 && m <= r, "stochastic greedy: m={m} out of range for r={r}");
+    let eps_ln = 2.3f64; // ln(1/ε) with ε = 0.1
+    let s = (((r as f64 / m as f64) * eps_ln).ceil() as usize).clamp(8, r);
+    let mut mind = vec![f32::INFINITY; r];
+    let mut taken = vec![false; r];
+    let mut idx = Vec::with_capacity(m);
+    // For very large ground sets, score gains on a uniform element sample:
+    // E[sampled gain] ∝ true gain, so greedy order is preserved in
+    // expectation (sample-based greedy) while cost drops by n/sample.
+    let gain_cap = 2048usize;
+    let mut active: Vec<u32> = if r > gain_cap {
+        let mut v = rng.sample_indices(r, gain_cap);
+        v.sort_unstable();
+        v.into_iter().map(|i| i as u32).collect()
+    } else {
+        (0..r as u32).collect()
+    };
+    let sampled_ground = r > gain_cap;
+    let mut floor = 0.0f32;
+    for round in 0..m {
+        let mut best = (usize::MAX, f64::NEG_INFINITY);
+        for _ in 0..s {
+            let j = rng.gen_range(r);
+            if taken[j] {
+                continue;
+            }
+            let g = if round == 0 {
+                // empty assignment: minimize total distance (over the
+                // gain sample when the ground set is large)
+                let mut tot = 0.0f64;
+                for &i in &active {
+                    tot += ctx.sqdist(j, i as usize) as f64;
+                }
+                -tot
+            } else {
+                gain_active(ctx, &mind, &active, j) as f64
+            };
+            if g > best.1 {
+                best = (j, g);
+            }
+        }
+        if best.0 == usize::MAX {
+            // all sampled candidates already taken: fall back to scan
+            match (0..r).find(|&j| !taken[j]) {
+                Some(j) => best.0 = j,
+                None => break,
+            }
+        }
+        let j = best.0;
+        taken[j] = true;
+        for i in 0..r {
+            let d = ctx.sqdist(j, i);
+            if d < mind[i] {
+                mind[i] = d;
+            }
+        }
+        idx.push(j);
+        if round == 0 {
+            floor = 1e-4
+                * (mind.iter().map(|&v| v as f64).sum::<f64>() / r as f64) as f32;
+        }
+        // covered elements cannot change future gains materially: skip them
+        // (when the ground set is subsampled, thin the sample instead)
+        if !sampled_ground && (round % 8 == 0 || active.len() > 4 * (r / (round + 1))) {
+            active = rebuild_active(&mind, floor);
+        } else if sampled_ground {
+            active.retain(|&i| mind[i as usize] > floor);
+        }
+    }
+    // gamma = cluster sizes under nearest-medoid assignment
+    let mut gamma = vec![0.0f32; idx.len()];
+    for i in 0..r {
+        let mut bestj = 0usize;
+        let mut bd = f32::INFINITY;
+        for (k, &j) in idx.iter().enumerate() {
+            let d = ctx.sqdist(j, i);
+            if d < bd {
+                bd = d;
+                bestj = k;
+            }
+        }
+        gamma[bestj] += 1.0;
+    }
+    Selection { idx, gamma }
+}
+
+/// Facility-location objective value of a selection (for tests/benches):
+/// total min squared distance (lower is better coverage).
+pub fn coverage_cost(g: &MatF32, idx: &[usize]) -> f64 {
+    let ctx = EuclidMetric::new(g);
+    let mut total = 0.0f64;
+    for i in 0..g.rows {
+        let mut bd = f32::INFINITY;
+        for &j in idx {
+            bd = bd.min(ctx.sqdist(j, i));
+        }
+        total += bd as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_embed(r: usize, c: usize, seed: u64) -> MatF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatF32::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    fn clustered_embed(clusters: usize, per: usize, c: usize, seed: u64) -> MatF32 {
+        let mut rng = Rng::new(seed);
+        let mut centers = MatF32::zeros(clusters, c);
+        for v in centers.data.iter_mut() {
+            *v = rng.normal() * 10.0;
+        }
+        let mut m = MatF32::zeros(clusters * per, c);
+        for i in 0..clusters * per {
+            let ctr = centers.row(i / per);
+            for (o, &b) in m.row_mut(i).iter_mut().zip(ctr) {
+                *o = b + rng.normal() * 0.05;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn gamma_sums_to_ground_set_size() {
+        let g = random_embed(100, 8, 1);
+        for m in [1, 5, 32] {
+            let s = facility_location(&g, m);
+            assert_eq!(s.idx.len(), m);
+            assert_eq!(s.gamma.len(), m);
+            let sum: f32 = s.gamma.iter().sum();
+            assert_eq!(sum, 100.0, "m={m}");
+        }
+    }
+
+    #[test]
+    fn indices_unique_and_in_range() {
+        let g = random_embed(64, 4, 2);
+        let s = facility_location(&g, 16);
+        let set: std::collections::HashSet<_> = s.idx.iter().collect();
+        assert_eq!(set.len(), 16);
+        assert!(s.idx.iter().all(|&i| i < 64));
+    }
+
+    #[test]
+    fn recovers_cluster_medoids() {
+        let g = clustered_embed(8, 8, 6, 3);
+        let s = facility_location(&g, 8);
+        let clusters: std::collections::HashSet<_> = s.idx.iter().map(|&i| i / 8).collect();
+        assert_eq!(clusters.len(), 8, "one medoid per cluster");
+        for &ga in &s.gamma {
+            assert_eq!(ga, 8.0);
+        }
+    }
+
+    #[test]
+    fn lazy_matches_naive_greedy_cost() {
+        // exhaustive greedy reference
+        let g = random_embed(40, 5, 4);
+        let m = 10;
+        let lazy = facility_location(&g, m);
+        // naive greedy
+        let ctx_cost = |idx: &[usize]| coverage_cost(&g, idx);
+        let mut naive: Vec<usize> = Vec::new();
+        for _ in 0..m {
+            let mut best = (usize::MAX, f64::INFINITY);
+            for j in 0..40 {
+                if naive.contains(&j) {
+                    continue;
+                }
+                let mut cand = naive.clone();
+                cand.push(j);
+                let c = ctx_cost(&cand);
+                if c < best.1 {
+                    best = (j, c);
+                }
+            }
+            naive.push(best.0);
+        }
+        let lc = ctx_cost(&lazy.idx);
+        let nc = ctx_cost(&naive);
+        assert!(lc <= nc * 1.0001 + 1e-9, "lazy {lc} vs naive {nc}");
+    }
+
+    #[test]
+    fn cost_decreases_with_m() {
+        let g = random_embed(80, 6, 5);
+        let c4 = coverage_cost(&g, &facility_location(&g, 4).idx);
+        let c16 = coverage_cost(&g, &facility_location(&g, 16).idx);
+        let c40 = coverage_cost(&g, &facility_location(&g, 40).idx);
+        assert!(c16 < c4);
+        assert!(c40 < c16);
+    }
+
+    #[test]
+    fn m_equals_r_zero_cost() {
+        let g = random_embed(16, 3, 6);
+        let s = facility_location(&g, 16);
+        assert!(coverage_cost(&g, &s.idx) < 1e-6);
+    }
+
+    #[test]
+    fn normalized_gamma_unbiased_scaling() {
+        let g = random_embed(64, 4, 7);
+        let s = facility_location(&g, 8);
+        let gn = s.normalized_gamma(8);
+        let sum: f32 = gn.iter().sum();
+        assert!((sum - 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn beats_random_selection_on_clustered_data() {
+        let g = clustered_embed(10, 20, 8, 8);
+        let s = facility_location(&g, 10);
+        let mut rng = Rng::new(9);
+        let mut rand_cost = 0.0;
+        for _ in 0..5 {
+            let ridx = rng.sample_indices(200, 10);
+            rand_cost += coverage_cost(&g, &ridx);
+        }
+        rand_cost /= 5.0;
+        assert!(
+            coverage_cost(&g, &s.idx) < rand_cost * 0.5,
+            "greedy should cover clusters far better than random"
+        );
+    }
+}

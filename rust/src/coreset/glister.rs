@@ -1,0 +1,126 @@
+//! GLISTER baseline (Killamsetty et al. 2021b).
+//!
+//! Generalization-based selection: greedily choose training examples whose
+//! gradients most increase the one-step validation-loss reduction. With a
+//! first-order Taylor approximation the marginal gain of example j is
+//! `⟨g_j, g_val⟩` (alignment between the example's gradient and the mean
+//! validation gradient), making the greedy a top-k by inner product —
+//! the standard "last-layer GLISTER" configuration. Unlike CRAIG/CREST
+//! the selection is unweighted.
+//!
+//! (*) As in the paper's Table 1 footnote, GLISTER is the only method that
+//! uses the validation set.
+
+use crate::coreset::facility::Selection;
+use crate::tensor::MatF32;
+
+/// Select k examples by greedy maximization of the one-step Taylor
+/// approximation of the validation-loss reduction:
+///
+///   gain(j | S) = ⟨g_j, g_val⟩ − η ⟨g_j, Σ_{i∈S} g_i⟩ − (η/2)‖g_j‖²
+///
+/// The second-order terms (from ‖∇val − η Σ g‖² expansion) give diminishing
+/// returns along already-covered directions — without them a pure top-k
+/// collapses onto a single gradient direction (class-imbalanced subsets).
+/// η = 2/k normalizes the selected-sum scale (the factor 2 weights the
+/// regularizer strongly enough to diversify clone-heavy ground sets).
+pub fn glister_select(gl_train: &MatF32, val_mean_grad: &[f32], k: usize) -> Selection {
+    assert_eq!(gl_train.cols, val_mean_grad.len());
+    let n = gl_train.rows;
+    let k = k.min(n);
+    let c = gl_train.cols;
+    let eta = 2.0f64 / k as f64;
+    // precompute alignment and self terms
+    let align: Vec<f64> =
+        (0..n).map(|j| crate::util::stats::dot(gl_train.row(j), val_mean_grad)).collect();
+    let self_term: Vec<f64> = (0..n)
+        .map(|j| 0.5 * eta * crate::util::stats::dot(gl_train.row(j), gl_train.row(j)))
+        .collect();
+    let mut sum_sel = vec![0.0f64; c];
+    let mut taken = vec![false; n];
+    let mut idx = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut best = (usize::MAX, f64::NEG_INFINITY);
+        for j in 0..n {
+            if taken[j] {
+                continue;
+            }
+            let cross: f64 = gl_train
+                .row(j)
+                .iter()
+                .zip(&sum_sel)
+                .map(|(&g, &s)| g as f64 * s)
+                .sum();
+            let gain = align[j] - eta * cross - self_term[j];
+            if gain > best.1 {
+                best = (j, gain);
+            }
+        }
+        let j = best.0;
+        taken[j] = true;
+        idx.push(j);
+        for (s, &g) in sum_sel.iter_mut().zip(gl_train.row(j)) {
+            *s += g as f64;
+        }
+    }
+    Selection { idx, gamma: vec![1.0; k] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn picks_most_aligned_examples() {
+        let mut g = MatF32::zeros(4, 2);
+        g.row_mut(0).copy_from_slice(&[1.0, 0.0]); // aligned
+        g.row_mut(1).copy_from_slice(&[-1.0, 0.0]); // anti-aligned
+        g.row_mut(2).copy_from_slice(&[0.5, 0.0]); // somewhat
+        g.row_mut(3).copy_from_slice(&[0.0, 1.0]); // orthogonal
+        let sel = glister_select(&g, &[1.0, 0.0], 2);
+        assert_eq!(sel.idx[0], 0, "best-aligned example first");
+        assert!(sel.idx.contains(&2) || sel.idx.contains(&3));
+        assert_eq!(sel.gamma, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let g = MatF32::zeros(3, 2);
+        let sel = glister_select(&g, &[1.0, 0.0], 10);
+        assert_eq!(sel.idx.len(), 3);
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        let g = MatF32::zeros(5, 2); // all scores equal (0)
+        let sel = glister_select(&g, &[1.0, 0.0], 3);
+        assert_eq!(sel.idx, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn diminishing_returns_diversify_selection() {
+        // 3 identical strongly-aligned rows + 1 weakly-aligned orthogonal:
+        // the regularized greedy must not take all three clones first.
+        let mut g = MatF32::zeros(4, 2);
+        g.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        g.row_mut(1).copy_from_slice(&[1.0, 0.0]);
+        g.row_mut(2).copy_from_slice(&[1.0, 0.0]);
+        g.row_mut(3).copy_from_slice(&[0.0, 0.9]);
+        let sel = glister_select(&g, &[1.0, 0.5], 2);
+        assert!(sel.idx.contains(&3), "orthogonal direction should be covered: {:?}", sel.idx);
+    }
+
+    #[test]
+    fn unweighted_selection() {
+        let mut rng = Rng::new(1);
+        let mut g = MatF32::zeros(20, 4);
+        for v in g.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let sel = glister_select(&g, &[0.5, -0.5, 0.1, 0.0], 8);
+        assert!(sel.gamma.iter().all(|&w| w == 1.0));
+        let set: std::collections::HashSet<_> = sel.idx.iter().collect();
+        assert_eq!(set.len(), 8);
+    }
+}

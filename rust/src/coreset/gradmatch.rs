@@ -1,0 +1,199 @@
+//! GRADMATCH baseline (Killamsetty et al. 2021a).
+//!
+//! Orthogonal matching pursuit over last-layer gradient embeddings: greedily
+//! pick the example whose gradient best explains the residual of the full
+//! mean gradient, re-fit non-negative weights by least squares, repeat.
+//!
+//! As the CREST paper notes (§3), "OMP ... does not always find a large
+//! enough subset. Hence, the coreset needs to be augmented with random
+//! examples" — the embedding space has only `c` dimensions, so OMP
+//! saturates after ≈c picks; the remainder of the k-budget is filled with
+//! unit-weight random examples, exactly as in the reference implementation.
+
+use crate::coreset::facility::Selection;
+use crate::tensor::MatF32;
+use crate::util::rng::Rng;
+
+/// Solve the small ridge system `(AᵀA + λI)w = Aᵀt` by Gaussian elimination
+/// with partial pivoting. `a` is column-major: s columns of dimension c.
+fn solve_ridge(cols: &[&[f32]], target: &[f32], lambda: f64) -> Vec<f32> {
+    let s = cols.len();
+    let c = target.len();
+    // normal matrix
+    let mut m = vec![vec![0.0f64; s + 1]; s];
+    for i in 0..s {
+        for j in 0..s {
+            let mut dot = 0.0f64;
+            for k in 0..c {
+                dot += cols[i][k] as f64 * cols[j][k] as f64;
+            }
+            m[i][j] = dot + if i == j { lambda } else { 0.0 };
+        }
+        let mut rhs = 0.0f64;
+        for k in 0..c {
+            rhs += cols[i][k] as f64 * target[k] as f64;
+        }
+        m[i][s] = rhs;
+    }
+    // elimination
+    for col in 0..s {
+        let piv = (col..s).max_by(|&a, &b| m[a][col].abs().partial_cmp(&m[b][col].abs()).unwrap());
+        let piv = piv.unwrap();
+        m.swap(col, piv);
+        let d = m[col][col];
+        if d.abs() < 1e-12 {
+            continue;
+        }
+        for row in 0..s {
+            if row == col {
+                continue;
+            }
+            let f = m[row][col] / d;
+            for k in col..=s {
+                m[row][k] -= f * m[col][k];
+            }
+        }
+    }
+    (0..s)
+        .map(|i| {
+            let d = m[i][i];
+            if d.abs() < 1e-12 {
+                0.0
+            } else {
+                (m[i][s] / d) as f32
+            }
+        })
+        .collect()
+}
+
+/// OMP gradient matching: select up to k examples with weights so that
+/// `Σ w_j g_j ≈ n · mean(g)`. Saturated budget is filled with random
+/// unit-weight examples.
+pub fn gradmatch_select(gl_full: &MatF32, k: usize, rng: &mut Rng) -> Selection {
+    let n = gl_full.rows;
+    let c = gl_full.cols;
+    let k = k.min(n);
+    let target = gl_full.mean_row(); // match the mean gradient
+    let mut residual: Vec<f32> = target.clone();
+    let mut picked: Vec<usize> = Vec::new();
+    let mut weights: Vec<f32> = Vec::new();
+    let max_omp = k.min(2 * c); // OMP effective capacity in a c-dim space
+    let eps = 1e-4 * crate::util::stats::norm2(&target).max(1e-12);
+    for _ in 0..max_omp {
+        if crate::util::stats::norm2(&residual) < eps {
+            break;
+        }
+        // argmax correlation with the residual
+        let mut best = (usize::MAX, 0.0f64);
+        for j in 0..n {
+            if picked.contains(&j) {
+                continue;
+            }
+            let corr = crate::util::stats::dot(gl_full.row(j), &residual).abs();
+            if corr > best.1 {
+                best = (j, corr);
+            }
+        }
+        if best.0 == usize::MAX {
+            break;
+        }
+        picked.push(best.0);
+        // refit non-negative weights on the picked set
+        let cols: Vec<&[f32]> = picked.iter().map(|&j| gl_full.row(j)).collect();
+        let w = solve_ridge(&cols, &target, 1e-6);
+        weights = w.into_iter().map(|x| x.max(0.0)).collect();
+        // new residual
+        residual = target.clone();
+        for (p, &j) in picked.iter().enumerate() {
+            for (rk, &g) in residual.iter_mut().zip(gl_full.row(j)) {
+                *rk -= weights[p] * g;
+            }
+        }
+    }
+    // random augmentation to reach k (paper §3)
+    let mut in_set: std::collections::HashSet<usize> = picked.iter().copied().collect();
+    while picked.len() < k {
+        let j = rng.gen_range(n);
+        if in_set.insert(j) {
+            picked.push(j);
+            weights.push(1.0);
+        }
+    }
+    // rescale so Σγ = n (same convention as facility location weights)
+    let sum: f32 = weights.iter().sum();
+    let scale = if sum > 0.0 { n as f32 / sum } else { 1.0 };
+    for w in weights.iter_mut() {
+        *w *= scale;
+    }
+    Selection { idx: picked, gamma: weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn embed(rows: &[&[f32]]) -> MatF32 {
+        let c = rows[0].len();
+        let mut m = MatF32::zeros(rows.len(), c);
+        for (i, r) in rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        m
+    }
+
+    #[test]
+    fn solve_ridge_exact_square() {
+        // cols = e1, e2; target = [3, 4] -> w = [3, 4]
+        let c1 = [1.0f32, 0.0];
+        let c2 = [0.0f32, 1.0];
+        let w = solve_ridge(&[&c1, &c2], &[3.0, 4.0], 0.0);
+        assert!((w[0] - 3.0).abs() < 1e-5 && (w[1] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn omp_reconstructs_sparse_combination() {
+        // ground set: 2 informative directions + noise rows
+        let g = embed(&[
+            &[1.0, 0.0, 0.0],
+            &[0.0, 1.0, 0.0],
+            &[0.01, 0.0, 0.02],
+            &[0.0, 0.01, 0.01],
+        ]);
+        let mut rng = Rng::new(1);
+        let sel = gradmatch_select(&g, 2, &mut rng);
+        assert_eq!(sel.idx.len(), 2);
+        // must include the two informative rows
+        assert!(sel.idx.contains(&0) && sel.idx.contains(&1));
+    }
+
+    #[test]
+    fn gamma_sums_to_n_and_nonnegative() {
+        let mut rng = Rng::new(2);
+        let mut data = MatF32::zeros(50, 5);
+        let mut r2 = Rng::new(3);
+        for v in data.data.iter_mut() {
+            *v = r2.normal();
+        }
+        let sel = gradmatch_select(&data, 20, &mut rng);
+        assert_eq!(sel.idx.len(), 20);
+        assert!(sel.gamma.iter().all(|&g| g >= 0.0));
+        let sum: f32 = sel.gamma.iter().sum();
+        assert!((sum - 50.0).abs() < 1e-2, "sum {sum}");
+        // indices unique
+        let set: std::collections::HashSet<_> = sel.idx.iter().collect();
+        assert_eq!(set.len(), 20);
+    }
+
+    #[test]
+    fn saturates_then_pads_with_random() {
+        // 1-dim embeddings: OMP can use at most ~2 informative picks
+        let mut data = MatF32::zeros(30, 1);
+        let mut r = Rng::new(4);
+        for v in data.data.iter_mut() {
+            *v = r.normal();
+        }
+        let mut rng = Rng::new(5);
+        let sel = gradmatch_select(&data, 10, &mut rng);
+        assert_eq!(sel.idx.len(), 10, "random augmentation fills the budget");
+    }
+}

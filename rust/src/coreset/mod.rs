@@ -1,0 +1,49 @@
+//! Coreset selection algorithms: CREST's facility-location engine plus the
+//! three published baselines it is evaluated against.
+//!
+//! All selectors operate on host-side last-layer gradient embeddings
+//! (computed by the `grad_embed` artifact) and are pure functions — the
+//! coordinator owns all XLA interaction.
+
+pub mod craig;
+pub mod facility;
+pub mod glister;
+pub mod gradmatch;
+
+pub use facility::{coverage_cost, facility_location, Selection};
+
+/// A selected mini-batch coreset: global example indices + per-element
+/// step sizes normalized so the weighted batch loss is an unbiased
+/// estimator (mean gamma = 1).
+#[derive(Debug, Clone)]
+pub struct MiniBatchCoreset {
+    pub idx: Vec<usize>,
+    pub gamma: Vec<f32>,
+}
+
+impl MiniBatchCoreset {
+    /// Build from a facility-location selection over a ground subset.
+    /// `pool[sel.idx[j]]` maps subset positions back to global indices.
+    pub fn from_selection(sel: &Selection, pool: &[usize], m: usize) -> MiniBatchCoreset {
+        MiniBatchCoreset {
+            idx: sel.idx.iter().map(|&i| pool[i]).collect(),
+            gamma: sel.normalized_gamma(m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_selection_maps_global_indices() {
+        let sel = Selection { idx: vec![2, 0], gamma: vec![3.0, 1.0] };
+        let pool = vec![10, 20, 30, 40];
+        let mb = MiniBatchCoreset::from_selection(&sel, &pool, 2);
+        assert_eq!(mb.idx, vec![30, 10]);
+        let sum: f32 = mb.gamma.iter().sum();
+        assert!((sum - 2.0).abs() < 1e-6);
+        assert!(mb.gamma[0] > mb.gamma[1]);
+    }
+}

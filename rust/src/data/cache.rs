@@ -1,0 +1,185 @@
+//! Binary on-disk dataset format (write once, memory-load fast).
+//!
+//! Examples and benches cache generated corpora so repeated runs skip
+//! synthesis. Format (little-endian):
+//!
+//! ```text
+//! magic   8 bytes  "CRSTDS1\0"
+//! n       u64      examples
+//! d       u64      feature dim
+//! classes u64
+//! x       n*d f32
+//! y       n   i32
+//! difficulty n f32
+//! is_noisy   n u8
+//! cluster    n u32
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Dataset;
+use crate::tensor::MatF32;
+
+const MAGIC: &[u8; 8] = b"CRSTDS1\0";
+
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    for v in [ds.n() as u64, ds.d() as u64, ds.classes as u64] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &f in &ds.x.data {
+        w.write_all(&f.to_le_bytes())?;
+    }
+    for &y in &ds.y {
+        w.write_all(&y.to_le_bytes())?;
+    }
+    for &f in &ds.difficulty {
+        w.write_all(&f.to_le_bytes())?;
+    }
+    for &b in &ds.is_noisy {
+        w.write_all(&[b as u8])?;
+    }
+    for &c in &ds.cluster {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic (not a CREST dataset file)");
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n = read_u64(&mut r)? as usize;
+    let d = read_u64(&mut r)? as usize;
+    let classes = read_u64(&mut r)? as usize;
+    if n.checked_mul(d).is_none() || n * d > (1 << 31) {
+        bail!("{path:?}: implausible dims n={n} d={d}");
+    }
+
+    let mut xbuf = vec![0u8; n * d * 4];
+    r.read_exact(&mut xbuf)?;
+    let x: Vec<f32> = xbuf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+
+    let mut ybuf = vec![0u8; n * 4];
+    r.read_exact(&mut ybuf)?;
+    let y: Vec<i32> = ybuf.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+
+    let mut dbuf = vec![0u8; n * 4];
+    r.read_exact(&mut dbuf)?;
+    let difficulty: Vec<f32> =
+        dbuf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+
+    let mut nbuf = vec![0u8; n];
+    r.read_exact(&mut nbuf)?;
+    let is_noisy: Vec<bool> = nbuf.iter().map(|&b| b != 0).collect();
+
+    let mut cbuf = vec![0u8; n * 4];
+    r.read_exact(&mut cbuf)?;
+    let cluster: Vec<u32> =
+        cbuf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+
+    // trailing garbage check
+    let mut extra = [0u8; 1];
+    if r.read(&mut extra)? != 0 {
+        bail!("{path:?}: trailing bytes after dataset payload");
+    }
+
+    Ok(Dataset {
+        x: MatF32::from_vec(n, d, x)?,
+        y,
+        classes,
+        difficulty,
+        is_noisy,
+        cluster,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("crest_cache_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let spec = SynthSpec {
+            name: "t",
+            n_train: 64,
+            n_val: 8,
+            n_test: 8,
+            d: 6,
+            classes: 3,
+            clusters_per_class: 2,
+            redundancy: 0.5,
+            label_noise: 0.1,
+            margin: 2.0,
+            easy_sigma: 0.3,
+            hard_sigma: 1.0,
+            seed: 3,
+        };
+        let ds = generate(&spec).train;
+        let path = tmpfile("roundtrip.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.x.data, ds.x.data);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.difficulty, ds.difficulty);
+        assert_eq!(back.is_noisy, ds.is_noisy);
+        assert_eq!(back.cluster, ds.cluster);
+        assert_eq!(back.classes, ds.classes);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic.bin");
+        std::fs::write(&path, b"NOTADATASET_____").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let spec = SynthSpec {
+            name: "t",
+            n_train: 16,
+            n_val: 4,
+            n_test: 4,
+            d: 4,
+            classes: 2,
+            clusters_per_class: 1,
+            redundancy: 0.5,
+            label_noise: 0.0,
+            margin: 2.0,
+            easy_sigma: 0.3,
+            hard_sigma: 1.0,
+            seed: 4,
+        };
+        let ds = generate(&spec).train;
+        let path = tmpfile("trunc.bin");
+        save(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,105 @@
+//! In-memory labeled dataset with per-example provenance metadata.
+//!
+//! The provenance fields (`difficulty`, `is_noisy`, `cluster`) exist so the
+//! analysis benches (Fig. 5/7) can relate what CREST selects to ground-truth
+//! example structure — they are never visible to the training path.
+
+use crate::tensor::MatF32;
+
+/// A labeled dataset plus synthesis provenance.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Features, one row per example.
+    pub x: MatF32,
+    /// Integer class labels.
+    pub y: Vec<i32>,
+    pub classes: usize,
+    /// Ground-truth difficulty in [0, 1] (0 = easiest): distance of the
+    /// example from its cluster center relative to class margin.
+    pub difficulty: Vec<f32>,
+    /// Whether the label was corrupted by synthesis noise.
+    pub is_noisy: Vec<bool>,
+    /// Generating sub-cluster id (redundancy structure).
+    pub cluster: Vec<u32>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    /// Gather a sub-dataset by example indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            classes: self.classes,
+            difficulty: idx.iter().map(|&i| self.difficulty[i]).collect(),
+            is_noisy: idx.iter().map(|&i| self.is_noisy[i]).collect(),
+            cluster: idx.iter().map(|&i| self.cluster[i]).collect(),
+        }
+    }
+
+    /// (features, labels) for the given indices — batch assembly.
+    pub fn batch(&self, idx: &[usize]) -> (MatF32, Vec<i32>) {
+        (self.x.gather_rows(idx), idx.iter().map(|&i| self.y[i]).collect())
+    }
+
+    /// Class histogram.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.classes];
+        for &y in &self.y {
+            c[y as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Train/validation/test partition of one generated corpus.
+#[derive(Debug, Clone)]
+pub struct Splits {
+    pub train: Dataset,
+    pub val: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            x: MatF32::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap(),
+            y: vec![0, 1, 0, 1],
+            classes: 2,
+            difficulty: vec![0.1, 0.2, 0.3, 0.4],
+            is_noisy: vec![false, true, false, false],
+            cluster: vec![0, 1, 0, 1],
+        }
+    }
+
+    #[test]
+    fn subset_preserves_metadata() {
+        let d = tiny().subset(&[2, 0]);
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.y, vec![0, 0]);
+        assert_eq!(d.difficulty, vec![0.3, 0.1]);
+        assert_eq!(d.cluster, vec![0, 0]);
+    }
+
+    #[test]
+    fn batch_gathers() {
+        let (x, y) = tiny().batch(&[1, 3]);
+        assert_eq!(x.data, vec![1., 1., 3., 3.]);
+        assert_eq!(y, vec![1, 1]);
+    }
+
+    #[test]
+    fn class_counts() {
+        assert_eq!(tiny().class_counts(), vec![2, 2]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Prefetching batch pipeline with bounded-channel backpressure.
+//!
+//! Host-side batch assembly (row gathers + label copies) overlaps with XLA
+//! execution: a worker thread materializes upcoming batches into a bounded
+//! channel while the trainer consumes them. This is the streaming-pipeline
+//! substrate of the coordinator (DESIGN.md §4); selection methods that
+//! choose their own indices use `Dataset::batch` directly instead.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
+
+use crate::data::dataset::Dataset;
+use crate::tensor::MatF32;
+use crate::util::rng::Rng;
+
+/// One assembled training batch.
+#[derive(Debug)]
+pub struct Batch {
+    /// Source example indices (for loss/forgettability bookkeeping).
+    pub idx: Vec<usize>,
+    pub x: MatF32,
+    pub y: Vec<i32>,
+}
+
+/// Epoch-shuffled prefetching loader over a dataset.
+pub struct Loader {
+    rx: Receiver<Batch>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Loader {
+    /// Stream `total_batches` batches of size `m`, reshuffling each epoch.
+    /// `depth` bounds how many batches may be in flight (backpressure).
+    pub fn spawn(ds: &Dataset, m: usize, total_batches: usize, seed: u64, depth: usize) -> Loader {
+        assert!(m <= ds.n(), "batch {} > dataset {}", m, ds.n());
+        let ds = ds.clone();
+        let (tx, rx) = sync_channel(depth.max(1));
+        let handle = std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            let mut order: Vec<usize> = (0..ds.n()).collect();
+            let mut cursor = ds.n(); // force shuffle on first use
+            for _ in 0..total_batches {
+                if cursor + m > ds.n() {
+                    rng.shuffle(&mut order);
+                    cursor = 0;
+                }
+                let idx: Vec<usize> = order[cursor..cursor + m].to_vec();
+                cursor += m;
+                let (x, y) = ds.batch(&idx);
+                if tx.send(Batch { idx, x, y }).is_err() {
+                    return; // consumer dropped early
+                }
+            }
+        });
+        Loader { rx, handle: Some(handle) }
+    }
+
+    /// Blocking next; `None` when the planned stream is exhausted.
+    pub fn next(&mut self) -> Option<Batch> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Loader {
+    fn drop(&mut self) {
+        // Draining is unnecessary: sender exits on send error once rx drops.
+        if let Some(h) = self.handle.take() {
+            let _ = h;
+            // detach: the worker exits as soon as it observes the closed channel
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn ds() -> Dataset {
+        generate(&SynthSpec {
+            name: "t",
+            n_train: 100,
+            n_val: 10,
+            n_test: 10,
+            d: 4,
+            classes: 2,
+            clusters_per_class: 1,
+            redundancy: 0.5,
+            label_noise: 0.0,
+            margin: 2.0,
+            easy_sigma: 0.3,
+            hard_sigma: 1.0,
+            seed: 5,
+        })
+        .train
+    }
+
+    #[test]
+    fn yields_exact_count_and_shapes() {
+        let d = ds();
+        let mut l = Loader::spawn(&d, 16, 10, 1, 2);
+        let mut count = 0;
+        while let Some(b) = l.next() {
+            assert_eq!(b.idx.len(), 16);
+            assert_eq!(b.x.rows, 16);
+            assert_eq!(b.y.len(), 16);
+            count += 1;
+        }
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    fn epoch_covers_all_examples_without_replacement() {
+        let d = ds();
+        // 100 examples / batch 20 -> 5 batches per epoch
+        let mut l = Loader::spawn(&d, 20, 5, 2, 2);
+        let mut seen = std::collections::HashSet::new();
+        while let Some(b) = l.next() {
+            for i in b.idx {
+                assert!(seen.insert(i), "duplicate {i} within epoch");
+            }
+        }
+        assert_eq!(seen.len(), 100);
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let d = ds();
+        let mut l = Loader::spawn(&d, 100, 2, 3, 2);
+        let a = l.next().unwrap().idx;
+        let b = l.next().unwrap().idx;
+        assert_ne!(a, b, "two epochs should have different order");
+    }
+
+    #[test]
+    fn batch_content_matches_dataset() {
+        let d = ds();
+        let mut l = Loader::spawn(&d, 8, 1, 4, 1);
+        let b = l.next().unwrap();
+        for (k, &i) in b.idx.iter().enumerate() {
+            assert_eq!(b.x.row(k), d.x.row(i));
+            assert_eq!(b.y[k], d.y[i]);
+        }
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let d = ds();
+        let l = Loader::spawn(&d, 16, 1000, 5, 1);
+        drop(l); // worker must exit via send error
+    }
+}

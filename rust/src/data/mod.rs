@@ -1,0 +1,10 @@
+//! Data substrate: datasets, synthetic corpus generation, on-disk cache,
+//! prefetching loader.
+
+pub mod cache;
+pub mod dataset;
+pub mod loader;
+pub mod synth;
+
+pub use dataset::{Dataset, Splits};
+pub use synth::{generate, SynthSpec};

@@ -1,0 +1,307 @@
+//! Synthetic class-conditional Gaussian-mixture corpora — the dataset
+//! proxies of DESIGN.md §2.
+//!
+//! The generator exposes the three axes coreset selection is sensitive to:
+//!
+//! * **redundancy** — a fraction of the mass is drawn tightly around a few
+//!   dominant sub-clusters per class (many near-duplicate easy examples,
+//!   the "10% you don't need" of Birodkar et al.);
+//! * **difficulty spectrum** — the rest is drawn with a larger spread so
+//!   margins vary continuously (drives the forgettability ordering of
+//!   paper Fig. 5);
+//! * **label noise** — a fraction of labels are flipped (hard/never-learned
+//!   tail).
+//!
+//! Per-example ground truth (difficulty, noise flag, cluster id) is kept as
+//! metadata for the analysis benches.
+
+use crate::data::dataset::{Dataset, Splits};
+use crate::tensor::MatF32;
+use crate::util::rng::Rng;
+
+/// Generation parameters for one corpus.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub name: &'static str,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub classes: usize,
+    /// Sub-clusters per class (redundancy structure).
+    pub clusters_per_class: usize,
+    /// Fraction of examples drawn from the tight "easy" component.
+    pub redundancy: f32,
+    /// Label flip probability.
+    pub label_noise: f32,
+    /// Separation of class centers (bigger = easier problem).
+    pub margin: f32,
+    /// Spread of easy examples around their sub-cluster center.
+    pub easy_sigma: f32,
+    /// Spread of hard examples.
+    pub hard_sigma: f32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// Preset mirroring a paper dataset (see DESIGN.md §6). The four
+    /// variants differ in size, dimensionality, class count and hardness
+    /// the way CIFAR-10 → CIFAR-100 → TinyImageNet → SNLI do.
+    pub fn preset(variant: &str, seed: u64) -> Option<SynthSpec> {
+        let s = match variant {
+            "cifar10-proxy" => SynthSpec {
+                name: "cifar10-proxy",
+                n_train: 5120,
+                n_val: 512,
+                n_test: 1024,
+                d: 64,
+                classes: 10,
+                clusters_per_class: 3,
+                redundancy: 0.85,
+                label_noise: 0.01,
+                margin: 1.2,
+                easy_sigma: 0.4,
+                hard_sigma: 2.1,
+                seed,
+            },
+            "cifar100-proxy" => SynthSpec {
+                name: "cifar100-proxy",
+                n_train: 6400,
+                n_val: 512,
+                n_test: 1024,
+                d: 96,
+                classes: 20,
+                clusters_per_class: 2,
+                redundancy: 0.50,
+                label_noise: 0.01,
+                margin: 1.7,
+                easy_sigma: 0.45,
+                hard_sigma: 2.2,
+                seed,
+            },
+            "tinyimagenet-proxy" => SynthSpec {
+                name: "tinyimagenet-proxy",
+                n_train: 8192,
+                n_val: 512,
+                n_test: 1024,
+                d: 128,
+                classes: 40,
+                clusters_per_class: 2,
+                redundancy: 0.45,
+                label_noise: 0.01,
+                margin: 1.5,
+                easy_sigma: 0.5,
+                hard_sigma: 2.3,
+                seed,
+            },
+            "snli-proxy" => SynthSpec {
+                name: "snli-proxy",
+                n_train: 20480,
+                n_val: 1024,
+                n_test: 2048,
+                d: 96,
+                classes: 3,
+                clusters_per_class: 8,
+                redundancy: 0.6,
+                label_noise: 0.01,
+                margin: 1.6,
+                easy_sigma: 0.5,
+                hard_sigma: 2.2,
+                seed,
+            },
+            _ => return None,
+        };
+        Some(s)
+    }
+}
+
+/// Generate the train/val/test splits for a spec.
+///
+/// Geometry: a "Gaussian checkerboard". Sub-cluster centers are scattered
+/// i.i.d. in a low-dimensional latent subspace (dimension grows with the
+/// cluster count) and classes are assigned round-robin, so same-class
+/// regions are *not* contiguous — the model must carve one decision region
+/// per sub-cluster. That is what makes convergence take many epochs
+/// (one-blob-per-class mixtures are fit by an MLP in a few hundred steps)
+/// while keeping the redundancy/difficulty structure coresets exploit.
+pub fn generate(spec: &SynthSpec) -> Splits {
+    let mut rng = Rng::new(spec.seed ^ 0xC0FF_EE00);
+    let k = spec.clusters_per_class;
+    let n_clusters = spec.classes * k;
+    // latent subspace dimension: enough to scatter clusters, far below d
+    let latent = ((n_clusters as f32).log2() as usize + 3).min(spec.d);
+    let mut sub = MatF32::zeros(n_clusters, spec.d);
+    for cl in 0..n_clusters {
+        let row = sub.row_mut(cl);
+        for v in row.iter_mut().take(latent) {
+            *v = rng.normal() * spec.margin * 2.0;
+        }
+        // tiny off-subspace jitter keeps the embedding full-rank
+        for v in row.iter_mut().skip(latent) {
+            *v = rng.normal() * 0.01;
+        }
+    }
+
+    let gen_split = |n: usize, rng: &mut Rng| -> Dataset {
+        let mut x = MatF32::zeros(n, spec.d);
+        let mut y = vec![0i32; n];
+        let mut difficulty = vec![0.0f32; n];
+        let mut is_noisy = vec![false; n];
+        let mut cluster = vec![0u32; n];
+        for i in 0..n {
+            // round-robin label assignment over scattered clusters
+            let cl = rng.gen_range(n_clusters);
+            let c = cl % spec.classes;
+            let easy = rng.uniform() < spec.redundancy;
+            let sigma = if easy { spec.easy_sigma } else { spec.hard_sigma };
+            let center = sub.row(cl).to_vec();
+            let row = x.row_mut(i);
+            let mut dist2 = 0.0f32;
+            // displacement lives in the latent subspace (plus tiny ambient
+            // noise) so "hard" means near a *different* cluster's region
+            for (j, (o, &b)) in row.iter_mut().zip(&center).enumerate() {
+                let scale = if j < latent { sigma } else { 0.05 };
+                let noise = rng.normal() * scale;
+                *o = b + noise;
+                dist2 += noise * noise;
+            }
+            // difficulty: displacement relative to cluster spacing, in [0,1)
+            let rel = dist2.sqrt() / (spec.margin * 2.0 * (latent as f32).sqrt());
+            difficulty[i] = rel / (1.0 + rel);
+            let mut label = c;
+            if rng.uniform() < spec.label_noise {
+                label = (c + 1 + rng.gen_range(spec.classes - 1)) % spec.classes;
+                is_noisy[i] = true;
+                difficulty[i] = 1.0; // mislabeled = unlearnable without memorizing
+            }
+            y[i] = label as i32;
+            cluster[i] = cl as u32;
+        }
+        normalize_features(&mut x);
+        Dataset { x, y, classes: spec.classes, difficulty, is_noisy, cluster }
+    };
+
+    let train = gen_split(spec.n_train, &mut rng);
+    let val = gen_split(spec.n_val, &mut rng);
+    let test = gen_split(spec.n_test, &mut rng);
+    Splits { train, val, test }
+}
+
+/// Standardize features to zero mean / unit variance per dimension
+/// (computed on the split itself — proxy for the usual dataset transform).
+fn normalize_features(x: &mut MatF32) {
+    let (n, d) = (x.rows, x.cols);
+    if n == 0 {
+        return;
+    }
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..n {
+            mean += x.row(i)[j] as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..n {
+            let v = x.row(i)[j] as f64 - mean;
+            var += v * v;
+        }
+        var /= n as f64;
+        let inv = 1.0 / var.sqrt().max(1e-6);
+        for i in 0..n {
+            let v = &mut x.row_mut(i)[j];
+            *v = ((*v as f64 - mean) * inv) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> SynthSpec {
+        SynthSpec {
+            name: "test",
+            n_train: 400,
+            n_val: 50,
+            n_test: 50,
+            d: 16,
+            classes: 4,
+            clusters_per_class: 2,
+            redundancy: 0.5,
+            label_noise: 0.1,
+            margin: 3.0,
+            easy_sigma: 0.3,
+            hard_sigma: 1.5,
+            seed: 1,
+        }
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let s = generate(&small_spec());
+        assert_eq!(s.train.n(), 400);
+        assert_eq!(s.val.n(), 50);
+        assert_eq!(s.test.n(), 50);
+        assert_eq!(s.train.d(), 16);
+        assert!(s.train.y.iter().all(|&y| (0..4).contains(&(y as usize))));
+        assert!(s.train.difficulty.iter().all(|&d| (0.0..=1.0).contains(&d)));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&small_spec());
+        let b = generate(&small_spec());
+        assert_eq!(a.train.x.data, b.train.x.data);
+        assert_eq!(a.train.y, b.train.y);
+        let mut spec2 = small_spec();
+        spec2.seed = 2;
+        let c = generate(&spec2);
+        assert_ne!(a.train.x.data, c.train.x.data);
+    }
+
+    #[test]
+    fn noise_rate_near_target() {
+        let s = generate(&small_spec());
+        let noisy = s.train.is_noisy.iter().filter(|&&b| b).count();
+        let rate = noisy as f32 / 400.0;
+        assert!((0.04..0.20).contains(&rate), "rate {rate}");
+    }
+
+    #[test]
+    fn features_standardized() {
+        let s = generate(&small_spec());
+        let x = &s.train.x;
+        for j in [0, 7, 15] {
+            let col: Vec<f32> = (0..x.rows).map(|i| x.row(i)[j]).collect();
+            assert!(crate::util::stats::mean(&col).abs() < 0.05);
+            assert!((crate::util::stats::variance(&col) - 1.0).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn noisy_examples_marked_hardest() {
+        let s = generate(&small_spec());
+        for i in 0..s.train.n() {
+            if s.train.is_noisy[i] {
+                assert_eq!(s.train.difficulty[i], 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn all_presets_exist_and_generate() {
+        for v in ["cifar10-proxy", "cifar100-proxy", "tinyimagenet-proxy", "snli-proxy"] {
+            let spec = SynthSpec::preset(v, 0).unwrap();
+            assert_eq!(spec.name, v);
+        }
+        assert!(SynthSpec::preset("bogus", 0).is_none());
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let s = generate(&small_spec());
+        for c in s.train.class_counts() {
+            assert!((50..150).contains(&c), "count {c}");
+        }
+    }
+}

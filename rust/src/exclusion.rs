@@ -1,0 +1,151 @@
+//! Learned-example exclusion (paper §4.3, challenge C3).
+//!
+//! Examples whose observed loss stays below `α` for a whole window of
+//! `T₂` iterations are dropped from the selection ground set. Only losses
+//! already computed for the random subsets are used — exclusion adds no
+//! extra forward passes.
+
+/// Tracks per-example losses within non-overlapping T₂ windows.
+#[derive(Debug, Clone)]
+pub struct ExclusionTracker {
+    alpha: f32,
+    /// max loss observed for each example in the current window
+    window_max: Vec<f32>,
+    /// whether the example was observed at all this window
+    observed: Vec<bool>,
+    excluded: Vec<bool>,
+    n_excluded: usize,
+    enabled: bool,
+}
+
+impl ExclusionTracker {
+    pub fn new(n: usize, alpha: f32, enabled: bool) -> Self {
+        ExclusionTracker {
+            alpha,
+            window_max: vec![f32::NEG_INFINITY; n],
+            observed: vec![false; n],
+            excluded: vec![false; n],
+            n_excluded: 0,
+            enabled,
+        }
+    }
+
+    /// Record a loss observation for example `idx`.
+    pub fn observe(&mut self, idx: usize, loss: f32) {
+        if !self.enabled {
+            return;
+        }
+        self.observed[idx] = true;
+        if loss > self.window_max[idx] {
+            self.window_max[idx] = loss;
+        }
+    }
+
+    /// Record a batch of observations.
+    pub fn observe_batch(&mut self, idx: &[usize], losses: &[f32]) {
+        debug_assert_eq!(idx.len(), losses.len());
+        for (&i, &l) in idx.iter().zip(losses) {
+            self.observe(i, l);
+        }
+    }
+
+    /// Close the current T₂ window: exclude every example that was observed
+    /// and never exceeded α. Returns how many were newly excluded.
+    pub fn end_window(&mut self) -> usize {
+        if !self.enabled {
+            return 0;
+        }
+        let mut newly = 0;
+        for i in 0..self.window_max.len() {
+            if self.observed[i] && !self.excluded[i] && self.window_max[i] < self.alpha {
+                self.excluded[i] = true;
+                self.n_excluded += 1;
+                newly += 1;
+            }
+            self.observed[i] = false;
+            self.window_max[i] = f32::NEG_INFINITY;
+        }
+        newly
+    }
+
+    pub fn is_excluded(&self, idx: usize) -> bool {
+        self.excluded[idx]
+    }
+
+    pub fn n_excluded(&self) -> usize {
+        self.n_excluded
+    }
+
+    /// Remaining selection ground set.
+    pub fn active_pool(&self) -> Vec<usize> {
+        (0..self.excluded.len()).filter(|&i| !self.excluded[i]).collect()
+    }
+
+    /// Indices excluded so far (Fig. 7a analysis).
+    pub fn excluded_indices(&self) -> Vec<usize> {
+        (0..self.excluded.len()).filter(|&i| self.excluded[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn excludes_consistently_low_loss() {
+        let mut t = ExclusionTracker::new(4, 0.1, true);
+        t.observe_batch(&[0, 1], &[0.01, 0.5]);
+        t.observe_batch(&[0, 2], &[0.05, 0.02]);
+        let newly = t.end_window();
+        assert_eq!(newly, 2); // 0 (always < 0.1) and 2 (< 0.1)
+        assert!(t.is_excluded(0));
+        assert!(!t.is_excluded(1)); // exceeded alpha
+        assert!(t.is_excluded(2));
+        assert!(!t.is_excluded(3)); // never observed
+        assert_eq!(t.active_pool(), vec![1, 3]);
+    }
+
+    #[test]
+    fn one_high_loss_saves_example_within_window() {
+        let mut t = ExclusionTracker::new(1, 0.1, true);
+        t.observe(0, 0.01);
+        t.observe(0, 0.9); // spike
+        t.observe(0, 0.01);
+        assert_eq!(t.end_window(), 0);
+        assert!(!t.is_excluded(0));
+    }
+
+    #[test]
+    fn windows_are_independent() {
+        let mut t = ExclusionTracker::new(1, 0.1, true);
+        t.observe(0, 0.9);
+        t.end_window();
+        assert!(!t.is_excluded(0));
+        // next window: consistently low -> excluded now
+        t.observe(0, 0.01);
+        assert_eq!(t.end_window(), 1);
+        assert!(t.is_excluded(0));
+    }
+
+    #[test]
+    fn exclusion_is_permanent_and_counted() {
+        let mut t = ExclusionTracker::new(2, 0.1, true);
+        t.observe(0, 0.0);
+        t.end_window();
+        assert_eq!(t.n_excluded(), 1);
+        // later high observation does not resurrect
+        t.observe(0, 5.0);
+        t.end_window();
+        assert!(t.is_excluded(0));
+        assert_eq!(t.n_excluded(), 1);
+        assert_eq!(t.excluded_indices(), vec![0]);
+    }
+
+    #[test]
+    fn disabled_tracker_never_excludes() {
+        let mut t = ExclusionTracker::new(3, 0.1, false);
+        t.observe_batch(&[0, 1, 2], &[0.0, 0.0, 0.0]);
+        assert_eq!(t.end_window(), 0);
+        assert_eq!(t.active_pool().len(), 3);
+    }
+}

@@ -1,0 +1,37 @@
+//! # CREST — Coresets for Data-efficient Deep Learning (ICML 2023)
+//!
+//! From-scratch reproduction of Yang, Kang & Mirzasoleiman's CREST as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for the selection
+//!   hot-spots (pairwise gradient distances, fused last-layer gradients,
+//!   facility-location gains), validated against pure-jnp oracles.
+//! * **L2** (`python/compile/model.py`): the JAX training graph (fwd/bwd,
+//!   Hutchinson Hessian probes, in-graph greedy selection), AOT-lowered to
+//!   HLO text once by `make artifacts`.
+//! * **L3** (this crate): the coordinator — Algorithm 1 of the paper, the
+//!   baseline coreset methods, the data pipeline, and the benchmark
+//!   harness that regenerates every table and figure of the evaluation.
+//!
+//! Python never runs on the training path: the `crest` binary loads the
+//! HLO artifacts through PJRT (`runtime`) and is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_util;
+pub mod config;
+pub mod coordinator;
+pub mod coreset;
+pub mod data;
+pub mod exclusion;
+pub mod metrics;
+pub mod model;
+pub mod opt;
+pub mod prop;
+pub mod quadratic;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,191 @@
+//! `crest` — CLI entrypoint for the CREST reproduction.
+//!
+//! Subcommands:
+//!   train    run one method on one variant and print the run report
+//!   compare  run several methods on one variant (Table-1-style rows)
+//!   inspect  print the compiled artifact interface for a variant
+//!   gen-data generate a proxy dataset and write the binary cache
+//!
+//! Example:
+//!   crest train --variant cifar10-proxy --method crest --seed 1
+//!   crest compare --variant cifar10-proxy --methods crest,random,craig
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coordinator::run_experiment;
+use crest::data::{cache, generate, SynthSpec};
+use crest::metrics::relative_error_pct;
+use crest::report::Table;
+use crest::runtime::Runtime;
+use crest::util::cli::Cli;
+use crest::util::logging;
+
+fn artifact_root(p: &str) -> PathBuf {
+    if p.is_empty() {
+        PathBuf::from("artifacts")
+    } else {
+        PathBuf::from(p)
+    }
+}
+
+fn main() -> Result<()> {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            eprintln!("usage: crest <train|compare|inspect|gen-data> [flags] (--help per command)");
+            std::process::exit(2);
+        }
+    };
+    match cmd {
+        "train" => cmd_train(&rest),
+        "compare" => cmd_compare(&rest),
+        "inspect" => cmd_inspect(&rest),
+        "gen-data" => cmd_gen_data(&rest),
+        _ => bail!("unknown command {cmd:?} (train|compare|inspect|gen-data)"),
+    }
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = Cli::new("crest train", "run one method on one variant")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("method", "crest", "full|random|sgd|crest|craig|gradmatch|glister|greedy")
+        .opt("seed", "1", "experiment seed")
+        .opt("budget", "0.1", "training budget as a fraction of full")
+        .opt("epochs-full", "60", "epochs of the full reference run")
+        .opt("artifacts", "artifacts", "artifact root directory")
+        .opt_maybe("out", "write the run report JSON here")
+        .opt_maybe("lr", "override the base learning rate")
+        .opt_maybe("tau", "override the ρ threshold τ")
+        .opt_maybe("alpha", "override the exclusion threshold α")
+        .flag("no-exclude", "disable learned-example exclusion")
+        .flag("first-order", "use a first-order loss model (CREST-FIRST)")
+        .flag("no-smooth", "disable EMA smoothing of grad/curvature")
+        .flag("compiled-selection", "use the XLA in-graph greedy")
+        .parse(args)?;
+
+    let variant = p.str("variant");
+    let mut cfg =
+        ExperimentConfig::preset(&variant, MethodKind::parse(&p.str("method"))?, p.u64("seed")?)?;
+    cfg.budget_frac = p.f32("budget")?;
+    cfg.epochs_full = p.usize("epochs-full")?;
+    cfg.compiled_selection = p.bool("compiled-selection");
+    if let Some(l) = p.get("lr") {
+        cfg.base_lr = l.parse()?;
+    }
+    if let Some(t) = p.get("tau") {
+        cfg.tau = t.parse()?;
+    }
+    if let Some(a) = p.get("alpha") {
+        cfg.alpha = a.parse()?;
+    }
+    if p.bool("no-exclude") {
+        cfg.crest.exclude = false;
+    }
+    if p.bool("first-order") {
+        cfg.crest.second_order = false;
+    }
+    if p.bool("no-smooth") {
+        cfg.crest.smooth = false;
+    }
+
+    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &variant)?;
+    let splits = generate(&SynthSpec::preset(&variant, cfg.seed).context("no preset")?);
+    let report = run_experiment(&rt, &splits, cfg)?;
+
+    println!(
+        "method={} variant={} acc={:.4} loss={:.4} steps={} updates={} excluded={} total={:.2}s (sel {:.2}s, train {:.2}s)",
+        report.method,
+        report.variant,
+        report.final_test_acc,
+        report.final_test_loss,
+        report.steps,
+        report.n_selection_updates,
+        report.n_excluded,
+        report.total_secs,
+        report.selection_secs,
+        report.train_secs,
+    );
+    if let Some(out) = p.get("out") {
+        std::fs::write(out, report.to_json().to_string_pretty())?;
+        println!("report written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &[String]) -> Result<()> {
+    let p = Cli::new("crest compare", "run several methods on one variant")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("methods", "full,random,crest,craig", "comma-separated method list")
+        .opt("seed", "1", "experiment seed")
+        .opt("budget", "0.1", "training budget fraction")
+        .opt("epochs-full", "60", "epochs of the full reference run")
+        .opt("artifacts", "artifacts", "artifact root directory")
+        .parse(args)?;
+
+    let variant = p.str("variant");
+    let seed = p.u64("seed")?;
+    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &variant)?;
+    let splits = generate(&SynthSpec::preset(&variant, seed).context("no preset")?);
+
+    let mut full_acc = None;
+    let mut table = Table::new(&["method", "test acc", "rel err %", "updates", "time (s)"]);
+    for name in p.str("methods").split(',') {
+        let method = MethodKind::parse(name.trim())?;
+        let mut cfg = ExperimentConfig::preset(&variant, method, seed)?;
+        cfg.budget_frac = p.f32("budget")?;
+        cfg.epochs_full = p.usize("epochs-full")?;
+        let rep = run_experiment(&rt, &splits, cfg)?;
+        if method == MethodKind::Full {
+            full_acc = Some(rep.final_test_acc);
+        }
+        let rel = full_acc
+            .map(|fa| relative_error_pct(rep.final_test_acc * 100.0, fa * 100.0))
+            .map(|r| format!("{r:.2}"))
+            .unwrap_or_else(|| "-".to_string());
+        table.row(&[
+            rep.method.clone(),
+            format!("{:.4}", rep.final_test_acc),
+            rel,
+            format!("{}", rep.n_selection_updates),
+            format!("{:.2}", rep.total_secs),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let p = Cli::new("crest inspect", "print the compiled artifact interface")
+        .opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt("artifacts", "artifacts", "artifact root directory")
+        .parse(args)?;
+    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &p.str("variant"))?;
+    print!("{}", rt.describe());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &[String]) -> Result<()> {
+    let p = Cli::new("crest gen-data", "generate a proxy dataset cache")
+        .opt("variant", "cifar10-proxy", "dataset variant")
+        .opt("seed", "1", "generation seed")
+        .opt("out", "/tmp/crest-data", "output directory")
+        .parse(args)?;
+    let variant = p.str("variant");
+    let spec = SynthSpec::preset(&variant, p.u64("seed")?).context("no preset")?;
+    let splits = generate(&spec);
+    let dir = PathBuf::from(p.str("out"));
+    std::fs::create_dir_all(&dir)?;
+    for (name, ds) in
+        [("train", &splits.train), ("val", &splits.val), ("test", &splits.test)]
+    {
+        let path = dir.join(format!("{variant}.{name}.bin"));
+        cache::save(ds, &path)?;
+        println!("wrote {} examples to {}", ds.n(), path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,152 @@
+//! Forgettability scores (Toneva et al. 2018) — paper Fig. 5 / Fig. 7b.
+//!
+//! A *forgetting event* is a transition correct → incorrect between two
+//! consecutive observations of the same example. The score of an example is
+//! its forgetting-event count; never-learned examples are conventionally
+//! assigned the maximum score (they are the hardest).
+
+/// Per-example correctness trajectory statistics.
+#[derive(Debug, Clone)]
+pub struct ForgetTracker {
+    /// last observed correctness (None = never observed)
+    prev: Vec<Option<bool>>,
+    forget_count: Vec<u32>,
+    ever_correct: Vec<bool>,
+    /// how many times each example appeared in a training batch (Fig. 7b)
+    selection_count: Vec<u32>,
+}
+
+impl ForgetTracker {
+    pub fn new(n: usize) -> Self {
+        ForgetTracker {
+            prev: vec![None; n],
+            forget_count: vec![0; n],
+            ever_correct: vec![false; n],
+            selection_count: vec![0; n],
+        }
+    }
+
+    /// Record a correctness observation for one example.
+    pub fn observe(&mut self, idx: usize, correct: bool) {
+        if correct {
+            self.ever_correct[idx] = true;
+        }
+        if let Some(true) = self.prev[idx] {
+            if !correct {
+                self.forget_count[idx] += 1;
+            }
+        }
+        self.prev[idx] = Some(correct);
+    }
+
+    pub fn observe_batch(&mut self, idx: &[usize], correct: &[f32]) {
+        debug_assert_eq!(idx.len(), correct.len());
+        for (&i, &c) in idx.iter().zip(correct) {
+            self.observe(i, c >= 0.5);
+        }
+    }
+
+    /// Count a training-batch appearance (selection frequency, Fig. 7b).
+    pub fn count_selection(&mut self, idx: &[usize]) {
+        for &i in idx {
+            self.selection_count[i] += 1;
+        }
+    }
+
+    /// Forgettability score; never-learned examples get `max_score`.
+    pub fn score(&self, idx: usize, max_score: u32) -> u32 {
+        if self.ever_correct[idx] {
+            self.forget_count[idx]
+        } else {
+            max_score
+        }
+    }
+
+    /// Mean score over a set of examples.
+    pub fn mean_score(&self, idx: &[usize], max_score: u32) -> f32 {
+        if idx.is_empty() {
+            return 0.0;
+        }
+        idx.iter().map(|&i| self.score(i, max_score) as f64).sum::<f64>() as f32
+            / idx.len() as f32
+    }
+
+    pub fn selection_counts(&self) -> &[u32] {
+        &self.selection_count
+    }
+
+    pub fn max_observed_score(&self) -> u32 {
+        self.forget_count.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Histogram of scores over all examples (bins 0..=max then overflow).
+    pub fn score_histogram(&self, max_score: u32) -> Vec<usize> {
+        let mut h = vec![0usize; (max_score + 1) as usize];
+        for i in 0..self.prev.len() {
+            let s = self.score(i, max_score).min(max_score) as usize;
+            h[s] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_correct_to_incorrect_transitions() {
+        let mut t = ForgetTracker::new(1);
+        for &c in &[true, false, true, true, false, false, true] {
+            t.observe(0, c);
+        }
+        // transitions: T->F at 1, T->F at 4 => 2 forgetting events
+        assert_eq!(t.score(0, 99), 2);
+    }
+
+    #[test]
+    fn never_learned_gets_max_score() {
+        let mut t = ForgetTracker::new(2);
+        t.observe(0, false);
+        t.observe(0, false);
+        t.observe(1, true);
+        assert_eq!(t.score(0, 7), 7);
+        assert_eq!(t.score(1, 7), 0);
+    }
+
+    #[test]
+    fn unobserved_counts_as_never_learned() {
+        let t = ForgetTracker::new(1);
+        assert_eq!(t.score(0, 5), 5);
+    }
+
+    #[test]
+    fn mean_score_over_subset() {
+        let mut t = ForgetTracker::new(3);
+        t.observe(0, true);
+        t.observe(0, false); // score 1
+        t.observe(1, true); // score 0
+        // 2 unobserved -> max 4
+        assert!((t.mean_score(&[0, 1, 2], 4) - (1.0 + 0.0 + 4.0) / 3.0).abs() < 1e-6);
+        assert_eq!(t.mean_score(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn selection_counts_accumulate() {
+        let mut t = ForgetTracker::new(4);
+        t.count_selection(&[0, 1, 1]);
+        t.count_selection(&[1]);
+        assert_eq!(t.selection_counts(), &[1, 3, 0, 0]);
+    }
+
+    #[test]
+    fn histogram_bins_and_overflow() {
+        let mut t = ForgetTracker::new(3);
+        // ex0: 1 forget; ex1: learned, 0 forgets; ex2: never learned
+        t.observe(0, true);
+        t.observe(0, false);
+        t.observe(1, true);
+        let h = t.score_histogram(2);
+        assert_eq!(h, vec![1, 1, 1]); // scores 0,1,2(capped)
+    }
+}

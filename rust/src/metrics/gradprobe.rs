@@ -1,0 +1,124 @@
+//! Gradient bias/variance probes (paper Fig. 1c/1d, Fig. 6, Fig. 9).
+//!
+//! The probes measure, in full parameter space, how well a mini-batch
+//! sampling scheme estimates the full training gradient:
+//!
+//! * bias     `‖E[g_mb] − ∇L‖`
+//! * variance `E[‖g_mb − ∇L‖²]`
+//!
+//! Batch gradients come from the `train_step` artifact run with zero
+//! momentum and lr=0 (`Runtime::batch_gradient`), so probes share the exact
+//! compiled compute path training uses.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::util::stats;
+
+/// Summary of a sampling scheme's gradient quality.
+#[derive(Debug, Clone, Copy)]
+pub struct GradStats {
+    /// ‖E[g] − ∇L‖
+    pub bias: f64,
+    /// E[‖g − ∇L‖²]
+    pub variance: f64,
+    /// ‖∇L‖ (for normalized reporting, Fig. 6b)
+    pub full_norm: f64,
+}
+
+/// Full-data mean gradient in parameter space, computed in chunks of r via
+/// the Hutchinson-probe artifact (z = 0 ⇒ it returns just the mean grad).
+pub fn full_gradient(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Result<Vec<f32>> {
+    let r = rt.man.r;
+    let n = ds.n();
+    let z = vec![0.0f32; rt.man.p_dim];
+    let mut acc = vec![0.0f64; rt.man.p_dim];
+    let mut weight_total = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + r).min(n);
+        let valid = end - start;
+        // pad the tail chunk by wrapping (weights account for the overlap)
+        let idx: Vec<usize> = (start..start + r).map(|i| i % n).collect();
+        let (x, y) = ds.batch(&idx);
+        let probe = rt.hess_probe(params, &x, &y, &z)?;
+        let w = valid as f64 / r as f64; // fraction of the chunk that is new
+        for (a, &g) in acc.iter_mut().zip(&probe.grad) {
+            *a += w * g as f64;
+        }
+        weight_total += w;
+        start = end;
+    }
+    Ok(acc.into_iter().map(|v| (v / weight_total) as f32).collect())
+}
+
+/// Gradient of one weighted mini-batch (gamma normalized to mean 1).
+pub fn batch_gradient(
+    rt: &Runtime,
+    params: &xla::Literal,
+    ds: &Dataset,
+    idx: &[usize],
+    gamma: &[f32],
+) -> Result<Vec<f32>> {
+    let (x, y) = ds.batch(idx);
+    rt.batch_gradient(params, &x, &y, gamma)
+}
+
+/// Estimate bias and variance of a batch sampler over `k` draws.
+///
+/// `sampler` returns (indices, gamma) for one mini-batch of size m.
+pub fn bias_variance<F>(
+    rt: &Runtime,
+    params: &xla::Literal,
+    ds: &Dataset,
+    full_grad: &[f32],
+    k: usize,
+    mut sampler: F,
+) -> Result<GradStats>
+where
+    F: FnMut() -> (Vec<usize>, Vec<f32>),
+{
+    let p = full_grad.len();
+    let mut mean = vec![0.0f64; p];
+    let mut var_acc = 0.0f64;
+    for _ in 0..k {
+        let (idx, gamma) = sampler();
+        let g = batch_gradient(rt, params, ds, &idx, &gamma)?;
+        let mut dev2 = 0.0f64;
+        for j in 0..p {
+            mean[j] += g[j] as f64 / k as f64;
+            let d = g[j] as f64 - full_grad[j] as f64;
+            dev2 += d * d;
+        }
+        var_acc += dev2 / k as f64;
+    }
+    let bias2: f64 = mean
+        .iter()
+        .zip(full_grad)
+        .map(|(&m, &f)| (m - f as f64) * (m - f as f64))
+        .sum();
+    Ok(GradStats {
+        bias: bias2.sqrt(),
+        variance: var_acc,
+        full_norm: stats::norm2(full_grad),
+    })
+}
+
+/// Error of a single aggregate gradient estimate vs the full gradient
+/// (Fig. 1b / Fig. 6a: coreset-union error).
+pub fn gradient_error(estimate: &[f32], full: &[f32]) -> f64 {
+    stats::norm2(&stats::sub(estimate, full))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradient_error_is_euclidean() {
+        let a = [1.0f32, 2.0, 2.0];
+        let b = [0.0f32, 0.0, 0.0];
+        assert!((gradient_error(&a, &b) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! Measurement instrumentation: forgettability scores, gradient
+//! bias/variance probes, relative-error bookkeeping.
+
+pub mod forget;
+pub mod gradprobe;
+
+/// Paper's headline metric (Table 1): relative error of a coreset run
+/// against the full-data run, in percent: `|acc_c − acc_f| / acc_c × 100`.
+///
+/// (The paper defines the denominator as the coreset accuracy; we follow
+/// that definition exactly.)
+pub fn relative_error_pct(acc_coreset: f32, acc_full: f32) -> f32 {
+    if acc_coreset <= 0.0 {
+        return 100.0;
+    }
+    (acc_coreset - acc_full).abs() / acc_coreset * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relative_error_matches_definition() {
+        assert!((relative_error_pct(90.0, 92.1) - (2.1 / 90.0 * 100.0)).abs() < 1e-4);
+        assert_eq!(relative_error_pct(0.0, 50.0), 100.0);
+        assert_eq!(relative_error_pct(50.0, 50.0), 0.0);
+    }
+}

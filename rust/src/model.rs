@@ -1,0 +1,103 @@
+//! Host-side parameter initialization for the AOT-compiled MLP.
+//!
+//! The flat layout (per layer: row-major W then b) must match
+//! `python/compile/model.py::unflatten`. Initialization is He-normal for
+//! weights and zero for biases — the same distribution the python test-side
+//! init draws from (bit equality is not required; see model.py docstring).
+
+use crate::runtime::manifest::VariantManifest;
+use crate::util::rng::Rng;
+
+/// He-normal initial parameter vector for a variant.
+pub fn init_params(man: &VariantManifest, rng: &mut Rng) -> Vec<f32> {
+    let mut p = Vec::with_capacity(man.p_dim);
+    for &(fan_in, fan_out) in &man.layer_shapes {
+        let std = (2.0f32 / fan_in as f32).sqrt();
+        for _ in 0..fan_in * fan_out {
+            p.push(rng.normal() * std);
+        }
+        for _ in 0..fan_out {
+            p.push(0.0);
+        }
+    }
+    debug_assert_eq!(p.len(), man.p_dim);
+    p
+}
+
+/// Offsets of each layer's (weights, biases) inside the flat vector —
+/// mirrors `VariantSpec.param_offsets` on the python side.
+pub fn param_offsets(man: &VariantManifest) -> Vec<(usize, (usize, usize), usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    for &(i, o) in &man.layer_shapes {
+        let w_off = off;
+        off += i * o;
+        let b_off = off;
+        off += o;
+        out.push((w_off, (i, o), b_off, o));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::VariantManifest;
+
+    fn man() -> VariantManifest {
+        // minimal manifest via JSON (same path production uses)
+        VariantManifest::parse(
+            r#"{
+          "name": "t", "d_in": 4, "hidden": [8], "classes": 3,
+          "m": 2, "r": 4, "eval_chunk": 4, "p_dim": 67, "momentum": 0.9,
+          "layer_shapes": [[4, 8], [8, 3]],
+          "artifacts": {
+            "train_step": {"file": "t.hlo.txt",
+              "inputs": [
+                {"name": "params", "dtype": "f32", "shape": [67]},
+                {"name": "momentum", "dtype": "f32", "shape": [67]},
+                {"name": "x", "dtype": "f32", "shape": [2, 4]},
+                {"name": "y", "dtype": "i32", "shape": [2]},
+                {"name": "gamma", "dtype": "f32", "shape": [2]},
+                {"name": "lr", "dtype": "f32", "shape": []}],
+              "outputs": []},
+            "grad_embed": {"file": "g", "inputs": [], "outputs": []},
+            "eval_chunk": {"file": "e", "inputs": [], "outputs": []},
+            "hess_probe": {"file": "h", "inputs": [], "outputs": []},
+            "select_greedy": {"file": "s", "inputs": [], "outputs": []}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_has_right_length_and_zero_biases() {
+        let man = man();
+        let mut rng = Rng::new(0);
+        let p = init_params(&man, &mut rng);
+        assert_eq!(p.len(), 67);
+        // layer 1 biases at offset 32..40, layer 2 biases at 64..67
+        assert!(p[32..40].iter().all(|&v| v == 0.0));
+        assert!(p[64..67].iter().all(|&v| v == 0.0));
+        // weights not all zero
+        assert!(p[..32].iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn init_std_tracks_fan_in() {
+        let man = man();
+        let mut rng = Rng::new(1);
+        let p = init_params(&man, &mut rng);
+        let w1 = &p[..32]; // fan_in 4 -> std sqrt(0.5) ~ 0.707
+        let s1 = crate::util::stats::stddev(w1);
+        assert!((0.4..1.1).contains(&s1), "std {s1}");
+    }
+
+    #[test]
+    fn offsets_match_python_layout() {
+        let man = man();
+        let offs = param_offsets(&man);
+        assert_eq!(offs, vec![(0, (4, 8), 32, 8), (40, (8, 3), 64, 3)]);
+    }
+}

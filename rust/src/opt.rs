@@ -1,0 +1,156 @@
+//! Optimizer schedule + training-budget accounting.
+//!
+//! The paper's pipeline (§5 Training Setup): warm-start the learning rate
+//! over the first 10% of training, then decay by 0.1× at 60% and 85%.
+//! Budgets are counted in *backprops* (examples × steps), the
+//! hardware-independent cost unit used for the 10%/20% budget comparisons.
+
+/// Learning-rate schedule over a fixed horizon of steps.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Const(f32),
+    /// Linear warmup to `base` over `warmup_frac`, step decays afterwards:
+    /// `decays` holds (progress_fraction, multiplier) pairs.
+    WarmupStep { base: f32, warmup_frac: f32, decays: Vec<(f32, f32)> },
+}
+
+impl LrSchedule {
+    /// The paper's vision-benchmark schedule.
+    pub fn paper_default(base: f32) -> LrSchedule {
+        LrSchedule::WarmupStep {
+            base,
+            warmup_frac: 0.10,
+            decays: vec![(0.60, 0.1), (0.85, 0.1)],
+        }
+    }
+
+    /// LR at `step` of `total` steps.
+    pub fn lr_at(&self, step: usize, total: usize) -> f32 {
+        match self {
+            LrSchedule::Const(lr) => *lr,
+            LrSchedule::WarmupStep { base, warmup_frac, decays } => {
+                let total = total.max(1);
+                let prog = step as f32 / total as f32;
+                if *warmup_frac > 0.0 && prog < *warmup_frac {
+                    // linear ramp, never exactly 0
+                    return base * ((step + 1) as f32 / (*warmup_frac * total as f32)).min(1.0);
+                }
+                let mut lr = *base;
+                for &(frac, mult) in decays {
+                    if prog >= frac {
+                        lr *= mult;
+                    }
+                }
+                lr
+            }
+        }
+    }
+}
+
+/// Backprop budget: `full_budget` is the cost of the full-data reference
+/// run; methods stop when they have consumed `budget_frac` of it.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    /// examples × steps available to this run.
+    pub total_backprops: u64,
+    used: u64,
+}
+
+impl Budget {
+    /// Budget for training `epochs_full` epochs over `n` examples with the
+    /// given fraction (paper: 10% or 20%).
+    pub fn fraction_of_full(n: usize, epochs_full: usize, frac: f32) -> Budget {
+        let full = n as u64 * epochs_full as u64;
+        Budget { total_backprops: (full as f64 * frac as f64) as u64, used: 0 }
+    }
+
+    pub fn exact(total_backprops: u64) -> Budget {
+        Budget { total_backprops, used: 0 }
+    }
+
+    /// Charge a batch of `m` backprops. Returns false when the budget was
+    /// already exhausted (the step should not run).
+    pub fn charge(&mut self, m: usize) -> bool {
+        if self.used >= self.total_backprops {
+            return false;
+        }
+        self.used += m as u64;
+        true
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.used >= self.total_backprops
+    }
+
+    /// Number of size-m steps this budget affords in total.
+    pub fn steps(&self, m: usize) -> usize {
+        (self.total_backprops / m as u64) as usize
+    }
+
+    pub fn progress(&self) -> f32 {
+        if self.total_backprops == 0 {
+            1.0
+        } else {
+            (self.used as f64 / self.total_backprops as f64) as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn const_schedule() {
+        let s = LrSchedule::Const(0.05);
+        assert_eq!(s.lr_at(0, 100), 0.05);
+        assert_eq!(s.lr_at(99, 100), 0.05);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = LrSchedule::paper_default(0.1);
+        let total = 1000;
+        // early warmup below base, monotone
+        let lr5 = s.lr_at(5, total);
+        let lr50 = s.lr_at(50, total);
+        assert!(lr5 < lr50 && lr50 <= 0.1);
+        // after warmup: base
+        assert_eq!(s.lr_at(200, total), 0.1);
+        // after 60%: 0.01
+        assert!((s.lr_at(700, total) - 0.01).abs() < 1e-6);
+        // after 85%: 0.001
+        assert!((s.lr_at(900, total) - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn warmup_never_zero() {
+        let s = LrSchedule::paper_default(0.1);
+        assert!(s.lr_at(0, 10_000) > 0.0);
+    }
+
+    #[test]
+    fn budget_counts_and_exhausts() {
+        let mut b = Budget::fraction_of_full(1000, 10, 0.1);
+        assert_eq!(b.total_backprops, 1000);
+        assert_eq!(b.steps(100), 10);
+        let mut steps = 0;
+        while b.charge(100) {
+            steps += 1;
+        }
+        assert_eq!(steps, 10);
+        assert!(b.exhausted());
+        assert_eq!(b.progress(), 1.0);
+    }
+
+    #[test]
+    fn zero_budget_runs_nothing() {
+        let mut b = Budget::exact(0);
+        assert!(!b.charge(1));
+        assert!(b.exhausted());
+    }
+}

@@ -1,0 +1,72 @@
+//! Mini property-testing harness (proptest replacement).
+//!
+//! Runs a checker over many seeded random cases and reports the failing
+//! seed + case debug on the first violation, so failures are reproducible
+//! by re-running with the printed seed.
+
+use crate::util::rng::Rng;
+
+/// Run `check` on `cases` values drawn by `gen`. Panics with the failing
+/// case on the first `Err`.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    base_seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let value = gen(&mut rng);
+        if let Err(msg) = check(&value) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  \
+                 {msg}\n  value: {value:?}"
+            );
+        }
+    }
+}
+
+/// Draw a random f32 vector with entries in [-scale, scale].
+pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform_in(-scale, scale)).collect()
+}
+
+/// Draw a random usize in [lo, hi).
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.gen_range(hi - lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("sum-commutes", 1, 50,
+            |r| (vec_f32(r, 8, 10.0), usize_in(r, 1, 8)),
+            |(v, k)| {
+                let a: f32 = v.iter().take(*k).sum();
+                let b: f32 = v.iter().take(*k).rev().sum();
+                if (a - b).abs() < 1e-3 { Ok(()) } else { Err(format!("{a} != {b}")) }
+            });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", 2, 10, |r| r.gen_range(100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = vec_f32(&mut r, 4, 2.0);
+            assert!(v.iter().all(|&x| (-2.0..=2.0).contains(&x)));
+            let u = usize_in(&mut r, 5, 10);
+            assert!((5..10).contains(&u));
+        }
+    }
+}

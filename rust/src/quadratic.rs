@@ -1,0 +1,270 @@
+//! Piece-wise quadratic loss modeling (paper §4.1, Eq. 6–10).
+//!
+//! At every selection step the coordinator anchors a quadratic
+//! `F^l(δ) = ½ δᵀ diag(H̄) δ + ḡᵀδ + L(w_{t_l})` built from smoothed
+//! gradient/curvature estimates:
+//!
+//! * ḡ  — bias-corrected EMA of the coreset gradient (Eq. 8),
+//! * H̄  — bias-corrected RMS-EMA of Hutchinson Hessian-diagonal probes
+//!         `z ⊙ Hz` (Eq. 7 + Eq. 9).
+//!
+//! Training continues on the current coresets while
+//! `ρ = |F^l(δ) − L^r(w+δ)| / L^r(w+δ) ≤ τ`; a violation triggers
+//! reselection with the adaptive horizon `T₁ = h·‖H̄₀‖/‖H̄_t‖` and
+//! `P = b·T₁` (paper §4.1/§4.2 remarks).
+
+use crate::util::stats;
+
+/// Ablation switches (paper Table 3 rows).
+#[derive(Debug, Clone, Copy)]
+pub struct QuadOptions {
+    /// `false` = CREST-FIRST: drop the curvature term from F^l.
+    pub second_order: bool,
+    /// `false` = no EMA smoothing: use raw last observations.
+    pub smooth: bool,
+}
+
+impl Default for QuadOptions {
+    fn default() -> Self {
+        QuadOptions { second_order: true, smooth: true }
+    }
+}
+
+/// Smoothed quadratic model of the coreset loss around an anchor point.
+#[derive(Debug, Clone)]
+pub struct QuadraticModel {
+    beta1: f32,
+    beta2: f32,
+    opts: QuadOptions,
+    /// raw EMA accumulators (before bias correction)
+    g_ema: Vec<f64>,
+    h2_ema: Vec<f64>,
+    /// observation counters for bias correction
+    t1_count: u32,
+    t2_count: u32,
+    /// ‖H̄‖ at the first anchor — reference scale for T₁ adaptation
+    h0_norm: Option<f64>,
+    /// anchor state (set at each selection step l)
+    anchor_loss: f32,
+    anchored: bool,
+}
+
+impl QuadraticModel {
+    pub fn new(p_dim: usize, beta1: f32, beta2: f32, opts: QuadOptions) -> Self {
+        assert!((0.0..1.0).contains(&beta1) && (0.0..1.0).contains(&beta2));
+        QuadraticModel {
+            beta1,
+            beta2,
+            opts,
+            g_ema: vec![0.0; p_dim],
+            h2_ema: vec![0.0; p_dim],
+            t1_count: 0,
+            t2_count: 0,
+            h0_norm: None,
+            anchor_loss: 0.0,
+            anchored: false,
+        }
+    }
+
+    /// Feed one gradient observation (Eq. 8).
+    pub fn observe_grad(&mut self, grad: &[f32]) {
+        debug_assert_eq!(grad.len(), self.g_ema.len());
+        self.t1_count += 1;
+        let b1 = if self.opts.smooth { self.beta1 as f64 } else { 0.0 };
+        for (e, &g) in self.g_ema.iter_mut().zip(grad) {
+            *e = b1 * *e + (1.0 - b1) * g as f64;
+        }
+    }
+
+    /// Feed one Hessian-diagonal estimate `z ⊙ Hz` (Eq. 7 → Eq. 9).
+    pub fn observe_hdiag(&mut self, hdiag: &[f32]) {
+        debug_assert_eq!(hdiag.len(), self.h2_ema.len());
+        self.t2_count += 1;
+        let b2 = if self.opts.smooth { self.beta2 as f64 } else { 0.0 };
+        for (e, &h) in self.h2_ema.iter_mut().zip(hdiag) {
+            *e = b2 * *e + (1.0 - b2) * (h as f64) * (h as f64);
+        }
+    }
+
+    /// Bias-corrected smoothed gradient ḡ.
+    pub fn gbar(&self) -> Vec<f32> {
+        let b1 = if self.opts.smooth { self.beta1 as f64 } else { 0.0 };
+        let corr = 1.0 - b1.powi(self.t1_count.max(1) as i32);
+        self.g_ema.iter().map(|&e| (e / corr) as f32).collect()
+    }
+
+    /// Bias-corrected smoothed |Hessian diagonal| H̄ (RMS form of Eq. 9).
+    pub fn hbar(&self) -> Vec<f32> {
+        if !self.opts.second_order {
+            return vec![0.0; self.h2_ema.len()];
+        }
+        let b2 = if self.opts.smooth { self.beta2 as f64 } else { 0.0 };
+        let corr = 1.0 - b2.powi(self.t2_count.max(1) as i32);
+        self.h2_ema.iter().map(|&e| (e / corr).sqrt() as f32).collect()
+    }
+
+    /// ‖H̄‖₂ (used by the T₁ adaptation rule).
+    pub fn hbar_norm(&self) -> f64 {
+        stats::norm2(&self.hbar())
+    }
+
+    /// Anchor F^l at the current point: record L(w_{t_l}) and, on the first
+    /// anchor, the reference curvature norm ‖H̄₀‖.
+    pub fn set_anchor(&mut self, loss: f32) {
+        self.anchor_loss = loss;
+        self.anchored = true;
+        if self.h0_norm.is_none() {
+            let n = self.hbar_norm();
+            if n > 0.0 {
+                self.h0_norm = Some(n);
+            }
+        }
+    }
+
+    pub fn anchored(&self) -> bool {
+        self.anchored
+    }
+
+    /// Evaluate F^l(δ) (Eq. 6 with the diagonal Hessian surrogate).
+    pub fn f_l(&self, delta: &[f32]) -> f32 {
+        debug_assert!(self.anchored, "f_l before set_anchor");
+        let g = self.gbar();
+        let lin = stats::dot(&g, delta);
+        let quad = if self.opts.second_order {
+            let h = self.hbar();
+            delta
+                .iter()
+                .zip(&h)
+                .map(|(&d, &hh)| 0.5 * (d as f64) * (hh as f64) * (d as f64))
+                .sum::<f64>()
+        } else {
+            0.0
+        };
+        (self.anchor_loss as f64 + lin + quad) as f32
+    }
+
+    /// ρ-check (Eq. 10) against an unbiased loss estimate at w_{t_l}+δ.
+    pub fn rho(&self, delta: &[f32], actual_loss: f32) -> f32 {
+        let f = self.f_l(delta);
+        (f - actual_loss).abs() / actual_loss.max(1e-8)
+    }
+
+    /// Adaptive reselection horizon T₁ = h·‖H̄₀‖/‖H̄_t‖, clamped to
+    /// [1, max_t1]. Grows as curvature flattens late in training (paper
+    /// §4.1 Remark).
+    pub fn adapt_t1(&self, h_mult: f32, max_t1: usize) -> usize {
+        let h0 = match self.h0_norm {
+            Some(v) => v,
+            None => return 1,
+        };
+        let ht = self.hbar_norm().max(1e-12);
+        let t1 = (h_mult as f64 * h0 / ht).floor();
+        (t1 as usize).clamp(1, max_t1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(opts: QuadOptions) -> QuadraticModel {
+        QuadraticModel::new(4, 0.9, 0.99, opts)
+    }
+
+    #[test]
+    fn ema_bias_correction_exact_for_constant_signal() {
+        let mut q = model(QuadOptions::default());
+        for _ in 0..3 {
+            q.observe_grad(&[2.0, -1.0, 0.0, 4.0]);
+        }
+        let g = q.gbar();
+        for (got, want) in g.iter().zip([2.0, -1.0, 0.0, 4.0]) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn hbar_is_rms_of_probes() {
+        let mut q = model(QuadOptions::default());
+        q.observe_hdiag(&[3.0, -3.0, 0.0, 1.0]);
+        let h = q.hbar();
+        assert!((h[0] - 3.0).abs() < 1e-5);
+        assert!((h[1] - 3.0).abs() < 1e-5, "sign dropped by RMS");
+        assert!(h[2].abs() < 1e-6);
+    }
+
+    #[test]
+    fn f_l_quadratic_in_delta() {
+        let mut q = model(QuadOptions::default());
+        q.observe_grad(&[1.0, 0.0, 0.0, 0.0]);
+        q.observe_hdiag(&[2.0, 0.0, 0.0, 0.0]);
+        q.set_anchor(5.0);
+        // F(δ) = 5 + δ0 + 0.5·2·δ0²
+        let f = q.f_l(&[0.5, 0.0, 0.0, 0.0]);
+        assert!((f - (5.0 + 0.5 + 0.25)).abs() < 1e-4, "{f}");
+    }
+
+    #[test]
+    fn first_order_drops_curvature() {
+        let mut q = model(QuadOptions { second_order: false, smooth: true });
+        q.observe_grad(&[1.0, 0.0, 0.0, 0.0]);
+        q.observe_hdiag(&[100.0, 100.0, 100.0, 100.0]);
+        q.set_anchor(5.0);
+        let f = q.f_l(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((f - 6.0).abs() < 1e-5, "{f}");
+    }
+
+    #[test]
+    fn no_smooth_uses_last_observation_only() {
+        let mut q = model(QuadOptions { second_order: true, smooth: false });
+        q.observe_grad(&[10.0, 0.0, 0.0, 0.0]);
+        q.observe_grad(&[-2.0, 0.0, 0.0, 0.0]);
+        assert!((q.gbar()[0] + 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rho_zero_when_model_exact() {
+        let mut q = model(QuadOptions::default());
+        q.observe_grad(&[1.0, 1.0, 1.0, 1.0]);
+        q.observe_hdiag(&[0.0; 4]);
+        q.set_anchor(2.0);
+        let delta = [0.1, 0.1, 0.1, 0.1];
+        let actual = q.f_l(&delta);
+        assert!(q.rho(&delta, actual) < 1e-6);
+    }
+
+    #[test]
+    fn rho_measures_relative_error() {
+        let mut q = model(QuadOptions::default());
+        q.observe_grad(&[0.0; 4]);
+        q.observe_hdiag(&[0.0; 4]);
+        q.set_anchor(1.0);
+        // F == 1.0 everywhere; actual 2.0 -> rho = 0.5
+        assert!((q.rho(&[0.0; 4], 2.0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn t1_grows_as_curvature_decays() {
+        let mut q = model(QuadOptions::default());
+        q.observe_hdiag(&[8.0, 8.0, 8.0, 8.0]);
+        q.set_anchor(1.0); // h0 recorded
+        let t1_early = q.adapt_t1(1.0, 100);
+        assert_eq!(t1_early, 1);
+        // curvature decays by 4x (push the RMS-EMA down over many steps)
+        for _ in 0..500 {
+            q.observe_hdiag(&[2.0, 2.0, 2.0, 2.0]);
+        }
+        let t1_late = q.adapt_t1(1.0, 100);
+        assert!(t1_late >= 3, "t1_late={t1_late}");
+        // h multiplier scales
+        assert!(q.adapt_t1(10.0, 1000) >= 30);
+        // clamp respected
+        assert_eq!(q.adapt_t1(10.0, 8), 8);
+    }
+
+    #[test]
+    fn t1_is_one_before_first_anchor() {
+        let q = model(QuadOptions::default());
+        assert_eq!(q.adapt_t1(5.0, 100), 1);
+    }
+}

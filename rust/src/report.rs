@@ -1,0 +1,214 @@
+//! Run reports: everything a bench needs to print a paper table/figure row,
+//! serializable to JSON for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::Json;
+
+/// One evaluation snapshot along training.
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub backprops: u64,
+    pub test_acc: f32,
+    pub test_loss: f32,
+    pub train_acc: f32,
+    pub wall_secs: f64,
+}
+
+/// Outcome of one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    pub method: String,
+    pub variant: String,
+    pub seed: u64,
+    pub budget_frac: f32,
+    pub final_test_acc: f32,
+    pub final_test_loss: f32,
+    pub best_test_acc: f32,
+    pub steps: usize,
+    pub backprops: u64,
+    /// Selection rounds (coreset updates — Figs. 3/4).
+    pub n_selection_updates: usize,
+    pub selection_secs: f64,
+    pub train_secs: f64,
+    pub eval_secs: f64,
+    /// ρ-check time (Table 2 "checking threshold").
+    pub check_secs: f64,
+    /// Quadratic-model construction time (Table 2 "loss approximation").
+    pub approx_secs: f64,
+    pub total_secs: f64,
+    /// Examples excluded as learned (§4.3).
+    pub n_excluded: usize,
+    pub history: Vec<EvalPoint>,
+    /// (step, ρ) at each check.
+    pub rho_history: Vec<(usize, f32)>,
+    /// (step, T₁) after each adaptation.
+    pub t1_history: Vec<(usize, usize)>,
+    /// Steps at which a selection update happened (Fig. 4 left).
+    pub update_steps: Vec<usize>,
+    /// (step, mean final forgettability of the examples selected there) —
+    /// filled post-hoc by the coordinator (Fig. 5).
+    pub forget_of_selected: Vec<(usize, f32)>,
+    /// Per-example training-batch appearance counts (Fig. 7b).
+    pub selection_counts: Vec<u32>,
+    /// (step, accuracy of the currently-excluded examples) — Fig. 7a.
+    pub dropped_acc_history: Vec<(usize, f32)>,
+    /// Indices excluded as learned by the end of the run.
+    pub excluded_indices: Vec<usize>,
+    /// Mean per-step wall time of the training phase.
+    pub mean_step_secs: f64,
+    /// Mean per-selection wall time (Table 2 "selection").
+    pub mean_selection_secs: f64,
+}
+
+impl RunReport {
+    /// Wall-clock normalized to a reference run (Fig. 2 x-axis).
+    pub fn normalized_runtime(&self, full_secs: f64) -> f64 {
+        if full_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_secs / full_secs
+    }
+
+    pub fn to_json(&self) -> Json {
+        let history: Vec<Json> = self
+            .history
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("step", p.step)
+                    .set("backprops", p.backprops)
+                    .set("test_acc", p.test_acc)
+                    .set("test_loss", p.test_loss)
+                    .set("train_acc", p.train_acc)
+                    .set("wall_secs", p.wall_secs)
+            })
+            .collect();
+        let rho: Vec<Json> = self
+            .rho_history
+            .iter()
+            .map(|&(s, r)| Json::Arr(vec![Json::Num(s as f64), Json::Num(r as f64)]))
+            .collect();
+        Json::obj()
+            .set("method", self.method.as_str())
+            .set("variant", self.variant.as_str())
+            .set("seed", self.seed)
+            .set("budget_frac", self.budget_frac)
+            .set("final_test_acc", self.final_test_acc)
+            .set("final_test_loss", self.final_test_loss)
+            .set("best_test_acc", self.best_test_acc)
+            .set("steps", self.steps)
+            .set("backprops", self.backprops)
+            .set("n_selection_updates", self.n_selection_updates)
+            .set("selection_secs", self.selection_secs)
+            .set("train_secs", self.train_secs)
+            .set("eval_secs", self.eval_secs)
+            .set("check_secs", self.check_secs)
+            .set("approx_secs", self.approx_secs)
+            .set("total_secs", self.total_secs)
+            .set("n_excluded", self.n_excluded)
+            .set("mean_step_secs", self.mean_step_secs)
+            .set("mean_selection_secs", self.mean_selection_secs)
+            .set("history", Json::Arr(history))
+            .set("rho_history", Json::Arr(rho))
+    }
+}
+
+/// Fixed-width markdown-ish table printer for bench outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for c in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[c], w = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&line(r));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut r = RunReport::default();
+        r.method = "crest".into();
+        r.variant = "cifar10-proxy".into();
+        r.final_test_acc = 0.85;
+        r.rho_history = vec![(10, 0.01), (20, 0.2)];
+        r.history.push(EvalPoint {
+            step: 5,
+            backprops: 160,
+            test_acc: 0.5,
+            test_loss: 1.2,
+            train_acc: 0.55,
+            wall_secs: 0.1,
+        });
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("method").unwrap().as_str().unwrap(), "crest");
+        assert_eq!(parsed.get("history").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("rho_history").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn normalized_runtime() {
+        let mut r = RunReport::default();
+        r.total_secs = 2.0;
+        assert_eq!(r.normalized_runtime(4.0), 0.5);
+        assert_eq!(r.normalized_runtime(0.0), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.row(&["crest".to_string(), "85.0".to_string()]);
+        t.row(&["craig-long-name".to_string(), "7".to_string()]);
+        let s = t.render();
+        assert!(s.contains("| method"));
+        assert!(s.lines().count() == 4);
+        let lens: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "aligned columns");
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".to_string()]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Manifest parsing: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! Every artifact's input/output tensors are declared in
+//! `artifacts/<variant>/manifest.json`; the runtime validates host buffers
+//! against these specs before every execution so shape bugs surface as
+//! errors at the call site, not as garbage numerics.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of a tensor in the artifact interface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str()?.to_string(),
+            dtype: DType::parse(j.req("dtype")?.as_str()?)?,
+            shape: j.req("shape")?.as_usize_vec()?,
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    fn parse(j: &Json) -> Result<ArtifactSpec> {
+        let tensors = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.req(key)?.as_arr()?.iter().map(TensorSpec::parse).collect()
+        };
+        Ok(ArtifactSpec {
+            file: j.req("file")?.as_str()?.to_string(),
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+        })
+    }
+}
+
+/// Full manifest for one model/dataset variant.
+#[derive(Debug, Clone)]
+pub struct VariantManifest {
+    pub name: String,
+    pub d_in: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    /// Mini-batch (coreset) size m.
+    pub m: usize,
+    /// Random-subset size r.
+    pub r: usize,
+    pub eval_chunk: usize,
+    pub p_dim: usize,
+    pub momentum: f32,
+    /// (in, out) per dense layer.
+    pub layer_shapes: Vec<(usize, usize)>,
+    pub artifacts: Vec<(String, ArtifactSpec)>,
+}
+
+impl VariantManifest {
+    pub fn parse(text: &str) -> Result<VariantManifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let layer_shapes = j
+            .req("layer_shapes")?
+            .as_arr()?
+            .iter()
+            .map(|v| {
+                let s = v.as_usize_vec()?;
+                if s.len() != 2 {
+                    bail!("layer shape must be [in, out]");
+                }
+                Ok((s[0], s[1]))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .req("artifacts")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| Ok((k.clone(), ArtifactSpec::parse(v)?)))
+            .collect::<Result<Vec<_>>>()?;
+        let man = VariantManifest {
+            name: j.req("name")?.as_str()?.to_string(),
+            d_in: j.req("d_in")?.as_usize()?,
+            hidden: j.req("hidden")?.as_usize_vec()?,
+            classes: j.req("classes")?.as_usize()?,
+            m: j.req("m")?.as_usize()?,
+            r: j.req("r")?.as_usize()?,
+            eval_chunk: j.req("eval_chunk")?.as_usize()?,
+            p_dim: j.req("p_dim")?.as_usize()?,
+            momentum: j.req("momentum")?.as_f64()? as f32,
+            layer_shapes,
+            artifacts,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    pub fn load(dir: &Path) -> Result<VariantManifest> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no artifact {name:?}"))
+    }
+
+    /// Internal consistency checks (p_dim vs layer shapes, required artifacts).
+    fn validate(&self) -> Result<()> {
+        let p: usize = self.layer_shapes.iter().map(|(i, o)| i * o + o).sum();
+        if p != self.p_dim {
+            bail!("p_dim {} inconsistent with layer shapes (sum {})", self.p_dim, p);
+        }
+        for required in ["train_step", "grad_embed", "eval_chunk", "hess_probe", "select_greedy"] {
+            self.artifact(required)?;
+        }
+        let ts = self.artifact("train_step")?;
+        if ts.inputs[0].shape != [self.p_dim] {
+            bail!("train_step params shape mismatch");
+        }
+        if ts.inputs[2].shape != [self.m, self.d_in] {
+            bail!("train_step x shape mismatch");
+        }
+        Ok(())
+    }
+}
+
+/// Top-level artifacts index (artifacts/manifest.json).
+pub fn load_index(artifact_root: &Path) -> Result<Vec<String>> {
+    let path = artifact_root.join("manifest.json");
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+    let j = Json::parse(&text)?;
+    j.req("variants")?.as_arr()?.iter().map(|v| Ok(v.as_str()?.to_string())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "name": "t", "d_in": 4, "hidden": [8], "classes": 3,
+          "m": 2, "r": 4, "eval_chunk": 4, "p_dim": 67, "momentum": 0.9,
+          "layer_shapes": [[4, 8], [8, 3]],
+          "artifacts": {
+            "train_step": {"file": "train_step.hlo.txt",
+              "inputs": [
+                {"name": "params", "dtype": "f32", "shape": [67]},
+                {"name": "momentum", "dtype": "f32", "shape": [67]},
+                {"name": "x", "dtype": "f32", "shape": [2, 4]},
+                {"name": "y", "dtype": "i32", "shape": [2]},
+                {"name": "gamma", "dtype": "f32", "shape": [2]},
+                {"name": "lr", "dtype": "f32", "shape": []}],
+              "outputs": [{"name": "params", "dtype": "f32", "shape": [67]}]},
+            "grad_embed": {"file": "g.hlo.txt", "inputs": [], "outputs": []},
+            "eval_chunk": {"file": "e.hlo.txt", "inputs": [], "outputs": []},
+            "hess_probe": {"file": "h.hlo.txt", "inputs": [], "outputs": []},
+            "select_greedy": {"file": "s.hlo.txt", "inputs": [], "outputs": []}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = VariantManifest::parse(&sample()).unwrap();
+        assert_eq!(m.p_dim, 67);
+        assert_eq!(m.layer_shapes, vec![(4, 8), (8, 3)]);
+        let ts = m.artifact("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 6);
+        assert_eq!(ts.inputs[3].dtype, DType::I32);
+        assert_eq!(ts.inputs[5].shape, Vec::<usize>::new());
+        assert_eq!(ts.inputs[5].elements(), 1);
+    }
+
+    #[test]
+    fn rejects_inconsistent_pdim() {
+        let bad = sample().replace("\"p_dim\": 67", "\"p_dim\": 66");
+        assert!(VariantManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_artifact() {
+        let bad = sample().replace("\"select_greedy\"", "\"other_thing\"");
+        assert!(VariantManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = sample().replace("\"dtype\": \"i32\"", "\"dtype\": \"u8\"");
+        assert!(VariantManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifests_parse_if_present() {
+        // Integration-level check against the actual AOT output when built.
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !root.exists() {
+            return; // artifacts not built in this environment
+        }
+        for v in load_index(&root).unwrap() {
+            let man = VariantManifest::load(&root.join(&v)).unwrap();
+            assert_eq!(man.name, v);
+            assert!(man.p_dim > 0);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! This is the only module that talks to XLA. It compiles each
+//! `artifacts/<variant>/*.hlo.txt` once at startup
+//! (`HloModuleProto::from_text_file` → `client.compile`) and exposes typed,
+//! shape-checked wrappers for the five computations the coordinator uses.
+//! Python is never involved at runtime.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{lit_f32, lit_f32_2d, lit_i32, lit_scalar, lit_to_f32, lit_to_i32, lit_to_scalar, MatF32};
+use crate::util::timer::PhaseTimers;
+use manifest::{DType, VariantManifest};
+
+/// Output of one training step.
+pub struct StepOut {
+    /// Updated parameters (kept as a literal: feeds the next step without a
+    /// host round-trip).
+    pub params: xla::Literal,
+    pub momentum: xla::Literal,
+    pub mean_loss: f32,
+    pub per_ex_loss: Vec<f32>,
+}
+
+/// Output of the Hutchinson probe.
+#[derive(Debug)]
+pub struct ProbeOut {
+    /// H·z for the supplied probe vector.
+    pub hz: Vec<f32>,
+    /// Mean gradient of the probed subset (param space).
+    pub grad: Vec<f32>,
+    pub mean_loss: f32,
+}
+
+/// Compiled executables + manifest for one variant.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub man: VariantManifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Per-artifact wall-clock accounting (backs Table 2).
+    pub timers: RefCell<PhaseTimers>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Compile all artifacts of `variant` found under `artifact_root`.
+    pub fn load(artifact_root: &Path, variant: &str) -> Result<Runtime> {
+        let dir = artifact_root.join(variant);
+        let man = VariantManifest::load(&dir)
+            .with_context(|| format!("loading manifest for {variant}"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, art) in &man.artifacts {
+            let path = dir.join(&art.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            log::debug!("compiled {variant}/{name} in {:.3}s", t0.elapsed().as_secs_f64());
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, man, exes, timers: RefCell::new(PhaseTimers::new()), dir })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Raw execution: run artifact `name`, unpack the result tuple, verify
+    /// output arity against the manifest.
+    fn exec(&self, name: &'static str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no executable {name:?}"))?;
+        let spec = self.man.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!("{name}: got {} args, manifest says {}", args.len(), spec.inputs.len());
+        }
+        let t0 = Instant::now();
+        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: single tuple output.
+        let parts = result.to_tuple()?;
+        self.timers.borrow_mut().add(name, t0.elapsed());
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}", parts.len(), spec.outputs.len());
+        }
+        Ok(parts)
+    }
+
+    fn check_len(&self, name: &str, what: &str, got: usize, want: usize) -> Result<()> {
+        if got != want {
+            bail!("{name}: {what} has {got} elements, manifest wants {want}");
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- wrappers
+
+    /// Fresh all-zero momentum literal.
+    pub fn zero_momentum(&self) -> xla::Literal {
+        lit_f32(&vec![0.0f32; self.man.p_dim])
+    }
+
+    /// Host params -> literal.
+    pub fn params_from_host(&self, p: &[f32]) -> Result<xla::Literal> {
+        self.check_len("params_from_host", "params", p.len(), self.man.p_dim)?;
+        Ok(lit_f32(p))
+    }
+
+    /// Literal params -> host vector.
+    pub fn params_to_host(&self, p: &xla::Literal) -> Result<Vec<f32>> {
+        lit_to_f32(p)
+    }
+
+    /// One weighted SGD+momentum step (paper Eq. 2 with per-element gamma).
+    pub fn train_step(
+        &self,
+        params: &xla::Literal,
+        momentum: &xla::Literal,
+        x: &MatF32,
+        y: &[i32],
+        gamma: &[f32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<StepOut> {
+        let m = self.man.m;
+        self.check_len("train_step", "x rows", x.rows, m)?;
+        self.check_len("train_step", "x cols", x.cols, self.man.d_in)?;
+        self.check_len("train_step", "y", y.len(), m)?;
+        self.check_len("train_step", "gamma", gamma.len(), m)?;
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let gl = lit_f32(gamma);
+        let lrl = lit_scalar(lr);
+        let wdl = lit_scalar(wd);
+        let mut out = self.exec("train_step", &[params, momentum, &xl, &yl, &gl, &lrl, &wdl])?;
+        let per_ex_loss = lit_to_f32(&out[3])?;
+        let mean_loss = lit_to_scalar(&out[2])?;
+        let momentum = out.swap_remove(1);
+        let params = out.swap_remove(0);
+        Ok(StepOut { params, momentum, mean_loss, per_ex_loss })
+    }
+
+    /// Extract the *gradient* a weighted batch induces, without stepping:
+    /// train_step with zero momentum and lr=0 leaves params unchanged while
+    /// `mom_out = 0.9·0 + grad = grad`. Used by the bias/variance probes
+    /// behind Figs. 1/6/9.
+    pub fn batch_gradient(
+        &self,
+        params: &xla::Literal,
+        x: &MatF32,
+        y: &[i32],
+        gamma: &[f32],
+    ) -> Result<Vec<f32>> {
+        let zero = self.zero_momentum();
+        let out = self.train_step(params, &zero, x, y, gamma, 0.0, 0.0)?;
+        lit_to_f32(&out.momentum)
+    }
+
+    /// Selection embeddings for a size-r subset (paper Eq. 11 inputs):
+    /// logit gradients g = p − y, penultimate activations a, and losses.
+    /// (g, a) define the last-layer weight gradient a ⊗ g used as the
+    /// selection metric.
+    pub fn grad_embed(
+        &self,
+        params: &xla::Literal,
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(MatF32, MatF32, Vec<f32>)> {
+        let r = self.man.r;
+        self.check_len("grad_embed", "x rows", x.rows, r)?;
+        self.check_len("grad_embed", "y", y.len(), r)?;
+        let h = *self.man.hidden.last().expect("at least one hidden layer");
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let out = self.exec("grad_embed", &[params, &xl, &yl])?;
+        let g = MatF32::from_vec(r, self.man.classes, lit_to_f32(&out[0])?)?;
+        let a = MatF32::from_vec(r, h, lit_to_f32(&out[1])?)?;
+        let loss = lit_to_f32(&out[2])?;
+        Ok((g, a, loss))
+    }
+
+    /// Per-chunk evaluation: (sum_loss, n_correct, per_ex_loss, correct).
+    pub fn eval_chunk(
+        &self,
+        params: &xla::Literal,
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
+        let e = self.man.eval_chunk;
+        self.check_len("eval_chunk", "x rows", x.rows, e)?;
+        self.check_len("eval_chunk", "y", y.len(), e)?;
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let out = self.exec("eval_chunk", &[params, &xl, &yl])?;
+        Ok((
+            lit_to_scalar(&out[0])?,
+            lit_to_scalar(&out[1])?,
+            lit_to_f32(&out[2])?,
+            lit_to_f32(&out[3])?,
+        ))
+    }
+
+    /// Hutchinson probe on a size-r subset (paper Eq. 7).
+    pub fn hess_probe(
+        &self,
+        params: &xla::Literal,
+        x: &MatF32,
+        y: &[i32],
+        z: &[f32],
+    ) -> Result<ProbeOut> {
+        let r = self.man.r;
+        self.check_len("hess_probe", "x rows", x.rows, r)?;
+        self.check_len("hess_probe", "z", z.len(), self.man.p_dim)?;
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let zl = lit_f32(z);
+        let out = self.exec("hess_probe", &[params, &xl, &yl, &zl])?;
+        Ok(ProbeOut {
+            hz: lit_to_f32(&out[0])?,
+            grad: lit_to_f32(&out[1])?,
+            mean_loss: lit_to_scalar(&out[2])?,
+        })
+    }
+
+    /// Compiled in-graph greedy selection over r gradient embeddings
+    /// (the XLA alternative to `coreset::facility`; compared in benches).
+    pub fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)> {
+        let r = self.man.r;
+        self.check_len("select_greedy", "g rows", g.rows, r)?;
+        self.check_len("select_greedy", "g cols", g.cols, self.man.classes)?;
+        self.check_len("select_greedy", "a rows", a.rows, r)?;
+        let gl = lit_f32_2d(&g.data, g.rows, g.cols)?;
+        let al = lit_f32_2d(&a.data, a.rows, a.cols)?;
+        let out = self.exec("select_greedy", &[&gl, &al])?;
+        let idxs = lit_to_i32(&out[0])?.into_iter().map(|i| i as usize).collect();
+        let weights = lit_to_f32(&out[1])?;
+        Ok((idxs, weights))
+    }
+
+    /// Human-readable artifact summary (used by `crest inspect`).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "variant {} (p_dim={}, m={}, r={}, classes={})\n",
+            self.man.name, self.man.p_dim, self.man.m, self.man.r, self.man.classes
+        );
+        for (name, a) in &self.man.artifacts {
+            let ins: Vec<String> = a
+                .inputs
+                .iter()
+                .map(|t| format!("{}:{:?}{:?}", t.name, t.dtype, t.shape))
+                .collect();
+            s.push_str(&format!("  {name}({})\n", ins.join(", ")));
+        }
+        s
+    }
+}
+
+/// Size in bytes of one element of the given dtype.
+pub fn dtype_bytes(d: DType) -> usize {
+    match d {
+        DType::F32 | DType::I32 => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Unit tests cover pure logic; executions against real artifacts live
+    //! in `rust/tests/` (they need `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(dtype_bytes(DType::F32), 4);
+        assert_eq!(dtype_bytes(DType::I32), 4);
+    }
+
+    #[test]
+    fn load_missing_dir_fails() {
+        assert!(Runtime::load(Path::new("/nonexistent"), "nope").is_err());
+    }
+}

@@ -1,0 +1,171 @@
+//! Row-major f32 matrices + conversions to/from `xla::Literal`.
+//!
+//! The coordinator's host-side tensor needs are modest (gather rows for a
+//! batch, hold gradient embeddings, convert to XLA literals); this module
+//! provides exactly that with zero-copy accessors where possible.
+
+use anyhow::{ensure, Result};
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        ensure!(data.len() == rows * cols, "data len {} != {rows}x{cols}", data.len());
+        Ok(MatF32 { rows, cols, data })
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// New matrix from the given row indices (batch assembly).
+    pub fn gather_rows(&self, idx: &[usize]) -> MatF32 {
+        let mut out = MatF32::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Mean of all rows.
+    pub fn mean_row(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += v as f64;
+            }
+        }
+        out.into_iter().map(|v| (v / self.rows.max(1) as f64) as f32).collect()
+    }
+
+    /// Weighted mean of rows: sum_i w[i]·row_i / norm.
+    pub fn weighted_mean_row(&self, w: &[f32], norm: f32) -> Vec<f32> {
+        debug_assert_eq!(w.len(), self.rows);
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let wi = w[i] as f64;
+            for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                *o += wi * v as f64;
+            }
+        }
+        out.into_iter().map(|v| (v / norm as f64) as f32).collect()
+    }
+
+    /// Squared Euclidean distance between rows i and j.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f32;
+        for k in 0..self.cols {
+            let d = a[k] - b[k];
+            s += d * d;
+        }
+        s
+    }
+}
+
+// ------------------------------------------------------------ literal bridge
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 slice -> rank-2 literal with the given shape.
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    ensure!(v.len() == rows * cols, "len {} != {rows}x{cols}", v.len());
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 slice -> rank-1 literal.
+pub fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> Vec<f32> (any rank; row-major order).
+pub fn lit_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Literal -> Vec<i32>.
+pub fn lit_to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Scalar literal -> f32.
+pub fn lit_to_scalar(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_and_rows() {
+        let m = MatF32::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(m.row(1), &[3., 4.]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![5., 6., 1., 2.]);
+        assert_eq!(g.rows, 2);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(MatF32::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn means() {
+        let m = MatF32::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(m.mean_row(), vec![2., 3.]);
+        let wm = m.weighted_mean_row(&[1.0, 3.0], 4.0);
+        assert_eq!(wm, vec![2.5, 3.5]);
+    }
+
+    #[test]
+    fn sqdist() {
+        let m = MatF32::from_vec(2, 3, vec![0., 0., 0., 1., 2., 2.]).unwrap();
+        assert_eq!(m.sqdist(0, 1), 9.0);
+        assert_eq!(m.sqdist(1, 1), 0.0);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let l = lit_f32(&v);
+        assert_eq!(lit_to_f32(&l).unwrap(), v);
+    }
+
+    #[test]
+    fn literal_roundtrip_2d_and_i32() {
+        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let l = lit_f32_2d(&v, 2, 3).unwrap();
+        assert_eq!(lit_to_f32(&l).unwrap(), v);
+        assert!(lit_f32_2d(&v, 2, 2).is_err());
+        let yi = vec![1i32, 0, 7];
+        assert_eq!(lit_to_i32(&lit_i32(&yi)).unwrap(), yi);
+        assert_eq!(lit_to_scalar(&lit_scalar(4.5)).unwrap(), 4.5);
+    }
+}

@@ -1,0 +1,107 @@
+//! Training-loop primitives shared by all methods: parameter state,
+//! chunked evaluation, single-batch stepping.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+
+/// Mutable training state (params + momentum as device literals).
+pub struct TrainState {
+    pub params: xla::Literal,
+    pub momentum: xla::Literal,
+    pub step: usize,
+}
+
+impl TrainState {
+    pub fn new(rt: &Runtime, init: &[f32]) -> Result<TrainState> {
+        Ok(TrainState {
+            params: rt.params_from_host(init)?,
+            momentum: rt.zero_momentum(),
+            step: 0,
+        })
+    }
+
+    /// One weighted SGD step on the given examples. Returns
+    /// (mean batch loss, per-example losses).
+    pub fn step_batch(
+        &mut self,
+        rt: &Runtime,
+        ds: &Dataset,
+        idx: &[usize],
+        gamma: &[f32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let (x, y) = ds.batch(idx);
+        let out = rt.train_step(&self.params, &self.momentum, &x, &y, gamma, lr, wd)?;
+        self.params = out.params;
+        self.momentum = out.momentum;
+        self.step += 1;
+        Ok((out.mean_loss, out.per_ex_loss))
+    }
+
+    /// Snapshot params to the host (for the quadratic δ bookkeeping).
+    pub fn params_host(&self, rt: &Runtime) -> Result<Vec<f32>> {
+        rt.params_to_host(&self.params)
+    }
+}
+
+/// Evaluation summary over a dataset.
+#[derive(Debug, Clone)]
+pub struct EvalOut {
+    pub mean_loss: f32,
+    pub accuracy: f32,
+    pub per_ex_loss: Vec<f32>,
+    pub per_ex_correct: Vec<f32>,
+}
+
+/// Chunked evaluation with tail padding (pad indices wrap; padded outputs
+/// are discarded so statistics are exact).
+pub fn evaluate(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Result<EvalOut> {
+    let e = rt.man.eval_chunk;
+    let n = ds.n();
+    let mut per_ex_loss = Vec::with_capacity(n);
+    let mut per_ex_correct = Vec::with_capacity(n);
+    let mut sum_loss = 0.0f64;
+    let mut n_correct = 0.0f64;
+    let mut start = 0;
+    while start < n {
+        let end = (start + e).min(n);
+        let valid = end - start;
+        let idx: Vec<usize> = (start..start + e).map(|i| i % n).collect();
+        let (x, y) = ds.batch(&idx);
+        let (_, _, pl, pc) = rt.eval_chunk(params, &x, &y)?;
+        for k in 0..valid {
+            sum_loss += pl[k] as f64;
+            n_correct += pc[k] as f64;
+            per_ex_loss.push(pl[k]);
+            per_ex_correct.push(pc[k]);
+        }
+        start = end;
+    }
+    Ok(EvalOut {
+        mean_loss: (sum_loss / n as f64) as f32,
+        accuracy: (n_correct / n as f64) as f32,
+        per_ex_loss,
+        per_ex_correct,
+    })
+}
+
+/// Mean loss over a specific index set (used for the ρ-check's L^r and the
+/// dropped-example analysis of Fig. 7a). Evaluates ⌈len/e⌉ chunks.
+pub fn eval_on_indices(
+    rt: &Runtime,
+    params: &xla::Literal,
+    ds: &Dataset,
+    idx: &[usize],
+) -> Result<EvalOut> {
+    let sub = ds.subset(idx);
+    evaluate(rt, params, &sub)
+}
+
+#[cfg(test)]
+mod tests {
+    // Execution-dependent behaviour is covered by rust/tests/ integration
+    // tests (requires artifacts). Nothing pure to test here.
+}

@@ -1,0 +1,227 @@
+//! Declarative command-line flag parsing (no clap in the offline registry).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated flags,
+//! positional arguments and automatic `--help` text. Used by the `crest`
+//! binary, the examples and the bench harnesses.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// One registered flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    values: HashMap<&'static str, Vec<String>>,
+    positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &'static str) -> Self {
+        Cli { program: program.to_string(), about, ..Default::default() }
+    }
+
+    /// Register a flag that takes a value, with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Register a flag that takes a value, without a default (optional).
+    pub fn opt_maybe(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: true, default: None });
+        self
+    }
+
+    /// Register a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    fn spec(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Parse the given args (not including argv[0]). On `--help`, prints
+    /// usage and exits the process.
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = match self.spec(&name) {
+                    Some(s) => s.clone(),
+                    None => bail!("unknown flag --{name} (try --help)"),
+                };
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            if i >= args.len() {
+                                bail!("flag --{name} requires a value");
+                            }
+                            args[i].clone()
+                        }
+                    }
+                } else {
+                    if inline.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    "true".to_string()
+                };
+                self.values.entry(spec.name).or_default().push(value);
+            } else {
+                self.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                self.values.entry(f.name).or_insert_with(|| vec![d.clone()]);
+            }
+        }
+        Ok(Parsed { values: self.values, positionals: self.positionals })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n",
+                            self.program, self.about, self.program);
+        for f in &self.flags {
+            let v = if f.takes_value { " <value>" } else { "" };
+            let d = f.default.as_deref().map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", f.name, f.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        s
+    }
+}
+
+/// Result of parsing.
+#[derive(Debug)]
+pub struct Parsed {
+    values: HashMap<&'static str, Vec<String>>,
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name).unwrap_or_default().to_string()
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64> {
+        let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        Ok(v.parse()?)
+    }
+
+    pub fn f32(&self, name: &str) -> Result<f32> {
+        let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
+        Ok(v.parse()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("variant", "cifar10-proxy", "variant name")
+            .opt("seed", "42", "rng seed")
+            .opt_maybe("out", "output file")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = cli().parse(&args(&[])).unwrap();
+        assert_eq!(p.get("variant"), Some("cifar10-proxy"));
+        assert_eq!(p.u64("seed").unwrap(), 42);
+        assert_eq!(p.get("out"), None);
+        assert!(!p.bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = cli().parse(&args(&["--variant", "snli-proxy", "--seed=7"])).unwrap();
+        assert_eq!(p.get("variant"), Some("snli-proxy"));
+        assert_eq!(p.u64("seed").unwrap(), 7);
+    }
+
+    #[test]
+    fn bool_flag_and_positional() {
+        let p = cli().parse(&args(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(p.bool("verbose"));
+        assert_eq!(p.positionals, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn repeated_flag_last_wins_and_all_available() {
+        let p = cli().parse(&args(&["--seed", "1", "--seed", "2"])).unwrap();
+        assert_eq!(p.u64("seed").unwrap(), 2);
+        assert_eq!(p.get_all("seed"), vec!["1", "2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&args(&["--nope"])).is_err());
+        assert!(cli().parse(&args(&["--variant"])).is_err());
+        assert!(cli().parse(&args(&["--verbose=x"])).is_err());
+        let p = cli().parse(&args(&["--seed", "abc"])).unwrap();
+        assert!(p.u64("seed").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cli().usage();
+        assert!(u.contains("--variant"));
+        assert!(u.contains("default: 42"));
+    }
+}

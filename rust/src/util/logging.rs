@@ -1,0 +1,101 @@
+//! Leveled stderr logger behind the `log` facade.
+//!
+//! Level comes from `CREST_LOG` (error|warn|info|debug|trace; default info).
+//! Timestamps are relative to process start — enough to read selection /
+//! training interleavings without pulling in a clock-formatting dependency.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static INIT: Once = Once::new();
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>8.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Parse a level name (case-insensitive).
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger (idempotent). Level from `CREST_LOG`, default Info.
+pub fn init() {
+    INIT.call_once(|| {
+        Lazy::force(&START);
+        let level = std::env::var("CREST_LOG")
+            .ok()
+            .and_then(|s| parse_level(&s))
+            .unwrap_or(LevelFilter::Info);
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+    });
+}
+
+/// Install with an explicit level (benches/tests that want quiet output).
+pub fn init_with(level: LevelFilter) {
+    init();
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("INFO"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("debug"), Some(LevelFilter::Debug));
+        assert_eq!(parse_level("off"), Some(LevelFilter::Off));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        init_with(LevelFilter::Warn);
+        assert_eq!(log::max_level(), LevelFilter::Warn);
+        init_with(LevelFilter::Info);
+    }
+}

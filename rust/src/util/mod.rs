@@ -1,0 +1,12 @@
+//! Foundation substrates: RNG, JSON, CLI parsing, logging, stats, timers.
+//!
+//! The offline crate registry carries none of the usual ecosystem crates
+//! (rand / serde / clap / env_logger), so the project builds these pieces
+//! itself — each sized to exactly what the coordinator needs.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,285 @@
+//! Deterministic pseudo-random generation (PCG32 core, SplitMix64 seeding).
+//!
+//! The cached crate registry ships no `rand`, so the coordinator carries its
+//! own generator. PCG32 (O'Neill 2014) gives solid statistical quality for
+//! data synthesis, subset sampling and Rademacher probes; SplitMix64 turns a
+//! single experiment seed into independent streams (data / init / subsets /
+//! probes) so changing one consumer never perturbs another.
+
+/// SplitMix64: seed expander with good avalanche properties.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG32 (XSH-RR variant): 64-bit state, 32-bit output.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    /// cached second Box-Muller draw
+    gauss_spare: Option<f32>,
+}
+
+impl Rng {
+    /// Construct from a seed; the stream id is derived from the seed too.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1; // stream must be odd
+        let mut rng = Rng { state: 0, inc, gauss_spare: None };
+        rng.state = state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream (for per-subsystem RNGs).
+    pub fn split(&mut self) -> Rng {
+        let seed = ((self.next_u32() as u64) << 32) | self.next_u32() as u64;
+        Rng::new(seed)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0 && n <= u32::MAX as usize);
+        let n = n as u32;
+        loop {
+            let x = self.next_u32();
+            let m = (x as u64).wrapping_mul(n as u64);
+            let l = m as u32;
+            if l >= n || l >= (u32::MAX - n + 1) % n {
+                return (m >> 32) as usize;
+            }
+        }
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Rademacher (+1 / -1) draw — Hutchinson probe vectors (paper Eq. 7).
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u32() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a slice with Rademacher entries.
+    pub fn rademacher_fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.rademacher();
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) — the random subsets V_p.
+    ///
+    /// Uses Floyd's algorithm for k << n (no O(n) allocation), falling back
+    /// to a partial shuffle when k is a large fraction of n.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.gen_range(n - i);
+                all.swap(i, j);
+            }
+            all.truncate(k);
+            return all;
+        }
+        // Floyd: guarantees uniqueness in O(k) expected time.
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.gen_range(j + 1);
+            let pick = if seen.insert(t) { t } else { j };
+            if pick != t {
+                seen.insert(pick);
+            }
+            out.push(pick);
+        }
+        out
+    }
+
+    /// Sample k indices from the given pool (without replacement).
+    pub fn sample_from_pool(&mut self, pool: &[usize], k: usize) -> Vec<usize> {
+        let picks = self.sample_indices(pool.len(), k.min(pool.len()));
+        picks.into_iter().map(|i| pool[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_constructions() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_consumption() {
+        let mut a = Rng::new(7);
+        let mut child = a.split();
+        let v1: Vec<u32> = (0..8).map(|_| child.next_u32()).collect();
+        // regenerate: same parent seed, same split point
+        let mut a2 = Rng::new(7);
+        let mut child2 = a2.split();
+        let v2: Vec<u32> = (0..8).map(|_| child2.next_u32()).collect();
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(4);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn gen_range_covers_all_values() {
+        let mut r = Rng::new(5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[r.gen_range(10)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_unique_and_in_range() {
+        let mut r = Rng::new(6);
+        for &(n, k) in &[(10, 10), (100, 5), (1000, 999), (512, 128)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates for n={n} k={k}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_roughly_uniform() {
+        let mut r = Rng::new(8);
+        let mut counts = [0usize; 16];
+        for _ in 0..4000 {
+            for i in r.sample_indices(16, 4) {
+                counts[i] += 1;
+            }
+        }
+        // each index expected 1000 times
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((700..1300).contains(&c), "idx {i} count {c}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::new(10);
+        let mut z = vec![0.0f32; 10_000];
+        r.rademacher_fill(&mut z);
+        let pos = z.iter().filter(|&&x| x == 1.0).count();
+        assert!(z.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!((4500..5500).contains(&pos));
+    }
+}

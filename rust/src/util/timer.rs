@@ -1,0 +1,115 @@
+//! Named wall-clock accumulators for coarse profiling.
+//!
+//! The coordinator charges every phase (train step, embedding, greedy,
+//! ρ-check, eval) to a named bucket; reports print the breakdown that
+//! backs paper Table 2.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates total time and call count per named phase.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    buckets: HashMap<&'static str, (Duration, u64)>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under the given bucket.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        let e = self.buckets.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.buckets.get(name).map(|(d, _)| *d).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.buckets.get(name).map(|(_, c)| *c).unwrap_or(0)
+    }
+
+    /// Mean seconds per call for the bucket (0 when never hit).
+    pub fn mean_secs(&self, name: &str) -> f64 {
+        let (d, c) = self.buckets.get(name).copied().unwrap_or((Duration::ZERO, 0));
+        if c == 0 {
+            0.0
+        } else {
+            d.as_secs_f64() / c as f64
+        }
+    }
+
+    /// Merge another set of timers into this one.
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (name, (d, c)) in &other.buckets {
+            let e = self.buckets.entry(name).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    /// (name, total_secs, count, mean_secs) sorted by total descending.
+    pub fn rows(&self) -> Vec<(&'static str, f64, u64, f64)> {
+        let mut rows: Vec<_> = self
+            .buckets
+            .iter()
+            .map(|(n, (d, c))| (*n, d.as_secs_f64(), *c, d.as_secs_f64() / (*c).max(1) as f64))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_time_and_count() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        t.time("work", || ());
+        assert_eq!(t.count("work"), 2);
+        assert!(t.total("work") >= Duration::from_millis(5));
+        assert!(t.mean_secs("work") > 0.0);
+        assert_eq!(t.count("missing"), 0);
+        assert_eq!(t.mean_secs("missing"), 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimers::new();
+        let mut b = PhaseTimers::new();
+        a.add("x", Duration::from_millis(10));
+        b.add("x", Duration::from_millis(20));
+        b.add("y", Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.total("x"), Duration::from_millis(30));
+        assert_eq!(a.count("y"), 1);
+    }
+
+    #[test]
+    fn rows_sorted_by_total() {
+        let mut t = PhaseTimers::new();
+        t.add("small", Duration::from_millis(1));
+        t.add("big", Duration::from_millis(100));
+        let rows = t.rows();
+        assert_eq!(rows[0].0, "big");
+    }
+}

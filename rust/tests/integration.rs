@@ -1,0 +1,290 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//!
+//! These exercise the full interchange path — JAX-lowered HLO text →
+//! PJRT compile → typed execution — and check numerics against host-side
+//! recomputation. Skipped (with a notice) when artifacts are absent.
+
+use std::path::Path;
+
+use crest::config::{ExperimentConfig, MethodKind};
+use crest::coordinator::run_experiment;
+use crest::coreset::facility;
+use crest::data::{generate, SynthSpec};
+use crest::model::init_params;
+use crest::runtime::Runtime;
+use crest::train::{evaluate, TrainState};
+use crest::util::rng::Rng;
+use crest::util::stats;
+
+const VARIANT: &str = "cifar10-proxy";
+
+fn load() -> Option<(Runtime, crest::data::Splits)> {
+    let rt = match Runtime::load(Path::new("artifacts"), VARIANT) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[skip] artifacts not built: {e:#}");
+            return None;
+        }
+    };
+    let splits = generate(&SynthSpec::preset(VARIANT, 7).unwrap());
+    Some((rt, splits))
+}
+
+#[test]
+fn artifacts_compile_and_describe() {
+    let Some((rt, _)) = load() else { return };
+    let desc = rt.describe();
+    for name in ["train_step", "grad_embed", "eval_chunk", "hess_probe", "select_greedy"] {
+        assert!(desc.contains(name), "missing {name} in {desc}");
+    }
+}
+
+#[test]
+fn train_step_decreases_loss_on_fixed_batch() {
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(1);
+    let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx: Vec<usize> = (0..rt.man.m).collect();
+    let gamma = vec![1.0; rt.man.m];
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..40 {
+        let (loss, per_ex) = state.step_batch(&rt, ds, &idx, &gamma, 0.05, 0.0).unwrap();
+        assert_eq!(per_ex.len(), rt.man.m);
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    assert!(last < 0.5 * first.unwrap(), "{last} vs {first:?}");
+}
+
+#[test]
+fn zero_gamma_freezes_parameters() {
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(2);
+    let init = init_params(&rt.man, &mut rng);
+    let mut state = TrainState::new(&rt, &init).unwrap();
+    let idx: Vec<usize> = (0..rt.man.m).collect();
+    state.step_batch(&rt, ds, &idx, &vec![0.0; rt.man.m], 0.5, 0.0).unwrap();
+    let after = state.params_host(&rt).unwrap();
+    let drift = stats::norm2(&stats::sub(&after, &init));
+    assert!(drift < 1e-5, "drift {drift}");
+}
+
+#[test]
+fn batch_gradient_matches_finite_difference_of_step() {
+    // mom=0, lr=eps step must move params by exactly -eps * grad
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(3);
+    let init = init_params(&rt.man, &mut rng);
+    let params = rt.params_from_host(&init).unwrap();
+    let idx: Vec<usize> = (0..rt.man.m).collect();
+    let gamma = vec![1.0; rt.man.m];
+    let grad = {
+        let (x, y) = ds.batch(&idx);
+        rt.batch_gradient(&params, &x, &y, &gamma).unwrap()
+    };
+    let eps = 0.01f32;
+    let (x, y) = ds.batch(&idx);
+    let zero = rt.zero_momentum();
+    let out = rt.train_step(&params, &zero, &x, &y, &gamma, eps, 0.0).unwrap();
+    let stepped = rt.params_to_host(&out.params).unwrap();
+    for i in (0..init.len()).step_by(997) {
+        let want = init[i] - eps * grad[i];
+        assert!((stepped[i] - want).abs() < 1e-5, "param {i}: {} vs {want}", stepped[i]);
+    }
+}
+
+#[test]
+fn grad_embed_losses_match_eval_losses() {
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(4);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx: Vec<usize> = (0..rt.man.r).collect();
+    let (x, y) = ds.batch(&idx);
+    let (_, _, losses) = rt.grad_embed(&state.params, &x, &y).unwrap();
+    // same losses via the eval path
+    let sub = ds.subset(&idx);
+    let ev = evaluate(&rt, &state.params, &sub).unwrap();
+    for i in (0..idx.len()).step_by(37) {
+        assert!(
+            (losses[i] - ev.per_ex_loss[i]).abs() < 1e-4,
+            "loss {i}: {} vs {}",
+            losses[i],
+            ev.per_ex_loss[i]
+        );
+    }
+}
+
+#[test]
+fn grad_embed_rows_sum_to_zero() {
+    // softmax gradient rows (p - y) each sum to ~0
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(5);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx: Vec<usize> = (0..rt.man.r).collect();
+    let (x, y) = ds.batch(&idx);
+    let (gl, _, _) = rt.grad_embed(&state.params, &x, &y).unwrap();
+    for i in 0..gl.rows {
+        let s: f32 = gl.row(i).iter().sum();
+        assert!(s.abs() < 1e-4, "row {i} sums to {s}");
+    }
+}
+
+#[test]
+fn hess_probe_zero_z_matches_batch_gradient_direction() {
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(6);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx: Vec<usize> = (0..rt.man.r).collect();
+    let (x, y) = ds.batch(&idx);
+    let z = vec![0.0f32; rt.man.p_dim];
+    let probe = rt.hess_probe(&state.params, &x, &y, &z).unwrap();
+    assert!(stats::norm2(&probe.hz) < 1e-6, "Hz must vanish for z=0");
+    assert!(probe.mean_loss > 0.0);
+    // probe.grad is the mean grad of these r examples; it must agree with
+    // the average of the m-chunked batch gradients
+    let mut acc = vec![0.0f64; rt.man.p_dim];
+    let chunks: Vec<&[usize]> = idx.chunks(rt.man.m).collect();
+    for c in &chunks {
+        let (cx, cy) = ds.batch(c);
+        let g = rt.batch_gradient(&state.params, &cx, &cy, &vec![1.0; rt.man.m]).unwrap();
+        for (a, &v) in acc.iter_mut().zip(&g) {
+            *a += v as f64 / chunks.len() as f64;
+        }
+    }
+    let avg: Vec<f32> = acc.iter().map(|&v| v as f32).collect();
+    let err = stats::norm2(&stats::sub(&avg, &probe.grad));
+    let scale = stats::norm2(&probe.grad).max(1e-9);
+    assert!(err / scale < 1e-3, "relative err {}", err / scale);
+}
+
+#[test]
+fn hutchinson_probe_diag_estimate_is_unbiased_in_sign_flip() {
+    // z and -z give identical z .* Hz (the estimator is even)
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(7);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx: Vec<usize> = (0..rt.man.r).collect();
+    let (x, y) = ds.batch(&idx);
+    let mut z = vec![0.0f32; rt.man.p_dim];
+    rng.rademacher_fill(&mut z);
+    let p1 = rt.hess_probe(&state.params, &x, &y, &z).unwrap();
+    let neg: Vec<f32> = z.iter().map(|&v| -v).collect();
+    let p2 = rt.hess_probe(&state.params, &x, &y, &neg).unwrap();
+    for i in (0..z.len()).step_by(1009) {
+        let d1 = z[i] * p1.hz[i];
+        let d2 = neg[i] * p2.hz[i];
+        assert!((d1 - d2).abs() < 1e-4, "diag est {i}: {d1} vs {d2}");
+    }
+}
+
+#[test]
+fn compiled_greedy_matches_host_greedy_cost() {
+    let Some((rt, splits)) = load() else { return };
+    let ds = &splits.train;
+    let mut rng = Rng::new(8);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let idx = rng.sample_indices(ds.n(), rt.man.r);
+    let (x, y) = ds.batch(&idx);
+    let (gl, al, _) = rt.grad_embed(&state.params, &x, &y).unwrap();
+    let (cidx, cw) = rt.select_greedy(&gl, &al).unwrap();
+    let host = facility::facility_location_prod(&al, &gl, rt.man.m);
+    // weights partition the subset in both
+    assert_eq!(cw.iter().sum::<f32>(), rt.man.r as f32);
+    assert_eq!(host.gamma.iter().sum::<f32>(), rt.man.r as f32);
+    // objective values agree tightly (tie-breaking may differ)
+    let metric = facility::ProdMetric::new(&al, &gl);
+    let cost = |sel: &[usize]| -> f64 {
+        use crest::coreset::facility::SqDistMetric;
+        (0..rt.man.r)
+            .map(|i| sel.iter().map(|&j| metric.sqdist(j, i)).fold(f32::INFINITY, f32::min) as f64)
+            .sum()
+    };
+    let compiled_cost = cost(&cidx);
+    let host_cost = cost(&host.idx);
+    assert!(
+        compiled_cost <= host_cost * 1.05 + 1e-6 && host_cost <= compiled_cost * 1.05 + 1e-6,
+        "compiled {compiled_cost} vs host {host_cost}"
+    );
+}
+
+#[test]
+fn evaluate_handles_non_chunk_multiple_sizes() {
+    let Some((rt, splits)) = load() else { return };
+    // test set 1024 = 2 chunks exactly; use an odd-sized subset to cover padding
+    let idx: Vec<usize> = (0..700).collect();
+    let sub = splits.test.subset(&idx);
+    let mut rng = Rng::new(9);
+    let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+    let ev = evaluate(&rt, &state.params, &sub).unwrap();
+    assert_eq!(ev.per_ex_loss.len(), 700);
+    assert_eq!(ev.per_ex_correct.len(), 700);
+    assert!((0.0..=1.0).contains(&ev.accuracy));
+    // untrained accuracy should be near chance
+    assert!(ev.accuracy < 0.35, "untrained acc {}", ev.accuracy);
+}
+
+#[test]
+fn every_method_completes_a_tiny_run() {
+    let Some((rt, splits)) = load() else { return };
+    for method in [
+        MethodKind::Full,
+        MethodKind::Random,
+        MethodKind::SgdTruncated,
+        MethodKind::Crest,
+        MethodKind::Craig,
+        MethodKind::GradMatch,
+        MethodKind::Glister,
+        MethodKind::GreedyPerBatch,
+    ] {
+        let mut cfg = ExperimentConfig::preset(VARIANT, method, 11).unwrap();
+        cfg.epochs_full = 2; // tiny budget: full = 320 steps, others 32
+        cfg.eval_points = 2;
+        let rep = run_experiment(&rt, &splits, cfg).unwrap();
+        assert!(rep.steps > 0, "{method:?} ran no steps");
+        assert!(rep.final_test_acc > 0.05, "{method:?} below chance: {}", rep.final_test_acc);
+        assert!(rep.backprops > 0);
+        if method == MethodKind::Crest {
+            assert!(rep.n_selection_updates > 0);
+        }
+    }
+}
+
+#[test]
+fn crest_report_is_internally_consistent() {
+    let Some((rt, splits)) = load() else { return };
+    let mut cfg = ExperimentConfig::preset(VARIANT, MethodKind::Crest, 12).unwrap();
+    cfg.epochs_full = 5;
+    let rep = run_experiment(&rt, &splits, cfg).unwrap();
+    assert_eq!(rep.update_steps.len(), rep.n_selection_updates);
+    assert!(rep.update_steps.windows(2).all(|w| w[0] < w[1]), "updates sorted");
+    assert!(rep.rho_history.iter().all(|&(_, rho)| rho >= 0.0));
+    assert_eq!(rep.selection_counts.len(), splits.train.n());
+    let total_selected: u64 = rep.selection_counts.iter().map(|&c| c as u64).sum();
+    assert_eq!(total_selected, rep.steps as u64 * rt.man.m as u64);
+    // serializes
+    let j = rep.to_json().to_string_pretty();
+    assert!(crest::util::json::Json::parse(&j).is_ok());
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some((rt, splits)) = load() else { return };
+    let mk = || {
+        let mut cfg = ExperimentConfig::preset(VARIANT, MethodKind::Crest, 13).unwrap();
+        cfg.epochs_full = 3;
+        run_experiment(&rt, &splits, cfg).unwrap()
+    };
+    let a = mk();
+    let b = mk();
+    assert_eq!(a.final_test_acc, b.final_test_acc);
+    assert_eq!(a.n_selection_updates, b.n_selection_updates);
+    assert_eq!(a.update_steps, b.update_steps);
+}

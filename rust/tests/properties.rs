@@ -1,0 +1,354 @@
+//! Property-based tests (crest::prop harness) over the pure algorithmic
+//! invariants — no XLA required.
+
+use crest::coreset::facility::{
+    self, coverage_cost, facility_location, facility_location_metric,
+    facility_location_stochastic, EuclidMetric, ProdMetric, SqDistMetric,
+};
+use crest::exclusion::ExclusionTracker;
+use crest::opt::{Budget, LrSchedule};
+use crest::prop::{forall, usize_in, vec_f32};
+use crest::quadratic::{QuadOptions, QuadraticModel};
+use crest::tensor::MatF32;
+use crest::util::json::Json;
+use crest::util::rng::Rng;
+use crest::util::stats;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF32 {
+    MatF32::from_vec(rows, cols, vec_f32(rng, rows * cols, scale)).unwrap()
+}
+
+#[test]
+fn prop_facility_gamma_partitions_ground_set() {
+    forall(
+        "facility-gamma-partition",
+        0xF1,
+        40,
+        |rng| {
+            let r = usize_in(rng, 4, 60);
+            let m = usize_in(rng, 1, r.min(20));
+            let cols = usize_in(rng, 1, 8);
+            (rand_mat(rng, r, cols, 5.0), m)
+        },
+        |(g, m)| {
+            let sel = facility_location(g, *m);
+            let sum: f32 = sel.gamma.iter().sum();
+            if sum != g.rows as f32 {
+                return Err(format!("gamma sums to {sum}, want {}", g.rows));
+            }
+            let uniq: std::collections::HashSet<_> = sel.idx.iter().collect();
+            if uniq.len() != *m {
+                return Err("duplicate medoids".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_facility_cost_monotone_in_m() {
+    forall(
+        "facility-cost-monotone",
+        0xF2,
+        25,
+        |rng| {
+            let r = usize_in(rng, 6, 48);
+            (rand_mat(rng, r, 4, 3.0), usize_in(rng, 1, r / 2))
+        },
+        |(g, m)| {
+            let c1 = coverage_cost(g, &facility_location(g, *m).idx);
+            let c2 = coverage_cost(g, &facility_location(g, m + 1).idx);
+            if c2 <= c1 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("cost increased: {c1} -> {c2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_prod_metric_equals_materialized_outer_product_distance() {
+    forall(
+        "prod-metric-equivalence",
+        0xF3,
+        30,
+        |rng| {
+            let r = usize_in(rng, 2, 12);
+            let h = usize_in(rng, 1, 6);
+            let c = usize_in(rng, 1, 5);
+            (rand_mat(rng, r, h, 2.0), rand_mat(rng, r, c, 2.0))
+        },
+        |(a, g)| {
+            let metric = ProdMetric::new(a, g);
+            for i in 0..a.rows {
+                for j in 0..a.rows {
+                    // materialize outer products explicitly
+                    let mut d = 0.0f64;
+                    for p in 0..a.cols {
+                        for q in 0..g.cols {
+                            let x = a.row(i)[p] as f64 * g.row(i)[q] as f64
+                                - a.row(j)[p] as f64 * g.row(j)[q] as f64;
+                            d += x * x;
+                        }
+                    }
+                    let got = metric.sqdist(i, j) as f64;
+                    let tol = 1e-3 * (1.0 + d.abs());
+                    if (got - d).abs() > tol {
+                        return Err(format!("d({i},{j}) = {got}, want {d}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stochastic_greedy_cost_close_to_lazy() {
+    forall(
+        "stochastic-vs-lazy",
+        0xF4,
+        15,
+        |rng| {
+            let r = usize_in(rng, 30, 80);
+            (rand_mat(rng, r, 4, 3.0), usize_in(rng, 4, 12), Rng::new(rng.next_u64()))
+        },
+        |(g, m, srng)| {
+            let lazy = coverage_cost(g, &facility_location(g, *m).idx);
+            let metric = EuclidMetric::new(g);
+            let mut srng = srng.clone();
+            let stoch = coverage_cost(
+                g,
+                &facility_location_stochastic(&metric, *m, &mut srng).idx,
+            );
+            // (1 - 1/e - eps) guarantee -> allow generous slack on cost
+            if stoch <= lazy * 3.0 + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("stochastic {stoch} vs lazy {lazy}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lazy_greedy_metric_dispatch_consistent() {
+    // facility_location(g) == facility_location_metric(Euclid(g))
+    forall(
+        "metric-dispatch",
+        0xF5,
+        20,
+        |rng| {
+            let r = usize_in(rng, 5, 40);
+            (rand_mat(rng, r, 3, 4.0), usize_in(rng, 1, 8).min(r))
+        },
+        |(g, m)| {
+            let a = facility_location(g, *m);
+            let b = facility_location_metric(&EuclidMetric::new(g), *m);
+            if a.idx == b.idx && a.gamma == b.gamma {
+                Ok(())
+            } else {
+                Err("wrapper and metric form disagree".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_quadratic_ema_bounded_by_observations() {
+    forall(
+        "ema-bounded",
+        0xF6,
+        30,
+        |rng| {
+            let obs: Vec<Vec<f32>> =
+                (0..usize_in(rng, 1, 12)).map(|_| vec_f32(rng, 4, 10.0)).collect();
+            obs
+        },
+        |obs| {
+            let mut q = QuadraticModel::new(4, 0.9, 0.99, QuadOptions::default());
+            for o in obs {
+                q.observe_grad(o);
+            }
+            let g = q.gbar();
+            for k in 0..4 {
+                let lo = obs.iter().map(|o| o[k]).fold(f32::INFINITY, f32::min);
+                let hi = obs.iter().map(|o| o[k]).fold(f32::NEG_INFINITY, f32::max);
+                if g[k] < lo - 1e-3 || g[k] > hi + 1e-3 {
+                    return Err(format!("ema[{k}]={} outside [{lo},{hi}]", g[k]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quadratic_rho_scale_invariant() {
+    // rho(delta, L) is invariant to scaling both F-L difference and L
+    forall(
+        "rho-definition",
+        0xF7,
+        30,
+        |rng| (vec_f32(rng, 6, 1.0), vec_f32(rng, 6, 0.5), rng.uniform_in(0.1, 5.0)),
+        |(g, delta, loss)| {
+            let mut q = QuadraticModel::new(6, 0.9, 0.99, QuadOptions::default());
+            q.observe_grad(g);
+            q.observe_hdiag(&vec![0.0; 6]);
+            q.set_anchor(*loss);
+            let f = q.f_l(delta);
+            let actual = loss * 1.5;
+            let want = (f - actual).abs() / actual;
+            let got = q.rho(delta, actual);
+            if (got - want).abs() < 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("rho {got} vs {want}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_exclusion_pool_shrinks_monotonically() {
+    forall(
+        "exclusion-monotone",
+        0xF8,
+        25,
+        |rng| {
+            let n = usize_in(rng, 4, 40);
+            let windows: Vec<Vec<(usize, f32)>> = (0..usize_in(rng, 1, 6))
+                .map(|_| {
+                    (0..usize_in(rng, 1, n))
+                        .map(|_| (usize_in(rng, 0, n), rng.uniform_in(0.0, 0.3)))
+                        .collect()
+                })
+                .collect();
+            (n, windows)
+        },
+        |(n, windows)| {
+            let mut t = ExclusionTracker::new(*n, 0.1, true);
+            let mut prev = t.active_pool().len();
+            for w in windows {
+                for &(i, l) in w {
+                    t.observe(i, l);
+                }
+                t.end_window();
+                let now = t.active_pool().len();
+                if now > prev {
+                    return Err(format!("pool grew {prev} -> {now}"));
+                }
+                if t.n_excluded() + now != *n {
+                    return Err("excluded + active != n".into());
+                }
+                prev = now;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_values() {
+    forall(
+        "json-roundtrip",
+        0xF9,
+        60,
+        |rng| {
+            fn gen(rng: &mut Rng, depth: usize) -> Json {
+                match if depth > 2 { rng.gen_range(4) } else { rng.gen_range(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.next_u32() & 1 == 0),
+                    2 => Json::Num((rng.normal() * 1000.0).round() as f64 / 16.0),
+                    3 => Json::Str(format!("s{}-\"quote\\{}", rng.gen_range(100), rng.gen_range(10))),
+                    4 => Json::Arr((0..rng.gen_range(4)).map(|_| gen(rng, depth + 1)).collect()),
+                    _ => Json::Obj(
+                        (0..rng.gen_range(4))
+                            .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            gen(rng, 0)
+        },
+        |v| {
+            let s = v.to_string_pretty();
+            let back = Json::parse(&s).map_err(|e| format!("parse failed: {e}"))?;
+            if &back == v {
+                Ok(())
+            } else {
+                Err(format!("roundtrip mismatch: {s}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_budget_accounts_exactly() {
+    forall(
+        "budget-exact",
+        0xFA,
+        40,
+        |rng| (usize_in(rng, 1, 1000), usize_in(rng, 1, 64)),
+        |(total, m)| {
+            let mut b = Budget::exact(*total as u64);
+            let mut steps = 0u64;
+            while b.charge(*m) {
+                steps += 1;
+                if steps > *total as u64 + 1 {
+                    return Err("budget never exhausts".into());
+                }
+            }
+            let want = (*total as u64).div_ceil(*m as u64);
+            if steps == want {
+                Ok(())
+            } else {
+                Err(format!("{steps} steps, want {want}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_lr_schedule_bounded_and_nonnegative() {
+    forall(
+        "lr-bounds",
+        0xFB,
+        40,
+        |rng| (rng.uniform_in(0.001, 1.0), usize_in(rng, 10, 5000)),
+        |(base, total)| {
+            let s = LrSchedule::paper_default(*base);
+            for step in 0..*total {
+                let lr = s.lr_at(step, *total);
+                if !(lr > 0.0 && lr <= *base * 1.0001) {
+                    return Err(format!("lr {lr} out of (0, {base}] at {step}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_selection_normalized_gamma_mean_one() {
+    forall(
+        "gamma-normalization",
+        0xFC,
+        30,
+        |rng| {
+            let m = usize_in(rng, 1, 16);
+            let gamma: Vec<f32> = (0..m).map(|_| rng.uniform_in(0.0, 20.0)).collect();
+            facility::Selection { idx: (0..m).collect(), gamma }
+        },
+        |sel| {
+            let g = sel.normalized_gamma(sel.idx.len());
+            let mean = stats::mean(&g);
+            if (mean - 1.0).abs() < 1e-4 || sel.gamma.iter().sum::<f32>() == 0.0 {
+                Ok(())
+            } else {
+                Err(format!("mean gamma {mean}"))
+            }
+        },
+    );
+}
