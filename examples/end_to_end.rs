@@ -1,13 +1,12 @@
-//! End-to-end driver (DESIGN.md §validation): exercises every layer of the
-//! stack on a real small workload and reports the paper's headline metric.
+//! End-to-end driver: exercises every layer of the stack on a real small
+//! workload and reports the paper's headline metric.
 //!
 //! Pipeline proven here:
-//!   L1 Pallas kernels → L2 JAX graph → `make artifacts` (HLO text)
-//!   → Rust PJRT runtime → CREST coordinator (Algorithm 1)
+//!   runtime backend (native by default; PJRT-compiled artifacts behind the
+//!   `pjrt` feature) → CREST coordinator (Algorithm 1)
 //!   → full-vs-budgeted training with loss curves → relative error + speedup.
 //!
-//! Writes a JSON transcript (reports/end_to_end.json) recorded in
-//! EXPERIMENTS.md.
+//! Writes a JSON transcript to reports/end_to_end.json.
 //!
 //!   cargo run --release --example end_to_end -- [--variant cifar10-proxy]
 

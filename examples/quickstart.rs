@@ -1,8 +1,9 @@
 //! Quickstart — the smallest complete use of the public API:
-//! load a variant's AOT artifacts, generate its proxy corpus, train with
-//! CREST under a 10% budget, and print the result.
+//! load a variant's runtime (native CPU backend, no artifacts needed),
+//! generate its proxy corpus, train with CREST under a 10% budget, and
+//! print the result.
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
 
 use anyhow::{Context, Result};
 use crest::config::{ExperimentConfig, MethodKind};
@@ -15,7 +16,8 @@ fn main() -> Result<()> {
     let variant = "cifar10-proxy";
     let seed = 1;
 
-    // 1. runtime: compile the HLO artifacts once (PJRT CPU client)
+    // 1. runtime: native backend from the builtin manifest (an artifacts/
+    //    directory, when present, overrides the shapes)
     let rt = Runtime::load(std::path::Path::new("artifacts"), variant)?;
     println!("{}", rt.describe());
 

@@ -2,7 +2,7 @@
 //! Random and the baselines, per variant (the speedup headline).
 //!
 //! Two cost axes are reported: wall-clock on this substrate, and the
-//! hardware-independent backprop count (DESIGN.md §2 — on the paper's GPU
+//! hardware-independent backprop count (on the paper's GPU
 //! testbed training dominates; on a tiny-MLP CPU substrate selection
 //! overhead weighs more, so backprops are the primary speedup metric).
 

@@ -1,4 +1,4 @@
-//! §Perf microbenches — the per-layer hot paths behind EXPERIMENTS.md §Perf:
+//! §Perf microbenches — the per-layer hot paths:
 //!
 //!   L3: facility-location greedy (host lazy vs stochastic), batch assembly
 //!   L2/runtime: train_step, grad_embed, eval_chunk, hess_probe executions

@@ -129,7 +129,8 @@ pub struct ExperimentConfig {
     /// coresets (CREST / greedy-per-batch). `None` = the Theorem 4.1 step
     /// size ratio √(r/m); baselines always run the unscaled schedule.
     pub coreset_lr_scale: Option<f32>,
-    /// Use the XLA in-graph greedy instead of host lazy greedy.
+    /// Use the backend's `select_greedy` computation instead of calling the
+    /// host lazy greedy directly (in-graph under PJRT).
     pub compiled_selection: bool,
     /// Host-side selection worker threads (P subproblems in parallel).
     pub selection_threads: usize,
@@ -143,12 +144,14 @@ impl ExperimentConfig {
         // τ/h tuned per variant the same way the paper tunes its Table 6
         // values (τ from the observed ρ scale after warmup; h from the
         // curvature-decay rate). Our loss scale differs from ResNet/CIFAR,
-        // so the numbers differ from the paper's — see EXPERIMENTS.md.
+        // so the numbers differ from the paper's.
         let (tau, h_mult) = match variant {
             "cifar10-proxy" => (0.01, 1.0),
             "cifar100-proxy" => (0.01, 4.0),
             "tinyimagenet-proxy" => (0.005, 1.0),
             "snli-proxy" => (0.01, 2.0),
+            // tiny fast-test variant: same defaults as cifar10-proxy
+            "smoke" => (0.01, 1.0),
             _ => bail!("unknown variant {variant:?}"),
         };
         Ok(ExperimentConfig {

@@ -175,7 +175,7 @@ struct EpochCoresetSource<'a> {
 /// example gets exactly one embedding).
 pub fn full_embeddings(
     rt: &Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
 ) -> Result<(MatF32, MatF32, Vec<f32>)> {
     let r = rt.man.r;
@@ -424,7 +424,7 @@ impl<'a> CrestSource<'a> {
     fn select(&mut self, step: usize, state: &TrainState, timers: &mut PhaseTimers) -> Result<()> {
         let r = self.rt.man.r;
         let m = self.rt.man.m;
-        // --- embeddings for P random subsets (XLA, serial) ---
+        // --- embeddings for P random subsets (backend, serial) ---
         let t0 = Instant::now();
         let mut subsets: Vec<(Vec<usize>, MatF32, MatF32)> = Vec::with_capacity(self.p);
         for _ in 0..self.p {

@@ -30,7 +30,6 @@ impl Selection {
     }
 }
 
-#[derive(PartialEq)]
 struct HeapItem {
     gain: f32,
     cand: usize,
@@ -38,6 +37,16 @@ struct HeapItem {
     round: usize,
 }
 
+// Ordering must be *total* even for NaN gains: a NaN-producing metric (e.g.
+// embeddings from a diverged model) under `partial_cmp(..).unwrap_or(Equal)`
+// silently violates the BinaryHeap invariants and corrupts lazy-greedy
+// order. `f32::total_cmp` ranks +NaN above +inf, so poisoned entries surface
+// at the top instead of scrambling the heap.
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
 impl Eq for HeapItem {}
 impl PartialOrd for HeapItem {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
@@ -46,7 +55,7 @@ impl PartialOrd for HeapItem {
 }
 impl Ord for HeapItem {
     fn cmp(&self, other: &Self) -> Ordering {
-        self.gain.partial_cmp(&other.gain).unwrap_or(Ordering::Equal)
+        self.gain.total_cmp(&other.gain)
     }
 }
 
@@ -109,7 +118,7 @@ impl<'a> SqDistMetric for EuclidMetric<'a> {
 /// Last-layer *weight*-gradient metric: example i's gradient is the outer
 /// product `a_i ⊗ g_i`, whose pairwise Frobenius distance factorizes as
 /// `|a_i|²|g_i|² + |a_j|²|g_j|² − 2(a_i·a_j)(g_i·g_j)` — the same metric as
-/// the `pairwise_gradprod` Pallas kernel (see DESIGN.md §3).
+/// the `pairwise_gradprod` Pallas kernel in `python/compile/kernels/`.
 pub struct ProdMetric<'a> {
     a: &'a MatF32,
     g: &'a MatF32,
@@ -159,7 +168,7 @@ fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
 /// Gain restricted to the still-uncovered elements. Elements whose
 /// min-distance has fallen below `floor` can contribute at most `floor`
 /// each, so skipping them changes any gain by < active_floor_mass — the
-/// hot-loop optimization behind EXPERIMENTS.md §Perf.
+/// hot-loop optimization measured by `benches/perf.rs`.
 #[inline]
 fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize) -> f32 {
     // dense scan is faster until the list actually thins out
@@ -270,6 +279,32 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
     Selection { idx, gamma }
 }
 
+/// Highest-gain untaken candidate under the current min-distances — the
+/// scored fallback of stochastic greedy for rounds where every sampled
+/// candidate was already taken.
+fn best_untaken<M: SqDistMetric>(
+    ctx: &M,
+    mind: &[f32],
+    active: &[u32],
+    taken: &[bool],
+) -> Option<(usize, f64)> {
+    let mut best = (usize::MAX, f64::NEG_INFINITY);
+    for (j, &is_taken) in taken.iter().enumerate() {
+        if is_taken {
+            continue;
+        }
+        let g = gain_active(ctx, mind, active, j) as f64;
+        // a NaN gain (poisoned embeddings) must never beat finite candidates:
+        // `g > best.1` is false for every comparison against NaN, so an early
+        // NaN would otherwise win permanently
+        let g = if g.is_nan() { f64::NEG_INFINITY } else { g };
+        if best.0 == usize::MAX || g > best.1 {
+            best = (j, g);
+        }
+    }
+    (best.0 != usize::MAX).then_some(best)
+}
+
 /// Stochastic ("lazier than lazy") greedy of Mirzasoleiman et al. 2015:
 /// each step scores only a random candidate sample of size
 /// `s = (n/m)·ln(1/ε)`, giving a (1 − 1/e − ε) guarantee in O(n·ln(1/ε))
@@ -323,9 +358,13 @@ pub fn facility_location_stochastic<M: SqDistMetric>(
             }
         }
         if best.0 == usize::MAX {
-            // all sampled candidates already taken: fall back to scan
-            match (0..r).find(|&j| !taken[j]) {
-                Some(j) => best.0 = j,
+            // All sampled candidates were already taken. Score the remaining
+            // untaken candidates against the current min-distances instead
+            // of grabbing the first untaken index blind — index order is
+            // arbitrary, so the blind pick can be a duplicate of an existing
+            // medoid while a zero-cost cluster sits uncovered.
+            match best_untaken(ctx, &mind, &active, &taken) {
+                Some(pick) => best = pick,
                 None => break,
             }
         }
@@ -497,6 +536,88 @@ mod tests {
         let gn = s.normalized_gamma(8);
         let sum: f32 = gn.iter().sum();
         assert!((sum - 8.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn heap_orders_nan_gains_totally() {
+        // regression: partial_cmp(..).unwrap_or(Equal) made NaN compare
+        // Equal to everything, silently corrupting BinaryHeap order. Under
+        // total_cmp the pop sequence is well defined: +NaN > +inf > finite.
+        use std::collections::BinaryHeap;
+        let mut heap = BinaryHeap::new();
+        for (cand, gain) in
+            [1.0f32, f32::NAN, 2.0, f32::INFINITY, -1.0].into_iter().enumerate()
+        {
+            heap.push(HeapItem { gain, cand, round: 0 });
+        }
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop()).map(|it| it.cand).collect();
+        assert_eq!(order, vec![1, 3, 2, 0, 4]);
+    }
+
+    #[test]
+    fn nan_embeddings_do_not_corrupt_selection() {
+        // a NaN row (e.g. diverged gradients) must not panic the lazy
+        // greedy or break medoid uniqueness
+        let mut g = random_embed(32, 4, 11);
+        for v in g.row_mut(5) {
+            *v = f32::NAN;
+        }
+        let s = facility_location(&g, 8);
+        assert_eq!(s.idx.len(), 8);
+        let uniq: std::collections::HashSet<_> = s.idx.iter().collect();
+        assert_eq!(uniq.len(), 8);
+        assert!(s.idx.iter().all(|&i| i < 32));
+        let sum: f32 = s.gamma.iter().sum();
+        assert_eq!(sum, 32.0);
+    }
+
+    #[test]
+    fn stochastic_fallback_scores_untaken_candidates() {
+        // Ground set: indices 0 and 1 are coincident (taking 1 after 0 gains
+        // nothing), index 3 sits in a far uncovered cluster. With 0 and 2
+        // taken, the scored fallback must pick 3 — the old behavior
+        // ("first untaken index") would return 1.
+        let g = MatF32::from_vec(
+            4,
+            1,
+            vec![0.0, 0.0, 10.0, 100.0],
+        )
+        .unwrap();
+        let ctx = EuclidMetric::new(&g);
+        let taken = vec![true, false, true, false];
+        let mind: Vec<f32> = (0..4)
+            .map(|i| ctx.sqdist(0, i).min(ctx.sqdist(2, i)))
+            .collect();
+        let active: Vec<u32> = (0..4).collect();
+        let (pick, gain) = best_untaken(&ctx, &mind, &active, &taken).unwrap();
+        assert_eq!(pick, 3, "fallback must score candidates, not take the first untaken");
+        assert!(gain > 0.0);
+        // nothing untaken -> None
+        assert!(best_untaken(&ctx, &mind, &active, &[true; 4]).is_none());
+        // NaN distances (poisoned embedding row) must not corrupt the
+        // fallback scoring: the finite-gain candidate still wins
+        let g_nan = MatF32::from_vec(4, 1, vec![0.0, f32::NAN, 10.0, 100.0]).unwrap();
+        let ctx_nan = EuclidMetric::new(&g_nan);
+        let mind_nan: Vec<f32> = (0..4)
+            .map(|i| ctx_nan.sqdist(0, i).min(ctx_nan.sqdist(2, i)))
+            .collect();
+        let (pick, _) = best_untaken(&ctx_nan, &mind_nan, &active, &taken).unwrap();
+        assert_eq!(pick, 3, "NaN gain must lose to a finite gain");
+    }
+
+    #[test]
+    fn stochastic_selects_all_when_m_equals_r() {
+        // m = r forces the fallback path repeatedly near the end (the
+        // candidate sample is mostly taken); the result must still be a
+        // permutation of the ground set.
+        let g = random_embed(24, 3, 12);
+        let metric = EuclidMetric::new(&g);
+        let mut rng = Rng::new(13);
+        let s = facility_location_stochastic(&metric, 24, &mut rng);
+        let mut idx = s.idx.clone();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..24).collect::<Vec<_>>());
+        assert_eq!(s.gamma.iter().sum::<f32>(), 24.0);
     }
 
     #[test]

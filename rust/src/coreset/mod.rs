@@ -2,8 +2,8 @@
 //! three published baselines it is evaluated against.
 //!
 //! All selectors operate on host-side last-layer gradient embeddings
-//! (computed by the `grad_embed` artifact) and are pure functions — the
-//! coordinator owns all XLA interaction.
+//! (computed by the `grad_embed` backend op) and are pure functions — the
+//! coordinator owns all backend interaction.
 
 pub mod craig;
 pub mod facility;

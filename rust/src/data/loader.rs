@@ -3,7 +3,7 @@
 //! Host-side batch assembly (row gathers + label copies) overlaps with XLA
 //! execution: a worker thread materializes upcoming batches into a bounded
 //! channel while the trainer consumes them. This is the streaming-pipeline
-//! substrate of the coordinator (DESIGN.md §4); selection methods that
+//! substrate of the coordinator; selection methods that
 //! choose their own indices use `Dataset::batch` directly instead.
 
 use std::sync::mpsc::{sync_channel, Receiver};

@@ -1,5 +1,5 @@
 //! Synthetic class-conditional Gaussian-mixture corpora — the dataset
-//! proxies of DESIGN.md §2.
+//! proxies of the paper's benchmarks.
 //!
 //! The generator exposes the three axes coreset selection is sensitive to:
 //!
@@ -44,7 +44,7 @@ pub struct SynthSpec {
 }
 
 impl SynthSpec {
-    /// Preset mirroring a paper dataset (see DESIGN.md §6). The four
+    /// Preset mirroring a paper dataset. The four
     /// variants differ in size, dimensionality, class count and hardness
     /// the way CIFAR-10 → CIFAR-100 → TinyImageNet → SNLI do.
     pub fn preset(variant: &str, seed: u64) -> Option<SynthSpec> {
@@ -107,6 +107,24 @@ impl SynthSpec {
                 margin: 1.6,
                 easy_sigma: 0.5,
                 hard_sigma: 2.2,
+                seed,
+            },
+            // Tiny corpus for fast tests: mirrors the `smoke` ModelSpec
+            // (d_in=16, 4 classes) at a size where full experiment cells run
+            // in well under a second even in debug builds.
+            "smoke" => SynthSpec {
+                name: "smoke",
+                n_train: 1024,
+                n_val: 128,
+                n_test: 256,
+                d: 16,
+                classes: 4,
+                clusters_per_class: 2,
+                redundancy: 0.7,
+                label_noise: 0.02,
+                margin: 1.5,
+                easy_sigma: 0.4,
+                hard_sigma: 2.0,
                 seed,
             },
             _ => return None,

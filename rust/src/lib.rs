@@ -1,23 +1,24 @@
 //! # CREST — Coresets for Data-efficient Deep Learning (ICML 2023)
 //!
-//! From-scratch reproduction of Yang, Kang & Mirzasoleiman's CREST as a
-//! three-layer Rust + JAX + Pallas system:
+//! From-scratch reproduction of Yang, Kang & Mirzasoleiman's CREST: the
+//! coordinator (Algorithm 1 of the paper), the baseline coreset methods,
+//! the data pipeline, and the benchmark harness that regenerates the
+//! evaluation's tables and figures.
 //!
-//! * **L1** (`python/compile/kernels/`): Pallas kernels for the selection
-//!   hot-spots (pairwise gradient distances, fused last-layer gradients,
-//!   facility-location gains), validated against pure-jnp oracles.
-//! * **L2** (`python/compile/model.py`): the JAX training graph (fwd/bwd,
-//!   Hutchinson Hessian probes, in-graph greedy selection), AOT-lowered to
-//!   HLO text once by `make artifacts`.
-//! * **L3** (this crate): the coordinator — Algorithm 1 of the paper, the
-//!   baseline coreset methods, the data pipeline, and the benchmark
-//!   harness that regenerates every table and figure of the evaluation.
+//! Execution is abstracted behind [`runtime::Backend`], with two engines:
 //!
-//! Python never runs on the training path: the `crest` binary loads the
-//! HLO artifacts through PJRT (`runtime`) and is self-contained.
+//! * **native** (default): a pure-Rust CPU implementation of the five model
+//!   computations (`train_step`, `grad_embed`, `eval_chunk`, `hess_probe`,
+//!   `select_greedy`), derived directly from the
+//!   [`runtime::manifest::VariantManifest`] shape contract. A clean
+//!   checkout builds and trains with no Python, no XLA, and no artifact
+//!   files.
+//! * **pjrt** (`--features pjrt`, opt-in): executes the AOT HLO artifacts
+//!   produced by `python/compile/` (JAX graph + Pallas selection kernels)
+//!   through XLA/PJRT. Requires an `xla` crate dependency and the built
+//!   artifacts; Python still never runs on the training path.
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the top-level `README.md` for build and test instructions.
 
 pub mod bench_util;
 pub mod config;

@@ -3,8 +3,11 @@
 //! Subcommands:
 //!   train    run one method on one variant and print the run report
 //!   compare  run several methods on one variant (Table-1-style rows)
-//!   inspect  print the compiled artifact interface for a variant
+//!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
+//!
+//! Runs on the native CPU backend by default (no artifacts required); the
+//! `--artifacts` root is consulted for manifest.json shape overrides.
 //!
 //! Example:
 //!   crest train --variant cifar10-proxy --method crest --seed 1
@@ -65,7 +68,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("no-exclude", "disable learned-example exclusion")
         .flag("first-order", "use a first-order loss model (CREST-FIRST)")
         .flag("no-smooth", "disable EMA smoothing of grad/curvature")
-        .flag("compiled-selection", "use the XLA in-graph greedy")
+        .flag("compiled-selection", "route greedy selection through the backend")
         .parse(args)?;
 
     let variant = p.str("variant");

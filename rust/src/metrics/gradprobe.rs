@@ -6,9 +6,9 @@
 //! * bias     `‖E[g_mb] − ∇L‖`
 //! * variance `E[‖g_mb − ∇L‖²]`
 //!
-//! Batch gradients come from the `train_step` artifact run with zero
+//! Batch gradients come from the `train_step` computation run with zero
 //! momentum and lr=0 (`Runtime::batch_gradient`), so probes share the exact
-//! compiled compute path training uses.
+//! backend compute path training uses.
 
 use anyhow::Result;
 
@@ -28,8 +28,8 @@ pub struct GradStats {
 }
 
 /// Full-data mean gradient in parameter space, computed in chunks of r via
-/// the Hutchinson-probe artifact (z = 0 ⇒ it returns just the mean grad).
-pub fn full_gradient(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Result<Vec<f32>> {
+/// the Hutchinson-probe computation (z = 0 ⇒ it returns just the mean grad).
+pub fn full_gradient(rt: &Runtime, params: &[f32], ds: &Dataset) -> Result<Vec<f32>> {
     let r = rt.man.r;
     let n = ds.n();
     let z = vec![0.0f32; rt.man.p_dim];
@@ -56,7 +56,7 @@ pub fn full_gradient(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Resul
 /// Gradient of one weighted mini-batch (gamma normalized to mean 1).
 pub fn batch_gradient(
     rt: &Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     idx: &[usize],
     gamma: &[f32],
@@ -70,7 +70,7 @@ pub fn batch_gradient(
 /// `sampler` returns (indices, gamma) for one mini-batch of size m.
 pub fn bias_variance<F>(
     rt: &Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     full_grad: &[f32],
     k: usize,

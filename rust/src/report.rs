@@ -1,5 +1,5 @@
 //! Run reports: everything a bench needs to print a paper table/figure row,
-//! serializable to JSON for EXPERIMENTS.md bookkeeping.
+//! serializable to JSON for experiment bookkeeping.
 
 use crate::util::json::Json;
 
@@ -165,19 +165,21 @@ mod tests {
 
     #[test]
     fn report_json_roundtrip() {
-        let mut r = RunReport::default();
-        r.method = "crest".into();
-        r.variant = "cifar10-proxy".into();
-        r.final_test_acc = 0.85;
-        r.rho_history = vec![(10, 0.01), (20, 0.2)];
-        r.history.push(EvalPoint {
-            step: 5,
-            backprops: 160,
-            test_acc: 0.5,
-            test_loss: 1.2,
-            train_acc: 0.55,
-            wall_secs: 0.1,
-        });
+        let r = RunReport {
+            method: "crest".into(),
+            variant: "cifar10-proxy".into(),
+            final_test_acc: 0.85,
+            rho_history: vec![(10, 0.01), (20, 0.2)],
+            history: vec![EvalPoint {
+                step: 5,
+                backprops: 160,
+                test_acc: 0.5,
+                test_loss: 1.2,
+                train_acc: 0.55,
+                wall_secs: 0.1,
+            }],
+            ..Default::default()
+        };
         let j = r.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("method").unwrap().as_str().unwrap(), "crest");
@@ -187,8 +189,7 @@ mod tests {
 
     #[test]
     fn normalized_runtime() {
-        let mut r = RunReport::default();
-        r.total_secs = 2.0;
+        let r = RunReport { total_secs: 2.0, ..Default::default() };
         assert_eq!(r.normalized_runtime(4.0), 0.5);
         assert_eq!(r.normalized_runtime(0.0), 0.0);
     }

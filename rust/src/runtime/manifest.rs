@@ -1,10 +1,16 @@
-//! Manifest parsing: the shape contract between `python/compile/aot.py`
-//! and the Rust runtime.
+//! Manifest: the shape contract of the five coordinator computations.
 //!
-//! Every artifact's input/output tensors are declared in
-//! `artifacts/<variant>/manifest.json`; the runtime validates host buffers
-//! against these specs before every execution so shape bugs surface as
-//! errors at the call site, not as garbage numerics.
+//! A [`VariantManifest`] comes from one of two places:
+//!
+//! * **builtin** — [`VariantManifest::builtin`] synthesizes the manifest for
+//!   a known variant directly from [`ModelSpec`] shape parameters. This is
+//!   all the native backend needs; no files are involved.
+//! * **JSON** — `artifacts/<variant>/manifest.json`, written by
+//!   `python/compile/aot.py` for the optional `pjrt` execution path.
+//!
+//! Either way the runtime validates host buffers against these specs before
+//! every execution so shape bugs surface as errors at the call site, not as
+//! garbage numerics.
 
 use std::path::Path;
 
@@ -91,7 +97,158 @@ pub struct VariantManifest {
     pub artifacts: Vec<(String, ArtifactSpec)>,
 }
 
+/// Shape parameters of one model/dataset variant — the Rust mirror of
+/// `python/compile/configs.py::VariantSpec`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub d_in: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    /// Mini-batch (coreset) size m.
+    pub m: usize,
+    /// Random-subset size r.
+    pub r: usize,
+    pub eval_chunk: usize,
+    pub momentum: f32,
+}
+
+impl ModelSpec {
+    /// Spec for a known variant. Numbers mirror `configs.py::VARIANTS`
+    /// (the four paper proxies) plus the tiny `smoke` variant used by
+    /// fast tests.
+    pub fn builtin(variant: &str) -> Option<ModelSpec> {
+        let (name, d_in, hidden, classes, m, r, eval_chunk) = match variant {
+            "cifar10-proxy" => ("cifar10-proxy", 64, vec![128, 64], 10, 32, 256, 512),
+            "cifar100-proxy" => ("cifar100-proxy", 96, vec![256, 128], 20, 32, 256, 512),
+            "tinyimagenet-proxy" => {
+                ("tinyimagenet-proxy", 128, vec![256, 128], 40, 32, 320, 512)
+            }
+            "snli-proxy" => ("snli-proxy", 96, vec![256], 3, 32, 128, 512),
+            "smoke" => ("smoke", 16, vec![32], 4, 16, 64, 128),
+            _ => return None,
+        };
+        Some(ModelSpec { name, d_in, hidden, classes, m, r, eval_chunk, momentum: 0.9 })
+    }
+}
+
+/// File name used for artifact entries of manifests built in-process (no
+/// HLO file exists; the native backend computes the op directly).
+pub const NATIVE_ARTIFACT_FILE: &str = "<native>";
+
 impl VariantManifest {
+    /// Synthesize the manifest for a spec: layer shapes, flat parameter
+    /// count, and the five artifact signatures (mirroring what
+    /// `python/compile/aot.py` writes to `manifest.json`).
+    pub fn from_spec(spec: &ModelSpec) -> Result<VariantManifest> {
+        let t = |name: &str, dtype: DType, shape: &[usize]| TensorSpec {
+            name: name.to_string(),
+            dtype,
+            shape: shape.to_vec(),
+        };
+        let art = |inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| ArtifactSpec {
+            file: NATIVE_ARTIFACT_FILE.to_string(),
+            inputs,
+            outputs,
+        };
+        let mut dims = vec![spec.d_in];
+        dims.extend_from_slice(&spec.hidden);
+        dims.push(spec.classes);
+        let layer_shapes: Vec<(usize, usize)> =
+            dims.windows(2).map(|w| (w[0], w[1])).collect();
+        let p: usize = layer_shapes.iter().map(|(i, o)| i * o + o).sum();
+        let h_last = *spec.hidden.last().context("spec needs a hidden layer")?;
+        let (d, c, m, r, e) = (spec.d_in, spec.classes, spec.m, spec.r, spec.eval_chunk);
+        let f = DType::F32;
+        let i = DType::I32;
+        let artifacts = vec![
+            (
+                "train_step".to_string(),
+                art(
+                    vec![
+                        t("params", f, &[p]),
+                        t("momentum", f, &[p]),
+                        t("x", f, &[m, d]),
+                        t("y", i, &[m]),
+                        t("gamma", f, &[m]),
+                        t("lr", f, &[]),
+                        t("wd", f, &[]),
+                    ],
+                    vec![
+                        t("params", f, &[p]),
+                        t("momentum", f, &[p]),
+                        t("mean_loss", f, &[]),
+                        t("per_ex_loss", f, &[m]),
+                    ],
+                ),
+            ),
+            (
+                "grad_embed".to_string(),
+                art(
+                    vec![t("params", f, &[p]), t("x", f, &[r, d]), t("y", i, &[r])],
+                    vec![
+                        t("g", f, &[r, c]),
+                        t("act", f, &[r, h_last]),
+                        t("per_ex_loss", f, &[r]),
+                    ],
+                ),
+            ),
+            (
+                "eval_chunk".to_string(),
+                art(
+                    vec![t("params", f, &[p]), t("x", f, &[e, d]), t("y", i, &[e])],
+                    vec![
+                        t("sum_loss", f, &[]),
+                        t("n_correct", f, &[]),
+                        t("per_ex_loss", f, &[e]),
+                        t("correct", f, &[e]),
+                    ],
+                ),
+            ),
+            (
+                "hess_probe".to_string(),
+                art(
+                    vec![
+                        t("params", f, &[p]),
+                        t("x", f, &[r, d]),
+                        t("y", i, &[r]),
+                        t("z", f, &[p]),
+                    ],
+                    vec![t("hz", f, &[p]), t("grad", f, &[p]), t("mean_loss", f, &[])],
+                ),
+            ),
+            (
+                "select_greedy".to_string(),
+                art(
+                    vec![t("g", f, &[r, c]), t("act", f, &[r, h_last])],
+                    vec![t("indices", i, &[m]), t("weights", f, &[m])],
+                ),
+            ),
+        ];
+        let man = VariantManifest {
+            name: spec.name.to_string(),
+            d_in: spec.d_in,
+            hidden: spec.hidden.clone(),
+            classes: spec.classes,
+            m: spec.m,
+            r: spec.r,
+            eval_chunk: spec.eval_chunk,
+            p_dim: p,
+            momentum: spec.momentum,
+            layer_shapes,
+            artifacts,
+        };
+        man.validate()?;
+        Ok(man)
+    }
+
+    /// Builtin manifest for a known variant name.
+    pub fn builtin(variant: &str) -> Result<VariantManifest> {
+        let spec = ModelSpec::builtin(variant)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {variant:?}"))?;
+        Self::from_spec(&spec)
+    }
+
     pub fn parse(text: &str) -> Result<VariantManifest> {
         let j = Json::parse(text).context("manifest json")?;
         let layer_shapes = j
@@ -228,6 +385,42 @@ mod tests {
     fn rejects_bad_dtype() {
         let bad = sample().replace("\"dtype\": \"i32\"", "\"dtype\": \"u8\"");
         assert!(VariantManifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn builtin_specs_validate_for_all_variants() {
+        for v in
+            ["cifar10-proxy", "cifar100-proxy", "tinyimagenet-proxy", "snli-proxy", "smoke"]
+        {
+            let man = VariantManifest::builtin(v).unwrap();
+            assert_eq!(man.name, v);
+            let p: usize = man.layer_shapes.iter().map(|(i, o)| i * o + o).sum();
+            assert_eq!(man.p_dim, p);
+            for required in
+                ["train_step", "grad_embed", "eval_chunk", "hess_probe", "select_greedy"]
+            {
+                let art = man.artifact(required).unwrap();
+                assert_eq!(art.file, NATIVE_ARTIFACT_FILE);
+            }
+        }
+        assert!(VariantManifest::builtin("bogus").is_err());
+    }
+
+    #[test]
+    fn builtin_cifar10_matches_python_configs() {
+        // mirror of python/compile/configs.py::VARIANTS["cifar10-proxy"]
+        let man = VariantManifest::builtin("cifar10-proxy").unwrap();
+        assert_eq!(man.d_in, 64);
+        assert_eq!(man.hidden, vec![128, 64]);
+        assert_eq!(man.classes, 10);
+        assert_eq!(man.m, 32);
+        assert_eq!(man.r, 256);
+        assert_eq!(man.eval_chunk, 512);
+        assert_eq!(man.layer_shapes, vec![(64, 128), (128, 64), (64, 10)]);
+        let ts = man.artifact("train_step").unwrap();
+        assert_eq!(ts.inputs.len(), 7);
+        assert_eq!(ts.inputs[2].shape, vec![32, 64]);
+        assert_eq!(ts.outputs.len(), 4);
     }
 
     #[test]

@@ -1,30 +1,43 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: the [`Backend`] abstraction plus a shape-checked
+//! facade ([`Runtime`]) over it.
 //!
-//! This is the only module that talks to XLA. It compiles each
-//! `artifacts/<variant>/*.hlo.txt` once at startup
-//! (`HloModuleProto::from_text_file` → `client.compile`) and exposes typed,
-//! shape-checked wrappers for the five computations the coordinator uses.
-//! Python is never involved at runtime.
+//! The coordinator needs exactly five compiled computations — `train_step`,
+//! `grad_embed`, `eval_chunk`, `hess_probe`, `select_greedy` — declared by
+//! the [`manifest::VariantManifest`] shape contract. [`Backend`] abstracts
+//! who executes them:
+//!
+//! * [`native::NativeBackend`] (default) computes them in pure Rust on the
+//!   host, straight from the manifest's MLP architecture. No external
+//!   libraries, no artifact files, no Python.
+//! * `pjrt::PjrtBackend` (behind the off-by-default `pjrt` cargo feature)
+//!   loads the AOT HLO artifacts produced by `python/compile/aot.py` and
+//!   executes them through XLA/PJRT. Enabling the feature requires an `xla`
+//!   crate dependency; see README.md.
+//!
+//! All parameter/momentum state crosses this boundary as host `Vec<f32>` /
+//! `&[f32]`, so the training loop, metrics and coordinator are backend
+//! agnostic. [`Runtime`] validates every buffer against the manifest before
+//! dispatch and charges per-op wall-clock to [`PhaseTimers`] (backs Table 2).
 
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
-use crate::tensor::{lit_f32, lit_f32_2d, lit_i32, lit_scalar, lit_to_f32, lit_to_i32, lit_to_scalar, MatF32};
+use crate::tensor::MatF32;
 use crate::util::timer::PhaseTimers;
 use manifest::{DType, VariantManifest};
 
-/// Output of one training step.
+/// Output of one training step (updated state stays on the host).
 pub struct StepOut {
-    /// Updated parameters (kept as a literal: feeds the next step without a
-    /// host round-trip).
-    pub params: xla::Literal,
-    pub momentum: xla::Literal,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
     pub mean_loss: f32,
     pub per_ex_loss: Vec<f32>,
 }
@@ -39,95 +52,151 @@ pub struct ProbeOut {
     pub mean_loss: f32,
 }
 
-/// Compiled executables + manifest for one variant.
+/// An execution engine for the five manifest computations.
+///
+/// Implementations may assume shapes were already validated against the
+/// manifest by [`Runtime`]; they re-check only what they need for memory
+/// safety. Semantics (shared with `python/compile/model.py`):
+///
+/// * `train_step`: loss `(1/m)·Σ γ_i·ce_i`, gradient `g + wd·w`, momentum
+///   `v ← μ·v + g`, update `w ← w − lr·v`; returns unweighted per-example
+///   losses.
+/// * `grad_embed`: logit gradients `p − y`, penultimate activations,
+///   per-example losses.
+/// * `eval_chunk`: `(Σ loss, Σ correct, per-example loss, per-example 0/1)`.
+/// * `hess_probe`: exact `H·z` of the subset's mean loss, its mean gradient,
+///   and the mean loss.
+/// * `select_greedy`: m-medoid facility-location selection over the
+///   last-layer weight-gradient metric, with cluster-size weights.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        x: &MatF32,
+        y: &[i32],
+        gamma: &[f32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<StepOut>;
+
+    fn grad_embed(
+        &self,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(MatF32, MatF32, Vec<f32>)>;
+
+    fn eval_chunk(
+        &self,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)>;
+
+    fn hess_probe(&self, params: &[f32], x: &MatF32, y: &[i32], z: &[f32])
+        -> Result<ProbeOut>;
+
+    fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)>;
+}
+
+/// Manifest + backend + per-op timing for one variant.
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub man: VariantManifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    backend: Box<dyn Backend>,
     /// Per-artifact wall-clock accounting (backs Table 2).
     pub timers: RefCell<PhaseTimers>,
     dir: PathBuf,
 }
 
 impl Runtime {
-    /// Compile all artifacts of `variant` found under `artifact_root`.
+    /// Native runtime from an explicit manifest.
+    pub fn native(man: VariantManifest) -> Runtime {
+        let backend = Box::new(native::NativeBackend::new(man.clone()));
+        Runtime { man, backend, timers: RefCell::new(PhaseTimers::new()), dir: PathBuf::new() }
+    }
+
+    /// Native runtime for a builtin variant name (no files required).
+    pub fn native_variant(variant: &str) -> Result<Runtime> {
+        Ok(Self::native(VariantManifest::builtin(variant)?))
+    }
+
+    /// Load a variant: read `artifact_root/<variant>/manifest.json` when it
+    /// exists (so tuned shape overrides are honored), otherwise fall back to
+    /// the builtin spec. Executes on the native backend either way; the
+    /// PJRT path is explicit via [`Runtime::load_pjrt`].
     pub fn load(artifact_root: &Path, variant: &str) -> Result<Runtime> {
         let dir = artifact_root.join(variant);
-        let man = VariantManifest::load(&dir)
-            .with_context(|| format!("loading manifest for {variant}"))?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let mut exes = HashMap::new();
-        for (name, art) in &man.artifacts {
-            let path = dir.join(&art.file);
-            let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .with_context(|| format!("parse HLO text {path:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
-            log::debug!("compiled {variant}/{name} in {:.3}s", t0.elapsed().as_secs_f64());
-            exes.insert(name.clone(), exe);
-        }
-        Ok(Runtime { client, man, exes, timers: RefCell::new(PhaseTimers::new()), dir })
+        let man = if dir.join("manifest.json").exists() {
+            VariantManifest::load(&dir)
+                .with_context(|| format!("loading manifest for {variant}"))?
+        } else {
+            VariantManifest::builtin(variant)
+                .context("no manifest on disk and no builtin spec")?
+        };
+        let mut rt = Self::native(man);
+        rt.dir = dir;
+        Ok(rt)
+    }
+
+    /// Compile and execute the variant's AOT artifacts through XLA/PJRT.
+    #[cfg(feature = "pjrt")]
+    pub fn load_pjrt(artifact_root: &Path, variant: &str) -> Result<Runtime> {
+        let dir = artifact_root.join(variant);
+        let backend = pjrt::PjrtBackend::load(&dir, variant)?;
+        let man = backend.manifest().clone();
+        Ok(Runtime {
+            man,
+            backend: Box::new(backend),
+            timers: RefCell::new(PhaseTimers::new()),
+            dir,
+        })
+    }
+
+    /// Name of the active execution backend.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
 
-    /// Raw execution: run artifact `name`, unpack the result tuple, verify
-    /// output arity against the manifest.
-    fn exec(&self, name: &'static str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("no executable {name:?}"))?;
-        let spec = self.man.artifact(name)?;
-        if args.len() != spec.inputs.len() {
-            bail!("{name}: got {} args, manifest says {}", args.len(), spec.inputs.len());
-        }
-        let t0 = Instant::now();
-        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
-        // Lowered with return_tuple=True: single tuple output.
-        let parts = result.to_tuple()?;
-        self.timers.borrow_mut().add(name, t0.elapsed());
-        if parts.len() != spec.outputs.len() {
-            bail!("{name}: got {} outputs, manifest says {}", parts.len(), spec.outputs.len());
-        }
-        Ok(parts)
-    }
-
     fn check_len(&self, name: &str, what: &str, got: usize, want: usize) -> Result<()> {
         if got != want {
-            bail!("{name}: {what} has {got} elements, manifest wants {want}");
+            anyhow::bail!("{name}: {what} has {got} elements, manifest wants {want}");
         }
         Ok(())
     }
 
     // -------------------------------------------------------------- wrappers
 
-    /// Fresh all-zero momentum literal.
-    pub fn zero_momentum(&self) -> xla::Literal {
-        lit_f32(&vec![0.0f32; self.man.p_dim])
+    /// Fresh all-zero momentum buffer.
+    pub fn zero_momentum(&self) -> Vec<f32> {
+        vec![0.0f32; self.man.p_dim]
     }
 
-    /// Host params -> literal.
-    pub fn params_from_host(&self, p: &[f32]) -> Result<xla::Literal> {
+    /// Validate a host parameter vector against the manifest.
+    pub fn params_from_host(&self, p: &[f32]) -> Result<Vec<f32>> {
         self.check_len("params_from_host", "params", p.len(), self.man.p_dim)?;
-        Ok(lit_f32(p))
+        Ok(p.to_vec())
     }
 
-    /// Literal params -> host vector.
-    pub fn params_to_host(&self, p: &xla::Literal) -> Result<Vec<f32>> {
-        lit_to_f32(p)
+    /// Parameter state back to a host vector (trivial for host backends).
+    pub fn params_to_host(&self, p: &[f32]) -> Result<Vec<f32>> {
+        self.check_len("params_to_host", "params", p.len(), self.man.p_dim)?;
+        Ok(p.to_vec())
     }
 
     /// One weighted SGD+momentum step (paper Eq. 2 with per-element gamma).
+    #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &self,
-        params: &xla::Literal,
-        momentum: &xla::Literal,
+        params: &[f32],
+        momentum: &[f32],
         x: &MatF32,
         y: &[i32],
         gamma: &[f32],
@@ -139,33 +208,26 @@ impl Runtime {
         self.check_len("train_step", "x cols", x.cols, self.man.d_in)?;
         self.check_len("train_step", "y", y.len(), m)?;
         self.check_len("train_step", "gamma", gamma.len(), m)?;
-        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
-        let yl = lit_i32(y);
-        let gl = lit_f32(gamma);
-        let lrl = lit_scalar(lr);
-        let wdl = lit_scalar(wd);
-        let mut out = self.exec("train_step", &[params, momentum, &xl, &yl, &gl, &lrl, &wdl])?;
-        let per_ex_loss = lit_to_f32(&out[3])?;
-        let mean_loss = lit_to_scalar(&out[2])?;
-        let momentum = out.swap_remove(1);
-        let params = out.swap_remove(0);
-        Ok(StepOut { params, momentum, mean_loss, per_ex_loss })
+        let t0 = Instant::now();
+        let out = self.backend.train_step(params, momentum, x, y, gamma, lr, wd)?;
+        self.timers.borrow_mut().add("train_step", t0.elapsed());
+        Ok(out)
     }
 
     /// Extract the *gradient* a weighted batch induces, without stepping:
     /// train_step with zero momentum and lr=0 leaves params unchanged while
-    /// `mom_out = 0.9·0 + grad = grad`. Used by the bias/variance probes
+    /// `mom_out = μ·0 + grad = grad`. Used by the bias/variance probes
     /// behind Figs. 1/6/9.
     pub fn batch_gradient(
         &self,
-        params: &xla::Literal,
+        params: &[f32],
         x: &MatF32,
         y: &[i32],
         gamma: &[f32],
     ) -> Result<Vec<f32>> {
         let zero = self.zero_momentum();
         let out = self.train_step(params, &zero, x, y, gamma, 0.0, 0.0)?;
-        lit_to_f32(&out.momentum)
+        Ok(out.momentum)
     }
 
     /// Selection embeddings for a size-r subset (paper Eq. 11 inputs):
@@ -174,48 +236,39 @@ impl Runtime {
     /// selection metric.
     pub fn grad_embed(
         &self,
-        params: &xla::Literal,
+        params: &[f32],
         x: &MatF32,
         y: &[i32],
     ) -> Result<(MatF32, MatF32, Vec<f32>)> {
         let r = self.man.r;
         self.check_len("grad_embed", "x rows", x.rows, r)?;
         self.check_len("grad_embed", "y", y.len(), r)?;
-        let h = *self.man.hidden.last().expect("at least one hidden layer");
-        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
-        let yl = lit_i32(y);
-        let out = self.exec("grad_embed", &[params, &xl, &yl])?;
-        let g = MatF32::from_vec(r, self.man.classes, lit_to_f32(&out[0])?)?;
-        let a = MatF32::from_vec(r, h, lit_to_f32(&out[1])?)?;
-        let loss = lit_to_f32(&out[2])?;
-        Ok((g, a, loss))
+        let t0 = Instant::now();
+        let out = self.backend.grad_embed(params, x, y)?;
+        self.timers.borrow_mut().add("grad_embed", t0.elapsed());
+        Ok(out)
     }
 
     /// Per-chunk evaluation: (sum_loss, n_correct, per_ex_loss, correct).
     pub fn eval_chunk(
         &self,
-        params: &xla::Literal,
+        params: &[f32],
         x: &MatF32,
         y: &[i32],
     ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
         let e = self.man.eval_chunk;
         self.check_len("eval_chunk", "x rows", x.rows, e)?;
         self.check_len("eval_chunk", "y", y.len(), e)?;
-        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
-        let yl = lit_i32(y);
-        let out = self.exec("eval_chunk", &[params, &xl, &yl])?;
-        Ok((
-            lit_to_scalar(&out[0])?,
-            lit_to_scalar(&out[1])?,
-            lit_to_f32(&out[2])?,
-            lit_to_f32(&out[3])?,
-        ))
+        let t0 = Instant::now();
+        let out = self.backend.eval_chunk(params, x, y)?;
+        self.timers.borrow_mut().add("eval_chunk", t0.elapsed());
+        Ok(out)
     }
 
     /// Hutchinson probe on a size-r subset (paper Eq. 7).
     pub fn hess_probe(
         &self,
-        params: &xla::Literal,
+        params: &[f32],
         x: &MatF32,
         y: &[i32],
         z: &[f32],
@@ -223,37 +276,36 @@ impl Runtime {
         let r = self.man.r;
         self.check_len("hess_probe", "x rows", x.rows, r)?;
         self.check_len("hess_probe", "z", z.len(), self.man.p_dim)?;
-        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
-        let yl = lit_i32(y);
-        let zl = lit_f32(z);
-        let out = self.exec("hess_probe", &[params, &xl, &yl, &zl])?;
-        Ok(ProbeOut {
-            hz: lit_to_f32(&out[0])?,
-            grad: lit_to_f32(&out[1])?,
-            mean_loss: lit_to_scalar(&out[2])?,
-        })
+        let t0 = Instant::now();
+        let out = self.backend.hess_probe(params, x, y, z)?;
+        self.timers.borrow_mut().add("hess_probe", t0.elapsed());
+        Ok(out)
     }
 
-    /// Compiled in-graph greedy selection over r gradient embeddings
-    /// (the XLA alternative to `coreset::facility`; compared in benches).
+    /// In-backend greedy selection over r gradient embeddings (the
+    /// backend-side alternative to calling `coreset::facility` directly;
+    /// compared in benches).
     pub fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)> {
         let r = self.man.r;
         self.check_len("select_greedy", "g rows", g.rows, r)?;
         self.check_len("select_greedy", "g cols", g.cols, self.man.classes)?;
         self.check_len("select_greedy", "a rows", a.rows, r)?;
-        let gl = lit_f32_2d(&g.data, g.rows, g.cols)?;
-        let al = lit_f32_2d(&a.data, a.rows, a.cols)?;
-        let out = self.exec("select_greedy", &[&gl, &al])?;
-        let idxs = lit_to_i32(&out[0])?.into_iter().map(|i| i as usize).collect();
-        let weights = lit_to_f32(&out[1])?;
-        Ok((idxs, weights))
+        let t0 = Instant::now();
+        let out = self.backend.select_greedy(g, a)?;
+        self.timers.borrow_mut().add("select_greedy", t0.elapsed());
+        Ok(out)
     }
 
-    /// Human-readable artifact summary (used by `crest inspect`).
+    /// Human-readable interface summary (used by `crest inspect`).
     pub fn describe(&self) -> String {
         let mut s = format!(
-            "variant {} (p_dim={}, m={}, r={}, classes={})\n",
-            self.man.name, self.man.p_dim, self.man.m, self.man.r, self.man.classes
+            "variant {} [{} backend] (p_dim={}, m={}, r={}, classes={})\n",
+            self.man.name,
+            self.backend.name(),
+            self.man.p_dim,
+            self.man.m,
+            self.man.r,
+            self.man.classes
         );
         for (name, a) in &self.man.artifacts {
             let ins: Vec<String> = a
@@ -276,8 +328,6 @@ pub fn dtype_bytes(d: DType) -> usize {
 
 #[cfg(test)]
 mod tests {
-    //! Unit tests cover pure logic; executions against real artifacts live
-    //! in `rust/tests/` (they need `make artifacts`).
     use super::*;
 
     #[test]
@@ -287,7 +337,31 @@ mod tests {
     }
 
     #[test]
-    fn load_missing_dir_fails() {
+    fn load_unknown_variant_fails() {
         assert!(Runtime::load(Path::new("/nonexistent"), "nope").is_err());
+    }
+
+    #[test]
+    fn load_falls_back_to_builtin_spec() {
+        // no artifacts directory anywhere, yet known variants load natively
+        let rt = Runtime::load(Path::new("/nonexistent"), "smoke").unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.man.name, "smoke");
+        let desc = rt.describe();
+        for name in ["train_step", "grad_embed", "eval_chunk", "hess_probe", "select_greedy"]
+        {
+            assert!(desc.contains(name), "missing {name} in {desc}");
+        }
+    }
+
+    #[test]
+    fn wrappers_enforce_manifest_shapes() {
+        let rt = Runtime::native_variant("smoke").unwrap();
+        let params = rt.zero_momentum();
+        let x = MatF32::zeros(3, rt.man.d_in); // wrong row count
+        let y = vec![0i32; 3];
+        assert!(rt.eval_chunk(&params, &x, &y).is_err());
+        assert!(rt.grad_embed(&params, &x, &y).is_err());
+        assert!(rt.params_from_host(&[0.0; 3]).is_err());
     }
 }

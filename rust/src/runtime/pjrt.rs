@@ -1,0 +1,212 @@
+//! PJRT backend: load AOT artifacts (HLO text) and execute them via XLA.
+//!
+//! Compiled only with `--features pjrt`, which additionally requires an
+//! `xla` crate (e.g. a vendored checkout of `xla-rs`) to be added to
+//! `[dependencies]` — the crate is deliberately not a default dependency so
+//! a clean checkout builds offline with zero native libraries. See
+//! README.md for the setup.
+//!
+//! This is the only module that talks to XLA. It compiles each
+//! `artifacts/<variant>/*.hlo.txt` once at startup
+//! (`HloModuleProto::from_text_file` → `client.compile`) and adapts the
+//! host-vector [`Backend`] interface to literal-valued executions. Python
+//! is never involved at runtime.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::VariantManifest;
+use crate::runtime::{Backend, ProbeOut, StepOut};
+use crate::tensor::MatF32;
+
+// ------------------------------------------------------------ literal bridge
+
+/// f32 slice -> rank-1 literal.
+fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 slice -> rank-2 literal with the given shape.
+fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "len {} != {rows}x{cols}", v.len());
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// i32 slice -> rank-1 literal.
+fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// f32 scalar literal.
+fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal -> Vec<f32> (any rank; row-major order).
+fn lit_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Literal -> Vec<i32>.
+fn lit_to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Scalar literal -> f32.
+fn lit_to_scalar(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+/// Compiled executables + manifest for one variant.
+pub struct PjrtBackend {
+    /// Never read after compilation, but must outlive the executables.
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    man: VariantManifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtBackend {
+    /// Compile all artifacts found under `dir` (one variant's directory).
+    pub fn load(dir: &Path, variant: &str) -> Result<PjrtBackend> {
+        let man = VariantManifest::load(dir)
+            .with_context(|| format!("loading manifest for {variant}"))?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut exes = HashMap::new();
+        for (name, art) in &man.artifacts {
+            let path = dir.join(&art.file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+            log::debug!("compiled {variant}/{name} in {:.3}s", t0.elapsed().as_secs_f64());
+            exes.insert(name.clone(), exe);
+        }
+        Ok(PjrtBackend { client, man, exes })
+    }
+
+    pub fn manifest(&self) -> &VariantManifest {
+        &self.man
+    }
+
+    /// Raw execution: run artifact `name`, unpack the result tuple, verify
+    /// output arity against the manifest.
+    fn exec(&self, name: &'static str, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no executable {name:?}"))?;
+        let spec = self.man.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            bail!("{name}: got {} args, manifest says {}", args.len(), spec.inputs.len());
+        }
+        let result = exe.execute::<&xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // Lowered with return_tuple=True: single tuple output.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: got {} outputs, manifest says {}", parts.len(), spec.outputs.len());
+        }
+        Ok(parts)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_step(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        x: &MatF32,
+        y: &[i32],
+        gamma: &[f32],
+        lr: f32,
+        wd: f32,
+    ) -> Result<StepOut> {
+        let pl = lit_f32(params);
+        let ml = lit_f32(momentum);
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let gl = lit_f32(gamma);
+        let lrl = lit_scalar(lr);
+        let wdl = lit_scalar(wd);
+        let out = self.exec("train_step", &[&pl, &ml, &xl, &yl, &gl, &lrl, &wdl])?;
+        Ok(StepOut {
+            params: lit_to_f32(&out[0])?,
+            momentum: lit_to_f32(&out[1])?,
+            mean_loss: lit_to_scalar(&out[2])?,
+            per_ex_loss: lit_to_f32(&out[3])?,
+        })
+    }
+
+    fn grad_embed(
+        &self,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(MatF32, MatF32, Vec<f32>)> {
+        let r = x.rows;
+        let h = *self.man.hidden.last().expect("at least one hidden layer");
+        let pl = lit_f32(params);
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let out = self.exec("grad_embed", &[&pl, &xl, &yl])?;
+        let g = MatF32::from_vec(r, self.man.classes, lit_to_f32(&out[0])?)?;
+        let a = MatF32::from_vec(r, h, lit_to_f32(&out[1])?)?;
+        let loss = lit_to_f32(&out[2])?;
+        Ok((g, a, loss))
+    }
+
+    fn eval_chunk(
+        &self,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
+        let pl = lit_f32(params);
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let out = self.exec("eval_chunk", &[&pl, &xl, &yl])?;
+        Ok((
+            lit_to_scalar(&out[0])?,
+            lit_to_scalar(&out[1])?,
+            lit_to_f32(&out[2])?,
+            lit_to_f32(&out[3])?,
+        ))
+    }
+
+    fn hess_probe(
+        &self,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+        z: &[f32],
+    ) -> Result<ProbeOut> {
+        let pl = lit_f32(params);
+        let xl = lit_f32_2d(&x.data, x.rows, x.cols)?;
+        let yl = lit_i32(y);
+        let zl = lit_f32(z);
+        let out = self.exec("hess_probe", &[&pl, &xl, &yl, &zl])?;
+        Ok(ProbeOut {
+            hz: lit_to_f32(&out[0])?,
+            grad: lit_to_f32(&out[1])?,
+            mean_loss: lit_to_scalar(&out[2])?,
+        })
+    }
+
+    fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)> {
+        let gl = lit_f32_2d(&g.data, g.rows, g.cols)?;
+        let al = lit_f32_2d(&a.data, a.rows, a.cols)?;
+        let out = self.exec("select_greedy", &[&gl, &al])?;
+        let idxs = lit_to_i32(&out[0])?.into_iter().map(|i| i as usize).collect();
+        let weights = lit_to_f32(&out[1])?;
+        Ok((idxs, weights))
+    }
+}

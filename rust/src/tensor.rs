@@ -1,8 +1,10 @@
-//! Row-major f32 matrices + conversions to/from `xla::Literal`.
+//! Row-major f32 matrices — the host-side tensor substrate.
 //!
-//! The coordinator's host-side tensor needs are modest (gather rows for a
-//! batch, hold gradient embeddings, convert to XLA literals); this module
-//! provides exactly that with zero-copy accessors where possible.
+//! The coordinator's tensor needs are modest (gather rows for a batch, hold
+//! gradient embeddings, hand dense buffers to the active `runtime::Backend`);
+//! this module provides exactly that with zero-copy accessors where
+//! possible. Conversions to `xla::Literal` live in `runtime::pjrt` behind
+//! the `pjrt` feature.
 
 use anyhow::{ensure, Result};
 
@@ -80,44 +82,6 @@ impl MatF32 {
     }
 }
 
-// ------------------------------------------------------------ literal bridge
-
-/// f32 slice -> rank-1 literal.
-pub fn lit_f32(v: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-/// f32 slice -> rank-2 literal with the given shape.
-pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    ensure!(v.len() == rows * cols, "len {} != {rows}x{cols}", v.len());
-    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
-}
-
-/// i32 slice -> rank-1 literal.
-pub fn lit_i32(v: &[i32]) -> xla::Literal {
-    xla::Literal::vec1(v)
-}
-
-/// f32 scalar literal.
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-/// Literal -> Vec<f32> (any rank; row-major order).
-pub fn lit_to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-    Ok(l.to_vec::<f32>()?)
-}
-
-/// Literal -> Vec<i32>.
-pub fn lit_to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
-    Ok(l.to_vec::<i32>()?)
-}
-
-/// Scalar literal -> f32.
-pub fn lit_to_scalar(l: &xla::Literal) -> Result<f32> {
-    Ok(l.get_first_element::<f32>()?)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,21 +115,4 @@ mod tests {
         assert_eq!(m.sqdist(1, 1), 0.0);
     }
 
-    #[test]
-    fn literal_roundtrip_f32() {
-        let v = vec![1.0f32, -2.5, 3.25];
-        let l = lit_f32(&v);
-        assert_eq!(lit_to_f32(&l).unwrap(), v);
-    }
-
-    #[test]
-    fn literal_roundtrip_2d_and_i32() {
-        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let l = lit_f32_2d(&v, 2, 3).unwrap();
-        assert_eq!(lit_to_f32(&l).unwrap(), v);
-        assert!(lit_f32_2d(&v, 2, 2).is_err());
-        let yi = vec![1i32, 0, 7];
-        assert_eq!(lit_to_i32(&lit_i32(&yi)).unwrap(), yi);
-        assert_eq!(lit_to_scalar(&lit_scalar(4.5)).unwrap(), 4.5);
-    }
 }

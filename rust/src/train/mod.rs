@@ -1,15 +1,19 @@
 //! Training-loop primitives shared by all methods: parameter state,
 //! chunked evaluation, single-batch stepping.
+//!
+//! Parameter and momentum state live as host vectors and flow through the
+//! active `runtime::Backend`, so the loop is identical under the native and
+//! PJRT execution paths.
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::runtime::Runtime;
 
-/// Mutable training state (params + momentum as device literals).
+/// Mutable training state (flat params + momentum vectors).
 pub struct TrainState {
-    pub params: xla::Literal,
-    pub momentum: xla::Literal,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
     pub step: usize,
 }
 
@@ -58,7 +62,7 @@ pub struct EvalOut {
 
 /// Chunked evaluation with tail padding (pad indices wrap; padded outputs
 /// are discarded so statistics are exact).
-pub fn evaluate(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Result<EvalOut> {
+pub fn evaluate(rt: &Runtime, params: &[f32], ds: &Dataset) -> Result<EvalOut> {
     let e = rt.man.eval_chunk;
     let n = ds.n();
     let mut per_ex_loss = Vec::with_capacity(n);
@@ -92,7 +96,7 @@ pub fn evaluate(rt: &Runtime, params: &xla::Literal, ds: &Dataset) -> Result<Eva
 /// dropped-example analysis of Fig. 7a). Evaluates ⌈len/e⌉ chunks.
 pub fn eval_on_indices(
     rt: &Runtime,
-    params: &xla::Literal,
+    params: &[f32],
     ds: &Dataset,
     idx: &[usize],
 ) -> Result<EvalOut> {
@@ -102,6 +106,32 @@ pub fn eval_on_indices(
 
 #[cfg(test)]
 mod tests {
-    // Execution-dependent behaviour is covered by rust/tests/ integration
-    // tests (requires artifacts). Nothing pure to test here.
+    use super::*;
+    use crate::data::{generate, SynthSpec};
+    use crate::model::init_params;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn evaluate_and_step_on_native_backend() {
+        let rt = Runtime::native_variant("smoke").unwrap();
+        let splits = generate(&SynthSpec::preset("smoke", 3).unwrap());
+        let mut rng = Rng::new(3);
+        let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
+        let ev0 = evaluate(&rt, &state.params, &splits.val).unwrap();
+        assert_eq!(ev0.per_ex_loss.len(), splits.val.n());
+        // a few steps on one batch should not corrupt state shapes
+        let idx: Vec<usize> = (0..rt.man.m).collect();
+        let gamma = vec![1.0; rt.man.m];
+        for _ in 0..3 {
+            let (loss, per_ex) =
+                state.step_batch(&rt, &splits.train, &idx, &gamma, 0.05, 0.0).unwrap();
+            assert!(loss.is_finite());
+            assert_eq!(per_ex.len(), rt.man.m);
+        }
+        assert_eq!(state.step, 3);
+        assert_eq!(state.params_host(&rt).unwrap().len(), rt.man.p_dim);
+        // subset eval path
+        let sub = eval_on_indices(&rt, &state.params, &splits.train, &[0, 5, 9]).unwrap();
+        assert_eq!(sub.per_ex_loss.len(), 3);
+    }
 }

@@ -4,14 +4,17 @@
 //! Timestamps are relative to process start — enough to read selection /
 //! training interleavings without pulling in a clock-formatting dependency.
 
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::Lazy;
 
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 static INIT: Once = Once::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger;
 
@@ -24,7 +27,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed();
+        let t = start().elapsed();
         let lvl = match record.level() {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
@@ -62,7 +65,7 @@ pub fn parse_level(s: &str) -> Option<LevelFilter> {
 /// Install the logger (idempotent). Level from `CREST_LOG`, default Info.
 pub fn init() {
     INIT.call_once(|| {
-        Lazy::force(&START);
+        let _ = start(); // anchor relative timestamps at first init
         let level = std::env::var("CREST_LOG")
             .ok()
             .and_then(|s| parse_level(&s))

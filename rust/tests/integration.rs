@@ -1,10 +1,11 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! Integration tests over the native CPU backend.
 //!
-//! These exercise the full interchange path — JAX-lowered HLO text →
-//! PJRT compile → typed execution — and check numerics against host-side
-//! recomputation. Skipped (with a notice) when artifacts are absent.
-
-use std::path::Path;
+//! These exercise the full execution path — builtin manifest → native
+//! backend → typed runtime wrappers → coordinator — and check numerics
+//! against host-side recomputation. No artifacts, Python, or XLA are
+//! required; the suite runs end-to-end on every `cargo test`. (The same
+//! wrappers drive the optional `pjrt` backend, so these tests double as the
+//! contract for that path.)
 
 use crest::config::{ExperimentConfig, MethodKind};
 use crest::coordinator::run_experiment;
@@ -17,22 +18,25 @@ use crest::util::rng::Rng;
 use crest::util::stats;
 
 const VARIANT: &str = "cifar10-proxy";
+/// Tiny variant for whole-experiment cells (fast even in debug builds).
+const SMOKE: &str = "smoke";
 
-fn load() -> Option<(Runtime, crest::data::Splits)> {
-    let rt = match Runtime::load(Path::new("artifacts"), VARIANT) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("[skip] artifacts not built: {e:#}");
-            return None;
-        }
-    };
+fn load() -> (Runtime, crest::data::Splits) {
+    let rt = Runtime::native_variant(VARIANT).expect("builtin variant");
     let splits = generate(&SynthSpec::preset(VARIANT, 7).unwrap());
-    Some((rt, splits))
+    (rt, splits)
+}
+
+fn load_smoke() -> (Runtime, crest::data::Splits) {
+    let rt = Runtime::native_variant(SMOKE).expect("builtin smoke variant");
+    let splits = generate(&SynthSpec::preset(SMOKE, 7).unwrap());
+    (rt, splits)
 }
 
 #[test]
-fn artifacts_compile_and_describe() {
-    let Some((rt, _)) = load() else { return };
+fn runtime_loads_and_describes_natively() {
+    let (rt, _) = load();
+    assert_eq!(rt.backend_name(), "native");
     let desc = rt.describe();
     for name in ["train_step", "grad_embed", "eval_chunk", "hess_probe", "select_greedy"] {
         assert!(desc.contains(name), "missing {name} in {desc}");
@@ -41,7 +45,7 @@ fn artifacts_compile_and_describe() {
 
 #[test]
 fn train_step_decreases_loss_on_fixed_batch() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(1);
     let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -60,7 +64,7 @@ fn train_step_decreases_loss_on_fixed_batch() {
 
 #[test]
 fn zero_gamma_freezes_parameters() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(2);
     let init = init_params(&rt.man, &mut rng);
@@ -75,7 +79,7 @@ fn zero_gamma_freezes_parameters() {
 #[test]
 fn batch_gradient_matches_finite_difference_of_step() {
     // mom=0, lr=eps step must move params by exactly -eps * grad
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(3);
     let init = init_params(&rt.man, &mut rng);
@@ -99,7 +103,7 @@ fn batch_gradient_matches_finite_difference_of_step() {
 
 #[test]
 fn grad_embed_losses_match_eval_losses() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(4);
     let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -122,7 +126,7 @@ fn grad_embed_losses_match_eval_losses() {
 #[test]
 fn grad_embed_rows_sum_to_zero() {
     // softmax gradient rows (p - y) each sum to ~0
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(5);
     let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -137,7 +141,7 @@ fn grad_embed_rows_sum_to_zero() {
 
 #[test]
 fn hess_probe_zero_z_matches_batch_gradient_direction() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(6);
     let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -167,7 +171,7 @@ fn hess_probe_zero_z_matches_batch_gradient_direction() {
 #[test]
 fn hutchinson_probe_diag_estimate_is_unbiased_in_sign_flip() {
     // z and -z give identical z .* Hz (the estimator is even)
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(7);
     let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -186,8 +190,8 @@ fn hutchinson_probe_diag_estimate_is_unbiased_in_sign_flip() {
 }
 
 #[test]
-fn compiled_greedy_matches_host_greedy_cost() {
-    let Some((rt, splits)) = load() else { return };
+fn backend_greedy_matches_host_greedy_cost() {
+    let (rt, splits) = load();
     let ds = &splits.train;
     let mut rng = Rng::new(8);
     let state = TrainState::new(&rt, &init_params(&rt.man, &mut rng)).unwrap();
@@ -207,17 +211,17 @@ fn compiled_greedy_matches_host_greedy_cost() {
             .map(|i| sel.iter().map(|&j| metric.sqdist(j, i)).fold(f32::INFINITY, f32::min) as f64)
             .sum()
     };
-    let compiled_cost = cost(&cidx);
+    let backend_cost = cost(&cidx);
     let host_cost = cost(&host.idx);
     assert!(
-        compiled_cost <= host_cost * 1.05 + 1e-6 && host_cost <= compiled_cost * 1.05 + 1e-6,
-        "compiled {compiled_cost} vs host {host_cost}"
+        backend_cost <= host_cost * 1.05 + 1e-6 && host_cost <= backend_cost * 1.05 + 1e-6,
+        "backend {backend_cost} vs host {host_cost}"
     );
 }
 
 #[test]
 fn evaluate_handles_non_chunk_multiple_sizes() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load();
     // test set 1024 = 2 chunks exactly; use an odd-sized subset to cover padding
     let idx: Vec<usize> = (0..700).collect();
     let sub = splits.test.subset(&idx);
@@ -233,7 +237,7 @@ fn evaluate_handles_non_chunk_multiple_sizes() {
 
 #[test]
 fn every_method_completes_a_tiny_run() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load_smoke();
     for method in [
         MethodKind::Full,
         MethodKind::Random,
@@ -244,8 +248,8 @@ fn every_method_completes_a_tiny_run() {
         MethodKind::Glister,
         MethodKind::GreedyPerBatch,
     ] {
-        let mut cfg = ExperimentConfig::preset(VARIANT, method, 11).unwrap();
-        cfg.epochs_full = 2; // tiny budget: full = 320 steps, others 32
+        let mut cfg = ExperimentConfig::preset(SMOKE, method, 11).unwrap();
+        cfg.epochs_full = 2; // tiny budget: full = 128 steps, others 12
         cfg.eval_points = 2;
         let rep = run_experiment(&rt, &splits, cfg).unwrap();
         assert!(rep.steps > 0, "{method:?} ran no steps");
@@ -258,9 +262,32 @@ fn every_method_completes_a_tiny_run() {
 }
 
 #[test]
+fn crest_and_baseline_full_cells_on_paper_proxy() {
+    // the acceptance cell: CREST (Algorithm 1) plus the Random baseline run
+    // end-to-end on the cifar10 proxy with the native backend
+    let (rt, splits) = load();
+    for method in [MethodKind::Crest, MethodKind::Random] {
+        let mut cfg = ExperimentConfig::preset(VARIANT, method, 21).unwrap();
+        cfg.epochs_full = 2;
+        cfg.eval_points = 1;
+        let rep = run_experiment(&rt, &splits, cfg).unwrap();
+        assert!(rep.steps > 0, "{method:?} ran no steps");
+        assert!(
+            rep.final_test_acc > 0.08,
+            "{method:?} below chance on 10 classes: {}",
+            rep.final_test_acc
+        );
+        if method == MethodKind::Crest {
+            assert!(rep.n_selection_updates > 0, "CREST never selected");
+            assert!(!rep.rho_history.is_empty(), "CREST never ran a rho-check");
+        }
+    }
+}
+
+#[test]
 fn crest_report_is_internally_consistent() {
-    let Some((rt, splits)) = load() else { return };
-    let mut cfg = ExperimentConfig::preset(VARIANT, MethodKind::Crest, 12).unwrap();
+    let (rt, splits) = load_smoke();
+    let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 12).unwrap();
     cfg.epochs_full = 5;
     let rep = run_experiment(&rt, &splits, cfg).unwrap();
     assert_eq!(rep.update_steps.len(), rep.n_selection_updates);
@@ -276,9 +303,9 @@ fn crest_report_is_internally_consistent() {
 
 #[test]
 fn deterministic_given_seed() {
-    let Some((rt, splits)) = load() else { return };
+    let (rt, splits) = load_smoke();
     let mk = || {
-        let mut cfg = ExperimentConfig::preset(VARIANT, MethodKind::Crest, 13).unwrap();
+        let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 13).unwrap();
         cfg.epochs_full = 3;
         run_experiment(&rt, &splits, cfg).unwrap()
     };
