@@ -4,10 +4,12 @@
 //!   L2/runtime: train_step, grad_embed, eval_chunk, hess_probe executions
 //!   L1 (compiled): in-graph select_greedy vs host greedy
 //!
-//! Run with `cargo bench --bench perf`.
+//! Run with `cargo bench --bench perf`. Quick CI mode: `CREST_BENCH_QUICK=1`
+//! (reduced sizes + capped reps); machine-readable trajectory:
+//! `CREST_BENCH_JSON=<path>`.
 
-use crest::bench_util::{bench, section};
 use crest::bench_util::scenario as sc;
+use crest::bench_util::{self, bench_recorded, section};
 use crest::coreset::facility;
 use crest::model::init_params;
 use crest::tensor::MatF32;
@@ -24,43 +26,47 @@ fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
 
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
+    let quick = bench_util::quick();
     let mut rng = Rng::new(42);
 
     section("L3 host: facility-location greedy");
-    for &(r, c, m) in &[(256usize, 10usize, 32usize), (320, 40, 32), (512, 10, 64)] {
+    let grid: &[(usize, usize, usize)] = if quick {
+        &[(256, 10, 32)]
+    } else {
+        &[(256, 10, 32), (320, 40, 32), (512, 10, 64)]
+    };
+    for &(r, c, m) in grid {
         let g = random_mat(&mut rng, r, c);
         let a = random_mat(&mut rng, r, 64);
-        let res = bench(&format!("lazy greedy      r={r} c={c} m={m}"), 2, 10,
-                        || facility::facility_location(&g, m));
-        println!("{}", res.report());
-        let res = bench(&format!("lazy greedy prod r={r} h=64 m={m}"), 2, 10,
-                        || facility::facility_location_prod(&a, &g, m));
-        println!("{}", res.report());
+        bench_recorded(&format!("lazy greedy r={r} c={c} m={m}"), 2, 10, || {
+            facility::facility_location(&g, m)
+        });
+        bench_recorded(&format!("lazy greedy prod r={r} h=64 m={m}"), 2, 10, || {
+            facility::facility_location_prod(&a, &g, m)
+        });
     }
     {
-        let (r, c, m) = (5120usize, 10usize, 512usize);
+        let (r, c, m) = if quick { (1536, 10, 128) } else { (5120, 10, 512) };
         let g = random_mat(&mut rng, r, c);
         let a = random_mat(&mut rng, r, 64);
         let metric = facility::ProdMetric::new(&a, &g);
         let mut srng = Rng::new(7);
-        let res = bench(&format!("stochastic greedy n={r} m={m}"), 1, 3,
-                        || facility::facility_location_stochastic(&metric, m, &mut srng));
-        println!("{}", res.report());
+        bench_recorded(&format!("stochastic greedy n={r} m={m}"), 1, 3, || {
+            facility::facility_location_stochastic(&metric, m, &mut srng)
+        });
     }
 
     section("L3 host: batch assembly");
-    {
-        let variant = "cifar10-proxy";
-        if let Some((_, splits)) = sc::load(variant, 1) {
-            let ds = splits.train;
-            let idx: Vec<usize> = (0..32).map(|i| i * 37 % ds.n()).collect();
-            let res = bench("dataset.batch gather m=32", 10, 200, || ds.batch(&idx));
-            println!("{}", res.report());
-        }
+    if let Some((_, splits)) = sc::load("cifar10-proxy", 1) {
+        let ds = splits.train;
+        let idx: Vec<usize> = (0..32).map(|i| i * 37 % ds.n()).collect();
+        bench_recorded("dataset.batch gather m=32", 10, 200, || ds.batch(&idx));
     }
 
-    section("runtime: compiled executions (PJRT CPU)");
-    for variant in ["cifar10-proxy", "cifar100-proxy"] {
+    section("runtime: native backend executions");
+    let variants: &[&str] =
+        if quick { &["cifar10-proxy"] } else { &["cifar10-proxy", "cifar100-proxy"] };
+    for &variant in variants {
         let Some((rt, splits)) = sc::load(variant, 1) else { continue };
         let ds = &splits.train;
         let mut rng = Rng::new(1);
@@ -70,33 +76,34 @@ fn main() -> anyhow::Result<()> {
         let (mx, my) = ds.batch(&midx);
         let gamma = vec![1.0f32; m];
         let mom = rt.zero_momentum();
-        let res = bench(&format!("{variant}: train_step"), 3, 30,
-                        || rt.train_step(&state.params, &mom, &mx, &my, &gamma, 0.01, 5e-4)
-                            .unwrap());
-        println!("{}", res.report());
+        bench_recorded(&format!("{variant}: train_step"), 3, 30, || {
+            rt.train_step(&state.params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap()
+        });
         let ridx: Vec<usize> = (0..r).collect();
         let (rx, ry) = ds.batch(&ridx);
-        let res = bench(&format!("{variant}: grad_embed r={r}"), 3, 20,
-                        || rt.grad_embed(&state.params, &rx, &ry).unwrap());
-        println!("{}", res.report());
+        bench_recorded(&format!("{variant}: grad_embed r={r}"), 3, 20, || {
+            rt.grad_embed(&state.params, &rx, &ry).unwrap()
+        });
         let eidx: Vec<usize> = (0..rt.man.eval_chunk).map(|i| i % ds.n()).collect();
         let (ex, ey) = ds.batch(&eidx);
-        let res = bench(&format!("{variant}: eval_chunk e={}", rt.man.eval_chunk), 3, 20,
-                        || rt.eval_chunk(&state.params, &ex, &ey).unwrap());
-        println!("{}", res.report());
+        bench_recorded(&format!("{variant}: eval_chunk e={}", rt.man.eval_chunk), 3, 20, || {
+            rt.eval_chunk(&state.params, &ex, &ey).unwrap()
+        });
         let z = vec![1.0f32; rt.man.p_dim];
-        let res = bench(&format!("{variant}: hess_probe"), 2, 10,
-                        || rt.hess_probe(&state.params, &rx, &ry, &z).unwrap());
-        println!("{}", res.report());
+        bench_recorded(&format!("{variant}: hess_probe"), 2, 10, || {
+            rt.hess_probe(&state.params, &rx, &ry, &z).unwrap()
+        });
 
         // L1 compiled greedy vs host greedy at identical inputs
         let (gl, al, _) = rt.grad_embed(&state.params, &rx, &ry)?;
-        let res = bench(&format!("{variant}: select_greedy (compiled)"), 2, 8,
-                        || rt.select_greedy(&gl, &al).unwrap());
-        println!("{}", res.report());
-        let res = bench(&format!("{variant}: select greedy (host)"), 2, 8,
-                        || facility::facility_location_prod(&al, &gl, m));
-        println!("{}", res.report());
+        bench_recorded(&format!("{variant}: select_greedy (compiled)"), 2, 8, || {
+            rt.select_greedy(&gl, &al).unwrap()
+        });
+        bench_recorded(&format!("{variant}: select greedy (host)"), 2, 8, || {
+            facility::facility_location_prod(&al, &gl, m)
+        });
     }
+
+    bench_util::flush_json()?;
     Ok(())
 }

@@ -1,0 +1,127 @@
+//! §Scaling — thread-count sweep over the parallel hot paths.
+//!
+//! Measures train_step, grad_embed and facility-location selection at
+//! 1/2/4/8 pool workers on a model sized so the batch-row loops dominate
+//! thread-spawn overhead, printing per-count speedups vs the 1-thread
+//! baseline and finishing with a bitwise-determinism spot check. With
+//! `CREST_BENCH_JSON=<path>` the per-count records seed the perf
+//! trajectory; `CREST_BENCH_QUICK=1` shrinks the model for the CI
+//! perf-smoke job.
+//!
+//! Run with `cargo bench --bench scaling`.
+
+use crest::bench_util::{self, bench_recorded, format_secs, section};
+use crest::coreset::facility;
+use crest::model::init_params;
+use crest::runtime::manifest::{ModelSpec, VariantManifest};
+use crest::runtime::Runtime;
+use crest::tensor::MatF32;
+use crest::util::pool;
+use crest::util::rng::Rng;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
+    let mut m = MatF32::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        *v = rng.normal();
+    }
+    m
+}
+
+/// Run `f` at every thread count, printing speedup vs the 1-thread p50.
+fn sweep<T>(label: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) {
+    let mut base_p50 = None;
+    for &t in &THREAD_COUNTS {
+        pool::set_threads(t);
+        let r = bench_recorded(&format!("{label} t={t}"), warmup, reps, &mut f);
+        let base = *base_p50.get_or_insert(r.p50_secs);
+        println!(
+            "    -> speedup vs t=1: {:.2}x (p50 {})",
+            base / r.p50_secs.max(1e-12),
+            format_secs(r.p50_secs)
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    crest::util::logging::init();
+    let quick = bench_util::quick();
+    let initial_threads = pool::threads();
+
+    // batch/hidden sizes chosen so one step is tens of milliseconds of
+    // dense-kernel work — the regime the parallel layer targets
+    let (hidden, m, r) = if quick {
+        (vec![256, 128], 128, 256)
+    } else {
+        (vec![512, 256], 256, 512)
+    };
+    let spec = ModelSpec {
+        name: "scaling-bench",
+        d_in: 256,
+        hidden,
+        classes: 10,
+        m,
+        r,
+        eval_chunk: r,
+        momentum: 0.9,
+    };
+    let rt = Runtime::native(VariantManifest::from_spec(&spec)?);
+    let mut rng = Rng::new(42);
+    let params = init_params(&rt.man, &mut rng);
+    let mom = rt.zero_momentum();
+    let mx = random_mat(&mut rng, m, spec.d_in);
+    let my: Vec<i32> = (0..m).map(|_| rng.gen_range(spec.classes) as i32).collect();
+    let gamma = vec![1.0f32; m];
+    let rx = random_mat(&mut rng, r, spec.d_in);
+    let ry: Vec<i32> = (0..r).map(|_| rng.gen_range(spec.classes) as i32).collect();
+    let reps = if quick { 5 } else { 10 };
+
+    section("scaling: train_step (batch-row parallel kernels)");
+    sweep(&format!("train_step m={m}"), 2, reps, || {
+        rt.train_step(&params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap()
+    });
+
+    section("scaling: grad_embed");
+    sweep(&format!("grad_embed r={r}"), 2, reps, || {
+        rt.grad_embed(&params, &rx, &ry).unwrap()
+    });
+
+    section("scaling: facility location (lazy greedy, prod metric)");
+    let n = if quick { 1024 } else { 2048 };
+    let gl = random_mat(&mut rng, n, 10);
+    let al = random_mat(&mut rng, n, 64);
+    let msel = n / 16;
+    sweep(&format!("facility-location n={n} m={msel}"), 1, if quick { 3 } else { 5 }, || {
+        facility::facility_location_prod(&al, &gl, msel)
+    });
+
+    section("scaling: facility location (stochastic greedy)");
+    let ns = if quick { 2048 } else { 8192 };
+    let gs = random_mat(&mut rng, ns, 10);
+    let acts = random_mat(&mut rng, ns, 64);
+    let metric = facility::ProdMetric::new(&acts, &gs);
+    let msel_s = ns / 16;
+    sweep(&format!("stochastic greedy n={ns} m={msel_s}"), 1, 3, || {
+        let mut srng = Rng::new(7);
+        facility::facility_location_stochastic(&metric, msel_s, &mut srng)
+    });
+
+    // determinism spot check across the sweep's thread counts
+    let d1 = pool::with_threads(1, || facility::facility_location_prod(&al, &gl, msel));
+    let d4 = pool::with_threads(4, || facility::facility_location_prod(&al, &gl, msel));
+    assert_eq!(d1.idx, d4.idx, "facility selection must not depend on thread count");
+    assert_eq!(d1.gamma, d4.gamma, "facility gammas must not depend on thread count");
+    let s1 = pool::with_threads(1, || {
+        rt.train_step(&params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap()
+    });
+    let s4 = pool::with_threads(4, || {
+        rt.train_step(&params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap()
+    });
+    assert_eq!(s1.params, s4.params, "train_step must not depend on thread count");
+    println!("\ndeterminism: threads=1 and threads=4 outputs are bitwise-identical");
+
+    pool::set_threads(initial_threads);
+    bench_util::flush_json()?;
+    Ok(())
+}

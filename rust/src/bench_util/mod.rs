@@ -1,12 +1,28 @@
 //! Micro-benchmark harness (criterion replacement for the offline registry).
 //!
-//! Warmup + timed repetitions with median ± MAD reporting; benches under
+//! Warmup + timed repetitions with p50/p95 reporting; benches under
 //! `rust/benches/` use `harness = false` and drive this directly.
+//!
+//! Env knobs:
+//!
+//! * `CREST_BENCH_WARMUP` / `CREST_BENCH_REPS` — override every bench's
+//!   warmup / measured repetitions (quick mode caps both; explicit env
+//!   values win over the caps)
+//! * `CREST_BENCH_QUICK=1` — reduced problem sizes + capped reps (the CI
+//!   perf-smoke configuration)
+//! * `CREST_BENCH_JSON=<path>` — [`flush_json`] appends every recorded
+//!   result to a JSON array at this path (the perf trajectory file)
 
 pub mod scenario;
 
+use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
 
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::pool;
 use crate::util::stats;
 
 /// Result of one measured benchmark.
@@ -14,21 +30,39 @@ use crate::util::stats;
 pub struct BenchResult {
     pub name: String,
     pub reps: usize,
-    pub median_secs: f64,
     pub mad_secs: f64,
     pub mean_secs: f64,
     pub min_secs: f64,
+    /// Median of the measured reps.
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    /// Pool worker count the bench ran with.
+    pub threads: usize,
 }
 
 impl BenchResult {
     pub fn report(&self) -> String {
         format!(
-            "{:<40} {:>10} {:>12} {:>12}",
+            "{:<44} {:>10} {:>12} {:>14} {:>12}",
             self.name,
-            format_secs(self.median_secs),
+            format_secs(self.p50_secs),
             format!("±{}", format_secs(self.mad_secs)),
+            format!("p95 {}", format_secs(self.p95_secs)),
             format!("min {}", format_secs(self.min_secs)),
         )
+    }
+
+    /// Machine-readable record for the perf trajectory (`CREST_BENCH_JSON`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("reps", self.reps)
+            .set("threads", self.threads)
+            .set("mean_secs", self.mean_secs)
+            .set("min_secs", self.min_secs)
+            .set("p50_secs", self.p50_secs)
+            .set("p95_secs", self.p95_secs)
+            .set("mad_secs", self.mad_secs)
     }
 }
 
@@ -45,9 +79,28 @@ pub fn format_secs(s: f64) -> String {
     }
 }
 
+fn env_usize(key: &str) -> Option<usize> {
+    std::env::var(key).ok().and_then(|s| s.parse().ok())
+}
+
+/// True under `CREST_BENCH_QUICK=1`: benches shrink problem sizes and the
+/// harness caps warmup/reps (p50/p95 still report the residual noise).
+/// Empty, `0`, and `false` values mean full mode, so an exported-but-off
+/// flag cannot silently shrink the perf trajectory.
+pub fn quick() -> bool {
+    matches!(std::env::var("CREST_BENCH_QUICK").ok().as_deref(),
+        Some(v) if !v.is_empty() && v != "0" && v != "false")
+}
+
 /// Time `f` with `warmup` unmeasured calls and `reps` measured calls.
+/// `CREST_BENCH_WARMUP` / `CREST_BENCH_REPS` override both; quick mode
+/// caps them (warmup ≤ 1, reps ≤ 5) unless explicitly overridden.
 pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> BenchResult {
-    assert!(reps > 0);
+    let warmup =
+        env_usize("CREST_BENCH_WARMUP").unwrap_or(if quick() { warmup.min(1) } else { warmup });
+    let reps = env_usize("CREST_BENCH_REPS")
+        .unwrap_or(if quick() { reps.min(5) } else { reps })
+        .max(1);
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -60,11 +113,70 @@ pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T
     BenchResult {
         name: name.to_string(),
         reps,
-        median_secs: stats::median(&times) as f64,
         mad_secs: stats::mad(&times) as f64,
         mean_secs: stats::mean(&times) as f64,
         min_secs: times.iter().cloned().fold(f32::INFINITY, f32::min) as f64,
+        p50_secs: stats::median(&times) as f64,
+        p95_secs: stats::percentile(&times, 95.0) as f64,
+        threads: pool::threads(),
     }
+}
+
+/// Results queued for [`flush_json`].
+static RECORDS: Mutex<Vec<Json>> = Mutex::new(Vec::new());
+
+/// Queue a result for the JSON trajectory.
+pub fn record(r: &BenchResult) {
+    RECORDS.lock().unwrap().push(r.to_json());
+}
+
+/// Run, print, and record in one call — the standard bench step.
+pub fn bench_recorded<T>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let r = bench(name, warmup, reps, f);
+    println!("{}", r.report());
+    record(&r);
+    r
+}
+
+/// Write all recorded results to `$CREST_BENCH_JSON`, merging with an
+/// existing array at that path so `--bench perf --bench scaling` land in
+/// one trajectory file. No-op when the env var is unset. Call at the end
+/// of every bench `main`.
+pub fn flush_json() -> Result<()> {
+    match std::env::var("CREST_BENCH_JSON") {
+        Ok(path) => flush_json_to(Path::new(&path)),
+        Err(_) => Ok(()),
+    }
+}
+
+/// Env-independent core of [`flush_json`] (drains the record queue). An
+/// unreadable or corrupt existing file (e.g. a truncated write from a
+/// killed run) starts a fresh array instead of failing the bench.
+pub fn flush_json_to(path: &Path) -> Result<()> {
+    let mut all: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text).and_then(|j| Ok(j.as_arr()?.to_vec())) {
+            Ok(records) => records,
+            Err(e) => {
+                eprintln!(
+                    "[bench] {}: existing trajectory unreadable ({e:#}); starting fresh",
+                    path.display()
+                );
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    let drained: Vec<Json> = std::mem::take(&mut *RECORDS.lock().unwrap());
+    let n_new = drained.len();
+    all.extend(drained);
+    std::fs::write(path, Json::Arr(all).to_string_pretty())?;
+    println!("[bench] appended {n_new} perf records to {}", path.display());
+    Ok(())
 }
 
 /// Print a section header in bench output.
@@ -85,8 +197,8 @@ mod tests {
             }
             s
         });
-        assert!(r.median_secs > 0.0);
-        assert!(r.min_secs <= r.median_secs);
+        assert!(r.p50_secs > 0.0);
+        assert!(r.min_secs <= r.p50_secs);
         assert_eq!(r.reps, 5);
         assert!(r.report().contains("spin"));
     }
@@ -97,5 +209,45 @@ mod tests {
         assert!(format_secs(2.5e-3).ends_with("ms"));
         assert!(format_secs(2.5e-6).ends_with("µs"));
         assert!(format_secs(2.5e-10).ends_with("ns"));
+    }
+
+    #[test]
+    fn percentiles_ordered_and_json_complete() {
+        let r = bench("sleep", 0, 7, || {
+            std::thread::sleep(std::time::Duration::from_micros(50));
+        });
+        assert!(r.min_secs <= r.p50_secs && r.p50_secs <= r.p95_secs);
+        assert!(r.threads >= 1);
+        let j = r.to_json();
+        for key in
+            ["name", "reps", "threads", "mean_secs", "min_secs", "p50_secs", "p95_secs", "mad_secs"]
+        {
+            assert!(j.get(key).is_some(), "to_json missing {key}");
+        }
+    }
+
+    #[test]
+    fn flush_appends_to_existing_json() {
+        let dir = std::env::temp_dir().join("crest-bench-json-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_perf.json");
+        let _ = std::fs::remove_file(&path);
+        let r = bench("flush-probe", 0, 1, || 1 + 1);
+        record(&r);
+        flush_json_to(&path).unwrap();
+        record(&r);
+        flush_json_to(&path).unwrap();
+        let arr = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(arr.as_arr().unwrap().len() >= 2, "records must accumulate across flushes");
+        assert!(arr.as_arr().unwrap().iter().any(|v| {
+            v.get("name").and_then(|n| n.as_str().ok()) == Some("flush-probe")
+        }));
+        // a corrupt trajectory (truncated write) must not abort the flush
+        std::fs::write(&path, "{truncated").unwrap();
+        record(&r);
+        flush_json_to(&path).unwrap();
+        let arr = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(!arr.as_arr().unwrap().is_empty(), "fresh array after corruption");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -204,6 +204,7 @@ impl ExperimentConfig {
             .set("smooth", self.crest.smooth)
             .set("exclude", self.crest.exclude)
             .set("compiled_selection", self.compiled_selection)
+            .set("selection_threads", self.selection_threads)
     }
 
     /// Apply overrides parsed from JSON (partial object).
@@ -246,6 +247,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("compiled_selection") {
             self.compiled_selection = v.as_bool()?;
+        }
+        if let Some(v) = j.get("selection_threads") {
+            self.selection_threads = v.as_usize()?.max(1);
         }
         if let Some(v) = j.get("method") {
             self.method = MethodKind::parse(v.as_str()?)?;
@@ -294,7 +298,8 @@ mod tests {
     fn json_roundtrip_overrides() {
         let mut c = ExperimentConfig::preset("cifar10-proxy", MethodKind::Crest, 0).unwrap();
         let j = Json::parse(
-            r#"{"tau": 0.2, "exclude": false, "method": "craig", "epochs_full": 5}"#,
+            r#"{"tau": 0.2, "exclude": false, "method": "craig", "epochs_full": 5,
+                "selection_threads": 2}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -302,6 +307,7 @@ mod tests {
         assert!(!c.crest.exclude);
         assert_eq!(c.method, MethodKind::Craig);
         assert_eq!(c.epochs_full, 5);
+        assert_eq!(c.selection_threads, 2);
         // serialized form parses back
         let s = c.to_json().to_string_pretty();
         let j2 = Json::parse(&s).unwrap();

@@ -17,6 +17,7 @@ use crate::quadratic::{QuadOptions, QuadraticModel};
 use crate::runtime::Runtime;
 use crate::tensor::MatF32;
 use crate::train::TrainState;
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::util::timer::PhaseTimers;
@@ -444,27 +445,17 @@ impl<'a> CrestSource<'a> {
             }
             out
         } else if self.selection_threads > 1 && subsets.len() > 1 {
-            let threads = self.selection_threads.min(subsets.len());
-            let chunks: Vec<&[(Vec<usize>, MatF32, MatF32)]> =
-                subsets.chunks(subsets.len().div_ceil(threads)).collect();
-            let results: Vec<Vec<MiniBatchCoreset>> = std::thread::scope(|scope| {
-                let handles: Vec<_> = chunks
-                    .into_iter()
-                    .map(|chunk| {
-                        scope.spawn(move || {
-                            chunk
-                                .iter()
-                                .map(|(idx, gl, al)| {
-                                    let sel = facility::facility_location_prod(al, gl, m);
-                                    MiniBatchCoreset::from_selection(&sel, idx, m)
-                                })
-                                .collect::<Vec<_>>()
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("selection worker")).collect()
-            });
-            results.into_iter().flatten().collect()
+            // one P-subset greedy per pool worker; facility's own scans run
+            // inline inside the workers (nested pool calls), and results
+            // come back in subset order — identical to the serial path.
+            // Capped by the global count so --threads/CREST_THREADS=1
+            // forces serial execution here too (results never change).
+            let pool = Pool::new(self.selection_threads.min(crate::util::pool::threads()));
+            pool.map(subsets.len(), |i| {
+                let (idx, gl, al) = &subsets[i];
+                let sel = facility::facility_location_prod(al, gl, m);
+                MiniBatchCoreset::from_selection(&sel, idx, m)
+            })
         } else {
             subsets
                 .iter()

@@ -8,8 +8,50 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::ops::Range;
 
 use crate::tensor::MatF32;
+use crate::util::pool::Pool;
+
+// ---------------------------------------------------------------- threading
+//
+// The O(n·|candidates|) scans parallelize two ways: candidate-level loops
+// (first-medoid scan, heap seeding, stochastic scoring, `best_untaken`)
+// fan candidates out to the pool and fold results in index order, which
+// reproduces the serial tie-breaking exactly; single-candidate gains sum
+// over elements in fixed GAIN_CHUNK-sized chunks folded in chunk order.
+// Both schemes are independent of the worker count, so every selection is
+// bitwise-identical at `--threads 1` and `--threads N`.
+
+/// Fixed chunk length for gain reductions (boundaries depend only on the
+/// element count, never the thread count).
+const GAIN_CHUNK: usize = 512;
+/// Minimum elements in one gain before its inner reduction fans out (the
+/// candidate-level loops are the cheaper parallelism when both apply —
+/// nested calls from pool workers run inline automatically).
+const GAIN_PAR_MIN: usize = 16 * GAIN_CHUNK;
+/// Minimum sqdist evaluations before a candidate-level scan fans out.
+const PAR_MIN_WORK: usize = 1 << 16;
+/// Minimum elements before the per-element min-distance update fans out.
+const MIND_PAR_MIN: usize = 1 << 14;
+
+/// Sum `part` over fixed GAIN_CHUNK-sized chunks of `0..n`, folding the
+/// partials in chunk order — a thread-count-independent f32 reduction.
+fn chunked_sum(n: usize, part: impl Fn(Range<usize>) -> f32 + Sync) -> f32 {
+    if n < GAIN_PAR_MIN {
+        // allocation-free fast path for the lazy-greedy inner loop: same
+        // chunk boundaries and left-to-right fold as the pooled branch
+        // (`sum()` over collected partials), so results are identical
+        let mut s = 0.0f32;
+        let mut c = 0;
+        while c < n {
+            s += part(c..(c + GAIN_CHUNK).min(n));
+            c += GAIN_CHUNK;
+        }
+        return s;
+    }
+    Pool::global().map_chunks(n, GAIN_CHUNK, part).into_iter().sum()
+}
 
 /// Result of one selection: indices into the ground set + gamma weights.
 #[derive(Debug, Clone)]
@@ -78,8 +120,9 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// A squared-distance metric over a ground set of embeddings.
-pub trait SqDistMetric {
+/// A squared-distance metric over a ground set of embeddings. `Sync` so
+/// the gain scans can share the metric across pool workers.
+pub trait SqDistMetric: Sync {
     fn len(&self) -> usize;
     fn sqdist(&self, i: usize, j: usize) -> f32;
     fn is_empty(&self) -> bool {
@@ -152,38 +195,76 @@ impl<'a> SqDistMetric for ProdMetric<'a> {
     }
 }
 
-/// Marginal gain of candidate `j` given current min-distances.
-#[inline]
+/// Marginal gain of candidate `j` given current min-distances, summed in
+/// fixed chunks (see [`GAIN_CHUNK`]) for thread-count independence.
 fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
-    let mut s = 0.0f32;
-    for i in 0..mind.len() {
-        let d = ctx.sqdist(j, i);
-        if d < mind[i] {
-            s += mind[i] - d;
+    chunked_sum(mind.len(), |range| {
+        let mut s = 0.0f32;
+        for i in range {
+            let d = ctx.sqdist(j, i);
+            if d < mind[i] {
+                s += mind[i] - d;
+            }
         }
-    }
-    s
+        s
+    })
 }
 
 /// Gain restricted to the still-uncovered elements. Elements whose
 /// min-distance has fallen below `floor` can contribute at most `floor`
 /// each, so skipping them changes any gain by < active_floor_mass — the
 /// hot-loop optimization measured by `benches/perf.rs`.
-#[inline]
 fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize) -> f32 {
     // dense scan is faster until the list actually thins out
     if active.len() == mind.len() {
         return gain(ctx, mind, j);
     }
-    let mut s = 0.0f32;
-    for &i in active {
-        let i = i as usize;
-        let d = ctx.sqdist(j, i);
-        if d < mind[i] {
-            s += mind[i] - d;
+    chunked_sum(active.len(), |range| {
+        let mut s = 0.0f32;
+        for &i in &active[range] {
+            let i = i as usize;
+            let d = ctx.sqdist(j, i);
+            if d < mind[i] {
+                s += mind[i] - d;
+            }
         }
+        s
+    })
+}
+
+/// Lower `mind` against the distances to a freshly selected medoid `j`
+/// (element-wise, hence thread-count independent).
+fn update_mind<M: SqDistMetric>(ctx: &M, mind: &mut [f32], j: usize) {
+    Pool::gated(mind.len(), MIND_PAR_MIN).for_rows(mind, 1, GAIN_CHUNK, |i0, chunk| {
+        for (k, mv) in chunk.iter_mut().enumerate() {
+            let d = ctx.sqdist(j, i0 + k);
+            if d < *mv {
+                *mv = d;
+            }
+        }
+    });
+}
+
+/// Cluster sizes under nearest-medoid assignment. The per-element nearest
+/// scan keeps the serial tie-break (strict `<`, first medoid wins).
+fn assign_gamma<M: SqDistMetric>(ctx: &M, idx: &[usize], r: usize) -> Vec<f32> {
+    let assign: Vec<u32> = Pool::gated(r * idx.len(), PAR_MIN_WORK).map(r, |i| {
+        let mut best = 0usize;
+        let mut bd = f32::INFINITY;
+        for (s, &j) in idx.iter().enumerate() {
+            let d = ctx.sqdist(j, i);
+            if d < bd {
+                bd = d;
+                best = s;
+            }
+        }
+        best as u32
+    });
+    let mut gamma = vec![0.0f32; idx.len()];
+    for &a in &assign {
+        gamma[a as usize] += 1.0;
     }
-    s
+    gamma
 }
 
 /// Rebuild the active-element list: keep elements whose residual
@@ -210,13 +291,17 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
     let r = ctx.len();
     assert!(m >= 1 && m <= r, "facility_location: m={m} out of range for r={r}");
     // Round 0 has no finite gains (empty assignment): the 1-medoid is the
-    // candidate minimizing total distance. Computed exhaustively.
-    let mut first = (0usize, f32::INFINITY);
-    for j in 0..r {
+    // candidate minimizing total distance. Scanned candidate-parallel and
+    // folded in index order (strict `<` keeps the serial tie-break).
+    let totals: Vec<f32> = Pool::gated(r * r, PAR_MIN_WORK).map(r, |j| {
         let mut tot = 0.0f32;
         for i in 0..r {
             tot += ctx.sqdist(j, i);
         }
+        tot
+    });
+    let mut first = (0usize, f32::INFINITY);
+    for (j, &tot) in totals.iter().enumerate() {
         if tot < first.1 {
             first = (j, tot);
         }
@@ -229,15 +314,22 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
     // coverage (elements this close to a medoid cannot change greedy order)
     let floor = 1e-4 * (mind.iter().map(|&v| v as f64).sum::<f64>() / r as f64) as f32;
     let mut active = rebuild_active(&mind, floor);
-    // Seed the heap with *exact* round-1 gains (one full pass). Gains are
-    // monotone non-increasing from here, so stale heap entries are valid
-    // upper bounds — the lazy-greedy invariant.
+    // Seed the heap with *exact* round-1 gains (one candidate-parallel
+    // pass). Gains are monotone non-increasing from here, so stale heap
+    // entries are valid upper bounds — the lazy-greedy invariant.
+    let seed_gains: Vec<f32> = Pool::gated(r * active.len(), PAR_MIN_WORK).map(r, |j| {
+        if j == j0 {
+            0.0
+        } else {
+            gain_active(ctx, &mind, &active, j)
+        }
+    });
     let mut heap = BinaryHeap::with_capacity(r);
-    for j in 0..r {
+    for (j, &g) in seed_gains.iter().enumerate() {
         if j == j0 {
             continue;
         }
-        heap.push(HeapItem { gain: gain_active(ctx, &mind, &active, j), cand: j, round: 1 });
+        heap.push(HeapItem { gain: g, cand: j, round: 1 });
     }
     let mut round = 1usize;
     while idx.len() < m {
@@ -245,12 +337,7 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
         if top.round == round {
             // fresh gain: select
             let j = top.cand;
-            for i in 0..r {
-                let d = ctx.sqdist(j, i);
-                if d < mind[i] {
-                    mind[i] = d;
-                }
-            }
+            update_mind(ctx, &mut mind, j);
             idx.push(j);
             round += 1;
             if active.len() > 32 {
@@ -262,20 +349,7 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
             heap.push(HeapItem { gain: gnew, cand: top.cand, round });
         }
     }
-    // gamma = cluster sizes under nearest-medoid assignment
-    let mut gamma = vec![0.0f32; m];
-    for i in 0..r {
-        let mut best = 0usize;
-        let mut bd = f32::INFINITY;
-        for (s, &j) in idx.iter().enumerate() {
-            let d = ctx.sqdist(j, i);
-            if d < bd {
-                bd = d;
-                best = s;
-            }
-        }
-        gamma[best] += 1.0;
-    }
+    let gamma = assign_gamma(ctx, &idx, r);
     Selection { idx, gamma }
 }
 
@@ -288,16 +362,22 @@ fn best_untaken<M: SqDistMetric>(
     active: &[u32],
     taken: &[bool],
 ) -> Option<(usize, f64)> {
+    // score untaken candidates in parallel, then fold in index order (the
+    // serial scan's tie-breaking exactly)
+    let scores: Vec<Option<f64>> = Pool::gated(taken.len() * active.len().max(1), PAR_MIN_WORK)
+        .map(taken.len(), |j| {
+            if taken[j] {
+                return None;
+            }
+            let g = gain_active(ctx, mind, active, j) as f64;
+            // a NaN gain (poisoned embeddings) must never beat finite
+            // candidates: `g > best.1` is false for every comparison
+            // against NaN, so an early NaN would otherwise win permanently
+            Some(if g.is_nan() { f64::NEG_INFINITY } else { g })
+        });
     let mut best = (usize::MAX, f64::NEG_INFINITY);
-    for (j, &is_taken) in taken.iter().enumerate() {
-        if is_taken {
-            continue;
-        }
-        let g = gain_active(ctx, mind, active, j) as f64;
-        // a NaN gain (poisoned embeddings) must never beat finite candidates:
-        // `g > best.1` is false for every comparison against NaN, so an early
-        // NaN would otherwise win permanently
-        let g = if g.is_nan() { f64::NEG_INFINITY } else { g };
+    for (j, score) in scores.into_iter().enumerate() {
+        let Some(g) = score else { continue };
         if best.0 == usize::MAX || g > best.1 {
             best = (j, g);
         }
@@ -336,25 +416,34 @@ pub fn facility_location_stochastic<M: SqDistMetric>(
     let sampled_ground = r > gain_cap;
     let mut floor = 0.0f32;
     for round in 0..m {
+        // draw the candidate sample serially (one RNG stream), score the
+        // draws in parallel, then fold in draw order — identical picks to
+        // the sequential scan at every thread count
+        let sample: Vec<usize> = (0..s).map(|_| rng.gen_range(r)).collect();
+        let scores: Vec<Option<f64>> =
+            Pool::gated(sample.len() * active.len().max(1), PAR_MIN_WORK)
+                .map(sample.len(), |si| {
+                    let j = sample[si];
+                    if taken[j] {
+                        return None;
+                    }
+                    Some(if round == 0 {
+                        // empty assignment: minimize total distance (over
+                        // the gain sample when the ground set is large)
+                        let mut tot = 0.0f64;
+                        for &i in &active {
+                            tot += ctx.sqdist(j, i as usize) as f64;
+                        }
+                        -tot
+                    } else {
+                        gain_active(ctx, &mind, &active, j) as f64
+                    })
+                });
         let mut best = (usize::MAX, f64::NEG_INFINITY);
-        for _ in 0..s {
-            let j = rng.gen_range(r);
-            if taken[j] {
-                continue;
-            }
-            let g = if round == 0 {
-                // empty assignment: minimize total distance (over the
-                // gain sample when the ground set is large)
-                let mut tot = 0.0f64;
-                for &i in &active {
-                    tot += ctx.sqdist(j, i as usize) as f64;
-                }
-                -tot
-            } else {
-                gain_active(ctx, &mind, &active, j) as f64
-            };
+        for (si, score) in scores.into_iter().enumerate() {
+            let Some(g) = score else { continue };
             if g > best.1 {
-                best = (j, g);
+                best = (sample[si], g);
             }
         }
         if best.0 == usize::MAX {
@@ -370,12 +459,7 @@ pub fn facility_location_stochastic<M: SqDistMetric>(
         }
         let j = best.0;
         taken[j] = true;
-        for i in 0..r {
-            let d = ctx.sqdist(j, i);
-            if d < mind[i] {
-                mind[i] = d;
-            }
-        }
+        update_mind(ctx, &mut mind, j);
         idx.push(j);
         if round == 0 {
             floor = 1e-4
@@ -389,20 +473,7 @@ pub fn facility_location_stochastic<M: SqDistMetric>(
             active.retain(|&i| mind[i as usize] > floor);
         }
     }
-    // gamma = cluster sizes under nearest-medoid assignment
-    let mut gamma = vec![0.0f32; idx.len()];
-    for i in 0..r {
-        let mut bestj = 0usize;
-        let mut bd = f32::INFINITY;
-        for (k, &j) in idx.iter().enumerate() {
-            let d = ctx.sqdist(j, i);
-            if d < bd {
-                bd = d;
-                bestj = k;
-            }
-        }
-        gamma[bestj] += 1.0;
-    }
+    let gamma = assign_gamma(ctx, &idx, r);
     Selection { idx, gamma }
 }
 
@@ -618,6 +689,39 @@ mod tests {
         idx.sort_unstable();
         assert_eq!(idx, (0..24).collect::<Vec<_>>());
         assert_eq!(s.gamma.iter().sum::<f32>(), 24.0);
+    }
+
+    #[test]
+    fn lazy_greedy_bitwise_deterministic_across_thread_counts() {
+        use crate::util::pool;
+        // sized so the candidate-parallel scans and chunked gains engage
+        let g = random_embed(1024, 6, 21);
+        let a = random_embed(1024, 12, 22);
+        let base = pool::with_threads(1, || facility_location_prod(&a, &g, 64));
+        for t in [2, 4] {
+            let s = pool::with_threads(t, || facility_location_prod(&a, &g, 64));
+            assert_eq!(base.idx, s.idx, "threads={t}");
+            assert_eq!(base.gamma, s.gamma, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn stochastic_greedy_bitwise_deterministic_across_thread_counts() {
+        use crate::util::pool;
+        let g = random_embed(1500, 5, 23);
+        let metric = EuclidMetric::new(&g);
+        let run = |t: usize| {
+            pool::with_threads(t, || {
+                let mut rng = Rng::new(77);
+                facility_location_stochastic(&metric, 50, &mut rng)
+            })
+        };
+        let base = run(1);
+        for t in [2, 4] {
+            let s = run(t);
+            assert_eq!(base.idx, s.idx, "threads={t}");
+            assert_eq!(base.gamma, s.gamma, "threads={t}");
+        }
     }
 
     #[test]

@@ -23,8 +23,18 @@ use crest::data::{cache, generate, SynthSpec};
 use crest::metrics::relative_error_pct;
 use crest::report::Table;
 use crest::runtime::Runtime;
-use crest::util::cli::Cli;
+use crest::util::cli::{Cli, Parsed};
 use crest::util::logging;
+use crest::util::pool;
+
+/// Apply `--threads` (falls back to `CREST_THREADS` / core count).
+fn apply_threads(p: &Parsed) -> Result<()> {
+    if let Some(t) = p.get("threads") {
+        let n: usize = t.parse().context("parsing --threads")?;
+        pool::set_threads(n);
+    }
+    Ok(())
+}
 
 fn artifact_root(p: &str) -> PathBuf {
     if p.is_empty() {
@@ -61,6 +71,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("budget", "0.1", "training budget as a fraction of full")
         .opt("epochs-full", "60", "epochs of the full reference run")
         .opt("artifacts", "artifacts", "artifact root directory")
+        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
         .opt_maybe("out", "write the run report JSON here")
         .opt_maybe("lr", "override the base learning rate")
         .opt_maybe("tau", "override the ρ threshold τ")
@@ -70,6 +81,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("no-smooth", "disable EMA smoothing of grad/curvature")
         .flag("compiled-selection", "route greedy selection through the backend")
         .parse(args)?;
+    apply_threads(&p)?;
 
     let variant = p.str("variant");
     let mut cfg =
@@ -128,7 +140,9 @@ fn cmd_compare(args: &[String]) -> Result<()> {
         .opt("budget", "0.1", "training budget fraction")
         .opt("epochs-full", "60", "epochs of the full reference run")
         .opt("artifacts", "artifacts", "artifact root directory")
+        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
         .parse(args)?;
+    apply_threads(&p)?;
 
     let variant = p.str("variant");
     let seed = p.u64("seed")?;

@@ -25,6 +25,27 @@ use crate::model::param_offsets;
 use crate::runtime::manifest::VariantManifest;
 use crate::runtime::{Backend, ProbeOut, StepOut};
 use crate::tensor::MatF32;
+use crate::util::pool::Pool;
+
+// ---------------------------------------------------------------- threading
+//
+// Every kernel below is either row-partitioned (matmuls, softmax) or
+// partitioned over input features (weight-gradient accumulation), so each
+// output element is produced by exactly one worker with the same
+// per-element accumulation order as the serial loop — results are
+// bitwise-identical at every thread count, including 1.
+
+/// Minimum MAC count before a kernel fans out to the pool (below this the
+/// scoped-thread spawn cost exceeds the parallel win).
+const PAR_MIN_OPS: usize = 1 << 19;
+/// Batch rows per parallel work unit.
+const ROW_GRAIN: usize = 16;
+/// Input features per work unit in the weight-gradient kernel.
+const K_GRAIN: usize = 32;
+/// Minimum flat-parameter count before the SGD update parallelizes.
+const SGD_PAR_MIN: usize = 1 << 17;
+/// Flat parameter elements per work unit in the SGD update.
+const SGD_GRAIN: usize = 1 << 14;
 
 /// Offsets of one dense layer inside the flat parameter vector.
 #[derive(Debug, Clone, Copy)]
@@ -195,13 +216,25 @@ impl Backend for NativeBackend {
             *g += wd * p;
         }
         let mu = self.man.momentum;
-        let mut mom_new = Vec::with_capacity(params.len());
-        let mut params_new = Vec::with_capacity(params.len());
-        for ((&p, &v), &g) in params.iter().zip(momentum).zip(&grad) {
-            let v_new = mu * v + g;
-            mom_new.push(v_new);
-            params_new.push(p - lr * v_new);
-        }
+        let p_dim = params.len();
+        let mut mom_new = vec![0.0f32; p_dim];
+        let mut params_new = vec![0.0f32; p_dim];
+        // element-wise, so the parallel split cannot change any result
+        let grad_ref: &[f32] = &grad;
+        Pool::gated(p_dim, SGD_PAR_MIN).for_rows2(
+            &mut mom_new,
+            1,
+            &mut params_new,
+            1,
+            SGD_GRAIN,
+            |off, mom_c, par_c| {
+                for k in 0..mom_c.len() {
+                    let v_new = mu * momentum[off + k] + grad_ref[off + k];
+                    mom_c[k] = v_new;
+                    par_c[k] = params[off + k] - lr * v_new;
+                }
+            },
+        );
         let mean_loss = fwd
             .ce
             .iter()
@@ -353,43 +386,50 @@ fn affine(x: &MatF32, w: &[f32], b: &[f32], d_out: usize) -> MatF32 {
 }
 
 /// `out += x·W` (x: rows×d_in, W: d_in×d_out row-major). The `xv == 0`
-/// skip exploits ReLU sparsity on hidden activations.
+/// skip exploits ReLU sparsity on hidden activations. Row-parallel: each
+/// output row is produced by one worker in serial element order.
 fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
     debug_assert_eq!(out.rows, x.rows);
     debug_assert_eq!(out.cols, d_out);
     debug_assert_eq!(w.len(), x.cols * d_out);
-    for i in 0..x.rows {
-        let xi = x.row(i);
-        let oi = out.row_mut(i);
-        for (k, &xv) in xi.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wrow = &w[k * d_out..(k + 1) * d_out];
-            for (o, &wv) in oi.iter_mut().zip(wrow) {
-                *o += xv * wv;
+    let pool = Pool::gated(x.rows * x.cols * d_out, PAR_MIN_OPS);
+    pool.for_rows(&mut out.data, d_out, ROW_GRAIN, |row0, rows_out| {
+        for (i, oi) in rows_out.chunks_mut(d_out).enumerate() {
+            let xi = x.row(row0 + i);
+            for (k, &xv) in xi.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[k * d_out..(k + 1) * d_out];
+                for (o, &wv) in oi.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
             }
         }
-    }
+    });
 }
 
 /// `out += d·Wᵀ` (d: rows×d_out, W: d_in×d_out row-major, out: rows×d_in).
+/// Row-parallel like [`add_matmul`].
 fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
     debug_assert_eq!(out.rows, d.rows);
     debug_assert_eq!(d.cols, d_out);
     debug_assert_eq!(w.len(), out.cols * d_out);
-    for i in 0..d.rows {
-        let di = d.row(i);
-        let oi = out.row_mut(i);
-        for (k, ov) in oi.iter_mut().enumerate() {
-            let wrow = &w[k * d_out..(k + 1) * d_out];
-            let mut acc = 0.0f32;
-            for (&dv, &wv) in di.iter().zip(wrow) {
-                acc += dv * wv;
+    let d_in = out.cols;
+    let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
+    pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
+        for (i, oi) in rows_out.chunks_mut(d_in).enumerate() {
+            let di = d.row(row0 + i);
+            for (k, ov) in oi.iter_mut().enumerate() {
+                let wrow = &w[k * d_out..(k + 1) * d_out];
+                let mut acc = 0.0f32;
+                for (&dv, &wv) in di.iter().zip(wrow) {
+                    acc += dv * wv;
+                }
+                *ov += acc;
             }
-            *ov += acc;
         }
-    }
+    });
 }
 
 /// `d·Wᵀ` into a fresh matrix.
@@ -400,22 +440,30 @@ fn matmul_nt(d: &MatF32, w: &[f32], d_in: usize, d_out: usize) -> MatF32 {
 }
 
 /// `gw += inputᵀ·d` accumulated into the flat weight-gradient slice.
+/// Parallel over input features: each worker owns a disjoint k-range of
+/// `gw` rows and walks the batch rows in order, so every element sees the
+/// exact serial accumulation order regardless of thread count.
 fn accum_wgrad(gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
     debug_assert_eq!(input.rows, d.rows);
     debug_assert_eq!(gw.len(), input.cols * d_out);
-    for i in 0..input.rows {
-        let hi = input.row(i);
-        let di = d.row(i);
-        for (k, &hv) in hi.iter().enumerate() {
-            if hv == 0.0 {
-                continue;
-            }
-            let grow = &mut gw[k * d_out..(k + 1) * d_out];
-            for (g, &dv) in grow.iter_mut().zip(di) {
-                *g += hv * dv;
+    let pool = Pool::gated(input.rows * input.cols * d_out, PAR_MIN_OPS);
+    pool.for_rows(gw, d_out, K_GRAIN, |k0, gw_rows| {
+        let kn = gw_rows.len() / d_out;
+        for i in 0..input.rows {
+            let hi = input.row(i);
+            let di = d.row(i);
+            for kk in 0..kn {
+                let hv = hi[k0 + kk];
+                if hv == 0.0 {
+                    continue;
+                }
+                let grow = &mut gw_rows[kk * d_out..(kk + 1) * d_out];
+                for (g, &dv) in grow.iter_mut().zip(di) {
+                    *g += hv * dv;
+                }
             }
         }
-    }
+    });
 }
 
 /// `gb += Σ_rows d`.
@@ -439,36 +487,53 @@ fn relu_mask(m: &mut MatF32, act: &MatF32) {
 }
 
 /// Row-wise stable softmax + cross-entropy + argmax correctness.
+/// Row-parallel: all three outputs are partitioned on the same row
+/// boundaries, so every row is computed exactly as in the serial loop.
 fn softmax_ce(logits: &MatF32, y: &[i32]) -> (MatF32, Vec<f32>, Vec<f32>) {
-    let mut probs = MatF32::zeros(logits.rows, logits.cols);
-    let mut ce = vec![0.0f32; logits.rows];
-    let mut correct = vec![0.0f32; logits.rows];
-    for i in 0..logits.rows {
-        let row = logits.row(i);
-        let mut maxv = f32::NEG_INFINITY;
-        let mut argmax = 0usize;
-        for (j, &v) in row.iter().enumerate() {
-            if v > maxv {
-                maxv = v;
-                argmax = j;
+    let rows = logits.rows;
+    let cols = logits.cols;
+    let mut probs = MatF32::zeros(rows, cols);
+    let mut ce = vec![0.0f32; rows];
+    let mut correct = vec![0.0f32; rows];
+    // exp-heavy rows: weigh each element ~32 MACs for the spawn gate
+    let pool = Pool::gated(rows * cols * 32, PAR_MIN_OPS);
+    pool.for_rows3(
+        &mut probs.data,
+        cols,
+        &mut ce,
+        1,
+        &mut correct,
+        1,
+        ROW_GRAIN,
+        |row0, probs_rows, ce_rows, correct_rows| {
+            for i in 0..ce_rows.len() {
+                let row = logits.row(row0 + i);
+                let mut maxv = f32::NEG_INFINITY;
+                let mut argmax = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > maxv {
+                        maxv = v;
+                        argmax = j;
+                    }
+                }
+                let pi = &mut probs_rows[i * cols..(i + 1) * cols];
+                let mut sum = 0.0f32;
+                for (p, &v) in pi.iter_mut().zip(row) {
+                    let e = (v - maxv).exp();
+                    *p = e;
+                    sum += e;
+                }
+                let inv = 1.0 / sum;
+                for p in pi.iter_mut() {
+                    *p *= inv;
+                }
+                let yi = y[row0 + i] as usize;
+                // −log softmax(y) = ln Σe^{v−max} − (v_y − max), stable
+                ce_rows[i] = sum.ln() - (row[yi] - maxv);
+                correct_rows[i] = if argmax == yi { 1.0 } else { 0.0 };
             }
-        }
-        let pi = probs.row_mut(i);
-        let mut sum = 0.0f32;
-        for (p, &v) in pi.iter_mut().zip(row) {
-            let e = (v - maxv).exp();
-            *p = e;
-            sum += e;
-        }
-        let inv = 1.0 / sum;
-        for p in pi.iter_mut() {
-            *p *= inv;
-        }
-        let yi = y[i] as usize;
-        // −log softmax(y) = ln Σe^{v−max} − (v_y − max), numerically stable
-        ce[i] = sum.ln() - (row[yi] - maxv);
-        correct[i] = if argmax == yi { 1.0 } else { 0.0 };
-    }
+        },
+    );
     (probs, ce, correct)
 }
 
@@ -718,6 +783,42 @@ mod tests {
         assert_eq!(idx, host.idx);
         assert_eq!(w, host.gamma);
         assert_eq!(w.iter().sum::<f32>(), r as f32);
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_deterministic_across_thread_counts() {
+        use crate::util::pool;
+        // sized so the row-parallel kernels actually engage (first-layer
+        // work 64·128·160 ≈ 1.3M MACs, above the spawn gate)
+        let spec = ModelSpec {
+            name: "par",
+            d_in: 128,
+            hidden: vec![160],
+            classes: 10,
+            m: 64,
+            r: 64,
+            eval_chunk: 64,
+            momentum: 0.9,
+        };
+        let bk = NativeBackend::new(VariantManifest::from_spec(&spec).unwrap());
+        let (params, x, y) = random_batch(&bk, 64, 99);
+        let gamma = vec![1.0f32; 64];
+        let mom = vec![0.01f32; params.len()];
+        let mut z = vec![0.0f32; params.len()];
+        let mut zrng = Rng::new(5);
+        zrng.rademacher_fill(&mut z);
+        let run = |t: usize| {
+            pool::with_threads(t, || {
+                let s = bk.train_step(&params, &mom, &x, &y, &gamma, 0.05, 1e-4).unwrap();
+                let (g, a, l) = bk.grad_embed(&params, &x, &y).unwrap();
+                let p = bk.hess_probe(&params, &x, &y, &z).unwrap();
+                (s.params, s.momentum, s.per_ex_loss, g, a, l, p.hz, p.grad)
+            })
+        };
+        let base = run(1);
+        for t in [2, 4] {
+            assert_eq!(base, run(t), "thread count {t} changed backend results");
+        }
     }
 
     #[test]

@@ -1,0 +1,368 @@
+//! Dependency-free thread pool: scoped workers over chunked work queues.
+//!
+//! The offline registry carries no rayon, so the hot paths fan out through
+//! this module instead: `std::thread::scope` workers claim work from a
+//! shared counter or queue, and every reduction primitive uses chunk
+//! boundaries that depend only on the problem size — never on the thread
+//! count — so results are bitwise-identical at `--threads 1` and
+//! `--threads N` (deterministic f32 summation order).
+//!
+//! Configuration: the `CREST_THREADS` env var or [`set_threads`] (the
+//! `crest` binary wires `--threads` to it); default is the machine's
+//! available parallelism. Nested use is safe: primitives invoked from
+//! inside a pool worker run inline on that worker, so parallel callers
+//! (e.g. the coordinator's per-subset selection) never oversubscribe.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Configured global worker count; 0 = not yet resolved from the env.
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Serializes [`with_threads`] sections so concurrent tests that flip the
+/// global count cannot interleave their set/restore pairs.
+static CONFIG_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// True on pool worker threads: nested primitives run inline there.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn default_threads() -> usize {
+    std::env::var("CREST_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// The global worker count (resolved from `CREST_THREADS` / core count on
+/// first use, overridable via [`set_threads`]).
+pub fn threads() -> usize {
+    let t = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let resolved = default_threads();
+    let _ = GLOBAL_THREADS.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
+    GLOBAL_THREADS.load(Ordering::Relaxed)
+}
+
+/// Override the global worker count (the `--threads` CLI flag).
+pub fn set_threads(n: usize) {
+    GLOBAL_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Run `f` with the global worker count pinned to `n`, restoring the
+/// previous count afterwards (even on panic). Sections are serialized, so
+/// determinism tests comparing thread counts cannot race each other.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let _guard = CONFIG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    with_threads_unlocked(n, f)
+}
+
+/// Core of [`with_threads`]; the caller must hold [`CONFIG_LOCK`].
+fn with_threads_unlocked<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            GLOBAL_THREADS.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore(threads());
+    set_threads(n);
+    f()
+}
+
+/// A worker-count handle; all primitives spawn scoped threads per call, so
+/// the pool itself holds no state beyond the count.
+#[derive(Debug, Clone, Copy)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    pub fn new(threads: usize) -> Pool {
+        Pool { threads: threads.max(1) }
+    }
+
+    /// Pool at the configured global worker count.
+    pub fn global() -> Pool {
+        Pool::new(threads())
+    }
+
+    /// Single-worker pool: primitives run inline, in chunk order.
+    pub fn serial() -> Pool {
+        Pool::new(1)
+    }
+
+    /// Global pool when `work` (caller-defined op units) amortizes the
+    /// scoped-thread spawn cost, else the inline serial pool. Because every
+    /// primitive is chunk-deterministic, gating only affects speed.
+    pub fn gated(work: usize, min_work: usize) -> Pool {
+        if work >= min_work {
+            Pool::global()
+        } else {
+            Pool::serial()
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Worker count actually used for `jobs` units of work: 1 when inside a
+    /// pool worker already (inline nesting) or when there is nothing to
+    /// share.
+    fn effective(&self, jobs: usize) -> usize {
+        if jobs <= 1 || IN_POOL.with(|c| c.get()) {
+            1
+        } else {
+            self.threads.min(jobs)
+        }
+    }
+
+    /// Execute `f(i)` for every `i` in `0..n`; indices are claimed
+    /// dynamically, so `f` must be safe to run concurrently for distinct
+    /// `i` (and must not care about execution order).
+    pub fn for_each(&self, n: usize, f: impl Fn(usize) + Sync) {
+        let t = self.effective(n);
+        if t <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..t {
+                scope.spawn(|| {
+                    IN_POOL.with(|c| c.set(true));
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(i);
+                    }
+                });
+            }
+        });
+    }
+
+    /// `f` over `0..n` with results returned in index order.
+    pub fn map<R: Send>(&self, n: usize, f: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        if self.effective(n) <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.for_each(n, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("pool map slot unfilled"))
+            .collect()
+    }
+
+    /// Map fixed-size chunks of `0..n` and return the per-chunk results in
+    /// chunk order. Boundaries depend only on `n` and `chunk`, never on the
+    /// thread count — fold the returned vec sequentially for a reduction
+    /// that is bitwise-identical at any worker count.
+    pub fn map_chunks<R: Send>(
+        &self,
+        n: usize,
+        chunk: usize,
+        f: impl Fn(Range<usize>) -> R + Sync,
+    ) -> Vec<R> {
+        assert!(chunk > 0, "map_chunks: chunk must be positive");
+        let n_chunks = n.div_ceil(chunk);
+        self.map(n_chunks, |c| f(c * chunk..((c + 1) * chunk).min(n)))
+    }
+
+    /// Drain `jobs` across the workers (each job runs exactly once; order
+    /// is unspecified on the parallel path).
+    fn run_queue<J: Send>(&self, mut jobs: Vec<J>, f: impl Fn(J) + Sync) {
+        let t = self.effective(jobs.len());
+        if t <= 1 {
+            for j in jobs.drain(..) {
+                f(j);
+            }
+            return;
+        }
+        let queue = Mutex::new(jobs);
+        std::thread::scope(|scope| {
+            for _ in 0..t {
+                scope.spawn(|| {
+                    IN_POOL.with(|c| c.set(true));
+                    loop {
+                        let job = queue.lock().unwrap().pop();
+                        match job {
+                            Some(j) => f(j),
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// Partition a row-major buffer (`cols` elements per row) into chunks
+    /// of `grain` rows and run `f(first_row, rows_slice)` on each. Every
+    /// row is written by exactly one worker, so per-row computations are
+    /// thread-count independent by construction.
+    pub fn for_rows<T: Send>(
+        &self,
+        data: &mut [T],
+        cols: usize,
+        grain: usize,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        assert!(cols > 0 && grain > 0, "for_rows: cols/grain must be positive");
+        debug_assert_eq!(data.len() % cols, 0);
+        let jobs: Vec<(usize, &mut [T])> = data
+            .chunks_mut(grain * cols)
+            .enumerate()
+            .map(|(c, chunk)| (c * grain, chunk))
+            .collect();
+        self.run_queue(jobs, |(row0, chunk)| f(row0, chunk));
+    }
+
+    /// [`Pool::for_rows`] over two buffers sharing the same row count,
+    /// partitioned on identical row boundaries.
+    pub fn for_rows2<A: Send, B: Send>(
+        &self,
+        a: &mut [A],
+        acols: usize,
+        b: &mut [B],
+        bcols: usize,
+        grain: usize,
+        f: impl Fn(usize, &mut [A], &mut [B]) + Sync,
+    ) {
+        assert!(acols > 0 && bcols > 0 && grain > 0);
+        debug_assert_eq!(a.len() / acols, b.len() / bcols);
+        let jobs: Vec<(usize, &mut [A], &mut [B])> = a
+            .chunks_mut(grain * acols)
+            .zip(b.chunks_mut(grain * bcols))
+            .enumerate()
+            .map(|(c, (ca, cb))| (c * grain, ca, cb))
+            .collect();
+        self.run_queue(jobs, |(row0, ca, cb)| f(row0, ca, cb));
+    }
+
+    /// [`Pool::for_rows`] over three buffers sharing the same row count.
+    pub fn for_rows3<A: Send, B: Send, C: Send>(
+        &self,
+        a: &mut [A],
+        acols: usize,
+        b: &mut [B],
+        bcols: usize,
+        c: &mut [C],
+        ccols: usize,
+        grain: usize,
+        f: impl Fn(usize, &mut [A], &mut [B], &mut [C]) + Sync,
+    ) {
+        assert!(acols > 0 && bcols > 0 && ccols > 0 && grain > 0);
+        debug_assert_eq!(a.len() / acols, b.len() / bcols);
+        debug_assert_eq!(a.len() / acols, c.len() / ccols);
+        let jobs: Vec<(usize, &mut [A], &mut [B], &mut [C])> = a
+            .chunks_mut(grain * acols)
+            .zip(b.chunks_mut(grain * bcols))
+            .zip(c.chunks_mut(grain * ccols))
+            .enumerate()
+            .map(|(i, ((ca, cb), cc))| (i * grain, ca, cb, cc))
+            .collect();
+        self.run_queue(jobs, |(row0, ca, cb, cc)| f(row0, ca, cb, cc));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_index_order() {
+        for t in [1, 4] {
+            let out = Pool::new(t).map(100, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn for_rows_touches_every_row_once() {
+        // 7 rows of 3 with grain 2 -> ragged last chunk
+        let mut data = vec![0u32; 7 * 3];
+        Pool::new(4).for_rows(&mut data, 3, 2, |row0, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v += (row0 * 3 + k) as u32 + 1;
+            }
+        });
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, k as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn for_rows2_partitions_consistently() {
+        let mut a = vec![0usize; 5];
+        let mut b = vec![0usize; 10]; // 5 rows of 2
+        Pool::new(2).for_rows2(&mut a, 1, &mut b, 2, 2, |row0, ca, cb| {
+            for (k, v) in ca.iter_mut().enumerate() {
+                *v = row0 + k;
+            }
+            for (k, v) in cb.iter_mut().enumerate() {
+                *v = row0 * 2 + k;
+            }
+        });
+        assert_eq!(a, vec![0, 1, 2, 3, 4]);
+        assert_eq!(b, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunks_covers_range_exactly() {
+        let parts = Pool::new(3).map_chunks(10, 4, |r| r);
+        assert_eq!(parts, vec![0..4, 4..8, 8..10]);
+        assert!(Pool::new(2).map_chunks(0, 4, |r| r).is_empty());
+    }
+
+    #[test]
+    fn chunked_sum_bitwise_identical_across_thread_counts() {
+        let xs: Vec<f32> =
+            (0..10_000).map(|i| ((i * 2_654_435_761_usize) as f32).sin() * 1e3).collect();
+        let sum = |p: &Pool| -> f32 {
+            p.map_chunks(xs.len(), 256, |r| xs[r].iter().sum::<f32>()).into_iter().sum()
+        };
+        let s1 = sum(&Pool::new(1));
+        for t in [2, 3, 8] {
+            assert_eq!(s1.to_bits(), sum(&Pool::new(t)).to_bits(), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let out = Pool::new(4).map(8, |i| {
+            Pool::global().map_chunks(100, 10, |r| r.len()).into_iter().sum::<usize>() + i
+        });
+        assert_eq!(out, (0..8).map(|i| 100 + i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn with_threads_restores_previous_count() {
+        // hold the config lock across the before/after reads so concurrent
+        // with_threads sections in other tests cannot flip the global
+        let _guard = CONFIG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let before = threads();
+        let inside = with_threads_unlocked(3, threads);
+        assert_eq!(inside, 3);
+        assert_eq!(threads(), before);
+    }
+
+    #[test]
+    fn gated_pool_selects_by_work() {
+        let _guard = CONFIG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        assert_eq!(Pool::gated(10, 100).threads(), 1);
+        assert_eq!(Pool::gated(100, 100).threads(), threads());
+    }
+}

@@ -315,3 +315,54 @@ fn deterministic_given_seed() {
     assert_eq!(a.n_selection_updates, b.n_selection_updates);
     assert_eq!(a.update_steps, b.update_steps);
 }
+
+#[test]
+fn backend_results_bitwise_identical_across_thread_counts() {
+    // the parallel execution layer's contract: fixed chunk boundaries make
+    // train_step / grad_embed / facility selection reproduce exactly at any
+    // worker count (paper-scale shapes, so the parallel paths engage)
+    use crest::util::pool;
+    let (rt, splits) = load();
+    let ds = &splits.train;
+    let mut rng = Rng::new(31);
+    let params = init_params(&rt.man, &mut rng);
+    let mom = rt.zero_momentum();
+    let midx: Vec<usize> = (0..rt.man.m).collect();
+    let (mx, my) = ds.batch(&midx);
+    let gamma = vec![1.0f32; rt.man.m];
+    let ridx: Vec<usize> = (0..rt.man.r).collect();
+    let (rx, ry) = ds.batch(&ridx);
+    let run = |t: usize| {
+        pool::with_threads(t, || {
+            let s = rt.train_step(&params, &mom, &mx, &my, &gamma, 0.05, 5e-4).unwrap();
+            let (g, a, l) = rt.grad_embed(&params, &rx, &ry).unwrap();
+            let sel = facility::facility_location_prod(&a, &g, rt.man.m);
+            (s.params, s.momentum, g, a, l, sel.idx, sel.gamma)
+        })
+    };
+    let base = run(1);
+    for t in [2, 4] {
+        assert_eq!(base, run(t), "thread count {t} changed runtime results");
+    }
+}
+
+#[test]
+fn crest_selection_threads_do_not_change_results() {
+    // regression for the coordinator's multi-threaded selection path: the
+    // per-subset pool fan-out (selection_threads > 1) must reproduce the
+    // serial path exactly
+    let (rt, splits) = load_smoke();
+    let run = |threads: usize| {
+        let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 5).unwrap();
+        cfg.epochs_full = 3;
+        cfg.selection_threads = threads;
+        run_experiment(&rt, &splits, cfg).unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a.final_test_acc, b.final_test_acc);
+    assert_eq!(a.final_test_loss, b.final_test_loss);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.n_selection_updates, b.n_selection_updates);
+    assert_eq!(a.update_steps, b.update_steps);
+}
