@@ -1,16 +1,23 @@
 //! Table 1 — Relative error (%) of each method vs full-data training at a
 //! 10% budget, per variant, plus the tuned (τ, h) pairs (Table 6).
 //!
+//! Runs as one sweep through the orchestrator (`crest::sweep`): the full
+//! (variant × method × seed) grid is scheduled over the thread pool, can
+//! resume from per-cell checkpoints (`CREST_SWEEP_CKPT=<dir>`), and the
+//! mean±std rel-err cells come from the sweep aggregator.
+//!
 //! Expected shape (paper): CREST ≤ Random < GRADMATCH < CRAIG, GLISTER
 //! worst; SGD† well above Random.
 
 use crest::bench_util::scenario as sc;
 use crest::config::MethodKind;
 use crest::report::Table;
+use crest::sweep::{self, SweepGrid, SweepSpec};
 use crest::util::stats;
 
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
+    // column order of the paper's Table 1
     let methods = [
         MethodKind::SgdTruncated,
         MethodKind::Random,
@@ -19,25 +26,49 @@ fn main() -> anyhow::Result<()> {
         MethodKind::Glister,
         MethodKind::Crest,
     ];
-    println!("# Table 1 — relative error (%) @ 10% budget (mean±std over {} seeds)",
-             sc::seeds().len());
+    let variants: Vec<String> = sc::variants().into_iter().filter(|v| sc::known(v)).collect();
+    if variants.is_empty() {
+        return Ok(());
+    }
+
+    // one grid: the full reference plus every method, all seeds
+    let mut grid_methods = vec![MethodKind::Full];
+    grid_methods.extend(methods);
+    let mut spec = SweepSpec::new(
+        SweepGrid {
+            variants: variants.clone(),
+            methods: grid_methods,
+            seeds: sc::seeds(),
+            budgets: vec![0.1],
+        },
+        sc::epochs_full(),
+    );
+    spec.artifact_root = sc::artifact_root();
+    spec.checkpoint_dir = sc::checkpoint_dir();
+    let outcome = sweep::run(&spec)?;
+
+    println!(
+        "# Table 1 — relative error (%) @ 10% budget (mean±std over {} seeds)",
+        sc::seeds().len()
+    );
     let mut table = Table::new(&[
         "variant", "sgd†", "random", "craig", "gradmatch", "glister", "crest", "full acc",
     ]);
-    for variant in sc::variants() {
-        let mut rel: Vec<Vec<f32>> = vec![Vec::new(); methods.len()];
-        let mut full_accs = Vec::new();
-        for seed in sc::seeds() {
-            let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
-            let full = sc::cell(&rt, &splits, &variant, MethodKind::Full, seed, |_| {})?;
-            full_accs.push(full.final_test_acc * 100.0);
-            for (mi, &method) in methods.iter().enumerate() {
-                let rep = sc::cell(&rt, &splits, &variant, method, seed, |_| {})?;
-                rel[mi].push(sc::rel_err(rep.final_test_acc, full.final_test_acc));
-            }
-        }
+    for variant in &variants {
         let mut row = vec![variant.clone()];
-        row.extend(rel.iter().map(|v| sc::fmt_mean_std(v)));
+        for method in &methods {
+            let cell = outcome
+                .rows
+                .iter()
+                .find(|r| r.variant == *variant && r.method == method.name());
+            row.push(cell.map(|r| r.fmt_rel_err()).unwrap_or_else(|| "-".to_string()));
+        }
+        let full_accs: Vec<f32> = outcome
+            .cells
+            .iter()
+            .filter(|c| c.key.variant == *variant && c.key.method == MethodKind::Full)
+            .map(|c| c.report.final_test_acc * 100.0)
+            .collect();
         row.push(format!("{:.2}", stats::mean(&full_accs)));
         table.row(&row);
     }
@@ -45,8 +76,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n# Table 6 — tuned hyperparameters per variant");
     let mut t6 = Table::new(&["variant", "tau", "h"]);
-    for variant in sc::variants() {
-        let cfg = crest::config::ExperimentConfig::preset(&variant, MethodKind::Crest, 0)?;
+    for variant in &variants {
+        let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Crest, 0)?;
         t6.row(&[variant.clone(), format!("{}", cfg.tau), format!("{}", cfg.h_mult)]);
     }
     print!("{}", t6.render());

@@ -2,6 +2,10 @@
 //! cifar100 proxy: per-mini-batch selection (CREST vs CRAIG-style
 //! full-data selection), quadratic loss approximation, and ρ-check.
 //!
+//! The CREST cell runs through the sweep orchestrator, so it can be
+//! restored from a checkpoint (`CREST_SWEEP_CKPT=<dir>`) instead of
+//! re-training; the micro selection timings always run live.
+//!
 //! Expected shape (paper): CREST selection ≫ faster than CRAIG selection;
 //! the ρ-check is the most expensive CREST component.
 
@@ -15,6 +19,7 @@ use crest::coreset::MiniBatchCoreset;
 use crest::model::init_params;
 use crest::report::Table;
 use crest::runtime::Runtime;
+use crest::sweep::{self, SweepGrid, SweepSpec};
 use crest::train::TrainState;
 use crest::util::rng::Rng;
 
@@ -54,8 +59,21 @@ fn main() -> anyhow::Result<()> {
     let Some((rt, splits)) = sc::load(variant, 1) else { return Ok(()) };
     let (crest_sel, craig_sel) = crest_selection_time(&rt, &splits)?;
 
-    // loss approximation + checking threshold measured inside a real run
-    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, 1, |_| {})?;
+    // loss approximation + checking threshold measured inside a real run,
+    // scheduled (and optionally checkpointed) through the sweep orchestrator
+    let mut spec = SweepSpec::new(
+        SweepGrid {
+            variants: vec![variant.to_string()],
+            methods: vec![MethodKind::Crest],
+            seeds: vec![1],
+            budgets: vec![0.1],
+        },
+        sc::epochs_full(),
+    );
+    spec.artifact_root = sc::artifact_root();
+    spec.checkpoint_dir = sc::checkpoint_dir();
+    let outcome = sweep::run(&spec)?;
+    let rep = &outcome.cells[0].report;
     let n_up = rep.n_selection_updates.max(1) as f64;
     let n_checks = rep.rho_history.len().max(1) as f64;
 

@@ -28,19 +28,26 @@ use crate::util::stats;
 /// Result of one measured benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name (`section/op` style).
     pub name: String,
+    /// Measured repetitions.
     pub reps: usize,
+    /// Median absolute deviation of the measured reps.
     pub mad_secs: f64,
+    /// Mean of the measured reps.
     pub mean_secs: f64,
+    /// Fastest measured rep.
     pub min_secs: f64,
     /// Median of the measured reps.
     pub p50_secs: f64,
+    /// 95th percentile of the measured reps.
     pub p95_secs: f64,
     /// Pool worker count the bench ran with.
     pub threads: usize,
 }
 
 impl BenchResult {
+    /// One fixed-width human-readable result line.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>10} {:>12} {:>14} {:>12}",
@@ -154,13 +161,24 @@ pub fn flush_json() -> Result<()> {
     }
 }
 
-/// Env-independent core of [`flush_json`] (drains the record queue). An
-/// unreadable or corrupt existing file (e.g. a truncated write from a
-/// killed run) starts a fresh array instead of failing the bench.
+/// Env-independent core of [`flush_json`] (drains the record queue).
 pub fn flush_json_to(path: &Path) -> Result<()> {
+    let drained: Vec<Json> = std::mem::take(&mut *RECORDS.lock().unwrap());
+    let n_new = append_json_records(path, drained)?;
+    println!("[bench] appended {n_new} perf records to {}", path.display());
+    Ok(())
+}
+
+/// Append `records` to the JSON array at `path`, merging with existing
+/// content; returns how many records were appended. The shared
+/// append-merge primitive behind `CREST_BENCH_JSON` and `crest sweep
+/// --out`, so perf records and sweep aggregates can share one trajectory
+/// file. An unreadable or corrupt existing file (e.g. a truncated write
+/// from a killed run) starts a fresh array instead of failing the caller.
+pub fn append_json_records(path: &Path, records: Vec<Json>) -> Result<usize> {
     let mut all: Vec<Json> = match std::fs::read_to_string(path) {
         Ok(text) => match Json::parse(&text).and_then(|j| Ok(j.as_arr()?.to_vec())) {
-            Ok(records) => records,
+            Ok(existing) => existing,
             Err(e) => {
                 eprintln!(
                     "[bench] {}: existing trajectory unreadable ({e:#}); starting fresh",
@@ -171,12 +189,12 @@ pub fn flush_json_to(path: &Path) -> Result<()> {
         },
         Err(_) => Vec::new(),
     };
-    let drained: Vec<Json> = std::mem::take(&mut *RECORDS.lock().unwrap());
-    let n_new = drained.len();
-    all.extend(drained);
-    std::fs::write(path, Json::Arr(all).to_string_pretty())?;
-    println!("[bench] appended {n_new} perf records to {}", path.display());
-    Ok(())
+    let n_new = records.len();
+    all.extend(records);
+    // atomic write: a kill mid-write must never truncate the accumulated
+    // trajectory (a truncated file would "start fresh" above)
+    crate::util::json::write_atomic(path, &Json::Arr(all))?;
+    Ok(n_new)
 }
 
 /// Print a section header in bench output.
@@ -224,6 +242,22 @@ mod tests {
         {
             assert!(j.get(key).is_some(), "to_json missing {key}");
         }
+    }
+
+    #[test]
+    fn append_json_records_merges_arbitrary_records() {
+        let dir = std::env::temp_dir().join("crest-bench-json-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("merge.json");
+        let _ = std::fs::remove_file(&path);
+        let n = append_json_records(&path, vec![Json::obj().set("name", "sweep/x")]).unwrap();
+        assert_eq!(n, 1);
+        append_json_records(&path, vec![Json::obj().set("name", "perf/y")]).unwrap();
+        let arr = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = arr.as_arr().unwrap();
+        assert_eq!(arr.len(), 2, "records from separate callers merge into one array");
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "sweep/x");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

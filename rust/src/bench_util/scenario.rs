@@ -24,24 +24,53 @@ use crate::report::RunReport;
 use crate::runtime::Runtime;
 use crate::util::stats;
 
+/// Artifact root (`CREST_ARTIFACTS`, default `artifacts`).
 pub fn artifact_root() -> PathBuf {
     std::env::var("CREST_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
 }
 
+/// Seeds per cell (`CREST_BENCH_SEEDS`; 3 at full scale, else 2).
 pub fn seeds() -> Vec<u64> {
     let n: usize = std::env::var("CREST_BENCH_SEEDS").ok().and_then(|s| s.parse().ok())
         .unwrap_or(if full_scale() { 3 } else { 2 });
     (1..=n as u64).collect()
 }
 
+/// Full-run reference epochs (`CREST_BENCH_EPOCHS`, default 50).
 pub fn epochs_full() -> usize {
     std::env::var("CREST_BENCH_EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(50)
 }
 
+/// True under `CREST_BENCH_FULL` (all variants, 3 seeds).
 pub fn full_scale() -> bool {
     std::env::var("CREST_BENCH_FULL").is_ok()
 }
 
+/// Sweep checkpoint directory for resumable benches (`CREST_SWEEP_CKPT`);
+/// `None` (fresh cells every run) when unset.
+pub fn checkpoint_dir() -> Option<PathBuf> {
+    std::env::var("CREST_SWEEP_CKPT").ok().map(PathBuf::from)
+}
+
+/// True when `variant` has both a loadable runtime and a synthetic
+/// preset; prints a `[skip]` notice otherwise, so benches can filter
+/// unknown variant names and still exit 0 (the historical contract).
+pub fn known(variant: &str) -> bool {
+    if SynthSpec::preset(variant, 1).is_none() {
+        println!("[skip] {variant}: no synthetic preset");
+        return false;
+    }
+    match Runtime::load(&artifact_root(), variant) {
+        Ok(_) => true,
+        Err(e) => {
+            println!("[skip] {variant}: no runtime available ({e:#})");
+            false
+        }
+    }
+}
+
+/// Variant list: `CREST_BENCH_VARIANTS`, else all four at full scale,
+/// else the two headline proxies.
 pub fn variants() -> Vec<String> {
     if let Ok(v) = std::env::var("CREST_BENCH_VARIANTS") {
         return v.split(',').map(|s| s.trim().to_string()).collect();

@@ -30,6 +30,7 @@ pub enum MethodKind {
 }
 
 impl MethodKind {
+    /// Canonical CLI/report name of the method.
     pub fn name(&self) -> &'static str {
         match self {
             MethodKind::Full => "full",
@@ -43,6 +44,8 @@ impl MethodKind {
         }
     }
 
+    /// Parse a method name; accepts every canonical [`MethodKind::name`]
+    /// plus the short aliases `sgd` and `greedy`.
     pub fn parse(s: &str) -> Result<MethodKind> {
         Ok(match s {
             "full" => MethodKind::Full,
@@ -57,6 +60,7 @@ impl MethodKind {
         })
     }
 
+    /// Every method, in presentation order (paper Table 1 columns).
     pub fn all() -> &'static [MethodKind] {
         &[
             MethodKind::Full,
@@ -68,6 +72,13 @@ impl MethodKind {
             MethodKind::Glister,
             MethodKind::GreedyPerBatch,
         ]
+    }
+
+    /// Canonical method names joined with `|` for CLI help text. Generated
+    /// from [`MethodKind::all`], so the help string can never drift from
+    /// what [`MethodKind::parse`] accepts (every listed name round-trips).
+    pub fn help_names() -> String {
+        MethodKind::all().iter().map(|m| m.name()).collect::<Vec<_>>().join("|")
     }
 }
 
@@ -91,16 +102,21 @@ impl Default for CrestOptions {
 /// One experiment: a (variant, method, budget, seed) cell plus knobs.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
+    /// Model/dataset variant name (see [`ALL_VARIANTS`] plus `smoke`).
     pub variant: String,
+    /// Training method driving the run.
     pub method: MethodKind,
     /// Training budget as a fraction of the full run's backprops.
     pub budget_frac: f32,
     /// Epochs of the full-data reference run.
     pub epochs_full: usize,
+    /// Experiment seed; data, init, subsets and probes all derive from it.
     pub seed: u64,
+    /// Base learning rate of the schedule.
     pub base_lr: f32,
     /// Decoupled L2 weight decay applied inside train_step.
     pub weight_decay: f32,
+    /// Ramp momentum over the first steps (paper training setup).
     pub momentum_warmup: bool,
     // ---- CREST knobs (paper Table 6 / §5 "CREST Setup") ----
     /// ρ threshold τ.
@@ -121,9 +137,11 @@ pub struct ExperimentConfig {
     pub max_t1: usize,
     /// clamp for the number of simultaneous mini-batch coresets P.
     pub max_p: usize,
-    /// EMA parameters β₁, β₂ (Eq. 8–9).
+    /// EMA parameter β₁ (Eq. 8–9).
     pub beta1: f32,
+    /// EMA parameter β₂ (Eq. 8–9).
     pub beta2: f32,
+    /// CREST-specific ablation switches.
     pub crest: CrestOptions,
     /// LR multiplier for methods training on variance-reduced mini-batch
     /// coresets (CREST / greedy-per-batch). `None` = the Theorem 4.1 step
@@ -187,6 +205,8 @@ impl ExperimentConfig {
         self
     }
 
+    /// Serialize the tunable knobs (the subset [`ExperimentConfig::apply_json`]
+    /// can restore) for experiment bookkeeping.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("variant", self.variant.as_str())
@@ -258,6 +278,7 @@ impl ExperimentConfig {
     }
 }
 
+/// The four paper proxy variants (the tiny `smoke` test variant is extra).
 pub const ALL_VARIANTS: [&str; 4] =
     ["cifar10-proxy", "cifar100-proxy", "tinyimagenet-proxy", "snli-proxy"];
 
@@ -292,6 +313,23 @@ mod tests {
             assert_eq!(MethodKind::parse(m.name()).unwrap(), *m);
         }
         assert!(MethodKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn help_names_roundtrip_through_parse() {
+        // every name the CLI help advertises must parse back to the method
+        // whose canonical name it is — the help string cannot drift
+        let help = MethodKind::help_names();
+        for name in help.split('|') {
+            let parsed = MethodKind::parse(name).unwrap_or_else(|e| {
+                panic!("help lists {name:?} but parse rejects it: {e:#}")
+            });
+            assert_eq!(parsed.name(), name);
+        }
+        // and the help covers every method
+        for m in MethodKind::all() {
+            assert!(help.split('|').any(|n| n == m.name()), "help misses {}", m.name());
+        }
     }
 
     #[test]

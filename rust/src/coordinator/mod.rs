@@ -31,12 +31,16 @@ use sources::SelectionRecord;
 
 /// Drives one experiment run.
 pub struct Coordinator<'a> {
+    /// Execution runtime of the variant.
     pub rt: &'a Runtime,
+    /// Train/val/test data of the cell.
     pub splits: &'a Splits,
+    /// The cell configuration.
     pub cfg: ExperimentConfig,
 }
 
 impl<'a> Coordinator<'a> {
+    /// Coordinator for one experiment cell.
     pub fn new(rt: &'a Runtime, splits: &'a Splits, cfg: ExperimentConfig) -> Self {
         Coordinator { rt, splits, cfg }
     }

@@ -25,30 +25,43 @@ use crate::util::timer::PhaseTimers;
 /// What a source knows about one selection event (for Fig. 5 post-hoc).
 #[derive(Debug, Clone)]
 pub struct SelectionRecord {
+    /// Step the selection happened at.
     pub step: usize,
+    /// Global indices the round selected.
     pub selected: Vec<usize>,
 }
 
 /// One batch handed to the trainer.
 pub struct SourcedBatch {
+    /// Global example indices of the batch.
     pub idx: Vec<usize>,
+    /// Per-element weights.
     pub gamma: Vec<f32>,
+    /// Set when producing this batch ran a selection round.
     pub selection: Option<SelectionRecord>,
 }
 
 /// Aggregate statistics a source reports at the end of the run.
 #[derive(Debug, Clone, Default)]
 pub struct SourceStats {
+    /// Selection rounds performed.
     pub n_updates: usize,
+    /// Examples excluded as learned.
     pub n_excluded: usize,
     /// indices currently excluded as learned (Fig. 7a analysis)
     pub excluded_indices: Vec<usize>,
+    /// (step, ρ) at each threshold check.
     pub rho_history: Vec<(usize, f32)>,
+    /// (step, T₁) after each adaptation.
     pub t1_history: Vec<(usize, usize)>,
+    /// Steps at which a selection update ran.
     pub update_steps: Vec<usize>,
 }
 
+/// A training-batch producer; one implementation per method.
 pub trait BatchSource {
+    /// Produce the next weighted mini-batch (running a selection round
+    /// first when the method calls for one).
     fn next_batch(
         &mut self,
         step: usize,
@@ -68,6 +81,7 @@ pub trait BatchSource {
         Ok(())
     }
 
+    /// Aggregate statistics for the run report.
     fn stats(&self) -> SourceStats;
 }
 
@@ -366,6 +380,7 @@ pub struct CrestSource<'a> {
 }
 
 impl<'a> CrestSource<'a> {
+    /// CREST source for one cell (Algorithm 1 state).
     pub fn new(
         cfg: &ExperimentConfig,
         rt: &'a Runtime,

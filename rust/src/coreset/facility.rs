@@ -56,7 +56,9 @@ fn chunked_sum(n: usize, part: impl Fn(Range<usize>) -> f32 + Sync) -> f32 {
 /// Result of one selection: indices into the ground set + gamma weights.
 #[derive(Debug, Clone)]
 pub struct Selection {
+    /// Selected positions within the ground set.
     pub idx: Vec<usize>,
+    /// Per-medoid cluster-size weights (unnormalized).
     pub gamma: Vec<f32>,
 }
 
@@ -123,8 +125,11 @@ fn dot4(a: &[f32], b: &[f32]) -> f32 {
 /// A squared-distance metric over a ground set of embeddings. `Sync` so
 /// the gain scans can share the metric across pool workers.
 pub trait SqDistMetric: Sync {
+    /// Size of the ground set.
     fn len(&self) -> usize;
+    /// Squared distance between ground-set elements `i` and `j`.
     fn sqdist(&self, i: usize, j: usize) -> f32;
+    /// True when the ground set is empty.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -138,6 +143,7 @@ pub struct EuclidMetric<'a> {
 }
 
 impl<'a> EuclidMetric<'a> {
+    /// Metric over the rows of `g`, precomputing the squared norms.
     pub fn new(g: &'a MatF32) -> Self {
         let sq = (0..g.rows)
             .map(|i| g.row(i).iter().map(|&v| v * v).sum::<f32>())
@@ -169,6 +175,7 @@ pub struct ProdMetric<'a> {
 }
 
 impl<'a> ProdMetric<'a> {
+    /// Metric over paired activation (`a`) and logit-gradient (`g`) rows.
     pub fn new(a: &'a MatF32, g: &'a MatF32) -> Self {
         assert_eq!(a.rows, g.rows, "ProdMetric: row mismatch");
         let sq = (0..a.rows)

@@ -17,7 +17,9 @@ pub use facility::{coverage_cost, facility_location, Selection};
 /// estimator (mean gamma = 1).
 #[derive(Debug, Clone)]
 pub struct MiniBatchCoreset {
+    /// Global example indices of the coreset.
     pub idx: Vec<usize>,
+    /// Per-element weights (mean 1 over the batch).
     pub gamma: Vec<f32>,
 }
 

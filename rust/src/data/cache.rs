@@ -26,6 +26,7 @@ use crate::tensor::MatF32;
 
 const MAGIC: &[u8; 8] = b"CRSTDS1\0";
 
+/// Write a dataset to the binary cache format at `path`.
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
     w.write_all(MAGIC)?;
@@ -51,6 +52,7 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Read a dataset written by [`save`].
 pub fn load(path: &Path) -> Result<Dataset> {
     let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut magic = [0u8; 8];

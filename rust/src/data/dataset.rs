@@ -13,6 +13,7 @@ pub struct Dataset {
     pub x: MatF32,
     /// Integer class labels.
     pub y: Vec<i32>,
+    /// Number of classes.
     pub classes: usize,
     /// Ground-truth difficulty in [0, 1] (0 = easiest): distance of the
     /// example from its cluster center relative to class margin.
@@ -24,10 +25,12 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Number of examples.
     pub fn n(&self) -> usize {
         self.x.rows
     }
 
+    /// Feature dimensionality.
     pub fn d(&self) -> usize {
         self.x.cols
     }
@@ -62,8 +65,11 @@ impl Dataset {
 /// Train/validation/test partition of one generated corpus.
 #[derive(Debug, Clone)]
 pub struct Splits {
+    /// Training split.
     pub train: Dataset,
+    /// Validation split (GLISTER's reference set).
     pub val: Dataset,
+    /// Held-out test split.
     pub test: Dataset,
 }
 

@@ -18,7 +18,9 @@ use crate::util::rng::Rng;
 pub struct Batch {
     /// Source example indices (for loss/forgettability bookkeeping).
     pub idx: Vec<usize>,
+    /// Batch features.
     pub x: MatF32,
+    /// Batch labels.
     pub y: Vec<i32>,
 }
 

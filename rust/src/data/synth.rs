@@ -22,11 +22,17 @@ use crate::util::rng::Rng;
 /// Generation parameters for one corpus.
 #[derive(Debug, Clone)]
 pub struct SynthSpec {
+    /// Variant name the spec mirrors.
     pub name: &'static str,
+    /// Training examples.
     pub n_train: usize,
+    /// Validation examples.
     pub n_val: usize,
+    /// Test examples.
     pub n_test: usize,
+    /// Feature dimensionality.
     pub d: usize,
+    /// Number of classes.
     pub classes: usize,
     /// Sub-clusters per class (redundancy structure).
     pub clusters_per_class: usize,
@@ -40,6 +46,7 @@ pub struct SynthSpec {
     pub easy_sigma: f32,
     /// Spread of hard examples.
     pub hard_sigma: f32,
+    /// Generation seed (independent of the training seed streams).
     pub seed: u64,
 }
 

@@ -19,6 +19,9 @@ pub struct ExclusionTracker {
 }
 
 impl ExclusionTracker {
+    /// Tracker over `n` examples with exclusion threshold `alpha`;
+    /// `enabled = false` makes every call a no-op (the w/o-excluding
+    /// ablation).
     pub fn new(n: usize, alpha: f32, enabled: bool) -> Self {
         ExclusionTracker {
             alpha,
@@ -68,10 +71,12 @@ impl ExclusionTracker {
         newly
     }
 
+    /// Whether example `idx` is currently excluded as learned.
     pub fn is_excluded(&self, idx: usize) -> bool {
         self.excluded[idx]
     }
 
+    /// Total examples excluded so far.
     pub fn n_excluded(&self) -> usize {
         self.n_excluded
     }

@@ -18,7 +18,11 @@
 //!   through XLA/PJRT. Requires an `xla` crate dependency and the built
 //!   artifacts; Python still never runs on the training path.
 //!
-//! See the top-level `README.md` for build and test instructions.
+//! See the top-level `README.md` for build and test instructions, and
+//! `ARCHITECTURE.md` for the layer map (runtime backends → selection
+//! algorithms → coordinator/sweep orchestration → CLI/report).
+
+#![warn(missing_docs)]
 
 pub mod bench_util;
 pub mod config;
@@ -33,6 +37,7 @@ pub mod prop;
 pub mod quadratic;
 pub mod report;
 pub mod runtime;
+pub mod sweep;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   train    run one method on one variant and print the run report
 //!   compare  run several methods on one variant (Table-1-style rows)
+//!   sweep    run a resumable (variant × method × seed × budget) grid
+//!            with per-cell checkpoints and mean±std aggregate tables
 //!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
 //!
@@ -12,18 +14,22 @@
 //! Example:
 //!   crest train --variant cifar10-proxy --method crest --seed 1
 //!   crest compare --variant cifar10-proxy --methods crest,random,craig
+//!   crest sweep --variant smoke --methods crest,random --seeds 1,2 --out sweep.json
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crest::bench_util;
 use crest::config::{ExperimentConfig, MethodKind};
 use crest::coordinator::run_experiment;
 use crest::data::{cache, generate, SynthSpec};
 use crest::metrics::relative_error_pct;
-use crest::report::Table;
+use crest::report::{aggregate_markdown, Table};
 use crest::runtime::Runtime;
+use crest::sweep::{self, SweepGrid, SweepSpec};
 use crest::util::cli::{Cli, Parsed};
+use crest::util::json::Json;
 use crest::util::logging;
 use crest::util::pool;
 
@@ -50,23 +56,28 @@ fn main() -> Result<()> {
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!("usage: crest <train|compare|inspect|gen-data> [flags] (--help per command)");
+            eprintln!(
+                "usage: crest <train|compare|sweep|inspect|gen-data> [flags] (--help per command)"
+            );
             std::process::exit(2);
         }
     };
     match cmd {
         "train" => cmd_train(&rest),
         "compare" => cmd_compare(&rest),
+        "sweep" => cmd_sweep(&rest),
         "inspect" => cmd_inspect(&rest),
         "gen-data" => cmd_gen_data(&rest),
-        _ => bail!("unknown command {cmd:?} (train|compare|inspect|gen-data)"),
+        _ => bail!("unknown command {cmd:?} (train|compare|sweep|inspect|gen-data)"),
     }
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = Cli::new("crest train", "run one method on one variant")
         .opt("variant", "cifar10-proxy", "model/dataset variant")
-        .opt("method", "crest", "full|random|sgd|crest|craig|gradmatch|glister|greedy")
+        // generated from MethodKind::all() so the help cannot drift from
+        // what MethodKind::parse accepts (see config.rs round-trip test)
+        .opt("method", "crest", MethodKind::help_names())
         .opt("seed", "1", "experiment seed")
         .opt("budget", "0.1", "training budget as a fraction of full")
         .opt("epochs-full", "60", "epochs of the full reference run")
@@ -173,6 +184,61 @@ fn cmd_compare(args: &[String]) -> Result<()> {
         ]);
     }
     print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let p = Cli::new("crest sweep", "run a resumable (variant × method × seed × budget) grid")
+        .opt("variant", "cifar10-proxy", "comma-separated variant list")
+        .opt(
+            "methods",
+            "full,random,crest",
+            format!("comma-separated method list ({})", MethodKind::help_names()),
+        )
+        .opt("seeds", "1,2", "comma-separated seed list (the mean±std axis)")
+        .opt("budgets", "0.1", "comma-separated budget fractions")
+        .opt("epochs-full", "60", "epochs of the full reference run")
+        .opt("artifacts", "artifacts", "artifact root directory")
+        .opt(
+            "checkpoint-dir",
+            "sweep-ckpt",
+            "per-cell checkpoint directory (resume skips completed cells)",
+        )
+        .flag("no-checkpoint", "disable the on-disk checkpoint store")
+        .opt_maybe("jobs", "cells scheduled concurrently (default: auto from pool worker count)")
+        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
+        .opt_maybe("out", "append the aggregate rows to this JSON trajectory file")
+        .parse(args)?;
+    apply_threads(&p)?;
+
+    let grid = SweepGrid {
+        variants: sweep::grid::parse_variants(&p.str("variant"))?,
+        methods: sweep::grid::parse_methods(&p.str("methods"))?,
+        seeds: sweep::grid::parse_seeds(&p.str("seeds"))?,
+        budgets: sweep::grid::parse_budgets(&p.str("budgets"))?,
+    };
+    let mut spec = SweepSpec::new(grid, p.usize("epochs-full")?);
+    spec.artifact_root = artifact_root(&p.str("artifacts"));
+    if !p.bool("no-checkpoint") {
+        spec.checkpoint_dir = Some(PathBuf::from(p.str("checkpoint-dir")));
+    }
+    if let Some(j) = p.get("jobs") {
+        spec.jobs = j.parse().context("parsing --jobs")?;
+    }
+
+    let outcome = sweep::run(&spec)?;
+    println!(
+        "# sweep: {} cells ({} executed, {} restored from checkpoints)",
+        outcome.cells.len(),
+        outcome.n_executed(),
+        outcome.n_restored()
+    );
+    print!("{}", aggregate_markdown(&outcome.rows));
+    if let Some(out) = p.get("out") {
+        let records: Vec<Json> = outcome.rows.iter().map(|r| r.to_json()).collect();
+        let n = bench_util::append_json_records(Path::new(out), records)?;
+        println!("appended {n} aggregate rows to {out}");
+    }
     Ok(())
 }
 

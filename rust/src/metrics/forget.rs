@@ -17,6 +17,7 @@ pub struct ForgetTracker {
 }
 
 impl ForgetTracker {
+    /// Tracker over `n` examples, all unobserved.
     pub fn new(n: usize) -> Self {
         ForgetTracker {
             prev: vec![None; n],
@@ -39,6 +40,7 @@ impl ForgetTracker {
         self.prev[idx] = Some(correct);
     }
 
+    /// Record correctness observations (0/1 floats) for a batch.
     pub fn observe_batch(&mut self, idx: &[usize], correct: &[f32]) {
         debug_assert_eq!(idx.len(), correct.len());
         for (&i, &c) in idx.iter().zip(correct) {
@@ -71,10 +73,12 @@ impl ForgetTracker {
             / idx.len() as f32
     }
 
+    /// Per-example training-batch appearance counts.
     pub fn selection_counts(&self) -> &[u32] {
         &self.selection_count
     }
 
+    /// Largest forgetting-event count observed over all examples.
     pub fn max_observed_score(&self) -> u32 {
         self.forget_count.iter().copied().max().unwrap_or(0)
     }

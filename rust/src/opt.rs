@@ -8,6 +8,7 @@
 /// Learning-rate schedule over a fixed horizon of steps.
 #[derive(Debug, Clone)]
 pub enum LrSchedule {
+    /// Constant learning rate.
     Const(f32),
     /// Linear warmup to `base` over `warmup_frac`, step decays afterwards:
     /// `decays` holds (progress_fraction, multiplier) pairs.
@@ -64,6 +65,7 @@ impl Budget {
         Budget { total_backprops: (full as f64 * frac as f64) as u64, used: 0 }
     }
 
+    /// Budget of exactly `total_backprops` backprops.
     pub fn exact(total_backprops: u64) -> Budget {
         Budget { total_backprops, used: 0 }
     }
@@ -78,10 +80,12 @@ impl Budget {
         true
     }
 
+    /// Backprops charged so far.
     pub fn used(&self) -> u64 {
         self.used
     }
 
+    /// True once the budget is spent.
     pub fn exhausted(&self) -> bool {
         self.used >= self.total_backprops
     }
@@ -91,6 +95,7 @@ impl Budget {
         (self.total_backprops / m as u64) as usize
     }
 
+    /// Fraction of the budget spent, in [0, 1].
     pub fn progress(&self) -> f32 {
         if self.total_backprops == 0 {
             1.0

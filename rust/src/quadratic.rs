@@ -50,6 +50,8 @@ pub struct QuadraticModel {
 }
 
 impl QuadraticModel {
+    /// Model over a `p_dim`-dimensional parameter space with EMA decay
+    /// rates `beta1` (gradient) and `beta2` (curvature).
     pub fn new(p_dim: usize, beta1: f32, beta2: f32, opts: QuadOptions) -> Self {
         assert!((0.0..1.0).contains(&beta1) && (0.0..1.0).contains(&beta2));
         QuadraticModel {
@@ -121,6 +123,7 @@ impl QuadraticModel {
         }
     }
 
+    /// True once an anchor (selection step l) has been set.
     pub fn anchored(&self) -> bool {
         self.anchored
     }

@@ -1,43 +1,66 @@
 //! Run reports: everything a bench needs to print a paper table/figure row,
-//! serializable to JSON for experiment bookkeeping.
+//! serializable to JSON for experiment bookkeeping, plus the mean±std
+//! aggregate rows the sweep orchestrator emits (Table-1/2 shape).
+
+use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
 /// One evaluation snapshot along training.
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
+    /// Training step of the snapshot.
     pub step: usize,
+    /// Cumulative backprops charged to the budget at this point.
     pub backprops: u64,
+    /// Test-set accuracy.
     pub test_acc: f32,
+    /// Mean test-set loss.
     pub test_loss: f32,
+    /// Training-set accuracy.
     pub train_acc: f32,
+    /// Wall-clock seconds since the run started.
     pub wall_secs: f64,
 }
 
 /// Outcome of one experiment run.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
+    /// Canonical method name (`config::MethodKind::name`).
     pub method: String,
+    /// Model/dataset variant the cell ran on.
     pub variant: String,
+    /// Experiment seed.
     pub seed: u64,
+    /// Training budget as a fraction of the full run's backprops.
     pub budget_frac: f32,
+    /// Test accuracy at budget exhaustion.
     pub final_test_acc: f32,
+    /// Mean test loss at budget exhaustion.
     pub final_test_loss: f32,
+    /// Best test accuracy seen at any evaluation point.
     pub best_test_acc: f32,
+    /// Training steps taken.
     pub steps: usize,
+    /// Backprops actually charged to the budget.
     pub backprops: u64,
     /// Selection rounds (coreset updates — Figs. 3/4).
     pub n_selection_updates: usize,
+    /// Total wall-clock spent selecting coresets.
     pub selection_secs: f64,
+    /// Total wall-clock spent in training steps.
     pub train_secs: f64,
+    /// Total wall-clock spent evaluating.
     pub eval_secs: f64,
     /// ρ-check time (Table 2 "checking threshold").
     pub check_secs: f64,
     /// Quadratic-model construction time (Table 2 "loss approximation").
     pub approx_secs: f64,
+    /// End-to-end wall-clock of the run.
     pub total_secs: f64,
     /// Examples excluded as learned (§4.3).
     pub n_excluded: usize,
+    /// Evaluation snapshots along training (Fig. 2 curves).
     pub history: Vec<EvalPoint>,
     /// (step, ρ) at each check.
     pub rho_history: Vec<(usize, f32)>,
@@ -69,6 +92,11 @@ impl RunReport {
         self.total_secs / full_secs
     }
 
+    /// Serialize for experiment bookkeeping (run files, sweep
+    /// checkpoints). The figure-series vectors that only post-hoc analyses
+    /// read (`t1_history`, `update_steps`, `forget_of_selected`,
+    /// `selection_counts`, `dropped_acc_history`, `excluded_indices`) are
+    /// not emitted; [`RunReport::from_json`] restores them as empty.
     pub fn to_json(&self) -> Json {
         let history: Vec<Json> = self
             .history
@@ -111,6 +139,211 @@ impl RunReport {
             .set("history", Json::Arr(history))
             .set("rho_history", Json::Arr(rho))
     }
+
+    /// Parse a report serialized by [`RunReport::to_json`]. Fields that
+    /// `to_json` does not emit default to empty — the deterministic core
+    /// and all timing totals round-trip exactly. Float fields tolerate
+    /// `null` (how the JSON writer encodes non-finite values) by reading
+    /// it back as NaN, so a diverged run's checkpoint still restores.
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        // float field: a number, or null for a non-finite value
+        fn num(j: &Json, key: &str) -> Result<f64> {
+            match j.req(key)? {
+                Json::Null => Ok(f64::NAN),
+                v => v.as_f64(),
+            }
+        }
+        let mut history = Vec::new();
+        for p in j.req("history")?.as_arr()? {
+            history.push(EvalPoint {
+                step: p.req("step")?.as_usize()?,
+                backprops: p.req("backprops")?.as_f64()? as u64,
+                test_acc: num(p, "test_acc")? as f32,
+                test_loss: num(p, "test_loss")? as f32,
+                train_acc: num(p, "train_acc")? as f32,
+                wall_secs: num(p, "wall_secs")?,
+            });
+        }
+        let mut rho_history = Vec::new();
+        for pair in j.req("rho_history")?.as_arr()? {
+            let pair = pair.as_arr()?;
+            if pair.len() != 2 {
+                bail!("rho_history entries must be [step, rho] pairs");
+            }
+            let rho = match &pair[1] {
+                Json::Null => f32::NAN,
+                v => v.as_f64()? as f32,
+            };
+            rho_history.push((pair[0].as_usize()?, rho));
+        }
+        Ok(RunReport {
+            method: j.req("method")?.as_str()?.to_string(),
+            variant: j.req("variant")?.as_str()?.to_string(),
+            seed: j.req("seed")?.as_f64()? as u64,
+            budget_frac: num(j, "budget_frac")? as f32,
+            final_test_acc: num(j, "final_test_acc")? as f32,
+            final_test_loss: num(j, "final_test_loss")? as f32,
+            best_test_acc: num(j, "best_test_acc")? as f32,
+            steps: j.req("steps")?.as_usize()?,
+            backprops: j.req("backprops")?.as_f64()? as u64,
+            n_selection_updates: j.req("n_selection_updates")?.as_usize()?,
+            selection_secs: num(j, "selection_secs")?,
+            train_secs: num(j, "train_secs")?,
+            eval_secs: num(j, "eval_secs")?,
+            check_secs: num(j, "check_secs")?,
+            approx_secs: num(j, "approx_secs")?,
+            total_secs: num(j, "total_secs")?,
+            n_excluded: j.req("n_excluded")?.as_usize()?,
+            mean_step_secs: num(j, "mean_step_secs")?,
+            mean_selection_secs: num(j, "mean_selection_secs")?,
+            history,
+            rho_history,
+            ..Default::default()
+        })
+    }
+
+    /// Canonical JSON of the deterministic fields only — accuracies,
+    /// losses, counters, and the (step-indexed) histories, with every
+    /// wall-clock field left out. Two runs of the same cell compare
+    /// bitwise-equal through this view regardless of machine load, thread
+    /// count, or whether one was restored from a checkpoint; the sweep
+    /// resume tests assert exactly that.
+    pub fn deterministic_json(&self) -> Json {
+        let history: Vec<Json> = self
+            .history
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("step", p.step)
+                    .set("backprops", p.backprops)
+                    .set("test_acc", p.test_acc)
+                    .set("test_loss", p.test_loss)
+                    .set("train_acc", p.train_acc)
+            })
+            .collect();
+        let rho: Vec<Json> = self
+            .rho_history
+            .iter()
+            .map(|&(s, r)| Json::Arr(vec![Json::Num(s as f64), Json::Num(r as f64)]))
+            .collect();
+        Json::obj()
+            .set("method", self.method.as_str())
+            .set("variant", self.variant.as_str())
+            .set("seed", self.seed)
+            .set("budget_frac", self.budget_frac)
+            .set("final_test_acc", self.final_test_acc)
+            .set("final_test_loss", self.final_test_loss)
+            .set("best_test_acc", self.best_test_acc)
+            .set("steps", self.steps)
+            .set("backprops", self.backprops)
+            .set("n_selection_updates", self.n_selection_updates)
+            .set("n_excluded", self.n_excluded)
+            .set("history", Json::Arr(history))
+            .set("rho_history", Json::Arr(rho))
+    }
+}
+
+/// One mean±std row of a sweep aggregate: all completed seeds of a
+/// (variant, method, budget) group folded together — the row shape of the
+/// paper's Tables 1 and 2. Only deterministic report fields are
+/// aggregated, so identical cell sets render bitwise-identical rows.
+#[derive(Debug, Clone)]
+pub struct AggregateRow {
+    /// Variant of the group.
+    pub variant: String,
+    /// Canonical method name of the group.
+    pub method: String,
+    /// Budget fraction of the group.
+    pub budget_frac: f32,
+    /// Number of seeds aggregated.
+    pub n_seeds: usize,
+    /// Mean final test accuracy (fraction, not percent).
+    pub acc_mean: f32,
+    /// Population std of the final test accuracy across seeds.
+    pub acc_std: f32,
+    /// Mean final test loss.
+    pub loss_mean: f32,
+    /// Mean relative error (%) vs the same-seed full-data run; `None`
+    /// when the grid lacks a full reference for some seed of the group.
+    pub rel_err_mean: Option<f32>,
+    /// Population std of the relative error (%).
+    pub rel_err_std: Option<f32>,
+    /// Mean training steps.
+    pub steps_mean: f32,
+    /// Mean selection updates.
+    pub updates_mean: f32,
+    /// Mean examples excluded as learned.
+    pub excluded_mean: f32,
+}
+
+impl AggregateRow {
+    /// Trajectory record for `crest sweep --out`: a flat object identified
+    /// by `name`, the same array-of-records shape `CREST_BENCH_JSON`
+    /// uses, so sweep aggregates and perf records can share one file.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set(
+                "name",
+                format!("sweep/{}/{}/b{}", self.variant, self.method, self.budget_frac),
+            )
+            .set("variant", self.variant.as_str())
+            .set("method", self.method.as_str())
+            .set("budget_frac", self.budget_frac)
+            .set("n_seeds", self.n_seeds)
+            .set("acc_mean", self.acc_mean)
+            .set("acc_std", self.acc_std)
+            .set("loss_mean", self.loss_mean)
+            .set("steps_mean", self.steps_mean)
+            .set("updates_mean", self.updates_mean)
+            .set("excluded_mean", self.excluded_mean);
+        if let (Some(m), Some(s)) = (self.rel_err_mean, self.rel_err_std) {
+            j = j.set("rel_err_mean", m).set("rel_err_std", s);
+        }
+        j
+    }
+
+    /// `mean±std` accuracy cell, paper-table style.
+    pub fn fmt_acc(&self) -> String {
+        format!("{:.4}±{:.4}", self.acc_mean, self.acc_std)
+    }
+
+    /// `mean±std` relative-error cell (percent), `-` without a reference.
+    pub fn fmt_rel_err(&self) -> String {
+        match (self.rel_err_mean, self.rel_err_std) {
+            (Some(m), Some(s)) => format!("{m:.2}±{s:.1}"),
+            _ => "-".to_string(),
+        }
+    }
+}
+
+/// Render aggregate rows as a markdown table — the `crest sweep` stdout
+/// output. Deterministic for identical rows.
+pub fn aggregate_markdown(rows: &[AggregateRow]) -> String {
+    let mut t = Table::new(&[
+        "variant",
+        "method",
+        "budget",
+        "seeds",
+        "test acc (mean±std)",
+        "rel err %",
+        "steps",
+        "updates",
+        "excluded",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.variant.clone(),
+            r.method.clone(),
+            format!("{}", r.budget_frac),
+            format!("{}", r.n_seeds),
+            r.fmt_acc(),
+            r.fmt_rel_err(),
+            format!("{:.1}", r.steps_mean),
+            format!("{:.1}", r.updates_mean),
+            format!("{:.1}", r.excluded_mean),
+        ]);
+    }
+    t.render()
 }
 
 /// Fixed-width markdown-ish table printer for bench outputs.
@@ -120,15 +353,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row; panics when the arity differs from the headers.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "row arity");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render with columns padded to their widest cell.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -185,6 +421,111 @@ mod tests {
         assert_eq!(parsed.get("method").unwrap().as_str().unwrap(), "crest");
         assert_eq!(parsed.get("history").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(parsed.get("rho_history").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn report_from_json_roundtrips_deterministic_core_and_timings() {
+        let r = RunReport {
+            method: "crest".into(),
+            variant: "smoke".into(),
+            seed: 3,
+            budget_frac: 0.1,
+            final_test_acc: 0.8125,
+            final_test_loss: 0.75,
+            best_test_acc: 0.875,
+            steps: 12,
+            backprops: 192,
+            n_selection_updates: 4,
+            selection_secs: 0.5,
+            train_secs: 1.5,
+            eval_secs: 0.25,
+            check_secs: 0.125,
+            approx_secs: 0.0625,
+            total_secs: 2.5,
+            n_excluded: 3,
+            mean_step_secs: 0.125,
+            mean_selection_secs: 0.125,
+            history: vec![EvalPoint {
+                step: 5,
+                backprops: 80,
+                test_acc: 0.5,
+                test_loss: 1.25,
+                train_acc: 0.5625,
+                wall_secs: 0.5,
+            }],
+            rho_history: vec![(4, 0.5), (8, 0.25)],
+            ..Default::default()
+        };
+        let parsed =
+            RunReport::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap()).unwrap();
+        // deterministic core is preserved bitwise
+        assert_eq!(
+            parsed.deterministic_json().to_string_pretty(),
+            r.deterministic_json().to_string_pretty()
+        );
+        // timing totals survive too (they are just not part of the core)
+        assert_eq!(parsed.total_secs, r.total_secs);
+        assert_eq!(parsed.check_secs, r.check_secs);
+        assert_eq!(parsed.history.len(), 1);
+        assert_eq!(parsed.rho_history, r.rho_history);
+        // deterministic view must not mention wall-clock fields
+        let det = r.deterministic_json().to_string_pretty();
+        assert!(!det.contains("secs"), "deterministic core leaked timing: {det}");
+    }
+
+    #[test]
+    fn non_finite_metrics_survive_the_checkpoint_roundtrip() {
+        // non-finite floats serialize as null; from_json reads them back
+        // as NaN so a diverged run's checkpoint still restores
+        let r = RunReport {
+            method: "crest".into(),
+            variant: "smoke".into(),
+            final_test_loss: f32::NAN,
+            rho_history: vec![(2, f32::INFINITY)],
+            ..Default::default()
+        };
+        let parsed =
+            RunReport::from_json(&Json::parse(&r.to_json().to_string_pretty()).unwrap()).unwrap();
+        assert!(parsed.final_test_loss.is_nan());
+        assert!(parsed.rho_history[0].1.is_nan(), "inf maps through null to NaN");
+        // repeated roundtrips keep the deterministic core bitwise-stable
+        let again =
+            RunReport::from_json(&Json::parse(&parsed.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(
+            parsed.deterministic_json().to_string_pretty(),
+            again.deterministic_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn aggregate_row_renders_and_serializes() {
+        let row = AggregateRow {
+            variant: "smoke".into(),
+            method: "crest".into(),
+            budget_frac: 0.1,
+            n_seeds: 2,
+            acc_mean: 0.65,
+            acc_std: 0.05,
+            loss_mean: 1.0,
+            rel_err_mean: Some(12.5),
+            rel_err_std: Some(2.5),
+            steps_mean: 12.0,
+            updates_mean: 4.0,
+            excluded_mean: 1.5,
+        };
+        let j = row.to_json();
+        assert_eq!(j.get("name").unwrap().as_str().unwrap(), "sweep/smoke/crest/b0.1");
+        assert_eq!(j.get("n_seeds").unwrap().as_usize().unwrap(), 2);
+        assert!(j.get("rel_err_mean").is_some());
+        let md = aggregate_markdown(&[row.clone()]);
+        assert!(md.contains("crest"));
+        assert!(md.contains("0.6500±0.0500"));
+        assert!(md.contains("12.50±2.5"));
+        // missing reference renders as "-" and omits the JSON keys
+        let no_ref = AggregateRow { rel_err_mean: None, rel_err_std: None, ..row };
+        assert!(aggregate_markdown(&[no_ref.clone()]).contains(" - "));
+        assert!(no_ref.to_json().get("rel_err_mean").is_none());
     }
 
     #[test]

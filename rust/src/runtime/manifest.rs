@@ -21,7 +21,9 @@ use crate::util::json::Json;
 /// Element type of a tensor in the artifact interface.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -38,12 +40,16 @@ impl DType {
 /// One tensor in an artifact signature.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// Parameter name in the artifact signature.
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Dense shape.
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count of the shape.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -60,8 +66,11 @@ impl TensorSpec {
 /// One AOT-compiled computation.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// HLO file name relative to the variant directory.
     pub file: String,
+    /// Input signature.
     pub inputs: Vec<TensorSpec>,
+    /// Output signature.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -81,19 +90,27 @@ impl ArtifactSpec {
 /// Full manifest for one model/dataset variant.
 #[derive(Debug, Clone)]
 pub struct VariantManifest {
+    /// Variant name.
     pub name: String,
+    /// Input feature dimensionality.
     pub d_in: usize,
+    /// Hidden layer widths.
     pub hidden: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
     /// Mini-batch (coreset) size m.
     pub m: usize,
     /// Random-subset size r.
     pub r: usize,
+    /// Examples per evaluation chunk.
     pub eval_chunk: usize,
+    /// Total flat parameter count.
     pub p_dim: usize,
+    /// SGD momentum coefficient.
     pub momentum: f32,
     /// (in, out) per dense layer.
     pub layer_shapes: Vec<(usize, usize)>,
+    /// Declared computations, keyed by artifact name.
     pub artifacts: Vec<(String, ArtifactSpec)>,
 }
 
@@ -101,15 +118,21 @@ pub struct VariantManifest {
 /// `python/compile/configs.py::VariantSpec`.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Variant name.
     pub name: &'static str,
+    /// Input feature dimensionality.
     pub d_in: usize,
+    /// Hidden layer widths.
     pub hidden: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
     /// Mini-batch (coreset) size m.
     pub m: usize,
     /// Random-subset size r.
     pub r: usize,
+    /// Examples per evaluation chunk.
     pub eval_chunk: usize,
+    /// SGD momentum coefficient.
     pub momentum: f32,
 }
 
@@ -249,6 +272,7 @@ impl VariantManifest {
         Self::from_spec(&spec)
     }
 
+    /// Parse and validate a `manifest.json` document.
     pub fn parse(text: &str) -> Result<VariantManifest> {
         let j = Json::parse(text).context("manifest json")?;
         let layer_shapes = j
@@ -286,6 +310,7 @@ impl VariantManifest {
         Ok(man)
     }
 
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<VariantManifest> {
         let path = dir.join("manifest.json");
         let text =
@@ -293,6 +318,7 @@ impl VariantManifest {
         Self::parse(&text)
     }
 
+    /// Spec of the named computation; errors when undeclared.
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .iter()

@@ -36,9 +36,13 @@ use manifest::{DType, VariantManifest};
 
 /// Output of one training step (updated state stays on the host).
 pub struct StepOut {
+    /// Updated flat parameters.
     pub params: Vec<f32>,
+    /// Updated momentum buffer.
     pub momentum: Vec<f32>,
+    /// Weighted mean batch loss.
     pub mean_loss: f32,
+    /// Unweighted per-example losses.
     pub per_ex_loss: Vec<f32>,
 }
 
@@ -49,6 +53,7 @@ pub struct ProbeOut {
     pub hz: Vec<f32>,
     /// Mean gradient of the probed subset (param space).
     pub grad: Vec<f32>,
+    /// Mean loss of the probed subset.
     pub mean_loss: f32,
 }
 
@@ -69,8 +74,10 @@ pub struct ProbeOut {
 /// * `select_greedy`: m-medoid facility-location selection over the
 ///   last-layer weight-gradient metric, with cluster-size weights.
 pub trait Backend {
+    /// Short engine name (`native` / `pjrt`).
     fn name(&self) -> &'static str;
 
+    /// One weighted momentum-SGD step; see the trait docs for semantics.
     #[allow(clippy::too_many_arguments)]
     fn train_step(
         &self,
@@ -83,6 +90,8 @@ pub trait Backend {
         wd: f32,
     ) -> Result<StepOut>;
 
+    /// Last-layer gradient embeddings: (logit gradients, penultimate
+    /// activations, per-example losses).
     fn grad_embed(
         &self,
         params: &[f32],
@@ -90,6 +99,8 @@ pub trait Backend {
         y: &[i32],
     ) -> Result<(MatF32, MatF32, Vec<f32>)>;
 
+    /// Evaluate one chunk: (Σ loss, Σ correct, per-example losses,
+    /// per-example 0/1 correctness).
     fn eval_chunk(
         &self,
         params: &[f32],
@@ -97,14 +108,17 @@ pub trait Backend {
         y: &[i32],
     ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)>;
 
+    /// Exact Hessian-vector product of the subset's mean loss.
     fn hess_probe(&self, params: &[f32], x: &MatF32, y: &[i32], z: &[f32])
         -> Result<ProbeOut>;
 
+    /// m-medoid facility-location selection (indices, cluster weights).
     fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)>;
 }
 
 /// Manifest + backend + per-op timing for one variant.
 pub struct Runtime {
+    /// The variant's shape contract.
     pub man: VariantManifest,
     backend: Box<dyn Backend>,
     /// Per-artifact wall-clock accounting (backs Table 2).
@@ -161,6 +175,8 @@ impl Runtime {
         self.backend.name()
     }
 
+    /// Directory the variant's artifacts live in (may not exist for
+    /// builtin native runtimes).
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }

@@ -75,6 +75,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend for the manifest's MLP architecture.
     pub fn new(man: VariantManifest) -> NativeBackend {
         let layers = param_offsets(&man)
             .into_iter()
@@ -83,6 +84,7 @@ impl NativeBackend {
         NativeBackend { man, layers }
     }
 
+    /// The manifest this backend was built from.
     pub fn manifest(&self) -> &VariantManifest {
         &self.man
     }

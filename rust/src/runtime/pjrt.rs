@@ -90,6 +90,7 @@ impl PjrtBackend {
         Ok(PjrtBackend { client, man, exes })
     }
 
+    /// The manifest the artifacts were compiled against.
     pub fn manifest(&self) -> &VariantManifest {
         &self.man
     }

@@ -1,0 +1,172 @@
+//! Mean±std aggregation of completed cells into Table-1/2-style rows.
+//!
+//! Only deterministic report fields (accuracy, loss, step/update/exclusion
+//! counts) are aggregated, so rows reproduce bitwise whether a cell was
+//! restored from a checkpoint or re-executed on the bitwise-deterministic
+//! native backend; wall-clock fields are intentionally left out.
+
+use crate::config::MethodKind;
+use crate::metrics::relative_error_pct;
+use crate::report::AggregateRow;
+use crate::util::stats;
+
+use super::CellResult;
+
+/// Group completed cells by (variant, method, budget) in first-appearance
+/// (= grid) order and fold each group's seeds into mean±std. Relative
+/// error vs full-data training (paper Table 1) is computed per seed
+/// against the `full` cell of the same (variant, seed); the rel-err
+/// columns stay `None` unless every seed in the group has that reference.
+pub fn aggregate(cells: &[CellResult]) -> Vec<AggregateRow> {
+    let full_acc = |variant: &str, seed: u64| -> Option<f32> {
+        cells
+            .iter()
+            .find(|c| {
+                c.key.method == MethodKind::Full && c.key.variant == variant && c.key.seed == seed
+            })
+            .map(|c| c.report.final_test_acc)
+    };
+
+    // group in first-appearance order (stable across resumes: cells come
+    // in grid order regardless of which were restored)
+    let mut groups: Vec<(String, MethodKind, f32, Vec<&CellResult>)> = Vec::new();
+    for c in cells {
+        match groups.iter_mut().find(|(v, m, b, _)| {
+            *v == c.key.variant && *m == c.key.method && *b == c.key.budget_frac
+        }) {
+            Some((_, _, _, members)) => members.push(c),
+            None => {
+                groups.push((c.key.variant.clone(), c.key.method, c.key.budget_frac, vec![c]))
+            }
+        }
+    }
+
+    groups
+        .into_iter()
+        .map(|(variant, method, budget_frac, members)| {
+            let accs: Vec<f32> = members.iter().map(|c| c.report.final_test_acc).collect();
+            let losses: Vec<f32> = members.iter().map(|c| c.report.final_test_loss).collect();
+            let rels: Vec<f32> = members
+                .iter()
+                .filter_map(|c| {
+                    full_acc(&c.key.variant, c.key.seed).map(|fa| {
+                        relative_error_pct(c.report.final_test_acc * 100.0, fa * 100.0)
+                    })
+                })
+                .collect();
+            let steps: Vec<f32> = members.iter().map(|c| c.report.steps as f32).collect();
+            let updates: Vec<f32> =
+                members.iter().map(|c| c.report.n_selection_updates as f32).collect();
+            let excluded: Vec<f32> = members.iter().map(|c| c.report.n_excluded as f32).collect();
+            let have_all_refs = rels.len() == members.len();
+            AggregateRow {
+                variant,
+                method: method.name().to_string(),
+                budget_frac,
+                n_seeds: members.len(),
+                acc_mean: stats::mean(&accs),
+                acc_std: stats::stddev(&accs),
+                loss_mean: stats::mean(&losses),
+                rel_err_mean: have_all_refs.then(|| stats::mean(&rels)),
+                rel_err_std: have_all_refs.then(|| stats::stddev(&rels)),
+                steps_mean: stats::mean(&steps),
+                updates_mean: stats::mean(&updates),
+                excluded_mean: stats::mean(&excluded),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::RunReport;
+    use crate::sweep::CellKey;
+
+    fn cell(method: MethodKind, seed: u64, acc: f32) -> CellResult {
+        CellResult {
+            key: CellKey {
+                variant: "v".to_string(),
+                method,
+                seed,
+                budget_frac: 0.1,
+            },
+            report: RunReport {
+                method: method.name().to_string(),
+                variant: "v".to_string(),
+                seed,
+                final_test_acc: acc,
+                final_test_loss: 1.0,
+                steps: 10,
+                n_selection_updates: 4,
+                n_excluded: 2,
+                ..Default::default()
+            },
+            executed: true,
+        }
+    }
+
+    #[test]
+    fn aggregates_match_hand_computed_values() {
+        let cells = vec![
+            cell(MethodKind::Full, 1, 0.9),
+            cell(MethodKind::Full, 2, 0.8),
+            cell(MethodKind::Crest, 1, 0.6),
+            cell(MethodKind::Crest, 2, 0.7),
+        ];
+        let rows = aggregate(&cells);
+        assert_eq!(rows.len(), 2, "one row per (variant, method, budget) group");
+
+        let crest = &rows[1];
+        assert_eq!(crest.method, "crest");
+        assert_eq!(crest.n_seeds, 2);
+        // mean(0.6, 0.7) = 0.65; population std = |0.6 - 0.7| / 2 = 0.05
+        assert!((crest.acc_mean - 0.65).abs() < 1e-6, "acc_mean {}", crest.acc_mean);
+        assert!((crest.acc_std - 0.05).abs() < 1e-6, "acc_std {}", crest.acc_std);
+        // rel err per seed (Table 1 definition, percent scale):
+        //   seed 1: |60 - 90| / 60 · 100 = 50
+        //   seed 2: |70 - 80| / 70 · 100 = 100/7 ≈ 14.2857
+        let r1 = 50.0f32;
+        let r2 = 100.0f32 / 7.0;
+        let m = crest.rel_err_mean.expect("full refs present for both seeds");
+        let s = crest.rel_err_std.unwrap();
+        assert!((m - (r1 + r2) / 2.0).abs() < 1e-3, "rel_err_mean {m}");
+        assert!((s - (r1 - r2) / 2.0).abs() < 1e-3, "rel_err_std {s}");
+        // count means
+        assert!((crest.steps_mean - 10.0).abs() < 1e-6);
+        assert!((crest.updates_mean - 4.0).abs() < 1e-6);
+        assert!((crest.excluded_mean - 2.0).abs() < 1e-6);
+
+        // the full group's relative error vs itself is exactly 0
+        assert_eq!(rows[0].method, "full");
+        assert_eq!(rows[0].rel_err_mean, Some(0.0));
+    }
+
+    #[test]
+    fn rel_err_absent_unless_every_seed_has_a_full_reference() {
+        // full run only for seed 1 -> the 2-seed crest group has no rel err
+        let cells = vec![
+            cell(MethodKind::Full, 1, 0.9),
+            cell(MethodKind::Crest, 1, 0.6),
+            cell(MethodKind::Crest, 2, 0.7),
+        ];
+        let rows = aggregate(&cells);
+        let crest = rows.iter().find(|r| r.method == "crest").unwrap();
+        assert_eq!(crest.rel_err_mean, None);
+        assert_eq!(crest.rel_err_std, None);
+        // accuracy aggregation is unaffected
+        assert!((crest.acc_mean - 0.65).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_is_deterministic_over_identical_inputs() {
+        let cells = vec![
+            cell(MethodKind::Full, 1, 0.91),
+            cell(MethodKind::Crest, 1, 0.63),
+        ];
+        let render = || -> Vec<String> {
+            aggregate(&cells).iter().map(|r| r.to_json().to_string_pretty()).collect()
+        };
+        assert_eq!(render(), render());
+    }
+}

@@ -1,0 +1,270 @@
+//! Grid expansion: the (variant × budget × method × seed) cross product
+//! in a stable order, plus the comma-list parsers behind the `crest sweep`
+//! CLI flags.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::MethodKind;
+use crate::util::json::Json;
+
+/// Identity of one sweep cell. The paper's tables and figures index every
+/// number by exactly this tuple, and the checkpoint store keys resume on
+/// it: a cell is reproducible from its key alone (all RNG streams derive
+/// from `seed`, the corpus from `(variant, seed)`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellKey {
+    /// Model/dataset variant name (`config::ALL_VARIANTS` or `smoke`).
+    pub variant: String,
+    /// Training method driving the cell.
+    pub method: MethodKind,
+    /// Experiment seed (data, init, subsets and probes all derive from it).
+    pub seed: u64,
+    /// Training budget as a fraction of the full run's backprops.
+    pub budget_frac: f32,
+}
+
+impl CellKey {
+    /// Stable checkpoint file name — the on-disk resume identity.
+    pub fn file_name(&self) -> String {
+        format!(
+            "{}__{}__s{}__b{}.json",
+            self.variant,
+            self.method.name(),
+            self.seed,
+            self.budget_frac
+        )
+    }
+
+    /// Human-readable cell label for logs and error contexts.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/seed={}/budget={}",
+            self.variant,
+            self.method.name(),
+            self.seed,
+            self.budget_frac
+        )
+    }
+
+    /// Key as a JSON object (stored inside each checkpoint so stale or
+    /// renamed files can be detected on load).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("variant", self.variant.as_str())
+            .set("method", self.method.name())
+            .set("seed", self.seed)
+            .set("budget_frac", self.budget_frac)
+    }
+
+    /// Parse a key written by [`CellKey::to_json`].
+    pub fn from_json(j: &Json) -> Result<CellKey> {
+        Ok(CellKey {
+            variant: j.req("variant")?.as_str()?.to_string(),
+            method: MethodKind::parse(j.req("method")?.as_str()?)?,
+            seed: j.req("seed")?.as_f64()? as u64,
+            budget_frac: j.req("budget_frac")?.as_f64()? as f32,
+        })
+    }
+}
+
+/// A requested sweep grid. [`SweepGrid::cells`] expands the cross product
+/// with variants outermost, then budgets, methods, and seeds innermost —
+/// a stable order, so cell indices and aggregate rows never depend on
+/// scheduling.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    /// Variant names to sweep.
+    pub variants: Vec<String>,
+    /// Methods to run per variant.
+    pub methods: Vec<MethodKind>,
+    /// Seeds per (variant, method, budget) group — the mean±std axis.
+    pub seeds: Vec<u64>,
+    /// Budget fractions to sweep.
+    pub budgets: Vec<f32>,
+}
+
+impl SweepGrid {
+    /// Expand to the full cell list in grid order.
+    ///
+    /// The `full` method ignores the budget (the coordinator always trains
+    /// it on 100% of the data), so its cells are normalized to
+    /// `budget_frac = 1` and emitted once per (variant, seed) — a
+    /// multi-budget grid never re-trains or mislabels the reference run.
+    /// Duplicate entries in the input lists expand to duplicate keys and
+    /// are dropped, so repeated CLI values cannot double-count a seed in
+    /// the aggregates or race two workers on one checkpoint file.
+    pub fn cells(&self) -> Vec<CellKey> {
+        let mut out: Vec<CellKey> = Vec::with_capacity(
+            self.variants.len() * self.budgets.len() * self.methods.len() * self.seeds.len(),
+        );
+        for variant in &self.variants {
+            for (bi, &budget) in self.budgets.iter().enumerate() {
+                for &method in &self.methods {
+                    if method == MethodKind::Full && bi > 0 {
+                        continue;
+                    }
+                    let budget_frac = if method == MethodKind::Full { 1.0 } else { budget };
+                    for &seed in &self.seeds {
+                        let key = CellKey {
+                            variant: variant.clone(),
+                            method,
+                            seed,
+                            budget_frac,
+                        };
+                        if !out.contains(&key) {
+                            out.push(key);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Parse a comma-separated variant list (`cifar10-proxy,smoke`).
+pub fn parse_variants(s: &str) -> Result<Vec<String>> {
+    let out: Vec<String> =
+        s.split(',').map(str::trim).filter(|t| !t.is_empty()).map(str::to_string).collect();
+    if out.is_empty() {
+        bail!("empty variant list");
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated method list (`crest,random`).
+pub fn parse_methods(s: &str) -> Result<Vec<MethodKind>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(MethodKind::parse(tok)?);
+    }
+    if out.is_empty() {
+        bail!("empty method list");
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated seed list (`1,2,3`).
+pub fn parse_seeds(s: &str) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(tok.parse::<u64>().with_context(|| format!("bad seed {tok:?}"))?);
+    }
+    if out.is_empty() {
+        bail!("empty seed list");
+    }
+    Ok(out)
+}
+
+/// Parse a comma-separated budget-fraction list (`0.1,0.2`); each entry
+/// must be in (0, 1].
+pub fn parse_budgets(s: &str) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let b: f32 = tok.parse().with_context(|| format!("bad budget {tok:?}"))?;
+        if !(b > 0.0 && b <= 1.0) {
+            bail!("budget {b} out of (0, 1]");
+        }
+        out.push(b);
+    }
+    if out.is_empty() {
+        bail!("empty budget list");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_expand_in_stable_grid_order() {
+        let grid = SweepGrid {
+            variants: vec!["a".to_string(), "b".to_string()],
+            methods: vec![MethodKind::Crest, MethodKind::Random],
+            seeds: vec![1, 2],
+            budgets: vec![0.1],
+        };
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 8);
+        // variants outermost, seeds innermost
+        assert_eq!(cells[0].label(), "a/crest/seed=1/budget=0.1");
+        assert_eq!(cells[1].label(), "a/crest/seed=2/budget=0.1");
+        assert_eq!(cells[2].label(), "a/random/seed=1/budget=0.1");
+        assert_eq!(cells[4].variant, "b");
+        // expansion is deterministic
+        assert_eq!(cells, grid.cells());
+    }
+
+    #[test]
+    fn duplicate_grid_entries_expand_to_unique_cells() {
+        let grid = SweepGrid {
+            variants: vec!["v".to_string()],
+            methods: vec![MethodKind::Crest, MethodKind::Crest],
+            seeds: vec![1, 1, 2],
+            budgets: vec![0.1],
+        };
+        let cells = grid.cells();
+        assert_eq!(cells.len(), 2, "duplicates must not double-count or race");
+        assert_eq!(cells[0].seed, 1);
+        assert_eq!(cells[1].seed, 2);
+    }
+
+    #[test]
+    fn full_cells_normalize_budget_and_dedupe_across_budgets() {
+        let grid = SweepGrid {
+            variants: vec!["v".to_string()],
+            methods: vec![MethodKind::Full, MethodKind::Crest],
+            seeds: vec![1, 2],
+            budgets: vec![0.1, 0.2],
+        };
+        let cells = grid.cells();
+        // full: once per seed at budget 1; crest: once per (budget, seed)
+        let fulls: Vec<&CellKey> =
+            cells.iter().filter(|c| c.method == MethodKind::Full).collect();
+        assert_eq!(fulls.len(), 2, "one full cell per seed, not per budget");
+        assert!(fulls.iter().all(|c| c.budget_frac == 1.0));
+        let crests = cells.iter().filter(|c| c.method == MethodKind::Crest).count();
+        assert_eq!(crests, 4);
+        assert_eq!(cells.len(), 6);
+    }
+
+    #[test]
+    fn file_name_is_stable() {
+        let key = CellKey {
+            variant: "smoke".to_string(),
+            method: MethodKind::Crest,
+            seed: 1,
+            budget_frac: 0.1,
+        };
+        assert_eq!(key.file_name(), "smoke__crest__s1__b0.1.json");
+    }
+
+    #[test]
+    fn key_json_roundtrip() {
+        let key = CellKey {
+            variant: "cifar10-proxy".to_string(),
+            method: MethodKind::GreedyPerBatch,
+            seed: 7,
+            budget_frac: 0.2,
+        };
+        let j = Json::parse(&key.to_json().to_string_pretty()).unwrap();
+        assert_eq!(CellKey::from_json(&j).unwrap(), key);
+    }
+
+    #[test]
+    fn parsers_accept_lists_and_reject_garbage() {
+        assert_eq!(parse_variants("a, b").unwrap(), vec!["a", "b"]);
+        assert_eq!(
+            parse_methods("crest, random").unwrap(),
+            vec![MethodKind::Crest, MethodKind::Random]
+        );
+        assert_eq!(parse_seeds("1,2, 3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_budgets("0.1,1.0").unwrap(), vec![0.1, 1.0]);
+        assert!(parse_methods("crest,bogus").is_err());
+        assert!(parse_seeds("1,x").is_err());
+        assert!(parse_budgets("0.0").is_err());
+        assert!(parse_budgets("1.5").is_err());
+        assert!(parse_seeds("").is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! Sweep orchestration: many experiment cells as one resumable unit.
+//!
+//! The [`crate::coordinator`] owns one (variant, method, seed, budget)
+//! cell; this layer owns the grid. It expands a [`SweepGrid`] into
+//! [`CellKey`]s, restores already-completed cells from a per-cell
+//! [`CheckpointStore`], schedules the missing ones over the shared thread
+//! pool (`util::pool`), persists each as it finishes, and folds the seeds
+//! of every (variant, method, budget) group into mean±std
+//! [`AggregateRow`]s — the shape of the paper's Tables 1/2.
+//!
+//! Determinism: each cell is reproduced entirely from its key (the proxy
+//! corpus from `(variant, seed)`, every RNG stream from `seed`), so
+//! scheduling order and the jobs count never affect results. Cell workers
+//! are pool threads, so the backend and selection kernels they invoke run
+//! inline (nested pool calls never oversubscribe), and because every inner
+//! reduction is chunk-deterministic the per-cell reports are
+//! bitwise-identical whether cells run serially, in parallel, or are
+//! restored from checkpoints. Aggregates use only deterministic report
+//! fields, so an interrupted-and-resumed sweep reproduces the aggregate
+//! of an uninterrupted one bitwise.
+
+pub mod agg;
+pub mod grid;
+pub mod store;
+
+pub use grid::{CellKey, SweepGrid};
+pub use store::CheckpointStore;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::run_experiment;
+use crate::data::{generate, Splits, SynthSpec};
+use crate::report::{AggregateRow, RunReport};
+use crate::runtime::Runtime;
+use crate::util::pool::{self, Pool};
+
+/// A full sweep request: the grid plus execution knobs.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// The (variant × method × seed × budget) grid to run.
+    pub grid: SweepGrid,
+    /// Epochs of the full-data reference run (the budget denominator).
+    pub epochs_full: usize,
+    /// Artifact root consulted for manifest overrides; the native backend
+    /// falls back to builtin manifests when the directory is absent.
+    pub artifact_root: PathBuf,
+    /// Checkpoint directory; `None` disables resume.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Cells scheduled concurrently. 0 = auto: the pool's global worker
+    /// count, degrading to serial when fewer cells are pending than
+    /// workers (serial cells keep their inner kernels fully parallel).
+    /// An explicit value is always honored.
+    pub jobs: usize,
+}
+
+impl SweepSpec {
+    /// Spec over `grid` with default knobs: default artifact root, resume
+    /// disabled, cells scheduled across the whole pool.
+    pub fn new(grid: SweepGrid, epochs_full: usize) -> SweepSpec {
+        SweepSpec {
+            grid,
+            epochs_full,
+            artifact_root: PathBuf::from("artifacts"),
+            checkpoint_dir: None,
+            jobs: 0,
+        }
+    }
+}
+
+/// One completed cell of a sweep.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    /// Cell identity.
+    pub key: CellKey,
+    /// The cell's run report (fresh or restored).
+    pub report: RunReport,
+    /// False when the report was restored from the checkpoint store
+    /// instead of executing in this invocation.
+    pub executed: bool,
+}
+
+/// Everything a finished sweep produced.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Per-cell results in grid order.
+    pub cells: Vec<CellResult>,
+    /// Mean±std rows per (variant, method, budget) group, in grid order.
+    pub rows: Vec<AggregateRow>,
+}
+
+impl SweepOutcome {
+    /// Cells that actually executed in this invocation.
+    pub fn n_executed(&self) -> usize {
+        self.cells.iter().filter(|c| c.executed).count()
+    }
+
+    /// Cells restored from checkpoints.
+    pub fn n_restored(&self) -> usize {
+        self.cells.len() - self.n_executed()
+    }
+}
+
+/// Generate the proxy corpus a cell trains on. The data derives only
+/// from (variant, seed), never from the method or budget — which is what
+/// lets [`run`] share one corpus across every cell of a (variant, seed)
+/// pair.
+pub fn cell_splits(key: &CellKey) -> Result<Splits> {
+    let spec = SynthSpec::preset(&key.variant, key.seed)
+        .with_context(|| format!("no synthetic preset for variant {:?}", key.variant))?;
+    Ok(generate(&spec))
+}
+
+/// Run one cell against prepared splits (the caller owns corpus reuse).
+fn run_cell_on(
+    key: &CellKey,
+    epochs_full: usize,
+    artifact_root: &Path,
+    splits: &Splits,
+) -> Result<RunReport> {
+    let rt = Runtime::load(artifact_root, &key.variant)?;
+    let mut cfg = ExperimentConfig::preset(&key.variant, key.method, key.seed)?;
+    cfg.budget_frac = key.budget_frac;
+    cfg.epochs_full = epochs_full;
+    run_experiment(&rt, splits, cfg)
+}
+
+/// Run one cell from scratch: load the variant runtime, regenerate its
+/// proxy corpus from the cell seed, and drive the coordinator. Everything
+/// derives from the key (plus `epochs_full`), so a cell is reproducible in
+/// isolation — the unit of resume.
+pub fn run_cell(key: &CellKey, epochs_full: usize, artifact_root: &Path) -> Result<RunReport> {
+    run_cell_on(key, epochs_full, artifact_root, &cell_splits(key)?)
+}
+
+/// Execute a sweep: restore completed cells from the checkpoint store,
+/// schedule the missing ones over the thread pool, persist each as it
+/// finishes, and aggregate. Errors propagate after the whole batch has
+/// been attempted, so completed cells are checkpointed even when a
+/// sibling cell fails — the failed sweep resumes instead of restarting.
+pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
+    let cells = spec.grid.cells();
+    let store = match &spec.checkpoint_dir {
+        Some(dir) => Some(CheckpointStore::open(dir)?),
+        None => None,
+    };
+    let mut restored: Vec<Option<RunReport>> = cells
+        .iter()
+        .map(|k| store.as_ref().and_then(|s| s.load(k, spec.epochs_full)))
+        .collect();
+    let todo: Vec<usize> = (0..cells.len()).filter(|&i| restored[i].is_none()).collect();
+    log::info!(
+        "sweep: {} cells ({} checkpointed, {} to run)",
+        cells.len(),
+        cells.len() - todo.len(),
+        todo.len()
+    );
+
+    // One corpus per (variant, seed), shared by every method/budget cell
+    // of that pair. A race may generate a pair twice; the first insert
+    // wins and both copies are identical, so results are unaffected.
+    let splits_cache: Mutex<HashMap<(String, u64), Arc<Splits>>> = Mutex::new(HashMap::new());
+    let splits_for = |key: &CellKey| -> Result<Arc<Splits>> {
+        let pair = (key.variant.clone(), key.seed);
+        if let Some(s) = splits_cache.lock().unwrap().get(&pair) {
+            return Ok(s.clone());
+        }
+        let generated = Arc::new(cell_splits(key)?);
+        Ok(splits_cache.lock().unwrap().entry(pair).or_insert(generated).clone())
+    };
+
+    // Outer-parallel cells force their inner kernels to run inline (see
+    // util::pool nesting). In auto mode (jobs = 0), when there are fewer
+    // cells than workers the machine is better spent inside each cell, so
+    // fall back to serial scheduling and keep the kernels' full
+    // parallelism; an explicit --jobs request is always honored.
+    let jobs = match spec.jobs {
+        0 => {
+            let t = pool::threads();
+            if todo.len() < t {
+                1
+            } else {
+                t
+            }
+        }
+        j => j,
+    };
+    let fresh: Vec<Result<RunReport>> = Pool::new(jobs).map(todo.len(), |t| {
+        let key = &cells[todo[t]];
+        log::info!("sweep cell {} ({}/{})", key.label(), t + 1, todo.len());
+        let splits = splits_for(key)?;
+        let report = run_cell_on(key, spec.epochs_full, &spec.artifact_root, &splits)
+            .with_context(|| format!("sweep cell {}", key.label()))?;
+        if let Some(s) = &store {
+            s.save(key, spec.epochs_full, &report)
+                .with_context(|| format!("checkpointing {}", key.label()))?;
+        }
+        Ok(report)
+    });
+
+    let mut fresh_iter = fresh.into_iter();
+    let mut out: Vec<CellResult> = Vec::with_capacity(cells.len());
+    for (i, key) in cells.into_iter().enumerate() {
+        let (report, executed) = match restored[i].take() {
+            Some(r) => (r, false),
+            None => {
+                let r = fresh_iter.next().expect("sweep bookkeeping: missing fresh result")?;
+                (r, true)
+            }
+        };
+        out.push(CellResult { key, report, executed });
+    }
+    let rows = agg::aggregate(&out);
+    Ok(SweepOutcome { cells: out, rows })
+}

@@ -1,0 +1,147 @@
+//! Resumable on-disk checkpoint store: one JSON file per completed cell.
+//!
+//! Layout: `<dir>/<variant>__<method>__s<seed>__b<budget>.json`, each file
+//! holding `{"key": ..., "epochs_full": ..., "report": ...}`. Writes go
+//! through a temp file +
+//! rename, so an interrupted sweep never leaves a half-written checkpoint
+//! that could poison a resume; unreadable or key-mismatched files are
+//! treated as missing and the cell simply re-executes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::report::RunReport;
+use crate::util::json::{self, Json};
+
+use super::grid::CellKey;
+
+/// Handle to a checkpoint directory.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open the store at `dir`, creating the directory if needed.
+    pub fn open(dir: &Path) -> Result<CheckpointStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(CheckpointStore { dir: dir.to_path_buf() })
+    }
+
+    /// Checkpoint path for one cell.
+    pub fn path(&self, key: &CellKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Load the completed report for `key`, or `None` when the cell has no
+    /// readable checkpoint matching both the key and the requested
+    /// `epochs_full` — the caller re-executes it. `epochs_full` is part of
+    /// the identity because it sets the budget denominator: a cell
+    /// checkpointed under a different `--epochs-full` is a different
+    /// experiment and must not be restored silently. (Artifact-root
+    /// manifest overrides are *not* tracked; point different roots at
+    /// different checkpoint dirs.)
+    pub fn load(&self, key: &CellKey, epochs_full: usize) -> Option<RunReport> {
+        let text = std::fs::read_to_string(self.path(key)).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        let stored = CellKey::from_json(doc.get("key")?).ok()?;
+        if stored != *key || doc.get("epochs_full")?.as_usize().ok()? != epochs_full {
+            return None;
+        }
+        RunReport::from_json(doc.get("report")?).ok()
+    }
+
+    /// Persist a completed cell atomically (temp file + rename).
+    pub fn save(&self, key: &CellKey, epochs_full: usize, report: &RunReport) -> Result<()> {
+        let doc = Json::obj()
+            .set("key", key.to_json())
+            .set("epochs_full", epochs_full)
+            .set("report", report.to_json());
+        json::write_atomic(&self.path(key), &doc)
+            .with_context(|| format!("checkpointing {}", key.label()))
+    }
+
+    /// Delete one cell's checkpoint; returns whether a file was removed.
+    pub fn remove(&self, key: &CellKey) -> bool {
+        std::fs::remove_file(self.path(key)).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MethodKind;
+
+    fn tmp_store(tag: &str) -> CheckpointStore {
+        let dir = std::env::temp_dir().join(format!("crest-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointStore::open(&dir).unwrap()
+    }
+
+    fn key(seed: u64) -> CellKey {
+        CellKey {
+            variant: "smoke".to_string(),
+            method: MethodKind::Crest,
+            seed,
+            budget_frac: 0.1,
+        }
+    }
+
+    fn report(acc: f32) -> RunReport {
+        RunReport {
+            method: "crest".to_string(),
+            variant: "smoke".to_string(),
+            seed: 1,
+            final_test_acc: acc,
+            steps: 12,
+            n_selection_updates: 3,
+            rho_history: vec![(4, 0.5)],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_deterministic_fields() {
+        let store = tmp_store("roundtrip");
+        let k = key(1);
+        assert!(store.load(&k, 2).is_none(), "empty store has no checkpoint");
+        let r = report(0.75);
+        store.save(&k, 2, &r).unwrap();
+        let restored = store.load(&k, 2).expect("checkpoint restores");
+        assert_eq!(
+            restored.deterministic_json().to_string_pretty(),
+            r.deterministic_json().to_string_pretty(),
+            "deterministic report core must round-trip bitwise"
+        );
+        // a different epochs-full setting is a different experiment
+        assert!(store.load(&k, 60).is_none(), "epochs_full mismatch must not restore");
+    }
+
+    #[test]
+    fn mismatched_or_corrupt_checkpoints_read_as_missing() {
+        let store = tmp_store("corrupt");
+        let k = key(1);
+        store.save(&k, 2, &report(0.5)).unwrap();
+        // same file, different key -> missing (stale dir protection)
+        let other = key(2);
+        std::fs::rename(store.path(&k), store.path(&other)).unwrap();
+        assert!(store.load(&other, 2).is_none(), "key mismatch must not restore");
+        // corrupt file -> missing, not an error
+        std::fs::write(store.path(&k), "{truncated").unwrap();
+        assert!(store.load(&k, 2).is_none(), "corrupt checkpoint must read as missing");
+    }
+
+    #[test]
+    fn remove_deletes_exactly_one_cell() {
+        let store = tmp_store("remove");
+        let (a, b) = (key(1), key(2));
+        store.save(&a, 2, &report(0.5)).unwrap();
+        store.save(&b, 2, &report(0.6)).unwrap();
+        assert!(store.remove(&a));
+        assert!(!store.remove(&a), "second removal is a no-op");
+        assert!(store.load(&a, 2).is_none());
+        assert!(store.load(&b, 2).is_some(), "other cells untouched");
+    }
+}

@@ -11,26 +11,33 @@ use anyhow::{ensure, Result};
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MatF32 {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// Row-major backing buffer (`rows * cols` elements).
     pub data: Vec<f32>,
 }
 
 impl MatF32 {
+    /// Zero-filled matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         MatF32 { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap an existing row-major buffer; errors on length mismatch.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
         ensure!(data.len() == rows * cols, "data len {} != {rows}x{cols}", data.len());
         Ok(MatF32 { rows, cols, data })
     }
 
+    /// Row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]

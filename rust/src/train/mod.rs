@@ -12,12 +12,16 @@ use crate::runtime::Runtime;
 
 /// Mutable training state (flat params + momentum vectors).
 pub struct TrainState {
+    /// Flat parameter vector (backend layout).
     pub params: Vec<f32>,
+    /// Flat momentum vector, same layout as `params`.
     pub momentum: Vec<f32>,
+    /// Steps taken so far.
     pub step: usize,
 }
 
 impl TrainState {
+    /// Fresh state from host-side initial parameters (zero momentum).
     pub fn new(rt: &Runtime, init: &[f32]) -> Result<TrainState> {
         Ok(TrainState {
             params: rt.params_from_host(init)?,
@@ -54,9 +58,13 @@ impl TrainState {
 /// Evaluation summary over a dataset.
 #[derive(Debug, Clone)]
 pub struct EvalOut {
+    /// Mean loss over the dataset.
     pub mean_loss: f32,
+    /// Fraction of examples classified correctly.
     pub accuracy: f32,
+    /// Per-example losses.
     pub per_ex_loss: Vec<f32>,
+    /// Per-example 0/1 correctness.
     pub per_ex_correct: Vec<f32>,
 }
 

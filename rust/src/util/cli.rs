@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 #[derive(Debug, Clone)]
 struct FlagSpec {
     name: &'static str,
-    help: &'static str,
+    help: String,
     takes_value: bool,
     default: Option<String>,
 }
@@ -28,15 +28,17 @@ pub struct Cli {
 }
 
 impl Cli {
+    /// Parser for `program` with a one-line description.
     pub fn new(program: &str, about: &'static str) -> Self {
         Cli { program: program.to_string(), about, ..Default::default() }
     }
 
-    /// Register a flag that takes a value, with a default.
-    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+    /// Register a flag that takes a value, with a default. Help text may
+    /// be built at runtime (e.g. generated from an enum's variant list).
+    pub fn opt(mut self, name: &'static str, default: &str, help: impl Into<String>) -> Self {
         self.flags.push(FlagSpec {
             name,
-            help,
+            help: help.into(),
             takes_value: true,
             default: Some(default.to_string()),
         });
@@ -44,14 +46,14 @@ impl Cli {
     }
 
     /// Register a flag that takes a value, without a default (optional).
-    pub fn opt_maybe(mut self, name: &'static str, help: &'static str) -> Self {
-        self.flags.push(FlagSpec { name, help, takes_value: true, default: None });
+    pub fn opt_maybe(mut self, name: &'static str, help: impl Into<String>) -> Self {
+        self.flags.push(FlagSpec { name, help: help.into(), takes_value: true, default: None });
         self
     }
 
     /// Register a boolean flag.
-    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
-        self.flags.push(FlagSpec { name, help, takes_value: false, default: None });
+    pub fn flag(mut self, name: &'static str, help: impl Into<String>) -> Self {
+        self.flags.push(FlagSpec { name, help: help.into(), takes_value: false, default: None });
         self
     }
 
@@ -110,6 +112,7 @@ impl Cli {
         Ok(Parsed { values: self.values, positionals: self.positionals })
     }
 
+    /// The `--help` text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n",
                             self.program, self.about, self.program);
@@ -127,36 +130,44 @@ impl Cli {
 #[derive(Debug)]
 pub struct Parsed {
     values: HashMap<&'static str, Vec<String>>,
+    /// Non-flag arguments, in order.
     pub positionals: Vec<String>,
 }
 
 impl Parsed {
+    /// Last value given for the flag (or its default), if any.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
+    /// Every occurrence of a repeated flag, in order.
     pub fn get_all(&self, name: &str) -> Vec<&str> {
         self.values.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
     }
 
+    /// Flag value as an owned string (empty when absent).
     pub fn str(&self, name: &str) -> String {
         self.get(name).unwrap_or_default().to_string()
     }
 
+    /// Boolean flag presence.
     pub fn bool(&self, name: &str) -> bool {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Flag value parsed as `usize`.
     pub fn usize(&self, name: &str) -> Result<usize> {
         let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
         Ok(v.parse()?)
     }
 
+    /// Flag value parsed as `u64`.
     pub fn u64(&self, name: &str) -> Result<u64> {
         let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
         Ok(v.parse()?)
     }
 
+    /// Flag value parsed as `f32`.
     pub fn f32(&self, name: &str) -> Result<f32> {
         let v = self.get(name).ok_or_else(|| anyhow::anyhow!("missing --{name}"))?;
         Ok(v.parse()?)

@@ -7,23 +7,31 @@
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, with key order preserved.
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
     // ---------------------------------------------------------------- parse
 
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -37,6 +45,7 @@ impl Json {
 
     // ------------------------------------------------------------ accessors
 
+    /// Object member lookup (`None` on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -49,6 +58,7 @@ impl Json {
         self.get(key).ok_or_else(|| anyhow!("missing key {key:?}"))
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -56,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         let f = self.as_f64()?;
         if f < 0.0 || f.fract() != 0.0 {
@@ -64,6 +75,7 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// The value as a string.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -71,6 +83,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -78,6 +91,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -85,6 +99,7 @@ impl Json {
         }
     }
 
+    /// The value as (key, value) pairs in document order.
     pub fn as_obj(&self) -> Result<&[(String, Json)]> {
         match self {
             Json::Obj(v) => Ok(v),
@@ -99,10 +114,12 @@ impl Json {
 
     // ------------------------------------------------------------- builders
 
+    /// Empty object for builder-style construction.
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }
 
+    /// Append a key/value pair (builder style; no-op on non-objects).
     pub fn set(mut self, key: &str, val: impl Into<Json>) -> Json {
         if let Json::Obj(ref mut kvs) = self {
             kvs.push((key.to_string(), val.into()));
@@ -112,12 +129,14 @@ impl Json {
 
     // -------------------------------------------------------------- writing
 
+    /// Render with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, true);
         out
     }
 
+    /// Render without whitespace.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);
@@ -175,8 +194,31 @@ impl Json {
     }
 }
 
+/// Write `doc` to `path` atomically (temp file + rename), so a killed
+/// process never leaves a truncated document behind. The temp name embeds
+/// the process id so concurrent writers from different processes (e.g.
+/// two sweeps sharing one `--out` trajectory) cannot interleave into one
+/// temp file; last rename wins with an internally-consistent document.
+/// Shared by the sweep checkpoint store and the bench trajectory writer.
+pub fn write_atomic(path: &Path, doc: &Json) -> Result<()> {
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(format!(".{}.tmp", std::process::id()));
+    let tmp = std::path::PathBuf::from(tmp_name);
+    std::fs::write(&tmp, doc.to_string_pretty())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("committing {}", path.display()))?;
+    Ok(())
+}
+
 fn write_number(out: &mut String, n: f64) {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
+    if !n.is_finite() {
+        // JSON has no NaN/±inf tokens; emitting them would make the whole
+        // document unparseable (and e.g. wipe an append-merge trajectory
+        // file on the next read). `null` keeps the document valid; readers
+        // treat the field as absent/invalid instead.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
         let _ = write!(out, "{}", n as i64);
     } else {
         let _ = write!(out, "{n}");
@@ -501,6 +543,16 @@ mod tests {
     fn integers_written_without_fraction() {
         assert_eq!(Json::Num(5.0).to_string_compact(), "5");
         assert_eq!(Json::Num(5.25).to_string_compact(), "5.25");
+    }
+
+    #[test]
+    fn non_finite_numbers_write_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj().set("x", bad).to_string_compact();
+            assert_eq!(doc, r#"{"x":null}"#);
+            // the emitted document must stay parseable
+            assert!(Json::parse(&doc).is_ok());
+        }
     }
 
     #[test]

@@ -84,6 +84,7 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// Pool with an explicit worker count (min 1).
     pub fn new(threads: usize) -> Pool {
         Pool { threads: threads.max(1) }
     }
@@ -109,6 +110,7 @@ impl Pool {
         }
     }
 
+    /// This pool's worker count.
     pub fn threads(&self) -> usize {
         self.threads
     }

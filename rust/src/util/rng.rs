@@ -43,6 +43,7 @@ impl Rng {
         Rng::new(seed)
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -52,6 +53,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

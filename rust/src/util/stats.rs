@@ -20,6 +20,7 @@ pub fn variance(xs: &[f32]) -> f32 {
     (xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64) as f32
 }
 
+/// Population standard deviation.
 pub fn stddev(xs: &[f32]) -> f32 {
     variance(xs).sqrt()
 }
@@ -42,6 +43,7 @@ pub fn percentile(xs: &[f32], p: f32) -> f32 {
     }
 }
 
+/// Median (50th percentile).
 pub fn median(xs: &[f32]) -> f32 {
     percentile(xs, 50.0)
 }
@@ -65,10 +67,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one observation in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -76,10 +80,12 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Observations folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -105,11 +111,13 @@ impl Welford {
 
 // ------------------------------------------------------------- vector math
 
+/// Dot product accumulated in f64.
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
+/// Euclidean norm.
 pub fn norm2(a: &[f32]) -> f64 {
     dot(a, a).sqrt()
 }

@@ -14,6 +14,7 @@ pub struct PhaseTimers {
 }
 
 impl PhaseTimers {
+    /// Empty timer set.
     pub fn new() -> Self {
         Self::default()
     }
@@ -26,16 +27,19 @@ impl PhaseTimers {
         out
     }
 
+    /// Charge `d` to the bucket and bump its call count.
     pub fn add(&mut self, name: &'static str, d: Duration) {
         let e = self.buckets.entry(name).or_insert((Duration::ZERO, 0));
         e.0 += d;
         e.1 += 1;
     }
 
+    /// Total time charged to the bucket (zero when never hit).
     pub fn total(&self, name: &str) -> Duration {
         self.buckets.get(name).map(|(d, _)| *d).unwrap_or(Duration::ZERO)
     }
 
+    /// Calls charged to the bucket.
     pub fn count(&self, name: &str) -> u64 {
         self.buckets.get(name).map(|(_, c)| *c).unwrap_or(0)
     }

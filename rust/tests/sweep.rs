@@ -1,0 +1,125 @@
+//! Sweep-orchestrator semantics on the tiny `smoke` variant:
+//!
+//! * an interrupted-then-resumed sweep produces bitwise-identical
+//!   per-cell deterministic reports and aggregates vs an uninterrupted run
+//! * only the missing cells re-execute on resume
+//! * scheduling cells across pool workers does not perturb results
+
+use std::path::PathBuf;
+
+use crest::config::MethodKind;
+use crest::report::aggregate_markdown;
+use crest::sweep::{self, CheckpointStore, SweepGrid, SweepOutcome, SweepSpec};
+
+/// The acceptance grid: smoke × {crest, random} × seeds {1, 2} @ 10%.
+fn smoke_grid(seeds: Vec<u64>) -> SweepGrid {
+    SweepGrid {
+        variants: vec!["smoke".to_string()],
+        methods: vec![MethodKind::Crest, MethodKind::Random],
+        seeds,
+        budgets: vec![0.1],
+    }
+}
+
+fn smoke_spec(seeds: Vec<u64>, dir: Option<PathBuf>, jobs: usize) -> SweepSpec {
+    let mut spec = SweepSpec::new(smoke_grid(seeds), 2);
+    spec.checkpoint_dir = dir;
+    spec.jobs = jobs;
+    spec
+}
+
+/// Fresh (absent) temp checkpoint dir, unique per test.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("crest-sweep-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bitwise fingerprint of a sweep's deterministic content: every cell's
+/// deterministic report core plus the rendered aggregates.
+fn fingerprint(outcome: &SweepOutcome) -> Vec<String> {
+    let mut out: Vec<String> = outcome
+        .cells
+        .iter()
+        .map(|c| format!("{}\n{}", c.key.label(), c.report.deterministic_json().to_string_pretty()))
+        .collect();
+    out.push(aggregate_markdown(&outcome.rows));
+    out.extend(outcome.rows.iter().map(|r| r.to_json().to_string_pretty()));
+    out
+}
+
+#[test]
+fn interrupted_then_resumed_sweep_matches_uninterrupted_bitwise() {
+    let dir = tmp_dir("resume");
+
+    // reference: uninterrupted, no checkpoints, serial
+    let reference = sweep::run(&smoke_spec(vec![1, 2], None, 1)).unwrap();
+    assert_eq!(reference.cells.len(), 4);
+    assert_eq!(reference.n_executed(), 4);
+
+    // "interrupted" sweep: only the seed-1 half of the grid completed
+    // before the kill — its cells are checkpointed
+    let partial = sweep::run(&smoke_spec(vec![1], Some(dir.clone()), 2)).unwrap();
+    assert_eq!(partial.n_executed(), 2);
+
+    // resume the full grid: only the missing seed-2 cells execute
+    let resumed = sweep::run(&smoke_spec(vec![1, 2], Some(dir.clone()), 2)).unwrap();
+    assert_eq!(resumed.cells.len(), 4);
+    assert_eq!(resumed.n_executed(), 2, "only missing cells re-execute");
+    assert_eq!(resumed.n_restored(), 2);
+    for c in &resumed.cells {
+        assert_eq!(c.executed, c.key.seed == 2, "exactly the seed-2 cells ran: {}", c.key.label());
+    }
+
+    // per-cell reports and aggregates are bitwise-identical to the
+    // uninterrupted run (deterministic core; wall-clock excluded)
+    assert_eq!(fingerprint(&resumed), fingerprint(&reference));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deleting_one_checkpoint_reexecutes_only_that_cell_and_reproduces_aggregate() {
+    let dir = tmp_dir("delete-one");
+
+    let first = sweep::run(&smoke_spec(vec![1, 2], Some(dir.clone()), 2)).unwrap();
+    assert_eq!(first.n_executed(), 4);
+
+    // a second invocation restores everything
+    let warm = sweep::run(&smoke_spec(vec![1, 2], Some(dir.clone()), 2)).unwrap();
+    assert_eq!(warm.n_executed(), 0);
+    assert_eq!(fingerprint(&warm), fingerprint(&first));
+
+    // delete one cell's checkpoint -> exactly that cell re-executes
+    let victim = first.cells[1].key.clone();
+    let store = CheckpointStore::open(&dir).unwrap();
+    assert!(store.remove(&victim), "victim checkpoint existed");
+    let repaired = sweep::run(&smoke_spec(vec![1, 2], Some(dir.clone()), 2)).unwrap();
+    assert_eq!(repaired.n_executed(), 1);
+    for c in &repaired.cells {
+        assert_eq!(c.executed, c.key == victim, "re-executed wrong cell: {}", c.key.label());
+    }
+
+    // ... and the re-executed cell reproduces the aggregate bitwise
+    assert_eq!(fingerprint(&repaired), fingerprint(&first));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn parallel_and_serial_scheduling_agree_bitwise() {
+    let serial = sweep::run(&smoke_spec(vec![1, 2], None, 1)).unwrap();
+    let parallel = sweep::run(&smoke_spec(vec![1, 2], None, 4)).unwrap();
+    assert_eq!(fingerprint(&parallel), fingerprint(&serial));
+    // grid order is preserved regardless of completion order
+    let labels: Vec<String> = parallel.cells.iter().map(|c| c.key.label()).collect();
+    assert_eq!(
+        labels,
+        vec![
+            "smoke/crest/seed=1/budget=0.1",
+            "smoke/crest/seed=2/budget=0.1",
+            "smoke/random/seed=1/budget=0.1",
+            "smoke/random/seed=2/budget=0.1",
+        ]
+    );
+}
