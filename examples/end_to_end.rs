@@ -3,22 +3,40 @@
 //!
 //! Pipeline proven here:
 //!   runtime backend (native by default; PJRT-compiled artifacts behind the
-//!   `pjrt` feature) → CREST coordinator (Algorithm 1)
-//!   → full-vs-budgeted training with loss curves → relative error + speedup.
+//!   `pjrt` feature) → `Experiment` builder → CREST coordinator
+//!   (Algorithm 1) → full-vs-budgeted training with loss curves →
+//!   relative error + speedup. A `RunObserver` streams per-eval progress
+//!   while each cell trains.
 //!
 //! Writes a JSON transcript to reports/end_to_end.json.
 //!
 //!   cargo run --release --example end_to_end -- [--variant cifar10-proxy]
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
-use crest::config::{ExperimentConfig, MethodKind};
-use crest::coordinator::run_experiment;
+use crest::api::{EvalEvent, Experiment, Method, RunObserver, Signal};
 use crest::data::{generate, SynthSpec};
 use crest::metrics::relative_error_pct;
 use crest::report::Table;
-use crest::runtime::Runtime;
 use crest::util::cli::Cli;
 use crest::util::json::Json;
+
+/// Streams one line per evaluation point — the observer-API replacement
+/// for polling a finished report's history.
+struct Progress {
+    method: &'static str,
+}
+
+impl RunObserver for Progress {
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Signal {
+        println!(
+            "  [{}] step {:>5}: test loss {:.2}, test acc {:.4}",
+            self.method, ev.step, ev.test_loss, ev.test_acc
+        );
+        Signal::Continue
+    }
+}
 
 fn main() -> Result<()> {
     crest::util::logging::init();
@@ -32,8 +50,9 @@ fn main() -> Result<()> {
     let variant = p.str("variant");
     let seed = p.u64("seed")?;
 
-    let rt = Runtime::load(std::path::Path::new("artifacts"), &variant)?;
-    let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
+    // one corpus shared by all three cells (it derives from variant+seed)
+    let splits =
+        Arc::new(generate(&SynthSpec::preset(&variant, seed).context("preset")?));
     println!("== end-to-end: {variant}, n={} ==", splits.train.n());
 
     let mut transcript = Vec::new();
@@ -41,21 +60,24 @@ fn main() -> Result<()> {
         "method", "budget", "test acc", "rel err %", "backprops", "wall (s)", "loss curve",
     ]);
     let mut full_acc = 0.0f32;
-    for (method, budget) in [
-        (MethodKind::Full, 1.0f32),
-        (MethodKind::Random, 0.1),
-        (MethodKind::Crest, 0.1),
+    for (method, label, budget) in [
+        (Method::full(), "full", 1.0f32),
+        (Method::random(), "random", 0.1),
+        (Method::crest(), "crest", 0.1),
     ] {
-        let mut cfg = ExperimentConfig::preset(&variant, method, seed)?;
-        cfg.epochs_full = p.usize("epochs-full")?;
-        cfg.budget_frac = budget;
-        let rep = run_experiment(&rt, &splits, cfg)?;
-        if method == MethodKind::Full {
+        let rep = Experiment::builder()
+            .variant(&variant)
+            .with_method(method)
+            .seed(seed)
+            .budget_frac(budget)
+            .epochs_full(p.usize("epochs-full")?)
+            .splits(splits.clone())
+            .observe(Box::new(Progress { method: label }))
+            .build()?
+            .run()?;
+        if method.is_reference() {
             full_acc = rep.final_test_acc;
         }
-        let curve: Vec<String> =
-            rep.history.iter().map(|h| format!("{:.2}", h.test_loss)).collect();
-        println!("loss curve [{}]: {}", rep.method, curve.join(" "));
         table.row(&[
             rep.method.clone(),
             format!("{:.0}%", budget * 100.0),

@@ -6,7 +6,8 @@
 //!   cargo run --release --example forgettability
 
 use anyhow::{Context, Result};
-use crest::config::{ExperimentConfig, MethodKind};
+use crest::api::Method;
+use crest::config::ExperimentConfig;
 use crest::coordinator::run_experiment;
 use crest::data::{generate, SynthSpec};
 use crest::report::Table;
@@ -27,7 +28,7 @@ fn main() -> Result<()> {
     let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
     let ds = &splits.train;
 
-    let cfg = ExperimentConfig::preset(&variant, MethodKind::Crest, seed)?;
+    let cfg = ExperimentConfig::preset(&variant, Method::crest(), seed)?;
     let rep = run_experiment(&rt, &splits, cfg)?;
 
     // selection counts vs ground-truth difficulty quartiles

@@ -10,7 +10,8 @@
 //! Usage: cargo run --release --example probe_gradients -- [--variant V]
 
 use anyhow::{Context, Result};
-use crest::config::{ExperimentConfig, MethodKind};
+use crest::api::Method;
+use crest::config::ExperimentConfig;
 use crest::coreset::facility;
 use crest::coreset::MiniBatchCoreset;
 use crest::data::{generate, SynthSpec};
@@ -36,7 +37,7 @@ fn main() -> Result<()> {
     let rt = Runtime::load(std::path::Path::new(&p.str("artifacts")), &variant)?;
     let splits = generate(&SynthSpec::preset(&variant, seed).context("preset")?);
     let ds = &splits.train;
-    let cfg = ExperimentConfig::preset(&variant, MethodKind::Random, seed)?;
+    let cfg = ExperimentConfig::preset(&variant, Method::random(), seed)?;
     let k_samples = p.usize("samples")?;
 
     let m = rt.man.m;

@@ -1,28 +1,29 @@
 //! Quickstart — the smallest complete use of the public API:
-//! load a variant's runtime (native CPU backend, no artifacts needed),
-//! generate its proxy corpus, train with CREST under a 10% budget, and
-//! print the result.
+//! build an experiment with the `Experiment` builder (native CPU backend,
+//! no artifacts needed), train with CREST under a 10% budget, and print
+//! the result next to the Random baseline.
 //!
 //!   cargo run --release --example quickstart
 
-use anyhow::{Context, Result};
-use crest::config::{ExperimentConfig, MethodKind};
-use crest::coordinator::run_experiment;
-use crest::data::{generate, SynthSpec};
-use crest::runtime::Runtime;
+use anyhow::Result;
+use crest::api::Experiment;
 
 fn main() -> Result<()> {
     crest::util::logging::init();
     let variant = "cifar10-proxy";
     let seed = 1;
 
-    // 1. runtime: native backend from the builtin manifest (an artifacts/
-    //    directory, when present, overrides the shapes)
-    let rt = Runtime::load(std::path::Path::new("artifacts"), variant)?;
-    println!("{}", rt.describe());
-
-    // 2. data: the variant's synthetic proxy corpus
-    let splits = generate(&SynthSpec::preset(variant, seed).context("preset")?);
+    // 1. build: the builder validates the variant/method, loads the
+    //    native runtime (an artifacts/ directory, when present, overrides
+    //    the shapes) and generates the variant's synthetic proxy corpus
+    let mut crest_exp = Experiment::builder()
+        .variant(variant)
+        .method("crest")
+        .seed(seed)
+        .budget_frac(0.1)
+        .build()?;
+    println!("{}", crest_exp.runtime().describe());
+    let splits = crest_exp.splits();
     println!(
         "data: {} train / {} val / {} test, {} classes",
         splits.train.n(),
@@ -31,17 +32,23 @@ fn main() -> Result<()> {
         splits.train.classes
     );
 
-    // 3. train with CREST at a 10% backprop budget
-    let cfg = ExperimentConfig::preset(variant, MethodKind::Crest, seed)?;
-    let report = run_experiment(&rt, &splits, cfg)?;
+    // 2. run CREST at a 10% backprop budget
+    let report = crest_exp.run()?;
     println!(
         "CREST: test acc {:.4} in {} steps ({} coreset updates, {} examples excluded)",
         report.final_test_acc, report.steps, report.n_selection_updates, report.n_excluded
     );
 
-    // 4. compare against the Random baseline at the same budget
-    let cfg = ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
-    let random = run_experiment(&rt, &splits, cfg)?;
+    // 3. compare against the Random baseline at the same budget,
+    //    reusing the corpus the first experiment already generated
+    let random = Experiment::builder()
+        .variant(variant)
+        .method("random")
+        .seed(seed)
+        .budget_frac(0.1)
+        .splits(crest_exp.splits_arc())
+        .build()?
+        .run()?;
     println!("Random: test acc {:.4} in {} steps", random.final_test_acc, random.steps);
     Ok(())
 }

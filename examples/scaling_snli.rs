@@ -6,7 +6,8 @@
 //!   cargo run --release --example scaling_snli
 
 use anyhow::{Context, Result};
-use crest::config::{ExperimentConfig, MethodKind};
+use crest::api::Method;
+use crest::config::ExperimentConfig;
 use crest::coordinator::run_experiment;
 use crest::coordinator::sources::full_embeddings;
 use crest::data::{generate, SynthSpec};
@@ -61,7 +62,7 @@ fn main() -> Result<()> {
     // budgeted training on the large corpus
     println!("\n== 10% budget training ==");
     let mut t = Table::new(&["method", "test acc", "wall (s)"]);
-    for method in [MethodKind::Random, MethodKind::Crest] {
+    for method in [Method::random(), Method::crest()] {
         let cfg = ExperimentConfig::preset(variant, method, seed)?;
         let rep = run_experiment(&rt, &splits, cfg)?;
         t.row(&[

@@ -8,8 +8,8 @@
 //!     vs CREST mini-batch coresets vs random mini-batches.
 
 use anyhow::Result;
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::coordinator::sources::full_embeddings;
 use crest::coreset::{craig, facility, MiniBatchCoreset};
 use crest::metrics::gradprobe;
@@ -29,9 +29,9 @@ fn main() -> Result<()> {
     // ---------------- (a) accuracy curves ----------------
     println!("# Fig 1a — test accuracy vs step (10% budget)");
     println!("{:>8} {:>10} {:>10} {:>10}", "step", "craig", "random", "full");
-    let craig_rep = sc::cell(&rt, &splits, variant, MethodKind::Craig, seed, |_| {})?;
-    let rand_rep = sc::cell(&rt, &splits, variant, MethodKind::Random, seed, |_| {})?;
-    let full_rep = sc::cell(&rt, &splits, variant, MethodKind::Full, seed, |_| {})?;
+    let craig_rep = sc::cell(&rt, &splits, variant, Method::craig(), seed, |_| {})?;
+    let rand_rep = sc::cell(&rt, &splits, variant, Method::random(), seed, |_| {})?;
+    let full_rep = sc::cell(&rt, &splits, variant, Method::full(), seed, |_| {})?;
     for i in 0..craig_rep.history.len().min(rand_rep.history.len()) {
         let c = &craig_rep.history[i];
         let r = &rand_rep.history[i];
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(seed ^ 0x51);
     let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;
     let (m, r) = (rt.man.m, rt.man.r);
-    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let cfg = crest::config::ExperimentConfig::preset(variant, Method::random(), seed)?;
     let sched = LrSchedule::paper_default(cfg.base_lr);
     let total = 400usize;
     // select a CRAIG coreset ONCE at step 0 (the stale coreset of Fig. 1b)

@@ -6,18 +6,18 @@
 //! testbed training dominates; on a tiny-MLP CPU substrate selection
 //! overhead weighs more, so backprops are the primary speedup metric).
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
     println!("# Fig 2 — accuracy and cost, normalized to full-data training");
     let methods = [
-        MethodKind::Full,
-        MethodKind::Random,
-        MethodKind::Crest,
-        MethodKind::Craig,
+        Method::full(),
+        Method::random(),
+        Method::crest(),
+        Method::craig(),
     ];
     for variant in sc::variants() {
         let seed = 1;
@@ -30,13 +30,13 @@ fn main() -> anyhow::Result<()> {
             // CRAIG's full-data selection is prohibitively slow on the two
             // larger corpora — the paper makes the same scaling argument
             // (it cannot run on SNLI at all).
-            if method == MethodKind::Craig && splits.train.n() > 10_000 {
+            if method == Method::craig() && splits.train.n() > 10_000 {
                 table.row(&["craig".into(), "-".into(), "(does not scale)".into(),
                             "-".into(), "-".into(), "-".into()]);
                 continue;
             }
             let rep = sc::cell(&rt, &splits, &variant, method, seed, |_| {})?;
-            if method == MethodKind::Full {
+            if method == Method::full() {
                 full = Some((rep.final_test_acc, rep.total_secs, rep.backprops));
             }
             let (fa, fs, fb) = full.expect("full runs first");

@@ -5,8 +5,8 @@
 //! Expected shape (paper): CREST preserves ~95-99% of greedy's accuracy
 //! with a few % of its update count.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 use crest::util::stats;
 
@@ -22,9 +22,9 @@ fn main() -> anyhow::Result<()> {
         let (mut cu, mut gu) = (Vec::new(), Vec::new());
         for seed in sc::seeds() {
             let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
-            let crest_rep = sc::cell(&rt, &splits, &variant, MethodKind::Crest, seed, |_| {})?;
+            let crest_rep = sc::cell(&rt, &splits, &variant, Method::crest(), seed, |_| {})?;
             let greedy_rep =
-                sc::cell(&rt, &splits, &variant, MethodKind::GreedyPerBatch, seed, |_| {})?;
+                sc::cell(&rt, &splits, &variant, Method::greedy_per_batch(), seed, |_| {})?;
             accs.push(crest_rep.final_test_acc / greedy_rep.final_test_acc.max(1e-6));
             upds.push(crest_rep.n_selection_updates as f32
                 / greedy_rep.n_selection_updates.max(1) as f32);

@@ -3,8 +3,8 @@
 //! (right) final accuracy vs total update count for the quadratic,
 //! first-order, and unsmoothed variants.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
 
     println!("# Fig 4 (left) — cumulative coreset updates vs iteration (CREST, {variant})");
-    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let rep = sc::cell(&rt, &splits, variant, Method::crest(), seed, |_| {})?;
     let total_steps = rep.steps.max(1);
     println!("{:>10} {:>10}", "iteration", "updates");
     let buckets = 10;
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         ("no smoothing", Box::new(|c| c.crest.smooth = false)),
     ];
     for (name, patch) in cells {
-        let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, patch)?;
+        let rep = sc::cell(&rt, &splits, variant, Method::crest(), seed, patch)?;
         table.row(&[
             name.to_string(),
             format!("{:.4}", rep.final_test_acc),

@@ -6,8 +6,8 @@
 //! training (score rises); exclusion amplifies the effect; Random stays
 //! flat at the dataset mean.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 
 fn series(rep: &crest::report::RunReport, buckets: usize) -> Vec<f32> {
     // bucket the (step, score) series into equal step ranges
@@ -30,10 +30,10 @@ fn main() -> anyhow::Result<()> {
     let seed = 1;
     let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
 
-    let crest_ex = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let crest_ex = sc::cell(&rt, &splits, variant, Method::crest(), seed, |_| {})?;
     let crest_no =
-        sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |c| c.crest.exclude = false)?;
-    let random = sc::cell(&rt, &splits, variant, MethodKind::Random, seed, |_| {})?;
+        sc::cell(&rt, &splits, variant, Method::crest(), seed, |c| c.crest.exclude = false)?;
+    let random = sc::cell(&rt, &splits, variant, Method::random(), seed, |_| {})?;
 
     println!("# Fig 5 — mean final forgettability of selected examples ({variant})");
     println!("{:>12} {:>16} {:>16} {:>12}", "train frac", "crest+exclude", "crest no-excl", "random");

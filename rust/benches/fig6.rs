@@ -5,8 +5,8 @@
 //! Theorem 4.1 Case 1 vs Case 2).
 
 use anyhow::Result;
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::coordinator::sources::full_embeddings;
 use crest::coreset::{craig, facility, MiniBatchCoreset};
 use crest::metrics::gradprobe;
@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     let (m, r, p_dim) = (rt.man.m, rt.man.r, rt.man.p_dim);
     let p_count = 5usize;
 
-    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let cfg = crest::config::ExperimentConfig::preset(variant, Method::random(), seed)?;
     let sched = LrSchedule::paper_default(cfg.base_lr);
     let mut rng = Rng::new(seed ^ 0x66);
     let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;

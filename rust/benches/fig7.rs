@@ -3,8 +3,8 @@
 //! each example appears in a training batch (long-tailed: not all examples
 //! matter equally).
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
@@ -12,7 +12,7 @@ fn main() -> anyhow::Result<()> {
     let seed = 1;
     let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
 
-    let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let rep = sc::cell(&rt, &splits, variant, Method::crest(), seed, |_| {})?;
 
     println!("# Fig 7a — accuracy of dropped examples over training ({variant})");
     if rep.dropped_acc_history.is_empty() {

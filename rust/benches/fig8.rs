@@ -10,8 +10,8 @@
 //! step.
 
 use anyhow::Result;
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::metrics::gradprobe;
 use crest::model::init_params;
 use crest::opt::{Budget, LrSchedule};
@@ -27,12 +27,12 @@ fn main() -> Result<()> {
     let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
     let ds = &splits.train;
     let (m, r) = (rt.man.m, rt.man.r);
-    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let cfg = crest::config::ExperimentConfig::preset(variant, Method::random(), seed)?;
 
     // (i) random-m and (ii) crest via the coordinator
-    let full = sc::cell(&rt, &splits, variant, MethodKind::Full, seed, |_| {})?;
-    let rand_m = sc::cell(&rt, &splits, variant, MethodKind::Random, seed, |_| {})?;
-    let crest_rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |_| {})?;
+    let full = sc::cell(&rt, &splits, variant, Method::full(), seed, |_| {})?;
+    let rand_m = sc::cell(&rt, &splits, variant, Method::random(), seed, |_| {})?;
+    let crest_rep = sc::cell(&rt, &splits, variant, Method::crest(), seed, |_| {})?;
 
     // (iii) emulated random-r: host-side SGD with exact size-r gradients
     let mut rng = Rng::new(seed ^ 0x88);

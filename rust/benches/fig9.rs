@@ -5,8 +5,8 @@
 //! Expected shape (paper): Var(crest-mb) ≈ Var(random-r) ≪ Var(random-m).
 
 use anyhow::Result;
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::coreset::{facility, MiniBatchCoreset};
 use crest::metrics::gradprobe;
 use crest::model::init_params;
@@ -21,7 +21,7 @@ fn main() -> Result<()> {
     let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
     let ds = &splits.train;
     let (m, r, p_dim) = (rt.man.m, rt.man.r, rt.man.p_dim);
-    let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Random, seed)?;
+    let cfg = crest::config::ExperimentConfig::preset(variant, Method::random(), seed)?;
     let sched = LrSchedule::paper_default(cfg.base_lr);
     let mut rng = Rng::new(seed ^ 0x99);
     let mut state = TrainState::new(&rt, &init_params(&rt.man, &mut rng))?;

@@ -9,8 +9,8 @@
 //! Expected shape (paper): CREST ≤ Random < GRADMATCH < CRAIG, GLISTER
 //! worst; SGD† well above Random.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 use crest::sweep::{self, SweepGrid, SweepSpec};
 use crest::util::stats;
@@ -19,12 +19,12 @@ fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
     // column order of the paper's Table 1
     let methods = [
-        MethodKind::SgdTruncated,
-        MethodKind::Random,
-        MethodKind::Craig,
-        MethodKind::GradMatch,
-        MethodKind::Glister,
-        MethodKind::Crest,
+        Method::sgd_truncated(),
+        Method::random(),
+        Method::craig(),
+        Method::gradmatch(),
+        Method::glister(),
+        Method::crest(),
     ];
     let variants: Vec<String> = sc::variants().into_iter().filter(|v| sc::known(v)).collect();
     if variants.is_empty() {
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // one grid: the full reference plus every method, all seeds
-    let mut grid_methods = vec![MethodKind::Full];
+    let mut grid_methods = vec![Method::full()];
     grid_methods.extend(methods);
     let mut spec = SweepSpec::new(
         SweepGrid {
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         let full_accs: Vec<f32> = outcome
             .cells
             .iter()
-            .filter(|c| c.key.variant == *variant && c.key.method == MethodKind::Full)
+            .filter(|c| c.key.variant == *variant && c.key.method == Method::full())
             .map(|c| c.report.final_test_acc * 100.0)
             .collect();
         row.push(format!("{:.2}", stats::mean(&full_accs)));
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n# Table 6 — tuned hyperparameters per variant");
     let mut t6 = Table::new(&["variant", "tau", "h"]);
     for variant in &variants {
-        let cfg = crest::config::ExperimentConfig::preset(variant, MethodKind::Crest, 0)?;
+        let cfg = crest::config::ExperimentConfig::preset(variant, Method::crest(), 0)?;
         t6.row(&[variant.clone(), format!("{}", cfg.tau), format!("{}", cfg.h_mult)]);
     }
     print!("{}", t6.render());

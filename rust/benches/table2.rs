@@ -11,8 +11,8 @@
 
 use std::time::Instant;
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::coordinator::sources::full_embeddings;
 use crest::coreset::facility;
 use crest::coreset::MiniBatchCoreset;
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     let mut spec = SweepSpec::new(
         SweepGrid {
             variants: vec![variant.to_string()],
-            methods: vec![MethodKind::Crest],
+            methods: vec![Method::crest()],
             seeds: vec![1],
             budgets: vec![0.1],
         },

@@ -5,8 +5,8 @@
 //! the fewest coreset updates; first-order and unsmoothed variants update
 //! more and do worse.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 use crest::util::stats;
 
@@ -24,9 +24,9 @@ fn main() -> anyhow::Result<()> {
     let mut per_row: Vec<(Vec<f32>, Vec<f32>)> = vec![(Vec::new(), Vec::new()); rows.len()];
     for seed in sc::seeds() {
         let Some((rt, splits)) = sc::load(variant, seed) else { return Ok(()) };
-        let full = sc::cell(&rt, &splits, variant, MethodKind::Full, seed, |_| {})?;
+        let full = sc::cell(&rt, &splits, variant, Method::full(), seed, |_| {})?;
         for (ri, (_, patch)) in rows.iter().enumerate() {
-            let rep = sc::cell(&rt, &splits, variant, MethodKind::Crest, seed, |c| patch(c))?;
+            let rep = sc::cell(&rt, &splits, variant, Method::crest(), seed, |c| patch(c))?;
             per_row[ri].0.push(sc::rel_err(rep.final_test_acc, full.final_test_acc));
             per_row[ri].1.push(rep.n_selection_updates as f32);
         }

@@ -5,14 +5,14 @@
 //! close to full training (2-4% rel. error) while SGD† still lags badly;
 //! CREST's edge over Random shrinks.
 
+use crest::api::Method;
 use crest::bench_util::scenario as sc;
-use crest::config::MethodKind;
 use crest::report::Table;
 
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
     println!("# Table 5 — relative error (%) @ 20% budget ({} seeds)", sc::seeds().len());
-    let methods = [MethodKind::Crest, MethodKind::Random, MethodKind::SgdTruncated];
+    let methods = [Method::crest(), Method::random(), Method::sgd_truncated()];
     let mut table = Table::new(&["variant", "crest", "random", "sgd†"]);
     let variants: Vec<String> = sc::variants()
         .into_iter()
@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
         let mut rel = vec![Vec::new(); methods.len()];
         for seed in sc::seeds() {
             let Some((rt, splits)) = sc::load(&variant, seed) else { return Ok(()) };
-            let full = sc::cell(&rt, &splits, &variant, MethodKind::Full, seed, |_| {})?;
+            let full = sc::cell(&rt, &splits, &variant, Method::full(), seed, |_| {})?;
             for (mi, &m) in methods.iter().enumerate() {
                 let rep = sc::cell(&rt, &splits, &variant, m, seed, |c| c.budget_frac = 0.20)?;
                 rel[mi].push(sc::rel_err(rep.final_test_acc, full.final_test_acc));

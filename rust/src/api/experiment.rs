@@ -1,0 +1,240 @@
+//! The `Experiment` builder: the high-level library entry point.
+//!
+//! Replaces the old `preset` + field-mutation + free-function flow with a
+//! validating builder:
+//!
+//! ```
+//! use crest::api::Experiment;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let report = Experiment::builder()
+//!     .variant("smoke")
+//!     .method("crest")
+//!     .seed(1)
+//!     .budget_frac(0.1)
+//!     .epochs_full(2)
+//!     .build()?
+//!     .run()?;
+//! assert_eq!(report.method, "crest");
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Everything is validated at [`ExperimentBuilder::build`]: unknown
+//! variants and methods, out-of-range budgets, zero epochs. `build` also
+//! loads the variant's runtime and (unless a corpus is injected with
+//! [`ExperimentBuilder::splits`]) generates the proxy corpus, so
+//! [`Experiment::run`] itself cannot fail on configuration.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::Coordinator;
+use crate::data::{generate, Splits, SynthSpec};
+use crate::report::RunReport;
+use crate::runtime::Runtime;
+use crate::util::json::Json;
+
+use super::observer::RunObserver;
+use super::registry::Method;
+
+enum MethodSel {
+    Name(String),
+    Handle(Method),
+}
+
+/// A fully validated, ready-to-run experiment: configuration, runtime,
+/// corpus, and attached observers. Built by [`Experiment::builder`].
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    rt: Runtime,
+    splits: Arc<Splits>,
+    observers: Vec<Box<dyn RunObserver>>,
+}
+
+impl Experiment {
+    /// Start building an experiment. Defaults: `cifar10-proxy` variant,
+    /// `crest` method, seed 1, the preset budget (10%) and reference
+    /// epochs, artifact root `artifacts`.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder {
+            variant: "cifar10-proxy".to_string(),
+            method: None,
+            seed: 1,
+            budget_frac: None,
+            epochs_full: None,
+            artifact_root: PathBuf::from("artifacts"),
+            splits: None,
+            overrides: Vec::new(),
+            tweaks: Vec::new(),
+            observers: Vec::new(),
+        }
+    }
+
+    /// The validated configuration this experiment will run.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The execution runtime the experiment runs on.
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// The train/val/test corpus of the experiment.
+    pub fn splits(&self) -> &Splits {
+        &self.splits
+    }
+
+    /// A shared handle to the corpus, for injecting into another
+    /// builder via [`ExperimentBuilder::splits`] (avoids regenerating
+    /// the identical (variant, seed) corpus per method).
+    pub fn splits_arc(&self) -> Arc<Splits> {
+        self.splits.clone()
+    }
+
+    /// Execute the experiment: drives the coordinator with the attached
+    /// observers and returns the run report. Re-running produces a
+    /// bitwise-identical deterministic report core (everything derives
+    /// from the seed).
+    pub fn run(&mut self) -> Result<RunReport> {
+        Coordinator::new(&self.rt, &self.splits, self.cfg.clone())
+            .run_observed(&mut self.observers)
+    }
+}
+
+/// Builder for [`Experiment`]; see the module docs for the shape.
+pub struct ExperimentBuilder {
+    variant: String,
+    method: Option<MethodSel>,
+    seed: u64,
+    budget_frac: Option<f32>,
+    epochs_full: Option<usize>,
+    artifact_root: PathBuf,
+    splits: Option<Arc<Splits>>,
+    overrides: Vec<Json>,
+    tweaks: Vec<Box<dyn FnOnce(&mut ExperimentConfig)>>,
+    observers: Vec<Box<dyn RunObserver>>,
+}
+
+impl ExperimentBuilder {
+    /// Model/dataset variant name (validated at build).
+    pub fn variant(mut self, variant: impl Into<String>) -> Self {
+        self.variant = variant.into();
+        self
+    }
+
+    /// Selection method by registry name or alias (validated at build).
+    pub fn method(mut self, name: impl Into<String>) -> Self {
+        self.method = Some(MethodSel::Name(name.into()));
+        self
+    }
+
+    /// Selection method by handle (e.g. the return value of
+    /// [`MethodRegistry::register`](super::MethodRegistry::register)).
+    pub fn with_method(mut self, method: Method) -> Self {
+        self.method = Some(MethodSel::Handle(method));
+        self
+    }
+
+    /// Experiment seed; data, init, subsets and probes all derive from
+    /// it.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Training budget as a fraction of the full run's backprops
+    /// (must be in (0, 1]).
+    pub fn budget_frac(mut self, frac: f32) -> Self {
+        self.budget_frac = Some(frac);
+        self
+    }
+
+    /// Epochs of the full-data reference run (the budget denominator;
+    /// must be at least 1).
+    pub fn epochs_full(mut self, epochs: usize) -> Self {
+        self.epochs_full = Some(epochs);
+        self
+    }
+
+    /// Artifact root consulted for manifest overrides (the native
+    /// backend falls back to builtin manifests when absent).
+    pub fn artifact_root(mut self, root: impl AsRef<Path>) -> Self {
+        self.artifact_root = root.as_ref().to_path_buf();
+        self
+    }
+
+    /// Inject a prepared corpus instead of regenerating it from the
+    /// (variant, seed) synthetic preset — how the sweep shares one corpus
+    /// across every cell of a (variant, seed) pair.
+    pub fn splits(mut self, splits: Arc<Splits>) -> Self {
+        self.splits = Some(splits);
+        self
+    }
+
+    /// Apply a partial JSON config override at build time (same schema as
+    /// [`ExperimentConfig::apply_json`]; unknown keys fail the build).
+    pub fn override_json(mut self, overrides: &Json) -> Self {
+        self.overrides.push(overrides.clone());
+        self
+    }
+
+    /// Escape hatch for knobs without a dedicated builder method: the
+    /// closure runs against the preset-derived config at build time,
+    /// after JSON overrides.
+    pub fn configure(mut self, f: impl FnOnce(&mut ExperimentConfig) + 'static) -> Self {
+        self.tweaks.push(Box::new(f));
+        self
+    }
+
+    /// Attach a run observer; observers receive the run's event stream
+    /// in attachment order and never change training results.
+    pub fn observe(mut self, observer: Box<dyn RunObserver>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// Validate and assemble the experiment: resolve the method against
+    /// the registry, derive the variant preset, apply overrides, check
+    /// ranges, load the runtime, and prepare the corpus.
+    pub fn build(self) -> Result<Experiment> {
+        let method = match self.method {
+            Some(MethodSel::Handle(m)) => m,
+            Some(MethodSel::Name(name)) => Method::parse(&name)?,
+            None => Method::crest(),
+        };
+        let mut cfg = ExperimentConfig::preset(&self.variant, method, self.seed)?;
+        if let Some(b) = self.budget_frac {
+            cfg.budget_frac = b;
+        }
+        if let Some(e) = self.epochs_full {
+            cfg.epochs_full = e;
+        }
+        for overrides in &self.overrides {
+            cfg.apply_json(overrides)?;
+        }
+        for tweak in self.tweaks {
+            tweak(&mut cfg);
+        }
+        if !(cfg.budget_frac > 0.0 && cfg.budget_frac <= 1.0) {
+            bail!("budget_frac {} out of (0, 1]", cfg.budget_frac);
+        }
+        if cfg.epochs_full == 0 {
+            bail!("epochs_full must be at least 1");
+        }
+        let rt = Runtime::load(&self.artifact_root, &cfg.variant)?;
+        let splits = match self.splits {
+            Some(s) => s,
+            None => Arc::new(generate(
+                &SynthSpec::preset(&cfg.variant, cfg.seed).with_context(|| {
+                    format!("no synthetic preset for variant {:?}", cfg.variant)
+                })?,
+            )),
+        };
+        Ok(Experiment { cfg, rt, splits, observers: self.observers })
+    }
+}

@@ -1,0 +1,53 @@
+//! Public embedding API: method registry, experiment builder, and run
+//! observers.
+//!
+//! This is the layer downstream crates program against when embedding the
+//! CREST engine instead of shelling out to the `crest` binary:
+//!
+//! * [`MethodRegistry`] / [`Method`] — the single table every dispatch
+//!   site derives from (CLI `--method` parsing and help, sweep-grid
+//!   expansion, `compare` rows, report labels). Register a
+//!   [`MethodSpec`] to add a selection method with zero edits to this
+//!   crate.
+//! * [`Experiment`] / [`ExperimentBuilder`] — build-time-validated
+//!   experiment construction replacing the old preset + field-mutation
+//!   flow.
+//! * [`RunObserver`] — a streaming event interface over a run (steps,
+//!   evaluations, selections, exclusions) enabling progress streaming,
+//!   early stopping, and external metric sinks; the run report itself is
+//!   assembled by the built-in [`ReportObserver`].
+//!
+//! ## Library usage
+//!
+//! The README's "library usage" snippet, kept honest by running as a
+//! doctest:
+//!
+//! ```
+//! use crest::api::Experiment;
+//!
+//! fn main() -> anyhow::Result<()> {
+//!     // Train CREST on the tiny smoke variant at a 10% budget.
+//!     let report = Experiment::builder()
+//!         .variant("smoke")
+//!         .method("crest")
+//!         .seed(1)
+//!         .budget_frac(0.1)
+//!         .epochs_full(2)
+//!         .build()?
+//!         .run()?;
+//!     println!("acc {:.4} in {} steps", report.final_test_acc, report.steps);
+//!     assert!(report.steps > 0);
+//!     Ok(())
+//! }
+//! ```
+
+pub mod experiment;
+pub mod observer;
+pub mod registry;
+
+pub use experiment::{Experiment, ExperimentBuilder};
+pub use observer::{
+    EvalEvent, ExclusionEvent, ReportObserver, RunEnd, RunObserver, SelectionEvent, Signal,
+    StepEvent,
+};
+pub use registry::{Method, MethodFactory, MethodRegistry, MethodSpec, SourceCtx};

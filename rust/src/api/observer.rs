@@ -1,0 +1,262 @@
+//! Run observers: a streaming event interface over one training run.
+//!
+//! [`Coordinator::run_observed`](crate::coordinator::Coordinator::run_observed)
+//! emits typed events at every training step, evaluation point, selection
+//! round, and exclusion update, and any number of [`RunObserver`]s can
+//! subscribe — streaming progress bars, external metric sinks, early
+//! stopping (return [`Signal::Stop`] from a step/eval hook). The run
+//! report itself is built by one such observer: [`ReportObserver`]
+//! accumulates the event stream and folds it, together with the
+//! end-of-run [`RunEnd`] summary, into the final
+//! [`RunReport`](crate::report::RunReport) — there are no ad-hoc history
+//! vectors in the coordinator loop.
+//!
+//! Attaching observers never changes training results: events are
+//! emitted after the deterministic work of each step, and the default
+//! hooks are no-ops.
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::sources::SourceStats;
+use crate::metrics::forget::ForgetTracker;
+use crate::report::{EvalPoint, RunReport};
+
+/// Flow-control verdict returned by the step/eval hooks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Signal {
+    /// Keep training.
+    #[default]
+    Continue,
+    /// Finish the current step (and its evaluation, when due), run the
+    /// final evaluation, and end the run early.
+    Stop,
+}
+
+/// One completed training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepEvent<'e> {
+    /// Step index (0-based).
+    pub step: usize,
+    /// Total steps the budget affords.
+    pub steps_total: usize,
+    /// Learning rate applied at this step (schedule × method scaling).
+    pub lr: f32,
+    /// Weighted mean loss of the training batch.
+    pub mean_loss: f32,
+    /// Global example indices of the training batch.
+    pub idx: &'e [usize],
+    /// Cumulative backprops charged to the budget (including this step).
+    pub backprops: u64,
+}
+
+/// One evaluation point along training.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalEvent<'e> {
+    /// Step the evaluation ran at.
+    pub step: usize,
+    /// Cumulative backprops charged to the budget.
+    pub backprops: u64,
+    /// Test-set accuracy.
+    pub test_acc: f32,
+    /// Mean test-set loss.
+    pub test_loss: f32,
+    /// Training-set accuracy.
+    pub train_acc: f32,
+    /// Wall-clock seconds since the run started.
+    pub wall_secs: f64,
+    /// Per-example 0/1 correctness over the training set (index-aligned
+    /// with the dataset; feeds forgettability tracking).
+    pub train_per_ex_correct: &'e [f32],
+}
+
+/// One selection round (a method refreshed its coreset pool).
+#[derive(Debug, Clone, Copy)]
+pub struct SelectionEvent<'e> {
+    /// Step the selection happened at.
+    pub step: usize,
+    /// Global indices the round selected.
+    pub selected: &'e [usize],
+}
+
+/// The learned-example exclusion state at an evaluation point (emitted
+/// only while the excluded set is non-empty — paper Fig. 7a).
+#[derive(Debug, Clone, Copy)]
+pub struct ExclusionEvent {
+    /// Step of the evaluation point.
+    pub step: usize,
+    /// Examples currently excluded as learned.
+    pub n_excluded: usize,
+    /// Training accuracy over the currently-excluded examples.
+    pub dropped_acc: f32,
+}
+
+/// End-of-run summary the coordinator assembles after the final
+/// evaluation: final metrics, the source's aggregate statistics, and the
+/// phase wall-clock totals (paper Table 2 accounting).
+#[derive(Debug, Clone)]
+pub struct RunEnd {
+    /// Test accuracy at budget exhaustion.
+    pub final_test_acc: f32,
+    /// Mean test loss at budget exhaustion.
+    pub final_test_loss: f32,
+    /// Training steps taken.
+    pub steps: usize,
+    /// Backprops actually charged to the budget.
+    pub backprops: u64,
+    /// Aggregate statistics reported by the method's batch source
+    /// (owned, so [`ReportObserver::finish`] moves its history vectors
+    /// into the report instead of cloning them).
+    pub stats: SourceStats,
+    /// Total wall-clock spent selecting coresets.
+    pub selection_secs: f64,
+    /// Total wall-clock spent in training steps.
+    pub train_secs: f64,
+    /// Total wall-clock spent evaluating.
+    pub eval_secs: f64,
+    /// ρ-check time (Table 2 "checking threshold").
+    pub check_secs: f64,
+    /// Quadratic-model construction time (Table 2 "loss approximation").
+    pub approx_secs: f64,
+    /// End-to-end wall-clock of the run.
+    pub total_secs: f64,
+    /// Mean per-step wall time of the training phase.
+    pub mean_step_secs: f64,
+}
+
+/// A subscriber to one run's event stream. Every hook has a no-op
+/// default, so observers implement only what they need.
+pub trait RunObserver {
+    /// Called after every completed training step.
+    fn on_step(&mut self, _ev: &StepEvent<'_>) -> Signal {
+        Signal::Continue
+    }
+
+    /// Called at every evaluation point.
+    fn on_eval(&mut self, _ev: &EvalEvent<'_>) -> Signal {
+        Signal::Continue
+    }
+
+    /// Called when a selection round ran while producing a batch.
+    fn on_selection(&mut self, _ev: &SelectionEvent<'_>) {}
+
+    /// Called at evaluation points while examples are excluded as
+    /// learned.
+    fn on_exclusion(&mut self, _ev: &ExclusionEvent) {}
+
+    /// Called once after the final evaluation with the completed report.
+    fn on_run_end(&mut self, _report: &RunReport) {}
+}
+
+/// The built-in observer that assembles the [`RunReport`]: it subscribes
+/// to the same event stream as user observers and folds it — history
+/// curve, best accuracy, selection records, forgettability bookkeeping,
+/// dropped-example accuracy — into the report via
+/// [`ReportObserver::finish`].
+pub struct ReportObserver {
+    method: String,
+    variant: String,
+    seed: u64,
+    budget_frac: f32,
+    n_train: usize,
+    forget: ForgetTracker,
+    history: Vec<EvalPoint>,
+    best_acc: f32,
+    selections: Vec<(usize, Vec<usize>)>,
+    dropped_acc_history: Vec<(usize, f32)>,
+}
+
+impl ReportObserver {
+    /// Observer for one cell. `budget_frac` is the *effective* budget
+    /// (1.0 for the full-data reference), `n_train` the training-set
+    /// size.
+    pub fn new(cfg: &ExperimentConfig, budget_frac: f32, n_train: usize) -> ReportObserver {
+        ReportObserver {
+            method: cfg.method.name().to_string(),
+            variant: cfg.variant.clone(),
+            seed: cfg.seed,
+            budget_frac,
+            n_train,
+            forget: ForgetTracker::new(n_train),
+            history: Vec::new(),
+            best_acc: 0.0,
+            selections: Vec::new(),
+            dropped_acc_history: Vec::new(),
+        }
+    }
+
+    /// Fold the streamed events plus the end-of-run summary into the
+    /// final report (consumes the observer and the summary).
+    pub fn finish(self, end: RunEnd) -> RunReport {
+        // post-hoc Fig. 5 series: mean *final* forgettability of the
+        // examples each selection round picked
+        let max_score = self.forget.max_observed_score().max(1);
+        let forget_of_selected: Vec<(usize, f32)> = self
+            .selections
+            .iter()
+            .map(|(step, sel)| (*step, self.forget.mean_score(sel, max_score)))
+            .collect();
+        let stats = end.stats;
+        RunReport {
+            method: self.method,
+            variant: self.variant,
+            seed: self.seed,
+            budget_frac: self.budget_frac,
+            final_test_acc: end.final_test_acc,
+            final_test_loss: end.final_test_loss,
+            best_test_acc: self.best_acc.max(end.final_test_acc),
+            steps: end.steps,
+            backprops: end.backprops,
+            n_selection_updates: stats.n_updates,
+            selection_secs: end.selection_secs,
+            train_secs: end.train_secs,
+            eval_secs: end.eval_secs,
+            check_secs: end.check_secs,
+            approx_secs: end.approx_secs,
+            total_secs: end.total_secs,
+            n_excluded: stats.n_excluded,
+            history: self.history,
+            rho_history: stats.rho_history,
+            t1_history: stats.t1_history,
+            update_steps: stats.update_steps,
+            forget_of_selected,
+            selection_counts: self.forget.selection_counts().to_vec(),
+            dropped_acc_history: self.dropped_acc_history,
+            excluded_indices: stats.excluded_indices,
+            mean_step_secs: end.mean_step_secs,
+            mean_selection_secs: if stats.n_updates > 0 {
+                end.selection_secs / stats.n_updates as f64
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl RunObserver for ReportObserver {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Signal {
+        self.forget.count_selection(ev.idx);
+        Signal::Continue
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Signal {
+        let all: Vec<usize> = (0..self.n_train).collect();
+        self.forget.observe_batch(&all, ev.train_per_ex_correct);
+        self.best_acc = self.best_acc.max(ev.test_acc);
+        self.history.push(EvalPoint {
+            step: ev.step,
+            backprops: ev.backprops,
+            test_acc: ev.test_acc,
+            test_loss: ev.test_loss,
+            train_acc: ev.train_acc,
+            wall_secs: ev.wall_secs,
+        });
+        Signal::Continue
+    }
+
+    fn on_selection(&mut self, ev: &SelectionEvent<'_>) {
+        self.selections.push((ev.step, ev.selected.to_vec()));
+    }
+
+    fn on_exclusion(&mut self, ev: &ExclusionEvent) {
+        self.dropped_acc_history.push((ev.step, ev.dropped_acc));
+    }
+}

@@ -17,7 +17,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, MethodKind};
+use crate::config::{ExperimentConfig, Method};
 use crate::coordinator::run_experiment;
 use crate::data::{generate, Splits, SynthSpec};
 use crate::report::RunReport;
@@ -103,7 +103,7 @@ pub fn cell(
     rt: &Runtime,
     splits: &Splits,
     variant: &str,
-    method: MethodKind,
+    method: Method,
     seed: u64,
     patch: impl FnOnce(&mut ExperimentConfig),
 ) -> Result<RunReport> {

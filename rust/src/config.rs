@@ -1,86 +1,15 @@
 //! Experiment configuration: method selection, budgets, CREST knobs,
 //! per-variant presets (paper §5 + Table 6), JSON round-trip.
+//!
+//! Method identity lives in the pluggable [`crate::api::MethodRegistry`];
+//! this module re-exports the [`Method`] handle and holds the per-cell
+//! knob struct it plugs into.
 
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;
 
-/// Which training method drives the run.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum MethodKind {
-    /// Full-data mini-batch SGD (the accuracy reference).
-    Full,
-    /// Random mini-batches under the budget (paper's Random baseline:
-    /// LR schedule compressed into the budget so both decays happen).
-    Random,
-    /// Standard pipeline truncated at the budget (paper's SGD†: LR schedule
-    /// laid out for the *full* horizon, so no decay is reached).
-    SgdTruncated,
-    /// This paper (Algorithm 1).
-    Crest,
-    /// CRAIG: 10% coreset from full data at every epoch (Mirzasoleiman'20).
-    Craig,
-    /// GRADMATCH: OMP gradient matching per epoch (Killamsetty'21a).
-    GradMatch,
-    /// GLISTER: validation-gradient greedy per epoch (Killamsetty'21b).
-    Glister,
-    /// Ablation of Fig. 3: fresh greedy mini-batch from a random subset at
-    /// every step (maximal update count).
-    GreedyPerBatch,
-}
-
-impl MethodKind {
-    /// Canonical CLI/report name of the method.
-    pub fn name(&self) -> &'static str {
-        match self {
-            MethodKind::Full => "full",
-            MethodKind::Random => "random",
-            MethodKind::SgdTruncated => "sgd-truncated",
-            MethodKind::Crest => "crest",
-            MethodKind::Craig => "craig",
-            MethodKind::GradMatch => "gradmatch",
-            MethodKind::Glister => "glister",
-            MethodKind::GreedyPerBatch => "greedy-per-batch",
-        }
-    }
-
-    /// Parse a method name; accepts every canonical [`MethodKind::name`]
-    /// plus the short aliases `sgd` and `greedy`.
-    pub fn parse(s: &str) -> Result<MethodKind> {
-        Ok(match s {
-            "full" => MethodKind::Full,
-            "random" => MethodKind::Random,
-            "sgd-truncated" | "sgd" => MethodKind::SgdTruncated,
-            "crest" => MethodKind::Crest,
-            "craig" => MethodKind::Craig,
-            "gradmatch" => MethodKind::GradMatch,
-            "glister" => MethodKind::Glister,
-            "greedy-per-batch" | "greedy" => MethodKind::GreedyPerBatch,
-            _ => bail!("unknown method {s:?}"),
-        })
-    }
-
-    /// Every method, in presentation order (paper Table 1 columns).
-    pub fn all() -> &'static [MethodKind] {
-        &[
-            MethodKind::Full,
-            MethodKind::Random,
-            MethodKind::SgdTruncated,
-            MethodKind::Crest,
-            MethodKind::Craig,
-            MethodKind::GradMatch,
-            MethodKind::Glister,
-            MethodKind::GreedyPerBatch,
-        ]
-    }
-
-    /// Canonical method names joined with `|` for CLI help text. Generated
-    /// from [`MethodKind::all`], so the help string can never drift from
-    /// what [`MethodKind::parse`] accepts (every listed name round-trips).
-    pub fn help_names() -> String {
-        MethodKind::all().iter().map(|m| m.name()).collect::<Vec<_>>().join("|")
-    }
-}
+pub use crate::api::registry::Method;
 
 /// CREST-specific switches (ablations of Table 3 / Fig. 4).
 #[derive(Debug, Clone, Copy)]
@@ -99,13 +28,36 @@ impl Default for CrestOptions {
     }
 }
 
+/// The JSON keys [`ExperimentConfig::to_json`] emits and
+/// [`ExperimentConfig::apply_json`] accepts — one list, so the two can
+/// never drift and unknown keys are rejected instead of silently
+/// ignored.
+const CONFIG_KEYS: &[&str] = &[
+    "variant",
+    "method",
+    "budget_frac",
+    "epochs_full",
+    "seed",
+    "base_lr",
+    "tau",
+    "alpha",
+    "h_mult",
+    "b_mult",
+    "t2",
+    "second_order",
+    "smooth",
+    "exclude",
+    "compiled_selection",
+    "selection_threads",
+];
+
 /// One experiment: a (variant, method, budget, seed) cell plus knobs.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     /// Model/dataset variant name (see [`ALL_VARIANTS`] plus `smoke`).
     pub variant: String,
-    /// Training method driving the run.
-    pub method: MethodKind,
+    /// Training method driving the run (a registry handle).
+    pub method: Method,
     /// Training budget as a fraction of the full run's backprops.
     pub budget_frac: f32,
     /// Epochs of the full-data reference run.
@@ -156,22 +108,26 @@ pub struct ExperimentConfig {
     pub eval_points: usize,
 }
 
+/// The per-variant (τ, h) tuning pair, mirroring how the paper tunes its
+/// Table 6 values (τ from the observed ρ scale after warmup; h from the
+/// curvature-decay rate). Our loss scale differs from ResNet/CIFAR, so
+/// the numbers differ from the paper's.
+fn variant_tuning(variant: &str) -> Result<(f32, f32)> {
+    Ok(match variant {
+        "cifar10-proxy" => (0.01, 1.0),
+        "cifar100-proxy" => (0.01, 4.0),
+        "tinyimagenet-proxy" => (0.005, 1.0),
+        "snli-proxy" => (0.01, 2.0),
+        // tiny fast-test variant: same defaults as cifar10-proxy
+        "smoke" => (0.01, 1.0),
+        _ => bail!("unknown variant {variant:?}"),
+    })
+}
+
 impl ExperimentConfig {
     /// Per-variant preset mirroring paper §5 and Table 6.
-    pub fn preset(variant: &str, method: MethodKind, seed: u64) -> Result<ExperimentConfig> {
-        // τ/h tuned per variant the same way the paper tunes its Table 6
-        // values (τ from the observed ρ scale after warmup; h from the
-        // curvature-decay rate). Our loss scale differs from ResNet/CIFAR,
-        // so the numbers differ from the paper's.
-        let (tau, h_mult) = match variant {
-            "cifar10-proxy" => (0.01, 1.0),
-            "cifar100-proxy" => (0.01, 4.0),
-            "tinyimagenet-proxy" => (0.005, 1.0),
-            "snli-proxy" => (0.01, 2.0),
-            // tiny fast-test variant: same defaults as cifar10-proxy
-            "smoke" => (0.01, 1.0),
-            _ => bail!("unknown variant {variant:?}"),
-        };
+    pub fn preset(variant: &str, method: Method, seed: u64) -> Result<ExperimentConfig> {
+        let (tau, h_mult) = variant_tuning(variant)?;
         Ok(ExperimentConfig {
             variant: variant.to_string(),
             method,
@@ -227,8 +183,28 @@ impl ExperimentConfig {
             .set("selection_threads", self.selection_threads)
     }
 
-    /// Apply overrides parsed from JSON (partial object).
+    /// Apply overrides parsed from JSON (partial object). Keys outside
+    /// the [`ExperimentConfig::to_json`] schema are rejected, so a typo'd
+    /// knob fails loudly instead of silently running the preset.
+    /// Overriding `variant` re-derives the preset-tuned (τ, h) pair for
+    /// the new variant first (and rejects unknown variants), so the
+    /// other keys of the same document still win — a full
+    /// `to_json`/`apply_json` round-trip restores every knob exactly.
     pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        for (key, _) in j.as_obj()? {
+            if !CONFIG_KEYS.contains(&key.as_str()) {
+                bail!("unknown config key {key:?} (known: {})", CONFIG_KEYS.join(", "));
+            }
+        }
+        if let Some(v) = j.get("variant") {
+            let variant = v.as_str()?;
+            if variant != self.variant {
+                let (tau, h_mult) = variant_tuning(variant)?;
+                self.tau = tau;
+                self.h_mult = h_mult;
+                self.variant = variant.to_string();
+            }
+        }
         if let Some(v) = j.get("budget_frac") {
             self.budget_frac = v.as_f64()? as f32;
         }
@@ -272,7 +248,7 @@ impl ExperimentConfig {
             self.selection_threads = v.as_usize()?.max(1);
         }
         if let Some(v) = j.get("method") {
-            self.method = MethodKind::parse(v.as_str()?)?;
+            self.method = Method::parse(v.as_str()?)?;
         }
         Ok(())
     }
@@ -288,13 +264,13 @@ mod tests {
 
     #[test]
     fn presets_match_tuned_table6() {
-        let c = ExperimentConfig::preset("cifar10-proxy", MethodKind::Crest, 0).unwrap();
+        let c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
         assert_eq!(c.tau, 0.01);
         assert_eq!(c.h_mult, 1.0);
-        let c = ExperimentConfig::preset("cifar100-proxy", MethodKind::Crest, 0).unwrap();
+        let c = ExperimentConfig::preset("cifar100-proxy", Method::crest(), 0).unwrap();
         assert_eq!(c.tau, 0.01);
         assert_eq!(c.h_mult, 4.0);
-        let c = ExperimentConfig::preset("snli-proxy", MethodKind::Crest, 0).unwrap();
+        let c = ExperimentConfig::preset("snli-proxy", Method::crest(), 0).unwrap();
         assert_eq!(c.tau, 0.01);
         assert_eq!(c.h_mult, 2.0);
         assert_eq!(c.b_mult, 5);
@@ -304,37 +280,12 @@ mod tests {
 
     #[test]
     fn unknown_variant_rejected() {
-        assert!(ExperimentConfig::preset("cifar11", MethodKind::Crest, 0).is_err());
-    }
-
-    #[test]
-    fn method_parse_roundtrip() {
-        for m in MethodKind::all() {
-            assert_eq!(MethodKind::parse(m.name()).unwrap(), *m);
-        }
-        assert!(MethodKind::parse("bogus").is_err());
-    }
-
-    #[test]
-    fn help_names_roundtrip_through_parse() {
-        // every name the CLI help advertises must parse back to the method
-        // whose canonical name it is — the help string cannot drift
-        let help = MethodKind::help_names();
-        for name in help.split('|') {
-            let parsed = MethodKind::parse(name).unwrap_or_else(|e| {
-                panic!("help lists {name:?} but parse rejects it: {e:#}")
-            });
-            assert_eq!(parsed.name(), name);
-        }
-        // and the help covers every method
-        for m in MethodKind::all() {
-            assert!(help.split('|').any(|n| n == m.name()), "help misses {}", m.name());
-        }
+        assert!(ExperimentConfig::preset("cifar11", Method::crest(), 0).is_err());
     }
 
     #[test]
     fn json_roundtrip_overrides() {
-        let mut c = ExperimentConfig::preset("cifar10-proxy", MethodKind::Crest, 0).unwrap();
+        let mut c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
         let j = Json::parse(
             r#"{"tau": 0.2, "exclude": false, "method": "craig", "epochs_full": 5,
                 "selection_threads": 2}"#,
@@ -343,12 +294,87 @@ mod tests {
         c.apply_json(&j).unwrap();
         assert_eq!(c.tau, 0.2);
         assert!(!c.crest.exclude);
-        assert_eq!(c.method, MethodKind::Craig);
+        assert_eq!(c.method, Method::craig());
         assert_eq!(c.epochs_full, 5);
         assert_eq!(c.selection_threads, 2);
         // serialized form parses back
         let s = c.to_json().to_string_pretty();
         let j2 = Json::parse(&s).unwrap();
         assert_eq!(j2.get("method").unwrap().as_str().unwrap(), "craig");
+    }
+
+    #[test]
+    fn apply_json_rejects_unknown_keys() {
+        let mut c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
+        let before_tau = c.tau;
+        let j = Json::parse(r#"{"taau": 0.5}"#).unwrap();
+        let err = c.apply_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("taau"), "error names the bad key: {err:#}");
+        assert_eq!(c.tau, before_tau, "rejected override must not apply");
+        // non-objects are rejected too
+        assert!(c.apply_json(&Json::parse("[1]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn variant_override_rederives_preset_tuning() {
+        // switching variants through JSON must not keep the old
+        // variant's Table-6 (τ, h) pair — and explicit τ/h keys in the
+        // same document still win regardless of key order
+        let mut c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
+        c.apply_json(&Json::parse(r#"{"variant": "tinyimagenet-proxy"}"#).unwrap()).unwrap();
+        assert_eq!(c.variant, "tinyimagenet-proxy");
+        assert_eq!(c.tau, 0.005);
+        assert_eq!(c.h_mult, 1.0);
+        let mut c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
+        c.apply_json(&Json::parse(r#"{"tau": 0.5, "variant": "cifar100-proxy"}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.tau, 0.5, "explicit tau beats the re-derived preset value");
+        assert_eq!(c.h_mult, 4.0);
+        // unknown variants are rejected before anything is applied
+        let mut c = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
+        assert!(c.apply_json(&Json::parse(r#"{"variant": "nope"}"#).unwrap()).is_err());
+        assert_eq!(c.variant, "cifar10-proxy");
+    }
+
+    #[test]
+    fn full_roundtrip_including_crest_options() {
+        // mutate every serialized knob (including all CrestOptions
+        // fields), serialize, and restore into a fresh preset
+        let mut c = ExperimentConfig::preset("cifar100-proxy", Method::glister(), 9).unwrap();
+        c.budget_frac = 0.25;
+        c.epochs_full = 7;
+        c.base_lr = 0.125;
+        c.tau = 0.5;
+        c.alpha = 0.75;
+        c.h_mult = 8.0;
+        c.b_mult = 3;
+        c.t2 = 11;
+        c.crest = CrestOptions { second_order: false, smooth: false, exclude: false };
+        c.compiled_selection = true;
+        c.selection_threads = 2;
+
+        let doc = Json::parse(&c.to_json().to_string_pretty()).unwrap();
+        let mut restored = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
+        restored.apply_json(&doc).unwrap();
+
+        assert_eq!(restored.variant, "cifar100-proxy");
+        assert_eq!(restored.method, Method::glister());
+        assert_eq!(restored.seed, 9);
+        assert_eq!(restored.budget_frac, 0.25);
+        assert_eq!(restored.epochs_full, 7);
+        assert_eq!(restored.base_lr, 0.125);
+        assert_eq!(restored.tau, 0.5);
+        assert_eq!(restored.alpha, 0.75);
+        assert_eq!(restored.h_mult, 8.0);
+        assert_eq!(restored.b_mult, 3);
+        assert_eq!(restored.t2, 11);
+        assert!(!restored.crest.second_order);
+        assert!(!restored.crest.smooth);
+        assert!(!restored.crest.exclude);
+        assert!(restored.compiled_selection);
+        assert_eq!(restored.selection_threads, 2);
+        // a second round-trip is a fixed point
+        let again = Json::parse(&restored.to_json().to_string_pretty()).unwrap();
+        assert_eq!(again.to_string_pretty(), doc.to_string_pretty());
     }
 }

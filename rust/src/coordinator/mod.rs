@@ -1,14 +1,19 @@
 //! The coordinator — the paper's L3 contribution.
 //!
 //! Owns the end-to-end run of one experiment cell: data, budget, learning
-//! -rate schedule, method dispatch (CREST / CRAIG / GRADMATCH / GLISTER /
-//! Random / SGD† / greedy-per-batch), evaluation cadence, forgettability
-//! bookkeeping, and the phase-time accounting behind Table 2 / Fig. 2.
+//! -rate schedule, the method's batch source (instantiated through the
+//! [`crate::api::MethodRegistry`] factory), evaluation cadence, and the
+//! phase-time accounting behind Table 2 / Fig. 2. Everything the run
+//! *reports* flows through the [`crate::api::RunObserver`] event stream:
+//! the built-in [`ReportObserver`] folds the events into the
+//! [`RunReport`], and any extra observers attached via
+//! [`Coordinator::run_observed`] see the same stream (streaming progress,
+//! early stopping, external metric sinks).
 //!
-//! CREST itself (Algorithm 1) lives in `crest_source`: piece-wise quadratic
-//! modeling (`quadratic`), mini-batch coresets from random subsets
-//! (`coreset::facility`, parallelized over the P subproblems with scoped
-//! threads), and learned-example exclusion (`exclusion`).
+//! CREST itself (Algorithm 1) lives in `sources::CrestSource`: piece-wise
+//! quadratic modeling (`quadratic`), mini-batch coresets from random
+//! subsets (`coreset::facility`, parallelized over the P subproblems with
+//! scoped threads), and learned-example exclusion (`exclusion`).
 
 pub mod sources;
 
@@ -16,18 +21,20 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::config::{ExperimentConfig, MethodKind};
+use crate::api::observer::{
+    EvalEvent, ExclusionEvent, ReportObserver, RunEnd, RunObserver, SelectionEvent, Signal,
+    StepEvent,
+};
+use crate::api::registry::SourceCtx;
+use crate::config::ExperimentConfig;
 use crate::data::Splits;
-use crate::metrics::forget::ForgetTracker;
 use crate::model::init_params;
 use crate::opt::{Budget, LrSchedule};
-use crate::report::{EvalPoint, RunReport};
+use crate::report::RunReport;
 use crate::runtime::Runtime;
 use crate::train::{evaluate, TrainState};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimers;
-
-use sources::SelectionRecord;
 
 /// Drives one experiment run.
 pub struct Coordinator<'a> {
@@ -52,6 +59,15 @@ impl<'a> Coordinator<'a> {
 
     /// Run the configured method to budget exhaustion.
     pub fn run(&self) -> Result<RunReport> {
+        self.run_observed(&mut [])
+    }
+
+    /// Run the configured method with extra observers attached. Observers
+    /// receive every step/eval/selection/exclusion event plus the final
+    /// report; they never change training results, but a [`Signal::Stop`]
+    /// from a step or eval hook ends the run early (after the final
+    /// evaluation).
+    pub fn run_observed(&self, observers: &mut [Box<dyn RunObserver>]) -> Result<RunReport> {
         let t_start = Instant::now();
         let cfg = &self.cfg;
         let rt = self.rt;
@@ -63,8 +79,7 @@ impl<'a> Coordinator<'a> {
         let mut init_rng = rng.split();
         let mut source_rng = rng.split();
 
-        let budget_frac =
-            if cfg.method == MethodKind::Full { 1.0 } else { cfg.budget_frac };
+        let budget_frac = if cfg.method.is_reference() { 1.0 } else { cfg.budget_frac };
         let mut budget = Budget::fraction_of_full(n, cfg.epochs_full, budget_frac);
         let steps_total = budget.steps(m).max(1);
 
@@ -72,46 +87,57 @@ impl<'a> Coordinator<'a> {
         // decays are never reached inside the budget); everyone else
         // compresses the schedule into their own horizon (paper §5 Evaluation).
         let sched = LrSchedule::paper_default(cfg.base_lr);
-        let sched_horizon = match cfg.method {
-            MethodKind::SgdTruncated => self.full_steps(),
-            _ => steps_total,
-        };
+        let sched_horizon =
+            if cfg.method.full_horizon_schedule() { self.full_steps() } else { steps_total };
         // Variance-reduced coreset batches support the Theorem 4.1 step
         // size: η ∝ √r instead of √m (the r/m speedup mechanism). Applies
         // to CREST and the greedy-per-batch ablation only.
-        let lr_mult = match cfg.method {
-            MethodKind::Crest | MethodKind::GreedyPerBatch => cfg
-                .coreset_lr_scale
-                .unwrap_or(((rt.man.r as f32) / (rt.man.m as f32)).sqrt()),
-            _ => 1.0,
+        let lr_mult = if cfg.method.coreset_lr_scale() {
+            cfg.coreset_lr_scale.unwrap_or(((rt.man.r as f32) / (rt.man.m as f32)).sqrt())
+        } else {
+            1.0
         };
 
         let mut state = TrainState::new(rt, &init_params(&rt.man, &mut init_rng))?;
         let mut timers = PhaseTimers::new();
-        let mut forget = ForgetTracker::new(n);
-        let mut source =
-            sources::make_source(cfg, rt, ds, &self.splits.val, steps_total, &mut source_rng)?;
+        let ctx = SourceCtx { cfg, rt, train: ds, val: &self.splits.val, steps_total };
+        let mut source = cfg.method.make_source(ctx, &mut source_rng)?;
+        let mut report_obs = ReportObserver::new(cfg, budget_frac, n);
 
         let eval_every = (steps_total / cfg.eval_points.max(1)).max(1);
-        let mut history: Vec<EvalPoint> = Vec::new();
-        let mut best_acc = 0.0f32;
-        let mut selections: Vec<SelectionRecord> = Vec::new();
-        let mut dropped_acc_history: Vec<(usize, f32)> = Vec::new();
-
         let mut step = 0usize;
-        while budget.charge(m) {
+        let mut stop = false;
+        while !stop && budget.charge(m) {
             let lr = sched.lr_at(step, sched_horizon) * lr_mult;
             // ask the active method for the next weighted batch
             let batch = source.next_batch(step, &mut state, &mut timers)?;
-            if let Some(rec) = batch.selection {
-                selections.push(rec);
-            }
-            forget.count_selection(&batch.idx);
             let t0 = Instant::now();
-            let (_loss, per_ex) =
+            let (mean_loss, per_ex) =
                 state.step_batch(rt, ds, &batch.idx, &batch.gamma, lr, cfg.weight_decay)?;
             timers.add("train_step_host", t0.elapsed());
             source.after_step(step, &batch.idx, &per_ex, &mut state, &mut timers)?;
+
+            if let Some(rec) = &batch.selection {
+                let ev = SelectionEvent { step: rec.step, selected: &rec.selected };
+                report_obs.on_selection(&ev);
+                for obs in observers.iter_mut() {
+                    obs.on_selection(&ev);
+                }
+            }
+            let ev = StepEvent {
+                step,
+                steps_total,
+                lr,
+                mean_loss,
+                idx: &batch.idx,
+                backprops: budget.used(),
+            };
+            report_obs.on_step(&ev);
+            for obs in observers.iter_mut() {
+                if obs.on_step(&ev) == Signal::Stop {
+                    stop = true;
+                }
+            }
 
             // evaluation cadence
             if step % eval_every == 0 || step + 1 == steps_total {
@@ -119,10 +145,21 @@ impl<'a> Coordinator<'a> {
                 let test = evaluate(rt, &state.params, &self.splits.test)?;
                 let train = evaluate(rt, &state.params, ds)?;
                 timers.add("eval", t0.elapsed());
-                forget.observe_batch(
-                    &(0..n).collect::<Vec<_>>(),
-                    &train.per_ex_correct,
-                );
+                let ev = EvalEvent {
+                    step,
+                    backprops: budget.used(),
+                    test_acc: test.accuracy,
+                    test_loss: test.mean_loss,
+                    train_acc: train.accuracy,
+                    wall_secs: t_start.elapsed().as_secs_f64(),
+                    train_per_ex_correct: &train.per_ex_correct,
+                };
+                report_obs.on_eval(&ev);
+                for obs in observers.iter_mut() {
+                    if obs.on_eval(&ev) == Signal::Stop {
+                        stop = true;
+                    }
+                }
                 // Fig. 7a: do the dropped (excluded-as-learned) examples
                 // stay correctly classified?
                 let dropped = source.stats().excluded_indices;
@@ -132,17 +169,13 @@ impl<'a> Coordinator<'a> {
                         .map(|&i| train.per_ex_correct[i] as f64)
                         .sum::<f64>() as f32
                         / dropped.len() as f32;
-                    dropped_acc_history.push((step, acc));
+                    let ev =
+                        ExclusionEvent { step, n_excluded: dropped.len(), dropped_acc: acc };
+                    report_obs.on_exclusion(&ev);
+                    for obs in observers.iter_mut() {
+                        obs.on_exclusion(&ev);
+                    }
                 }
-                best_acc = best_acc.max(test.accuracy);
-                history.push(EvalPoint {
-                    step,
-                    backprops: budget.used(),
-                    test_acc: test.accuracy,
-                    test_loss: test.mean_loss,
-                    train_acc: train.accuracy,
-                    wall_secs: t_start.elapsed().as_secs_f64(),
-                });
             }
             step += 1;
         }
@@ -151,52 +184,25 @@ impl<'a> Coordinator<'a> {
         let t0 = Instant::now();
         let test = evaluate(rt, &state.params, &self.splits.test)?;
         timers.add("eval", t0.elapsed());
-        best_acc = best_acc.max(test.accuracy);
 
-        // post-hoc Fig. 5 series: mean *final* forgettability of the
-        // examples each selection round picked.
-        let max_score = forget.max_observed_score().max(1);
-        let forget_of_selected: Vec<(usize, f32)> = selections
-            .iter()
-            .map(|s| (s.step, forget.mean_score(&s.selected, max_score)))
-            .collect();
-
-        let stats = source.stats();
-        let total_secs = t_start.elapsed().as_secs_f64();
-        let sel_secs = timers.total("selection").as_secs_f64();
-        let report = RunReport {
-            method: cfg.method.name().to_string(),
-            variant: cfg.variant.clone(),
-            seed: cfg.seed,
-            budget_frac,
+        let end = RunEnd {
             final_test_acc: test.accuracy,
             final_test_loss: test.mean_loss,
-            best_test_acc: best_acc,
             steps: step,
             backprops: budget.used(),
-            n_selection_updates: stats.n_updates,
-            selection_secs: sel_secs,
+            stats: source.stats(),
+            selection_secs: timers.total("selection").as_secs_f64(),
             train_secs: timers.total("train_step_host").as_secs_f64(),
             eval_secs: timers.total("eval").as_secs_f64(),
             check_secs: timers.total("rho_check").as_secs_f64(),
             approx_secs: timers.total("loss_approx").as_secs_f64(),
-            total_secs,
-            n_excluded: stats.n_excluded,
-            history,
-            rho_history: stats.rho_history,
-            t1_history: stats.t1_history,
-            update_steps: stats.update_steps,
-            forget_of_selected,
-            selection_counts: forget.selection_counts().to_vec(),
-            dropped_acc_history,
-            excluded_indices: stats.excluded_indices.clone(),
+            total_secs: t_start.elapsed().as_secs_f64(),
             mean_step_secs: timers.mean_secs("train_step_host"),
-            mean_selection_secs: if stats.n_updates > 0 {
-                sel_secs / stats.n_updates as f64
-            } else {
-                0.0
-            },
         };
+        let report = report_obs.finish(end);
+        for obs in observers.iter_mut() {
+            obs.on_run_end(&report);
+        }
         log::info!(
             "{}/{} seed={} acc={:.4} steps={} updates={} excl={} {:.2}s",
             report.variant,
@@ -213,7 +219,9 @@ impl<'a> Coordinator<'a> {
 }
 
 /// Convenience: run one (variant, method, seed) cell against prepared
-/// splits and runtime.
+/// splits and runtime — the low-level entry point for callers that
+/// manage `Runtime`/`Splits` sharing themselves (the bench harness).
+/// Library users should prefer [`crate::api::Experiment`].
 pub fn run_experiment(
     rt: &Runtime,
     splits: &Splits,

@@ -4,12 +4,20 @@
 //! method-specific machinery — CREST's Algorithm 1, the per-epoch baseline
 //! reselections, greedy-per-batch — lives behind this interface so the
 //! outer loop (budget, LR, eval, forgettability) is shared.
+//!
+//! Each builtin method is described to the
+//! [`MethodRegistry`](crate::api::MethodRegistry) by a [`MethodSpec`]
+//! (see `builtin_specs`): a name, help text, behavior flags, and a
+//! factory closing over the source implementation here. There is no
+//! method `match` anywhere — adding a method means registering a new
+//! spec, not editing this file.
 
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::config::{ExperimentConfig, MethodKind};
+use crate::api::registry::{MethodSpec, SourceCtx};
+use crate::config::ExperimentConfig;
 use crate::coreset::{craig, facility, glister, gradmatch, MiniBatchCoreset};
 use crate::data::Dataset;
 use crate::exclusion::ExclusionTracker;
@@ -85,42 +93,136 @@ pub trait BatchSource {
     fn stats(&self) -> SourceStats;
 }
 
-/// Instantiate the source for the configured method.
-pub fn make_source<'a>(
-    cfg: &ExperimentConfig,
-    rt: &'a Runtime,
-    train: &'a Dataset,
-    val: &'a Dataset,
-    steps_total: usize,
-    rng: &mut Rng,
-) -> Result<Box<dyn BatchSource + 'a>> {
-    let src_rng = rng.split();
-    Ok(match cfg.method {
-        MethodKind::Full | MethodKind::Random | MethodKind::SgdTruncated => {
-            Box::new(RandomSource::new(train.n(), rt.man.m, src_rng))
-        }
-        MethodKind::GreedyPerBatch => {
-            Box::new(GreedyPerBatchSource { rt, train, rng: src_rng, n_updates: 0 })
-        }
-        MethodKind::Craig | MethodKind::GradMatch | MethodKind::Glister => {
-            let k = ((train.n() as f32 * cfg.budget_frac) as usize).max(rt.man.m);
-            let epoch_steps = (k / rt.man.m).max(1);
-            Box::new(EpochCoresetSource {
-                kind: cfg.method,
-                rt,
-                train,
-                val,
-                k,
-                epoch_steps,
-                into_epoch: 0,
-                entries: Vec::new(),
-                rng: src_rng,
-                n_updates: 0,
-                update_steps: Vec::new(),
-            })
-        }
-        MethodKind::Crest => Box::new(CrestSource::new(cfg, rt, train, steps_total, src_rng)),
+// ------------------------------------------------------ builtin factories
+
+fn make_random<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(Box::new(RandomSource::new(ctx.train.n(), ctx.rt.man.m, rng)))
+}
+
+fn make_greedy_per_batch<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(Box::new(GreedyPerBatchSource { rt: ctx.rt, train: ctx.train, rng, n_updates: 0 }))
+}
+
+fn make_epoch<'a>(
+    selector: EpochSelector,
+    ctx: SourceCtx<'a>,
+    rng: Rng,
+) -> Box<dyn BatchSource + 'a> {
+    let k = ((ctx.train.n() as f32 * ctx.cfg.budget_frac) as usize).max(ctx.rt.man.m);
+    let epoch_steps = (k / ctx.rt.man.m).max(1);
+    Box::new(EpochCoresetSource {
+        selector,
+        rt: ctx.rt,
+        train: ctx.train,
+        val: ctx.val,
+        k,
+        epoch_steps,
+        into_epoch: 0,
+        entries: Vec::new(),
+        rng,
+        n_updates: 0,
+        update_steps: Vec::new(),
     })
+}
+
+fn make_craig<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(make_epoch(EpochSelector::Craig, ctx, rng))
+}
+
+fn make_gradmatch<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(make_epoch(EpochSelector::GradMatch, ctx, rng))
+}
+
+fn make_glister<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(make_epoch(EpochSelector::Glister, ctx, rng))
+}
+
+fn make_crest<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(Box::new(CrestSource::new(ctx.cfg, ctx.rt, ctx.train, ctx.steps_total, rng)))
+}
+
+/// Registry specs of the eight paper methods, in Table-1 presentation
+/// order. This is the single builtin table `--method` help, sweep grids,
+/// and `compare` rows all derive from.
+pub(crate) fn builtin_specs() -> Vec<MethodSpec> {
+    fn spec(
+        name: &str,
+        aliases: &[&str],
+        help: &str,
+        factory: crate::api::registry::MethodFactory,
+    ) -> MethodSpec {
+        MethodSpec {
+            name: name.to_string(),
+            aliases: aliases.iter().map(|s| s.to_string()).collect(),
+            help: help.to_string(),
+            reference: false,
+            full_horizon_schedule: false,
+            coreset_lr_scale: false,
+            factory,
+        }
+    }
+    vec![
+        MethodSpec {
+            reference: true,
+            ..spec(
+                "full",
+                &[],
+                "full-data mini-batch SGD (the accuracy reference)",
+                Box::new(make_random),
+            )
+        },
+        spec(
+            "random",
+            &[],
+            "random mini-batches under the budget (compressed LR schedule)",
+            Box::new(make_random),
+        ),
+        MethodSpec {
+            full_horizon_schedule: true,
+            ..spec(
+                "sgd-truncated",
+                &["sgd"],
+                "standard pipeline truncated at the budget (SGD†, full-horizon LR)",
+                Box::new(make_random),
+            )
+        },
+        MethodSpec {
+            coreset_lr_scale: true,
+            ..spec(
+                "crest",
+                &[],
+                "this paper (Algorithm 1): adaptive mini-batch coresets",
+                Box::new(make_crest),
+            )
+        },
+        spec(
+            "craig",
+            &[],
+            "CRAIG: per-epoch full-data coreset (Mirzasoleiman'20)",
+            Box::new(make_craig),
+        ),
+        spec(
+            "gradmatch",
+            &[],
+            "GRADMATCH: OMP gradient matching per epoch (Killamsetty'21a)",
+            Box::new(make_gradmatch),
+        ),
+        spec(
+            "glister",
+            &[],
+            "GLISTER: validation-gradient greedy per epoch (Killamsetty'21b)",
+            Box::new(make_glister),
+        ),
+        MethodSpec {
+            coreset_lr_scale: true,
+            ..spec(
+                "greedy-per-batch",
+                &["greedy"],
+                "Fig. 3 ablation: fresh greedy mini-batch at every step",
+                Box::new(make_greedy_per_batch),
+            )
+        },
+    ]
 }
 
 // ---------------------------------------------------------------- random
@@ -167,11 +269,18 @@ impl BatchSource for RandomSource {
 
 // ------------------------------------------------------- epoch baselines
 
+/// Which per-epoch full-data selector an [`EpochCoresetSource`] runs.
+enum EpochSelector {
+    Craig,
+    GradMatch,
+    Glister,
+}
+
 /// CRAIG / GRADMATCH / GLISTER: reselect a size-k coreset from the full
 /// data at the start of every (budgeted) epoch, then stream weighted
 /// batches from it.
 struct EpochCoresetSource<'a> {
-    kind: MethodKind,
+    selector: EpochSelector,
     rt: &'a Runtime,
     train: &'a Dataset,
     val: &'a Dataset,
@@ -224,13 +333,13 @@ impl<'a> EpochCoresetSource<'a> {
     ) -> Result<()> {
         let t0 = Instant::now();
         let (gl, al, _) = full_embeddings(self.rt, &state.params, self.train)?;
-        let entries: Vec<(usize, f32)> = match self.kind {
-            MethodKind::Craig => {
+        let entries: Vec<(usize, f32)> = match self.selector {
+            EpochSelector::Craig => {
                 let sel = craig::craig_select(&al, &gl, self.k, &mut self.rng);
                 let gamma = craig::craig_batch_gamma(&sel);
                 sel.idx.into_iter().zip(gamma).collect()
             }
-            MethodKind::GradMatch => {
+            EpochSelector::GradMatch => {
                 let sel = gradmatch::gradmatch_select(&gl, self.k, &mut self.rng);
                 // scale Σγ=n down to batch convention (mean 1 over coreset)
                 let k = sel.idx.len() as f32;
@@ -238,7 +347,7 @@ impl<'a> EpochCoresetSource<'a> {
                 let scale = if sum > 0.0 { k / sum } else { 1.0 };
                 sel.idx.into_iter().zip(sel.gamma.into_iter().map(|g| g * scale)).collect()
             }
-            MethodKind::Glister => {
+            EpochSelector::Glister => {
                 // validation mean gradient from one r-chunk of val data
                 let r = self.rt.man.r;
                 let idx: Vec<usize> = (0..r).map(|i| i % self.val.n()).collect();
@@ -248,7 +357,6 @@ impl<'a> EpochCoresetSource<'a> {
                 let sel = glister::glister_select(&gl, &vmean, self.k);
                 sel.idx.into_iter().zip(sel.gamma).collect()
             }
-            _ => bail!("EpochCoresetSource misconfigured: {:?}", self.kind),
         };
         self.entries = entries;
         self.rng.shuffle(&mut self.entries);

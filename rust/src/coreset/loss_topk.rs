@@ -1,0 +1,124 @@
+//! Loss-top-k: a hard-example-mining baseline added *purely through the
+//! method registry* — no edits to the config or coordinator dispatch
+//! sites. It exists both as a real baseline (select the highest-loss
+//! examples, the classic heuristic CREST's facility-location selection is
+//! implicitly compared against) and as the in-tree proof that
+//! [`MethodRegistry::register`](crate::api::MethodRegistry::register)
+//! alone makes a method available to `train`, `compare`, and `sweep`.
+//!
+//! Selection rule: once per budgeted epoch, evaluate the whole training
+//! set, keep the k = budget·n highest-loss examples (deterministic
+//! tie-break by index), and stream unweighted size-m batches from that
+//! pool until the next epoch boundary.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::api::registry::{MethodSpec, SourceCtx};
+use crate::coordinator::sources::{BatchSource, SelectionRecord, SourceStats, SourcedBatch};
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::train::{evaluate, TrainState};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimers;
+
+/// Per-epoch hard-example mining batch source; see the module docs.
+pub struct LossTopKSource<'a> {
+    rt: &'a Runtime,
+    train: &'a Dataset,
+    k: usize,
+    epoch_steps: usize,
+    into_epoch: usize,
+    /// current top-k pool (shuffled), streamed m at a time
+    order: Vec<usize>,
+    rng: Rng,
+    n_updates: usize,
+    update_steps: Vec<usize>,
+}
+
+impl<'a> LossTopKSource<'a> {
+    fn reselect(
+        &mut self,
+        step: usize,
+        state: &TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<()> {
+        let t0 = Instant::now();
+        let ev = evaluate(self.rt, &state.params, self.train)?;
+        let mut order: Vec<usize> = (0..self.train.n()).collect();
+        // highest loss first; ties break toward the lower index so the
+        // selection is a pure function of the model state
+        order.sort_unstable_by(|&a, &b| {
+            ev.per_ex_loss[b].total_cmp(&ev.per_ex_loss[a]).then(a.cmp(&b))
+        });
+        order.truncate(self.k);
+        self.rng.shuffle(&mut order);
+        self.order = order;
+        self.into_epoch = 0;
+        self.n_updates += 1;
+        self.update_steps.push(step);
+        timers.add("selection", t0.elapsed());
+        Ok(())
+    }
+}
+
+impl<'a> BatchSource for LossTopKSource<'a> {
+    fn next_batch(
+        &mut self,
+        step: usize,
+        state: &mut TrainState,
+        timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        let fresh = self.order.is_empty() || self.into_epoch >= self.epoch_steps;
+        if fresh {
+            self.reselect(step, state, timers)?;
+        }
+        let m = self.rt.man.m;
+        let start = (self.into_epoch * m) % self.order.len().max(1);
+        let idx: Vec<usize> =
+            (0..m).map(|j| self.order[(start + j) % self.order.len()]).collect();
+        self.into_epoch += 1;
+        let selection =
+            fresh.then(|| SelectionRecord { step, selected: self.order.clone() });
+        Ok(SourcedBatch { idx, gamma: vec![1.0; m], selection })
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats {
+            n_updates: self.n_updates,
+            update_steps: self.update_steps.clone(),
+            ..Default::default()
+        }
+    }
+}
+
+fn make_loss_topk<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    let n = ctx.train.n();
+    let m = ctx.rt.man.m;
+    let k = ((n as f32 * ctx.cfg.budget_frac) as usize).max(m).min(n);
+    Ok(Box::new(LossTopKSource {
+        rt: ctx.rt,
+        train: ctx.train,
+        k,
+        epoch_steps: (k / m).max(1),
+        into_epoch: 0,
+        order: Vec::new(),
+        rng,
+        n_updates: 0,
+        update_steps: Vec::new(),
+    }))
+}
+
+/// Registry spec for the `loss-topk` baseline (alias `topk`).
+pub fn spec() -> MethodSpec {
+    MethodSpec {
+        name: "loss-topk".to_string(),
+        aliases: vec!["topk".to_string()],
+        help: "hard-example mining: per-epoch top-k by training loss".to_string(),
+        reference: false,
+        full_horizon_schedule: false,
+        coreset_lr_scale: false,
+        factory: Box::new(make_loss_topk),
+    }
+}

@@ -1,14 +1,17 @@
-//! Coreset selection algorithms: CREST's facility-location engine plus the
-//! three published baselines it is evaluated against.
+//! Coreset selection algorithms: CREST's facility-location engine, the
+//! three published baselines it is evaluated against, and the
+//! `loss_topk` hard-example-mining baseline (registered purely through
+//! the `api::MethodRegistry` — the in-tree pluggability proof).
 //!
-//! All selectors operate on host-side last-layer gradient embeddings
-//! (computed by the `grad_embed` backend op) and are pure functions — the
-//! coordinator owns all backend interaction.
+//! The embedding-based selectors operate on host-side last-layer gradient
+//! embeddings (computed by the `grad_embed` backend op) and are pure
+//! functions — the coordinator owns all backend interaction.
 
 pub mod craig;
 pub mod facility;
 pub mod glister;
 pub mod gradmatch;
+pub mod loss_topk;
 
 pub use facility::{coverage_cost, facility_location, Selection};
 

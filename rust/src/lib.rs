@@ -18,12 +18,19 @@
 //!   through XLA/PJRT. Requires an `xla` crate dependency and the built
 //!   artifacts; Python still never runs on the training path.
 //!
+//! The public embedding surface lives in [`api`]: a pluggable
+//! [`api::MethodRegistry`] (every selection method — builtin or
+//! downstream-registered — is one registry entry all dispatch derives
+//! from), the validating [`api::Experiment`] builder, and the
+//! [`api::RunObserver`] event stream over a run.
+//!
 //! See the top-level `README.md` for build and test instructions, and
 //! `ARCHITECTURE.md` for the layer map (runtime backends → selection
-//! algorithms → coordinator/sweep orchestration → CLI/report).
+//! algorithms → coordinator/sweep orchestration → API/CLI/report).
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod bench_util;
 pub mod config;
 pub mod coordinator;

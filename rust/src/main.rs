@@ -8,6 +8,13 @@
 //!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
 //!
+//! Every subcommand flows through one shared pre-dispatch setup path
+//! (`dispatch`): the common `--artifacts`/`--threads` flags are
+//! registered and applied there exactly once, so a new subcommand can
+//! never silently miss them. Method names (`--method`/`--methods`) are
+//! resolved against the `api::MethodRegistry`, so registered methods —
+//! builtin or custom — are uniformly available everywhere.
+//!
 //! Runs on the native CPU backend by default (no artifacts required); the
 //! `--artifacts` root is consulted for manifest.json shape overrides.
 //!
@@ -17,12 +24,12 @@
 //!   crest sweep --variant smoke --methods crest,random --seeds 1,2 --out sweep.json
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crest::api::{Experiment, Method, MethodRegistry};
 use crest::bench_util;
-use crest::config::{ExperimentConfig, MethodKind};
-use crest::coordinator::run_experiment;
 use crest::data::{cache, generate, SynthSpec};
 use crest::metrics::relative_error_pct;
 use crest::report::{aggregate_markdown, Table};
@@ -33,56 +40,103 @@ use crest::util::json::Json;
 use crest::util::logging;
 use crest::util::pool;
 
-/// Apply `--threads` (falls back to `CREST_THREADS` / core count).
-fn apply_threads(p: &Parsed) -> Result<()> {
-    if let Some(t) = p.get("threads") {
-        let n: usize = t.parse().context("parsing --threads")?;
-        pool::set_threads(n);
-    }
-    Ok(())
+/// Everything a subcommand handler receives from the shared pre-dispatch
+/// setup: parsed flags plus the resolved artifact root (`--threads` has
+/// already been applied to the global pool).
+struct Ctx {
+    args: Parsed,
+    artifacts: PathBuf,
 }
 
-fn artifact_root(p: &str) -> PathBuf {
-    if p.is_empty() {
-        PathBuf::from("artifacts")
-    } else {
-        PathBuf::from(p)
+type Handler = fn(&Ctx) -> Result<()>;
+
+/// One subcommand: its per-command flags and its handler. The common
+/// flags are appended by `dispatch`, never per command.
+struct Command {
+    name: &'static str,
+    about: &'static str,
+    flags: fn(Cli) -> Cli,
+    run: Handler,
+}
+
+const COMMANDS: &[Command] = &[
+    Command {
+        name: "train",
+        about: "run one method on one variant",
+        flags: train_flags,
+        run: cmd_train,
+    },
+    Command {
+        name: "compare",
+        about: "run several methods on one variant",
+        flags: compare_flags,
+        run: cmd_compare,
+    },
+    Command {
+        name: "sweep",
+        about: "run a resumable (variant × method × seed × budget) grid",
+        flags: sweep_flags,
+        run: cmd_sweep,
+    },
+    Command {
+        name: "inspect",
+        about: "print the compiled artifact interface",
+        flags: inspect_flags,
+        run: cmd_inspect,
+    },
+    Command {
+        name: "gen-data",
+        about: "generate a proxy dataset cache",
+        flags: gen_data_flags,
+        run: cmd_gen_data,
+    },
+];
+
+/// The one shared pre-dispatch setup path: register the common flags,
+/// parse, apply `--threads` to the global pool, resolve the artifact
+/// root, and hand the context to the subcommand.
+fn dispatch(cmd: &Command, args: &[String]) -> Result<()> {
+    let cli = (cmd.flags)(Cli::new(&format!("crest {}", cmd.name), cmd.about))
+        .opt("artifacts", "artifacts", "artifact root directory")
+        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)");
+    let p = cli.parse(args)?;
+    if let Some(t) = p.get("threads") {
+        pool::set_threads(t.parse::<usize>().context("parsing --threads")?);
     }
+    let root = p.str("artifacts");
+    let artifacts =
+        if root.is_empty() { PathBuf::from("artifacts") } else { PathBuf::from(root) };
+    (cmd.run)(&Ctx { args: p, artifacts })
 }
 
 fn main() -> Result<()> {
     logging::init();
     let args: Vec<String> = std::env::args().skip(1).collect();
+    let names = || COMMANDS.iter().map(|c| c.name).collect::<Vec<_>>().join("|");
     let (cmd, rest) = match args.split_first() {
         Some((c, r)) => (c.as_str(), r.to_vec()),
         None => {
-            eprintln!(
-                "usage: crest <train|compare|sweep|inspect|gen-data> [flags] (--help per command)"
-            );
+            eprintln!("usage: crest <{}> [flags] (--help per command)", names());
             std::process::exit(2);
         }
     };
-    match cmd {
-        "train" => cmd_train(&rest),
-        "compare" => cmd_compare(&rest),
-        "sweep" => cmd_sweep(&rest),
-        "inspect" => cmd_inspect(&rest),
-        "gen-data" => cmd_gen_data(&rest),
-        _ => bail!("unknown command {cmd:?} (train|compare|sweep|inspect|gen-data)"),
+    match COMMANDS.iter().find(|c| c.name == cmd) {
+        Some(c) => dispatch(c, &rest),
+        None => bail!("unknown command {cmd:?} ({})", names()),
     }
 }
 
-fn cmd_train(args: &[String]) -> Result<()> {
-    let p = Cli::new("crest train", "run one method on one variant")
-        .opt("variant", "cifar10-proxy", "model/dataset variant")
-        // generated from MethodKind::all() so the help cannot drift from
-        // what MethodKind::parse accepts (see config.rs round-trip test)
-        .opt("method", "crest", MethodKind::help_names())
+// ------------------------------------------------------------------ train
+
+fn train_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "model/dataset variant")
+        // generated from the method registry so the help cannot drift
+        // from what Method::parse accepts (see the registry round-trip
+        // test); custom-registered methods appear here automatically
+        .opt("method", "crest", MethodRegistry::help_names())
         .opt("seed", "1", "experiment seed")
         .opt("budget", "0.1", "training budget as a fraction of full")
         .opt("epochs-full", "60", "epochs of the full reference run")
-        .opt("artifacts", "artifacts", "artifact root directory")
-        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
         .opt_maybe("out", "write the run report JSON here")
         .opt_maybe("lr", "override the base learning rate")
         .opt_maybe("tau", "override the ρ threshold τ")
@@ -91,37 +145,48 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .flag("first-order", "use a first-order loss model (CREST-FIRST)")
         .flag("no-smooth", "disable EMA smoothing of grad/curvature")
         .flag("compiled-selection", "route greedy selection through the backend")
-        .parse(args)?;
-    apply_threads(&p)?;
+}
 
-    let variant = p.str("variant");
-    let mut cfg =
-        ExperimentConfig::preset(&variant, MethodKind::parse(&p.str("method"))?, p.u64("seed")?)?;
-    cfg.budget_frac = p.f32("budget")?;
-    cfg.epochs_full = p.usize("epochs-full")?;
-    cfg.compiled_selection = p.bool("compiled-selection");
-    if let Some(l) = p.get("lr") {
-        cfg.base_lr = l.parse()?;
-    }
-    if let Some(t) = p.get("tau") {
-        cfg.tau = t.parse()?;
-    }
-    if let Some(a) = p.get("alpha") {
-        cfg.alpha = a.parse()?;
-    }
-    if p.bool("no-exclude") {
-        cfg.crest.exclude = false;
-    }
-    if p.bool("first-order") {
-        cfg.crest.second_order = false;
-    }
-    if p.bool("no-smooth") {
-        cfg.crest.smooth = false;
-    }
+fn cmd_train(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
+    let lr: Option<f32> = p.get("lr").map(|l| l.parse()).transpose()?;
+    let tau: Option<f32> = p.get("tau").map(|t| t.parse()).transpose()?;
+    let alpha: Option<f32> = p.get("alpha").map(|a| a.parse()).transpose()?;
+    let compiled = p.bool("compiled-selection");
+    let no_exclude = p.bool("no-exclude");
+    let first_order = p.bool("first-order");
+    let no_smooth = p.bool("no-smooth");
 
-    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &variant)?;
-    let splits = generate(&SynthSpec::preset(&variant, cfg.seed).context("no preset")?);
-    let report = run_experiment(&rt, &splits, cfg)?;
+    let report = Experiment::builder()
+        .variant(p.str("variant"))
+        .method(p.str("method"))
+        .seed(p.u64("seed")?)
+        .budget_frac(p.f32("budget")?)
+        .epochs_full(p.usize("epochs-full")?)
+        .artifact_root(&ctx.artifacts)
+        .configure(move |cfg| {
+            cfg.compiled_selection = compiled;
+            if let Some(l) = lr {
+                cfg.base_lr = l;
+            }
+            if let Some(t) = tau {
+                cfg.tau = t;
+            }
+            if let Some(a) = alpha {
+                cfg.alpha = a;
+            }
+            if no_exclude {
+                cfg.crest.exclude = false;
+            }
+            if first_order {
+                cfg.crest.second_order = false;
+            }
+            if no_smooth {
+                cfg.crest.smooth = false;
+            }
+        })
+        .build()?
+        .run()?;
 
     println!(
         "method={} variant={} acc={:.4} loss={:.4} steps={} updates={} excluded={} total={:.2}s (sel {:.2}s, train {:.2}s)",
@@ -143,32 +208,43 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_compare(args: &[String]) -> Result<()> {
-    let p = Cli::new("crest compare", "run several methods on one variant")
-        .opt("variant", "cifar10-proxy", "model/dataset variant")
-        .opt("methods", "full,random,crest,craig", "comma-separated method list")
+// ---------------------------------------------------------------- compare
+
+fn compare_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "model/dataset variant")
+        .opt(
+            "methods",
+            "full,random,crest,craig",
+            format!("comma-separated method list ({})", MethodRegistry::help_names()),
+        )
         .opt("seed", "1", "experiment seed")
         .opt("budget", "0.1", "training budget fraction")
         .opt("epochs-full", "60", "epochs of the full reference run")
-        .opt("artifacts", "artifacts", "artifact root directory")
-        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
-        .parse(args)?;
-    apply_threads(&p)?;
+}
 
+fn cmd_compare(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
     let variant = p.str("variant");
     let seed = p.u64("seed")?;
-    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &variant)?;
-    let splits = generate(&SynthSpec::preset(&variant, seed).context("no preset")?);
+    // one corpus shared by every method row (same (variant, seed) data)
+    let splits =
+        Arc::new(generate(&SynthSpec::preset(&variant, seed).context("no preset")?));
 
     let mut full_acc = None;
     let mut table = Table::new(&["method", "test acc", "rel err %", "updates", "time (s)"]);
     for name in p.str("methods").split(',') {
-        let method = MethodKind::parse(name.trim())?;
-        let mut cfg = ExperimentConfig::preset(&variant, method, seed)?;
-        cfg.budget_frac = p.f32("budget")?;
-        cfg.epochs_full = p.usize("epochs-full")?;
-        let rep = run_experiment(&rt, &splits, cfg)?;
-        if method == MethodKind::Full {
+        let method = Method::parse(name.trim())?;
+        let rep = Experiment::builder()
+            .variant(&variant)
+            .with_method(method)
+            .seed(seed)
+            .budget_frac(p.f32("budget")?)
+            .epochs_full(p.usize("epochs-full")?)
+            .artifact_root(&ctx.artifacts)
+            .splits(splits.clone())
+            .build()?
+            .run()?;
+        if method.is_reference() {
             full_acc = Some(rep.final_test_acc);
         }
         let rel = full_acc
@@ -187,18 +263,18 @@ fn cmd_compare(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &[String]) -> Result<()> {
-    let p = Cli::new("crest sweep", "run a resumable (variant × method × seed × budget) grid")
-        .opt("variant", "cifar10-proxy", "comma-separated variant list")
+// ------------------------------------------------------------------ sweep
+
+fn sweep_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "comma-separated variant list")
         .opt(
             "methods",
             "full,random,crest",
-            format!("comma-separated method list ({})", MethodKind::help_names()),
+            format!("comma-separated method list ({})", MethodRegistry::help_names()),
         )
         .opt("seeds", "1,2", "comma-separated seed list (the mean±std axis)")
         .opt("budgets", "0.1", "comma-separated budget fractions")
         .opt("epochs-full", "60", "epochs of the full reference run")
-        .opt("artifacts", "artifacts", "artifact root directory")
         .opt(
             "checkpoint-dir",
             "sweep-ckpt",
@@ -206,11 +282,11 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         )
         .flag("no-checkpoint", "disable the on-disk checkpoint store")
         .opt_maybe("jobs", "cells scheduled concurrently (default: auto from pool worker count)")
-        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
         .opt_maybe("out", "append the aggregate rows to this JSON trajectory file")
-        .parse(args)?;
-    apply_threads(&p)?;
+}
 
+fn cmd_sweep(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
     let grid = SweepGrid {
         variants: sweep::grid::parse_variants(&p.str("variant"))?,
         methods: sweep::grid::parse_methods(&p.str("methods"))?,
@@ -218,7 +294,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         budgets: sweep::grid::parse_budgets(&p.str("budgets"))?,
     };
     let mut spec = SweepSpec::new(grid, p.usize("epochs-full")?);
-    spec.artifact_root = artifact_root(&p.str("artifacts"));
+    spec.artifact_root = ctx.artifacts.clone();
     if !p.bool("no-checkpoint") {
         spec.checkpoint_dir = Some(PathBuf::from(p.str("checkpoint-dir")));
     }
@@ -242,22 +318,28 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(args: &[String]) -> Result<()> {
-    let p = Cli::new("crest inspect", "print the compiled artifact interface")
-        .opt("variant", "cifar10-proxy", "model/dataset variant")
-        .opt("artifacts", "artifacts", "artifact root directory")
-        .parse(args)?;
-    let rt = Runtime::load(&artifact_root(&p.str("artifacts")), &p.str("variant"))?;
+// ---------------------------------------------------------------- inspect
+
+fn inspect_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "model/dataset variant")
+}
+
+fn cmd_inspect(ctx: &Ctx) -> Result<()> {
+    let rt = Runtime::load(&ctx.artifacts, &ctx.args.str("variant"))?;
     print!("{}", rt.describe());
     Ok(())
 }
 
-fn cmd_gen_data(args: &[String]) -> Result<()> {
-    let p = Cli::new("crest gen-data", "generate a proxy dataset cache")
-        .opt("variant", "cifar10-proxy", "dataset variant")
+// --------------------------------------------------------------- gen-data
+
+fn gen_data_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "dataset variant")
         .opt("seed", "1", "generation seed")
         .opt("out", "/tmp/crest-data", "output directory")
-        .parse(args)?;
+}
+
+fn cmd_gen_data(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
     let variant = p.str("variant");
     let spec = SynthSpec::preset(&variant, p.u64("seed")?).context("no preset")?;
     let splits = generate(&spec);

@@ -26,7 +26,7 @@ pub struct EvalPoint {
 /// Outcome of one experiment run.
 #[derive(Debug, Clone, Default)]
 pub struct RunReport {
-    /// Canonical method name (`config::MethodKind::name`).
+    /// Canonical method name (`api::Method::name`).
     pub method: String,
     /// Model/dataset variant the cell ran on.
     pub variant: String,

@@ -5,7 +5,7 @@
 //! restored from a checkpoint or re-executed on the bitwise-deterministic
 //! native backend; wall-clock fields are intentionally left out.
 
-use crate::config::MethodKind;
+use crate::config::Method;
 use crate::metrics::relative_error_pct;
 use crate::report::AggregateRow;
 use crate::util::stats;
@@ -22,14 +22,14 @@ pub fn aggregate(cells: &[CellResult]) -> Vec<AggregateRow> {
         cells
             .iter()
             .find(|c| {
-                c.key.method == MethodKind::Full && c.key.variant == variant && c.key.seed == seed
+                c.key.method.is_reference() && c.key.variant == variant && c.key.seed == seed
             })
             .map(|c| c.report.final_test_acc)
     };
 
     // group in first-appearance order (stable across resumes: cells come
     // in grid order regardless of which were restored)
-    let mut groups: Vec<(String, MethodKind, f32, Vec<&CellResult>)> = Vec::new();
+    let mut groups: Vec<(String, Method, f32, Vec<&CellResult>)> = Vec::new();
     for c in cells {
         match groups.iter_mut().find(|(v, m, b, _)| {
             *v == c.key.variant && *m == c.key.method && *b == c.key.budget_frac
@@ -83,7 +83,7 @@ mod tests {
     use crate::report::RunReport;
     use crate::sweep::CellKey;
 
-    fn cell(method: MethodKind, seed: u64, acc: f32) -> CellResult {
+    fn cell(method: Method, seed: u64, acc: f32) -> CellResult {
         CellResult {
             key: CellKey {
                 variant: "v".to_string(),
@@ -109,10 +109,10 @@ mod tests {
     #[test]
     fn aggregates_match_hand_computed_values() {
         let cells = vec![
-            cell(MethodKind::Full, 1, 0.9),
-            cell(MethodKind::Full, 2, 0.8),
-            cell(MethodKind::Crest, 1, 0.6),
-            cell(MethodKind::Crest, 2, 0.7),
+            cell(Method::full(), 1, 0.9),
+            cell(Method::full(), 2, 0.8),
+            cell(Method::crest(), 1, 0.6),
+            cell(Method::crest(), 2, 0.7),
         ];
         let rows = aggregate(&cells);
         assert_eq!(rows.len(), 2, "one row per (variant, method, budget) group");
@@ -146,9 +146,9 @@ mod tests {
     fn rel_err_absent_unless_every_seed_has_a_full_reference() {
         // full run only for seed 1 -> the 2-seed crest group has no rel err
         let cells = vec![
-            cell(MethodKind::Full, 1, 0.9),
-            cell(MethodKind::Crest, 1, 0.6),
-            cell(MethodKind::Crest, 2, 0.7),
+            cell(Method::full(), 1, 0.9),
+            cell(Method::crest(), 1, 0.6),
+            cell(Method::crest(), 2, 0.7),
         ];
         let rows = aggregate(&cells);
         let crest = rows.iter().find(|r| r.method == "crest").unwrap();
@@ -161,8 +161,8 @@ mod tests {
     #[test]
     fn aggregate_is_deterministic_over_identical_inputs() {
         let cells = vec![
-            cell(MethodKind::Full, 1, 0.91),
-            cell(MethodKind::Crest, 1, 0.63),
+            cell(Method::full(), 1, 0.91),
+            cell(Method::crest(), 1, 0.63),
         ];
         let render = || -> Vec<String> {
             aggregate(&cells).iter().map(|r| r.to_json().to_string_pretty()).collect()

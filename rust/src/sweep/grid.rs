@@ -4,7 +4,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::MethodKind;
+use crate::config::Method;
 use crate::util::json::Json;
 
 /// Identity of one sweep cell. The paper's tables and figures index every
@@ -15,8 +15,8 @@ use crate::util::json::Json;
 pub struct CellKey {
     /// Model/dataset variant name (`config::ALL_VARIANTS` or `smoke`).
     pub variant: String,
-    /// Training method driving the cell.
-    pub method: MethodKind,
+    /// Training method driving the cell (a registry handle).
+    pub method: Method,
     /// Experiment seed (data, init, subsets and probes all derive from it).
     pub seed: u64,
     /// Training budget as a fraction of the full run's backprops.
@@ -60,7 +60,7 @@ impl CellKey {
     pub fn from_json(j: &Json) -> Result<CellKey> {
         Ok(CellKey {
             variant: j.req("variant")?.as_str()?.to_string(),
-            method: MethodKind::parse(j.req("method")?.as_str()?)?,
+            method: Method::parse(j.req("method")?.as_str()?)?,
             seed: j.req("seed")?.as_f64()? as u64,
             budget_frac: j.req("budget_frac")?.as_f64()? as f32,
         })
@@ -76,7 +76,7 @@ pub struct SweepGrid {
     /// Variant names to sweep.
     pub variants: Vec<String>,
     /// Methods to run per variant.
-    pub methods: Vec<MethodKind>,
+    pub methods: Vec<Method>,
     /// Seeds per (variant, method, budget) group — the mean±std axis.
     pub seeds: Vec<u64>,
     /// Budget fractions to sweep.
@@ -100,10 +100,10 @@ impl SweepGrid {
         for variant in &self.variants {
             for (bi, &budget) in self.budgets.iter().enumerate() {
                 for &method in &self.methods {
-                    if method == MethodKind::Full && bi > 0 {
+                    if method.is_reference() && bi > 0 {
                         continue;
                     }
-                    let budget_frac = if method == MethodKind::Full { 1.0 } else { budget };
+                    let budget_frac = if method.is_reference() { 1.0 } else { budget };
                     for &seed in &self.seeds {
                         let key = CellKey {
                             variant: variant.clone(),
@@ -132,11 +132,12 @@ pub fn parse_variants(s: &str) -> Result<Vec<String>> {
     Ok(out)
 }
 
-/// Parse a comma-separated method list (`crest,random`).
-pub fn parse_methods(s: &str) -> Result<Vec<MethodKind>> {
+/// Parse a comma-separated method list (`crest,random`); any registered
+/// method name or alias is accepted.
+pub fn parse_methods(s: &str) -> Result<Vec<Method>> {
     let mut out = Vec::new();
     for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-        out.push(MethodKind::parse(tok)?);
+        out.push(Method::parse(tok)?);
     }
     if out.is_empty() {
         bail!("empty method list");
@@ -181,7 +182,7 @@ mod tests {
     fn cells_expand_in_stable_grid_order() {
         let grid = SweepGrid {
             variants: vec!["a".to_string(), "b".to_string()],
-            methods: vec![MethodKind::Crest, MethodKind::Random],
+            methods: vec![Method::crest(), Method::random()],
             seeds: vec![1, 2],
             budgets: vec![0.1],
         };
@@ -200,7 +201,7 @@ mod tests {
     fn duplicate_grid_entries_expand_to_unique_cells() {
         let grid = SweepGrid {
             variants: vec!["v".to_string()],
-            methods: vec![MethodKind::Crest, MethodKind::Crest],
+            methods: vec![Method::crest(), Method::crest()],
             seeds: vec![1, 1, 2],
             budgets: vec![0.1],
         };
@@ -214,17 +215,17 @@ mod tests {
     fn full_cells_normalize_budget_and_dedupe_across_budgets() {
         let grid = SweepGrid {
             variants: vec!["v".to_string()],
-            methods: vec![MethodKind::Full, MethodKind::Crest],
+            methods: vec![Method::full(), Method::crest()],
             seeds: vec![1, 2],
             budgets: vec![0.1, 0.2],
         };
         let cells = grid.cells();
         // full: once per seed at budget 1; crest: once per (budget, seed)
         let fulls: Vec<&CellKey> =
-            cells.iter().filter(|c| c.method == MethodKind::Full).collect();
+            cells.iter().filter(|c| c.method == Method::full()).collect();
         assert_eq!(fulls.len(), 2, "one full cell per seed, not per budget");
         assert!(fulls.iter().all(|c| c.budget_frac == 1.0));
-        let crests = cells.iter().filter(|c| c.method == MethodKind::Crest).count();
+        let crests = cells.iter().filter(|c| c.method == Method::crest()).count();
         assert_eq!(crests, 4);
         assert_eq!(cells.len(), 6);
     }
@@ -233,7 +234,7 @@ mod tests {
     fn file_name_is_stable() {
         let key = CellKey {
             variant: "smoke".to_string(),
-            method: MethodKind::Crest,
+            method: Method::crest(),
             seed: 1,
             budget_frac: 0.1,
         };
@@ -244,7 +245,7 @@ mod tests {
     fn key_json_roundtrip() {
         let key = CellKey {
             variant: "cifar10-proxy".to_string(),
-            method: MethodKind::GreedyPerBatch,
+            method: Method::greedy_per_batch(),
             seed: 7,
             budget_frac: 0.2,
         };
@@ -257,7 +258,7 @@ mod tests {
         assert_eq!(parse_variants("a, b").unwrap(), vec!["a", "b"]);
         assert_eq!(
             parse_methods("crest, random").unwrap(),
-            vec![MethodKind::Crest, MethodKind::Random]
+            vec![Method::crest(), Method::random()]
         );
         assert_eq!(parse_seeds("1,2, 3").unwrap(), vec![1, 2, 3]);
         assert_eq!(parse_budgets("0.1,1.0").unwrap(), vec![0.1, 1.0]);

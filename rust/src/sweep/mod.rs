@@ -32,11 +32,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::config::ExperimentConfig;
-use crate::coordinator::run_experiment;
+use crate::api::Experiment;
 use crate::data::{generate, Splits, SynthSpec};
 use crate::report::{AggregateRow, RunReport};
-use crate::runtime::Runtime;
 use crate::util::pool::{self, Pool};
 
 /// A full sweep request: the grid plus execution knobs.
@@ -116,17 +114,23 @@ pub fn cell_splits(key: &CellKey) -> Result<Splits> {
 }
 
 /// Run one cell against prepared splits (the caller owns corpus reuse).
+/// The cell key maps one-to-one onto the [`Experiment`] builder.
 fn run_cell_on(
     key: &CellKey,
     epochs_full: usize,
     artifact_root: &Path,
-    splits: &Splits,
+    splits: Arc<Splits>,
 ) -> Result<RunReport> {
-    let rt = Runtime::load(artifact_root, &key.variant)?;
-    let mut cfg = ExperimentConfig::preset(&key.variant, key.method, key.seed)?;
-    cfg.budget_frac = key.budget_frac;
-    cfg.epochs_full = epochs_full;
-    run_experiment(&rt, splits, cfg)
+    Experiment::builder()
+        .variant(&key.variant)
+        .with_method(key.method)
+        .seed(key.seed)
+        .budget_frac(key.budget_frac)
+        .epochs_full(epochs_full)
+        .artifact_root(artifact_root)
+        .splits(splits)
+        .build()?
+        .run()
 }
 
 /// Run one cell from scratch: load the variant runtime, regenerate its
@@ -134,7 +138,7 @@ fn run_cell_on(
 /// derives from the key (plus `epochs_full`), so a cell is reproducible in
 /// isolation — the unit of resume.
 pub fn run_cell(key: &CellKey, epochs_full: usize, artifact_root: &Path) -> Result<RunReport> {
-    run_cell_on(key, epochs_full, artifact_root, &cell_splits(key)?)
+    run_cell_on(key, epochs_full, artifact_root, Arc::new(cell_splits(key)?))
 }
 
 /// Execute a sweep: restore completed cells from the checkpoint store,
@@ -193,7 +197,7 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
         let key = &cells[todo[t]];
         log::info!("sweep cell {} ({}/{})", key.label(), t + 1, todo.len());
         let splits = splits_for(key)?;
-        let report = run_cell_on(key, spec.epochs_full, &spec.artifact_root, &splits)
+        let report = run_cell_on(key, spec.epochs_full, &spec.artifact_root, splits)
             .with_context(|| format!("sweep cell {}", key.label()))?;
         if let Some(s) = &store {
             s.save(key, spec.epochs_full, &report)

@@ -72,7 +72,7 @@ impl CheckpointStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::MethodKind;
+    use crate::config::Method;
 
     fn tmp_store(tag: &str) -> CheckpointStore {
         let dir = std::env::temp_dir().join(format!("crest-ckpt-{tag}-{}", std::process::id()));
@@ -83,7 +83,7 @@ mod tests {
     fn key(seed: u64) -> CellKey {
         CellKey {
             variant: "smoke".to_string(),
-            method: MethodKind::Crest,
+            method: Method::crest(),
             seed,
             budget_frac: 0.1,
         }

@@ -1,0 +1,318 @@
+//! Public-API integration tests for the registry + builder + observer
+//! redesign (ISSUE 4 acceptance):
+//!
+//! * builtin methods produce bitwise-identical `deterministic_json`
+//!   output through the new `Experiment` builder and the low-level
+//!   `run_experiment` entry point (the surviving pre-redesign
+//!   signature). Both paths share the rewritten coordinator, so this
+//!   pins builder-vs-coordinator equivalence and run-to-run
+//!   determinism; equivalence with *pre-redesign* numbers is covered by
+//!   the untouched `deterministic_json` schema plus the sweep
+//!   checkpoint round-trip tests, which restore reports written by any
+//!   earlier build of the store format
+//! * attaching observers never changes results, and the event stream is
+//!   consistent with the final report; `Signal::Stop` ends a run early
+//! * a new selection method is added via `MethodRegistry::register`
+//!   alone, and is immediately usable in the builder, method parsing,
+//!   and sweep grids — zero dispatch-site edits
+//! * the registry-registered `loss-topk` baseline trains, sweeps, and
+//!   round-trips through sweep checkpoints like any builtin
+
+use std::cell::Cell;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crest::api::{
+    EvalEvent, Experiment, Method, MethodRegistry, MethodSpec, RunObserver, SelectionEvent,
+    Signal, SourceCtx, StepEvent,
+};
+use crest::config::ExperimentConfig;
+use crest::coordinator::run_experiment;
+use crest::coordinator::sources::{BatchSource, SourceStats, SourcedBatch};
+use crest::data::{generate, Splits, SynthSpec};
+use crest::report::RunReport;
+use crest::runtime::Runtime;
+use crest::sweep::{self, CellKey, SweepGrid, SweepSpec};
+use crest::train::TrainState;
+use crest::util::json::Json;
+use crest::util::rng::Rng;
+use crest::util::timer::PhaseTimers;
+
+const SMOKE: &str = "smoke";
+
+fn load_smoke(seed: u64) -> (Runtime, Arc<Splits>) {
+    let rt = Runtime::native_variant(SMOKE).expect("builtin smoke variant");
+    let splits = Arc::new(generate(&SynthSpec::preset(SMOKE, seed).unwrap()));
+    (rt, splits)
+}
+
+#[test]
+fn builder_path_matches_low_level_path_bitwise_for_every_method() {
+    // the redesign must preserve deterministic output: for every
+    // registered method, the new builder path reproduces the pre-redesign
+    // coordinator entry point bit for bit
+    let (rt, splits) = load_smoke(7);
+    for method in MethodRegistry::all() {
+        let mut cfg = ExperimentConfig::preset(SMOKE, method, 7).unwrap();
+        cfg.epochs_full = 2;
+        cfg.eval_points = 2;
+        let low = run_experiment(&rt, &splits, cfg).unwrap();
+        let built = Experiment::builder()
+            .variant(SMOKE)
+            .with_method(method)
+            .seed(7)
+            .budget_frac(0.1)
+            .epochs_full(2)
+            .configure(|cfg| cfg.eval_points = 2)
+            .splits(splits.clone())
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            built.deterministic_json().to_string_pretty(),
+            low.deterministic_json().to_string_pretty(),
+            "builder and low-level paths diverged for {}",
+            method.name()
+        );
+    }
+}
+
+#[derive(Clone, Default)]
+struct Counts {
+    steps: Rc<Cell<usize>>,
+    evals: Rc<Cell<usize>>,
+    selections: Rc<Cell<usize>>,
+    finished: Rc<Cell<bool>>,
+}
+
+struct CountingObserver {
+    counts: Counts,
+}
+
+impl RunObserver for CountingObserver {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Signal {
+        assert!(!ev.idx.is_empty(), "step events carry the batch indices");
+        self.counts.steps.set(self.counts.steps.get() + 1);
+        Signal::Continue
+    }
+
+    fn on_eval(&mut self, ev: &EvalEvent<'_>) -> Signal {
+        assert!(ev.test_acc.is_finite());
+        self.counts.evals.set(self.counts.evals.get() + 1);
+        Signal::Continue
+    }
+
+    fn on_selection(&mut self, ev: &SelectionEvent<'_>) {
+        assert!(!ev.selected.is_empty());
+        self.counts.selections.set(self.counts.selections.get() + 1);
+    }
+
+    fn on_run_end(&mut self, report: &RunReport) {
+        assert!(report.steps > 0);
+        self.counts.finished.set(true);
+    }
+}
+
+#[test]
+fn observers_see_a_consistent_stream_and_never_change_results() {
+    let (_, splits) = load_smoke(11);
+    let run = |observed: bool, counts: &Counts| -> RunReport {
+        let mut b = Experiment::builder()
+            .variant(SMOKE)
+            .method("crest")
+            .seed(11)
+            .budget_frac(0.1)
+            .epochs_full(2)
+            .splits(splits.clone());
+        if observed {
+            b = b.observe(Box::new(CountingObserver { counts: counts.clone() }));
+        }
+        b.build().unwrap().run().unwrap()
+    };
+    let counts = Counts::default();
+    let plain = run(false, &counts);
+    let watched = run(true, &counts);
+    // attaching observers changes nothing
+    assert_eq!(
+        watched.deterministic_json().to_string_pretty(),
+        plain.deterministic_json().to_string_pretty()
+    );
+    // and the stream the observer saw is consistent with the report
+    assert_eq!(counts.steps.get(), watched.steps);
+    assert_eq!(counts.evals.get(), watched.history.len());
+    assert_eq!(counts.selections.get(), watched.n_selection_updates);
+    assert!(counts.finished.get(), "on_run_end fired");
+}
+
+struct StopAfterFirstEval;
+
+impl RunObserver for StopAfterFirstEval {
+    fn on_eval(&mut self, _ev: &EvalEvent<'_>) -> Signal {
+        Signal::Stop
+    }
+}
+
+#[test]
+fn early_stopping_observer_ends_the_run_after_the_final_eval() {
+    let (_, splits) = load_smoke(13);
+    let build = |stop: bool| {
+        let mut b = Experiment::builder()
+            .variant(SMOKE)
+            .method("random")
+            .seed(13)
+            .budget_frac(0.1)
+            .epochs_full(2)
+            .splits(splits.clone());
+        if stop {
+            b = b.observe(Box::new(StopAfterFirstEval));
+        }
+        b.build().unwrap().run().unwrap()
+    };
+    let full_run = build(false);
+    let stopped = build(true);
+    assert!(stopped.steps >= 1, "the stopping step still completes");
+    assert!(
+        stopped.steps < full_run.steps,
+        "stop must end the run early: {} vs {}",
+        stopped.steps,
+        full_run.steps
+    );
+    // the final evaluation is always recorded
+    assert!(stopped.final_test_acc.is_finite());
+}
+
+// A custom method defined entirely outside the crate's dispatch sites:
+// the fixed-first-batch source below touches only public API.
+struct ConstSource {
+    m: usize,
+}
+
+impl BatchSource for ConstSource {
+    fn next_batch(
+        &mut self,
+        _step: usize,
+        _state: &mut TrainState,
+        _timers: &mut PhaseTimers,
+    ) -> Result<SourcedBatch> {
+        Ok(SourcedBatch {
+            idx: (0..self.m).collect(),
+            gamma: vec![1.0; self.m],
+            selection: None,
+        })
+    }
+
+    fn stats(&self) -> SourceStats {
+        SourceStats::default()
+    }
+}
+
+fn make_const<'a>(ctx: SourceCtx<'a>, _rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    Ok(Box::new(ConstSource { m: ctx.rt.man.m }))
+}
+
+#[test]
+fn a_method_registered_by_a_downstream_crate_runs_everywhere() {
+    let method = MethodRegistry::register(MethodSpec {
+        name: "const-batch".to_string(),
+        aliases: vec!["cb".to_string()],
+        help: "test method: always trains on the first m examples".to_string(),
+        reference: false,
+        full_horizon_schedule: false,
+        coreset_lr_scale: false,
+        factory: Box::new(make_const),
+    })
+    .unwrap();
+
+    // visible to parsing, help, and sweep-grid expansion immediately
+    assert_eq!(Method::parse("const-batch").unwrap(), method);
+    assert_eq!(Method::parse("cb").unwrap(), method);
+    assert!(MethodRegistry::help_names().split('|').any(|n| n == "const-batch"));
+    let methods = sweep::grid::parse_methods("const-batch,crest").unwrap();
+    assert_eq!(methods[0], method);
+
+    // checkpoint keys round-trip through the registry
+    let key = CellKey {
+        variant: SMOKE.to_string(),
+        method,
+        seed: 3,
+        budget_frac: 0.1,
+    };
+    let parsed = CellKey::from_json(&Json::parse(&key.to_json().to_string_pretty()).unwrap());
+    assert_eq!(parsed.unwrap(), key);
+
+    // and it trains end-to-end through the builder
+    let (_, splits) = load_smoke(3);
+    let report = Experiment::builder()
+        .variant(SMOKE)
+        .method("const-batch")
+        .seed(3)
+        .budget_frac(0.1)
+        .epochs_full(2)
+        .splits(splits)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.method, "const-batch");
+    assert!(report.steps > 0);
+}
+
+#[test]
+fn loss_topk_baseline_trains_and_sweeps_like_a_builtin() {
+    // advertised in help, parses by name and alias
+    assert!(MethodRegistry::help_names().split('|').any(|n| n == "loss-topk"));
+    assert_eq!(Method::parse("topk").unwrap(), Method::loss_topk());
+
+    // trains on the smoke variant and actually reselects per epoch
+    let (_, splits) = load_smoke(5);
+    let report = Experiment::builder()
+        .variant(SMOKE)
+        .method("loss-topk")
+        .seed(5)
+        .budget_frac(0.1)
+        .epochs_full(2)
+        .splits(splits)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(report.method, "loss-topk");
+    assert!(report.steps > 0);
+    assert!(report.n_selection_updates >= 1, "loss-topk never reselected");
+
+    // sweeps (and checkpoint-resumes) next to a builtin
+    let dir = std::env::temp_dir().join(format!("crest-api-topk-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = |ckpt: Option<PathBuf>| {
+        let mut s = SweepSpec::new(
+            SweepGrid {
+                variants: vec![SMOKE.to_string()],
+                methods: vec![Method::loss_topk(), Method::crest()],
+                seeds: vec![1],
+                budgets: vec![0.1],
+            },
+            2,
+        );
+        s.checkpoint_dir = ckpt;
+        s.jobs = 1;
+        s
+    };
+    let fresh = sweep::run(&spec(Some(dir.clone()))).unwrap();
+    assert_eq!(fresh.n_executed(), 2);
+    assert!(fresh.rows.iter().any(|r| r.method == "loss-topk"));
+    let restored = sweep::run(&spec(Some(dir.clone()))).unwrap();
+    assert_eq!(restored.n_executed(), 0, "checkpoints restore loss-topk cells");
+    for (a, b) in fresh.cells.iter().zip(&restored.cells) {
+        assert_eq!(
+            a.report.deterministic_json().to_string_pretty(),
+            b.report.deterministic_json().to_string_pretty(),
+            "restored cell diverged: {}",
+            a.key.label()
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -7,7 +7,8 @@
 //! wrappers drive the optional `pjrt` backend, so these tests double as the
 //! contract for that path.)
 
-use crest::config::{ExperimentConfig, MethodKind};
+use crest::api::{Method, MethodRegistry};
+use crest::config::ExperimentConfig;
 use crest::coordinator::run_experiment;
 use crest::coreset::facility;
 use crest::data::{generate, SynthSpec};
@@ -237,17 +238,10 @@ fn evaluate_handles_non_chunk_multiple_sizes() {
 
 #[test]
 fn every_method_completes_a_tiny_run() {
+    // every *registered* method, so new registry entries (e.g. the
+    // loss-topk baseline) are covered automatically
     let (rt, splits) = load_smoke();
-    for method in [
-        MethodKind::Full,
-        MethodKind::Random,
-        MethodKind::SgdTruncated,
-        MethodKind::Crest,
-        MethodKind::Craig,
-        MethodKind::GradMatch,
-        MethodKind::Glister,
-        MethodKind::GreedyPerBatch,
-    ] {
+    for method in MethodRegistry::all() {
         let mut cfg = ExperimentConfig::preset(SMOKE, method, 11).unwrap();
         cfg.epochs_full = 2; // tiny budget: full = 128 steps, others 12
         cfg.eval_points = 2;
@@ -255,7 +249,7 @@ fn every_method_completes_a_tiny_run() {
         assert!(rep.steps > 0, "{method:?} ran no steps");
         assert!(rep.final_test_acc > 0.05, "{method:?} below chance: {}", rep.final_test_acc);
         assert!(rep.backprops > 0);
-        if method == MethodKind::Crest {
+        if method == Method::crest() {
             assert!(rep.n_selection_updates > 0);
         }
     }
@@ -266,7 +260,7 @@ fn crest_and_baseline_full_cells_on_paper_proxy() {
     // the acceptance cell: CREST (Algorithm 1) plus the Random baseline run
     // end-to-end on the cifar10 proxy with the native backend
     let (rt, splits) = load();
-    for method in [MethodKind::Crest, MethodKind::Random] {
+    for method in [Method::crest(), Method::random()] {
         let mut cfg = ExperimentConfig::preset(VARIANT, method, 21).unwrap();
         cfg.epochs_full = 2;
         cfg.eval_points = 1;
@@ -277,7 +271,7 @@ fn crest_and_baseline_full_cells_on_paper_proxy() {
             "{method:?} below chance on 10 classes: {}",
             rep.final_test_acc
         );
-        if method == MethodKind::Crest {
+        if method == Method::crest() {
             assert!(rep.n_selection_updates > 0, "CREST never selected");
             assert!(!rep.rho_history.is_empty(), "CREST never ran a rho-check");
         }
@@ -287,7 +281,7 @@ fn crest_and_baseline_full_cells_on_paper_proxy() {
 #[test]
 fn crest_report_is_internally_consistent() {
     let (rt, splits) = load_smoke();
-    let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 12).unwrap();
+    let mut cfg = ExperimentConfig::preset(SMOKE, Method::crest(), 12).unwrap();
     cfg.epochs_full = 5;
     let rep = run_experiment(&rt, &splits, cfg).unwrap();
     assert_eq!(rep.update_steps.len(), rep.n_selection_updates);
@@ -305,7 +299,7 @@ fn crest_report_is_internally_consistent() {
 fn deterministic_given_seed() {
     let (rt, splits) = load_smoke();
     let mk = || {
-        let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 13).unwrap();
+        let mut cfg = ExperimentConfig::preset(SMOKE, Method::crest(), 13).unwrap();
         cfg.epochs_full = 3;
         run_experiment(&rt, &splits, cfg).unwrap()
     };
@@ -353,7 +347,7 @@ fn crest_selection_threads_do_not_change_results() {
     // serial path exactly
     let (rt, splits) = load_smoke();
     let run = |threads: usize| {
-        let mut cfg = ExperimentConfig::preset(SMOKE, MethodKind::Crest, 5).unwrap();
+        let mut cfg = ExperimentConfig::preset(SMOKE, Method::crest(), 5).unwrap();
         cfg.epochs_full = 3;
         cfg.selection_threads = threads;
         run_experiment(&rt, &splits, cfg).unwrap()

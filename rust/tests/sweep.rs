@@ -7,7 +7,7 @@
 
 use std::path::PathBuf;
 
-use crest::config::MethodKind;
+use crest::api::Method;
 use crest::report::aggregate_markdown;
 use crest::sweep::{self, CheckpointStore, SweepGrid, SweepOutcome, SweepSpec};
 
@@ -15,7 +15,7 @@ use crest::sweep::{self, CheckpointStore, SweepGrid, SweepOutcome, SweepSpec};
 fn smoke_grid(seeds: Vec<u64>) -> SweepGrid {
     SweepGrid {
         variants: vec!["smoke".to_string()],
-        methods: vec![MethodKind::Crest, MethodKind::Random],
+        methods: vec![Method::crest(), Method::random()],
         seeds,
         budgets: vec![0.1],
     }
