@@ -6,12 +6,16 @@
 //!
 //! Run with `cargo bench --bench perf`. Quick CI mode: `CREST_BENCH_QUICK=1`
 //! (reduced sizes + capped reps); machine-readable trajectory:
-//! `CREST_BENCH_JSON=<path>`.
+//! `CREST_BENCH_JSON=<path>`. Ops with a known arithmetic cost report
+//! GFLOP/s alongside p50/p95 (approximate op counts — matmul passes and
+//! dot panels only); `crest bench-diff` gates fresh records against the
+//! committed `BENCH_perf.json` baseline.
 
 use crest::bench_util::scenario as sc;
-use crest::bench_util::{self, bench_recorded, section};
+use crest::bench_util::{self, bench_recorded, bench_recorded_flops, section};
 use crest::coreset::facility;
 use crest::model::init_params;
+use crest::runtime::manifest::VariantManifest;
 use crest::tensor::MatF32;
 use crest::train::TrainState;
 use crest::util::rng::Rng;
@@ -22,6 +26,16 @@ fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
         *v = rng.normal();
     }
     m
+}
+
+/// Approximate flop count of `passes` matmul-equivalent passes through the
+/// manifest's MLP at the given batch size (2 flops per MAC).
+fn mlp_flops(man: &VariantManifest, batch: usize, passes: u64) -> u64 {
+    let mut dims = vec![man.d_in];
+    dims.extend(man.hidden.iter().copied());
+    dims.push(man.classes);
+    let macs: u64 = dims.windows(2).map(|w| (w[0] * w[1]) as u64).sum();
+    passes * 2 * macs * batch as u64
 }
 
 fn main() -> anyhow::Result<()> {
@@ -56,6 +70,46 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    section("L3 host: facility gain scans (blocked distance kernels)");
+    {
+        // the dense O(n²·d) seeding scan — the kernel the block layer
+        // accelerates; GFLOP/s counts both dot panels of the prod metric
+        let (n, c, h) = if quick { (1024usize, 10usize, 64usize) } else { (2048, 10, 64) };
+        let g = random_mat(&mut rng, n, c);
+        let a = random_mat(&mut rng, n, h);
+        let euclid = facility::EuclidMetric::new(&g);
+        let prod = facility::ProdMetric::new(&a, &g);
+        let mind: Vec<f32> = (0..n).map(|i| euclid.sqdist(0, i)).collect();
+        let mind_prod: Vec<f32> = (0..n).map(|i| prod.sqdist(0, i)).collect();
+        let nn = (n * n) as u64;
+        bench_recorded_flops(
+            &format!("gain scan euclid n={n} c={c}"),
+            1,
+            8,
+            nn * (2 * c as u64 + 4),
+            || facility::gain_scan(&euclid, &mind),
+        );
+        bench_recorded_flops(
+            &format!("gain scan prod n={n} h={h} c={c}"),
+            1,
+            8,
+            nn * (2 * (c + h) as u64 + 6),
+            || facility::gain_scan(&prod, &mind_prod),
+        );
+        // opt-in Gram cache: one blocked precompute pass, then lookups
+        bench_recorded_flops(
+            &format!("gram precompute n={n} (prod metric)"),
+            1,
+            8,
+            nn * (2 * (c + h) as u64 + 6),
+            || facility::GramMetric::new(&prod),
+        );
+        let gram = facility::GramMetric::new(&prod);
+        bench_recorded(&format!("gain scan gram-cached n={n}"), 1, 8, || {
+            facility::gain_scan(&gram, &mind_prod)
+        });
+    }
+
     section("L3 host: batch assembly");
     if let Some((_, splits)) = sc::load("cifar10-proxy", 1) {
         let ds = splits.train;
@@ -76,23 +130,39 @@ fn main() -> anyhow::Result<()> {
         let (mx, my) = ds.batch(&midx);
         let gamma = vec![1.0f32; m];
         let mom = rt.zero_momentum();
-        bench_recorded(&format!("{variant}: train_step"), 3, 30, || {
-            rt.train_step(&state.params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap()
-        });
+        bench_recorded_flops(
+            &format!("{variant}: train_step"),
+            3,
+            30,
+            mlp_flops(&rt.man, m, 3),
+            || rt.train_step(&state.params, &mom, &mx, &my, &gamma, 0.01, 5e-4).unwrap(),
+        );
         let ridx: Vec<usize> = (0..r).collect();
         let (rx, ry) = ds.batch(&ridx);
-        bench_recorded(&format!("{variant}: grad_embed r={r}"), 3, 20, || {
-            rt.grad_embed(&state.params, &rx, &ry).unwrap()
-        });
+        bench_recorded_flops(
+            &format!("{variant}: grad_embed r={r}"),
+            3,
+            20,
+            mlp_flops(&rt.man, r, 1),
+            || rt.grad_embed(&state.params, &rx, &ry).unwrap(),
+        );
         let eidx: Vec<usize> = (0..rt.man.eval_chunk).map(|i| i % ds.n()).collect();
         let (ex, ey) = ds.batch(&eidx);
-        bench_recorded(&format!("{variant}: eval_chunk e={}", rt.man.eval_chunk), 3, 20, || {
-            rt.eval_chunk(&state.params, &ex, &ey).unwrap()
-        });
+        bench_recorded_flops(
+            &format!("{variant}: eval_chunk e={}", rt.man.eval_chunk),
+            3,
+            20,
+            mlp_flops(&rt.man, rt.man.eval_chunk, 1),
+            || rt.eval_chunk(&state.params, &ex, &ey).unwrap(),
+        );
         let z = vec![1.0f32; rt.man.p_dim];
-        bench_recorded(&format!("{variant}: hess_probe"), 2, 10, || {
-            rt.hess_probe(&state.params, &rx, &ry, &z).unwrap()
-        });
+        bench_recorded_flops(
+            &format!("{variant}: hess_probe"),
+            2,
+            10,
+            mlp_flops(&rt.man, r, 7),
+            || rt.hess_probe(&state.params, &rx, &ry, &z).unwrap(),
+        );
 
         // L1 compiled greedy vs host greedy at identical inputs
         let (gl, al, _) = rt.grad_embed(&state.params, &rx, &ry)?;

@@ -1,0 +1,201 @@
+//! Perf-baseline regression diff — the `crest bench-diff` core.
+//!
+//! Compares freshly measured bench records against a committed baseline
+//! trajectory (both in the `CREST_BENCH_JSON` array format). Records are
+//! keyed by `(name, threads, quick)`; when the same key appears several
+//! times in one file (an appended trajectory), the latest record wins, so
+//! a file that accumulates history still diffs against its newest state.
+//! A fresh p50 beyond `factor ×` the baseline p50 is a regression.
+//!
+//! The gate is deliberately forgiving about coverage: a baseline with no
+//! overlapping keys (e.g. the empty seed committed before the first
+//! measured run, or a bench whose names changed) produces a warning and
+//! zero regressions rather than a failure — only measured slowdowns fail
+//! the gate.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One record key: benchmark name, pool worker count, quick-mode flag.
+type Key = (String, usize, bool);
+
+/// Result of one baseline diff.
+#[derive(Debug)]
+pub struct DiffOutcome {
+    /// Keys present in both files and compared.
+    pub compared: usize,
+    /// Human-readable lines for every regression beyond the factor.
+    pub regressions: Vec<String>,
+    /// Full human-readable comparison table.
+    pub report: String,
+}
+
+/// Load a trajectory file into `(key → latest p50)`. Records without a
+/// `name` or `p50_secs` (e.g. sweep aggregate rows sharing the file) are
+/// skipped.
+fn index(path: &Path) -> Result<HashMap<Key, f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench records from {}", path.display()))?;
+    let doc = Json::parse(&text)
+        .with_context(|| format!("parsing bench records in {}", path.display()))?;
+    let mut map = HashMap::new();
+    for rec in doc.as_arr()? {
+        let Some(name) = rec.get("name").and_then(|n| n.as_str().ok()) else { continue };
+        let Some(p50) = rec.get("p50_secs").and_then(|v| v.as_f64().ok()) else { continue };
+        let threads = rec.get("threads").and_then(|v| v.as_usize().ok()).unwrap_or(0);
+        let quick = rec.get("quick").and_then(|v| v.as_bool().ok()).unwrap_or(false);
+        map.insert((name.to_string(), threads, quick), p50);
+    }
+    Ok(map)
+}
+
+/// Diff `fresh` against `baseline`: every key present in both must have a
+/// fresh p50 within `factor ×` the baseline p50. Returns the comparison
+/// report and the list of regressions (empty = gate passes).
+pub fn diff_baseline(baseline: &Path, fresh: &Path, factor: f64) -> Result<DiffOutcome> {
+    anyhow::ensure!(factor > 0.0, "bench-diff: factor must be positive, got {factor}");
+    let base = index(baseline)?;
+    let new = index(fresh)?;
+    let mut keys: Vec<&Key> = new.keys().filter(|k| base.contains_key(*k)).collect();
+    keys.sort();
+    let mut report = String::new();
+    let mut regressions = Vec::new();
+    report.push_str(&format!(
+        "{:<52} {:>12} {:>12} {:>8}  status\n",
+        "benchmark (threads, mode)", "baseline", "fresh", "ratio"
+    ));
+    for key in &keys {
+        let b = base[*key];
+        let f = new[*key];
+        let ratio = if b > 0.0 { f / b } else { f64::INFINITY };
+        let label = format!(
+            "{} (t={}, {})",
+            key.0,
+            key.1,
+            if key.2 { "quick" } else { "full" }
+        );
+        let status = if ratio > factor { "REGRESSED" } else { "ok" };
+        let line = format!(
+            "{:<52} {:>12} {:>12} {:>7.2}x  {}",
+            label,
+            super::format_secs(b),
+            super::format_secs(f),
+            ratio,
+            status
+        );
+        report.push_str(&line);
+        report.push('\n');
+        if ratio > factor {
+            regressions.push(line);
+        }
+    }
+    if keys.is_empty() {
+        report.push_str(
+            "(no overlapping records between baseline and fresh run — \
+             nothing to gate; commit a measured baseline to arm the diff)\n",
+        );
+    } else {
+        report.push_str(&format!(
+            "{} record(s) compared, {} regression(s) beyond {factor}x\n",
+            keys.len(),
+            regressions.len()
+        ));
+    }
+    Ok(DiffOutcome { compared: keys.len(), regressions, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::write_atomic;
+
+    fn rec(name: &str, threads: usize, quick: bool, p50: f64) -> Json {
+        Json::obj()
+            .set("name", name)
+            .set("threads", threads)
+            .set("p50_secs", p50)
+            .set("quick", quick)
+    }
+
+    fn write(path: &Path, recs: Vec<Json>) {
+        write_atomic(path, &Json::Arr(recs)).unwrap();
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("crest-bench-diff-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn passes_within_factor_and_flags_regressions() {
+        let b = tmp("base.json");
+        let f = tmp("fresh.json");
+        write(&b, vec![rec("op/a", 1, false, 1.0), rec("op/b", 1, false, 1.0)]);
+        write(&f, vec![rec("op/a", 1, false, 1.5), rec("op/b", 1, false, 2.5)]);
+        let out = diff_baseline(&b, &f, 2.0).unwrap();
+        assert_eq!(out.compared, 2);
+        assert_eq!(out.regressions.len(), 1);
+        assert!(out.regressions[0].contains("op/b"));
+        assert!(out.report.contains("REGRESSED"));
+    }
+
+    #[test]
+    fn latest_record_per_key_wins() {
+        let b = tmp("base-latest.json");
+        let f = tmp("fresh-latest.json");
+        // the baseline accumulated history: old slow record, then a fast one
+        write(&b, vec![rec("op/a", 1, false, 9.0), rec("op/a", 1, false, 1.0)]);
+        write(&f, vec![rec("op/a", 1, false, 2.5)]);
+        let out = diff_baseline(&b, &f, 2.0).unwrap();
+        assert_eq!(out.compared, 1);
+        assert_eq!(out.regressions.len(), 1, "diffed against the latest (fast) baseline");
+    }
+
+    #[test]
+    fn quick_and_full_records_never_cross_compare() {
+        let b = tmp("base-quick.json");
+        let f = tmp("fresh-quick.json");
+        write(&b, vec![rec("op/a", 1, false, 0.001)]);
+        write(&f, vec![rec("op/a", 1, true, 1.0)]);
+        let out = diff_baseline(&b, &f, 2.0).unwrap();
+        assert_eq!(out.compared, 0);
+        assert!(out.regressions.is_empty());
+        assert!(out.report.contains("no overlapping records"));
+    }
+
+    #[test]
+    fn seed_baseline_passes_with_warning() {
+        let b = tmp("base-empty.json");
+        let f = tmp("fresh-some.json");
+        write(&b, Vec::new());
+        write(&f, vec![rec("op/a", 1, false, 1.0)]);
+        let out = diff_baseline(&b, &f, 2.0).unwrap();
+        assert_eq!(out.compared, 0);
+        assert!(out.regressions.is_empty());
+    }
+
+    #[test]
+    fn non_bench_rows_are_skipped() {
+        let b = tmp("base-mixed.json");
+        let f = tmp("fresh-mixed.json");
+        // sweep aggregate rows share the trajectory file but carry no p50
+        write(&b, vec![Json::obj().set("variant", "smoke"), rec("op/a", 1, false, 1.0)]);
+        write(&f, vec![rec("op/a", 1, false, 1.2)]);
+        let out = diff_baseline(&b, &f, 2.0).unwrap();
+        assert_eq!(out.compared, 1);
+        assert!(out.regressions.is_empty());
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        let f = tmp("fresh-alone.json");
+        write(&f, vec![rec("op/a", 1, false, 1.0)]);
+        assert!(diff_baseline(Path::new("/nonexistent/base.json"), &f, 2.0).is_err());
+        assert!(diff_baseline(&f, Path::new("/nonexistent/fresh.json"), 2.0).is_err());
+    }
+}

@@ -12,8 +12,16 @@
 //!   perf-smoke configuration)
 //! * `CREST_BENCH_JSON=<path>` — [`flush_json`] appends every recorded
 //!   result to a JSON array at this path (the perf trajectory file)
+//!
+//! Benches with a known arithmetic cost use [`bench_recorded_flops`] to
+//! report GFLOP/s alongside p50/p95; [`diff_baseline`] (exposed as
+//! `crest bench-diff`) gates a fresh trajectory against the committed
+//! `BENCH_perf.json` baseline.
 
+pub mod diff;
 pub mod scenario;
+
+pub use diff::{diff_baseline, DiffOutcome};
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -44,24 +52,41 @@ pub struct BenchResult {
     pub p95_secs: f64,
     /// Pool worker count the bench ran with.
     pub threads: usize,
+    /// Arithmetic operations one call performs (0 = not reported).
+    pub flops: u64,
+    /// True when the bench ran in quick (CI smoke) mode — quick and full
+    /// records are never diffed against each other.
+    pub quick: bool,
 }
 
 impl BenchResult {
+    /// Throughput in GFLOP/s at the p50 time (`None` when no op count was
+    /// supplied).
+    pub fn gflops_p50(&self) -> Option<f64> {
+        (self.flops > 0 && self.p50_secs > 0.0)
+            .then(|| self.flops as f64 / self.p50_secs / 1e9)
+    }
+
     /// One fixed-width human-readable result line.
     pub fn report(&self) -> String {
+        let gf = match self.gflops_p50() {
+            Some(g) => format!(" {g:>8.2} GF/s"),
+            None => String::new(),
+        };
         format!(
-            "{:<44} {:>10} {:>12} {:>14} {:>12}",
+            "{:<44} {:>10} {:>12} {:>14} {:>12}{}",
             self.name,
             format_secs(self.p50_secs),
             format!("±{}", format_secs(self.mad_secs)),
             format!("p95 {}", format_secs(self.p95_secs)),
             format!("min {}", format_secs(self.min_secs)),
+            gf,
         )
     }
 
     /// Machine-readable record for the perf trajectory (`CREST_BENCH_JSON`).
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("name", self.name.as_str())
             .set("reps", self.reps)
             .set("threads", self.threads)
@@ -70,6 +95,11 @@ impl BenchResult {
             .set("p50_secs", self.p50_secs)
             .set("p95_secs", self.p95_secs)
             .set("mad_secs", self.mad_secs)
+            .set("quick", self.quick);
+        if let Some(g) = self.gflops_p50() {
+            j = j.set("flops", self.flops as f64).set("gflops_p50", g);
+        }
+        j
     }
 }
 
@@ -126,7 +156,23 @@ pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T
         p50_secs: stats::median(&times) as f64,
         p95_secs: stats::percentile(&times, 95.0) as f64,
         threads: pool::threads(),
+        flops: 0,
+        quick: quick(),
     }
+}
+
+/// [`bench`] with a per-call arithmetic-op count attached, so the report
+/// and the JSON record carry GFLOP/s alongside p50/p95.
+pub fn bench_flops<T>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    flops: u64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = bench(name, warmup, reps, f);
+    r.flops = flops;
+    r
 }
 
 /// Results queued for [`flush_json`].
@@ -145,6 +191,20 @@ pub fn bench_recorded<T>(
     f: impl FnMut() -> T,
 ) -> BenchResult {
     let r = bench(name, warmup, reps, f);
+    println!("{}", r.report());
+    record(&r);
+    r
+}
+
+/// [`bench_recorded`] with a per-call op count (GFLOP/s reporting).
+pub fn bench_recorded_flops<T>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    flops: u64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let r = bench_flops(name, warmup, reps, flops, f);
     println!("{}", r.report());
     record(&r);
     r

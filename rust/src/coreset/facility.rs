@@ -10,6 +10,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::ops::Range;
 
+use crate::kernel::{dot4, dot4_rows};
 use crate::tensor::MatF32;
 use crate::util::pool::Pool;
 
@@ -22,6 +23,13 @@ use crate::util::pool::Pool;
 // over elements in fixed GAIN_CHUNK-sized chunks folded in chunk order.
 // Both schemes are independent of the worker count, so every selection is
 // bitwise-identical at `--threads 1` and `--threads N`.
+//
+// Within one chunk the distances come from `SqDistMetric::sqdist_block`,
+// the block-at-a-time kernel: one candidate against a whole contiguous
+// element range through the cache-blocked dot panels in `crate::kernel`.
+// Block boundaries are a function of the chunk layout only, and every
+// panel value is bitwise-identical to the scalar `sqdist`, so blocking
+// changes speed, never results.
 
 /// Fixed chunk length for gain reductions (boundaries depend only on the
 /// element count, never the thread count).
@@ -103,25 +111,6 @@ impl Ord for HeapItem {
     }
 }
 
-/// 4-lane unrolled dot product (auto-vectorizes well in release builds).
-#[inline]
-fn dot4(a: &[f32], b: &[f32]) -> f32 {
-    let mut acc = [0.0f32; 4];
-    let mut ca = a.chunks_exact(4);
-    let mut cb = b.chunks_exact(4);
-    for (x, y) in (&mut ca).zip(&mut cb) {
-        acc[0] += x[0] * y[0];
-        acc[1] += x[1] * y[1];
-        acc[2] += x[2] * y[2];
-        acc[3] += x[3] * y[3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * y;
-    }
-    s
-}
-
 /// A squared-distance metric over a ground set of embeddings. `Sync` so
 /// the gain scans can share the metric across pool workers.
 pub trait SqDistMetric: Sync {
@@ -129,6 +118,22 @@ pub trait SqDistMetric: Sync {
     fn len(&self) -> usize;
     /// Squared distance between ground-set elements `i` and `j`.
     fn sqdist(&self, i: usize, j: usize) -> f32;
+    /// Squared distances from candidate `j` to every element of `range`,
+    /// written to `out` (`out.len() == range.len()`). The default is the
+    /// scalar loop; tiled overrides must produce bitwise-identical values
+    /// (asserted by the `kernels` equivalence tests), so the scans below
+    /// may consume blocks without affecting any selection.
+    fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        for (o, i) in out.iter_mut().zip(range) {
+            *o = self.sqdist(j, i);
+        }
+    }
+    /// True when the metric is already a precomputed distance table, so
+    /// the entry points must not re-wrap it in [`GramMetric`].
+    fn is_cached(&self) -> bool {
+        false
+    }
     /// True when the ground set is empty.
     fn is_empty(&self) -> bool {
         self.len() == 0
@@ -143,10 +148,14 @@ pub struct EuclidMetric<'a> {
 }
 
 impl<'a> EuclidMetric<'a> {
-    /// Metric over the rows of `g`, precomputing the squared norms.
+    /// Metric over the rows of `g`, precomputing the squared norms on the
+    /// same unrolled dot kernel the distances use.
     pub fn new(g: &'a MatF32) -> Self {
         let sq = (0..g.rows)
-            .map(|i| g.row(i).iter().map(|&v| v * v).sum::<f32>())
+            .map(|i| {
+                let r = g.row(i);
+                dot4(r, r)
+            })
             .collect();
         EuclidMetric { g, sq }
     }
@@ -162,6 +171,15 @@ impl<'a> SqDistMetric for EuclidMetric<'a> {
         let dot = dot4(self.g.row(i), self.g.row(j));
         (self.sq[i] + self.sq[j] - 2.0 * dot).max(0.0)
     }
+
+    fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        dot4_rows(self.g.row(j), self.g, range.clone(), out);
+        let sj = self.sq[j];
+        for (o, i) in out.iter_mut().zip(range) {
+            *o = (self.sq[i] + sj - 2.0 * *o).max(0.0);
+        }
+    }
 }
 
 /// Last-layer *weight*-gradient metric: example i's gradient is the outer
@@ -175,19 +193,24 @@ pub struct ProdMetric<'a> {
 }
 
 impl<'a> ProdMetric<'a> {
-    /// Metric over paired activation (`a`) and logit-gradient (`g`) rows.
+    /// Metric over paired activation (`a`) and logit-gradient (`g`) rows,
+    /// with squared norms precomputed on the unrolled dot kernel.
     pub fn new(a: &'a MatF32, g: &'a MatF32) -> Self {
         assert_eq!(a.rows, g.rows, "ProdMetric: row mismatch");
         let sq = (0..a.rows)
             .map(|i| {
-                let na: f32 = a.row(i).iter().map(|&v| v * v).sum();
-                let ng: f32 = g.row(i).iter().map(|&v| v * v).sum();
-                na * ng
+                let ra = a.row(i);
+                let rg = g.row(i);
+                dot4(ra, ra) * dot4(rg, rg)
             })
             .collect();
         ProdMetric { a, g, sq }
     }
 }
+
+/// Inner block length of [`ProdMetric::sqdist_block`]'s stack scratch for
+/// the logit-gradient dot panel.
+const PROD_BLOCK: usize = 64;
 
 impl<'a> SqDistMetric for ProdMetric<'a> {
     fn len(&self) -> usize {
@@ -200,21 +223,134 @@ impl<'a> SqDistMetric for ProdMetric<'a> {
         let gg = dot4(self.g.row(i), self.g.row(j));
         (self.sq[i] + self.sq[j] - 2.0 * aa * gg).max(0.0)
     }
+
+    fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        let aj = self.a.row(j);
+        let gj = self.g.row(j);
+        let sj = self.sq[j];
+        let mut gbuf = [0.0f32; PROD_BLOCK];
+        let mut start = range.start;
+        let mut o = 0;
+        while start < range.end {
+            let end = (start + PROD_BLOCK).min(range.end);
+            let n = end - start;
+            dot4_rows(aj, self.a, start..end, &mut out[o..o + n]);
+            dot4_rows(gj, self.g, start..end, &mut gbuf[..n]);
+            for (k, ov) in out[o..o + n].iter_mut().enumerate() {
+                let i = start + k;
+                *ov = (self.sq[i] + sj - 2.0 * *ov * gbuf[k]).max(0.0);
+            }
+            o += n;
+            start = end;
+        }
+    }
 }
 
+// -------------------------------------------------------------- gram cache
+
+/// Default element cap for the opt-in Gram cache: a 2²⁴-element table
+/// (64 MB of f32) covers ground sets up to n = 4096.
+pub const DEFAULT_GRAM_CAP: usize = 1 << 24;
+
+/// Parse a `CREST_GRAM_CACHE` value into an element cap: unset / `0` /
+/// `false` disables caching, `1` / `true` selects [`DEFAULT_GRAM_CAP`],
+/// any other positive integer is the cap in table elements (n²).
+pub fn gram_cap(val: Option<&str>) -> Option<usize> {
+    match val {
+        None | Some("") | Some("0") | Some("false") => None,
+        Some("1") | Some("true") => Some(DEFAULT_GRAM_CAP),
+        Some(v) => v.parse::<usize>().ok().filter(|&c| c > 0),
+    }
+}
+
+/// Opt-in precomputed distance table over any inner metric.
+///
+/// For ground sets small enough that the n×n table fits the budget, the
+/// O(n·m·|candidates|) greedy scans collapse to table lookups after one
+/// O(n²) blocked precompute pass. Every table entry comes from the inner
+/// metric's own `sqdist_block`, so selections through the cache are
+/// bitwise-identical to selections against the inner metric.
+pub struct GramMetric {
+    n: usize,
+    d: Vec<f32>,
+}
+
+impl GramMetric {
+    /// Precompute the full pairwise table (row-parallel; each table row is
+    /// written by exactly one worker, so the table is thread-count
+    /// independent).
+    pub fn new<M: SqDistMetric>(inner: &M) -> GramMetric {
+        let n = inner.len();
+        if n == 0 {
+            return GramMetric { n, d: Vec::new() };
+        }
+        let mut d = vec![0.0f32; n * n];
+        Pool::gated(n * n, PAR_MIN_WORK).for_rows(&mut d, n, 1, |j, row| {
+            inner.sqdist_block(j, 0..n, row);
+        });
+        GramMetric { n, d }
+    }
+
+    /// Cache `inner` when `CREST_GRAM_CACHE` opts in and `n²` fits the
+    /// configured cap; `None` leaves the caller on the uncached metric.
+    pub fn try_cache<M: SqDistMetric>(inner: &M) -> Option<GramMetric> {
+        if inner.is_cached() {
+            return None;
+        }
+        let cap = gram_cap(std::env::var("CREST_GRAM_CACHE").ok().as_deref())?;
+        let n = inner.len();
+        if n == 0 || n.saturating_mul(n) > cap {
+            return None;
+        }
+        Some(GramMetric::new(inner))
+    }
+}
+
+impl SqDistMetric for GramMetric {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn sqdist(&self, i: usize, j: usize) -> f32 {
+        self.d[i * self.n + j]
+    }
+
+    fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
+        out.copy_from_slice(&self.d[j * self.n + range.start..j * self.n + range.end]);
+    }
+
+    fn is_cached(&self) -> bool {
+        true
+    }
+}
+
+// ------------------------------------------------------------- gain scans
+
 /// Marginal gain of candidate `j` given current min-distances, summed in
-/// fixed chunks (see [`GAIN_CHUNK`]) for thread-count independence.
+/// fixed chunks (see [`GAIN_CHUNK`]) for thread-count independence. Each
+/// chunk's distances come from one `sqdist_block` call.
 fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
     chunked_sum(mind.len(), |range| {
+        let mut buf = [0.0f32; GAIN_CHUNK];
+        let b = &mut buf[..range.len()];
+        ctx.sqdist_block(j, range.clone(), b);
         let mut s = 0.0f32;
-        for i in range {
-            let d = ctx.sqdist(j, i);
-            if d < mind[i] {
-                s += mind[i] - d;
+        for (&d, &mv) in b.iter().zip(&mind[range]) {
+            if d < mv {
+                s += mv - d;
             }
         }
         s
     })
+}
+
+/// Dense marginal-gain scan of every candidate against `mind` — the heap
+/// seeding pass of the lazy greedy, exposed for `benches/perf.rs` and the
+/// kernel equivalence tests.
+pub fn gain_scan<M: SqDistMetric>(ctx: &M, mind: &[f32]) -> Vec<f32> {
+    Pool::gated(ctx.len() * mind.len(), PAR_MIN_WORK).map(ctx.len(), |j| gain(ctx, mind, j))
 }
 
 /// Gain restricted to the still-uncovered elements. Elements whose
@@ -240,11 +376,13 @@ fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize)
 }
 
 /// Lower `mind` against the distances to a freshly selected medoid `j`
-/// (element-wise, hence thread-count independent).
+/// (element-wise over blocked distances, hence thread-count independent).
 fn update_mind<M: SqDistMetric>(ctx: &M, mind: &mut [f32], j: usize) {
     Pool::gated(mind.len(), MIND_PAR_MIN).for_rows(mind, 1, GAIN_CHUNK, |i0, chunk| {
-        for (k, mv) in chunk.iter_mut().enumerate() {
-            let d = ctx.sqdist(j, i0 + k);
+        let mut buf = [0.0f32; GAIN_CHUNK];
+        let b = &mut buf[..chunk.len()];
+        ctx.sqdist_block(j, i0..i0 + chunk.len(), b);
+        for (mv, &d) in chunk.iter_mut().zip(b.iter()) {
             if d < *mv {
                 *mv = d;
             }
@@ -294,16 +432,37 @@ pub fn facility_location_prod(a: &MatF32, g: &MatF32, m: usize) -> Selection {
 
 /// Lazy-greedy facility location over any squared-distance metric.
 /// Returns gamma weights (cluster sizes summing to the ground-set size).
+/// With `CREST_GRAM_CACHE` opted in (and `n²` under the cap) the scans run
+/// against a precomputed [`GramMetric`] table — same selection, fewer
+/// flops.
 pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
+    match GramMetric::try_cache(ctx) {
+        Some(gram) => lazy_greedy(&gram, m),
+        None => lazy_greedy(ctx, m),
+    }
+}
+
+/// The lazy-greedy core behind [`facility_location_metric`].
+fn lazy_greedy<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
     let r = ctx.len();
     assert!(m >= 1 && m <= r, "facility_location: m={m} out of range for r={r}");
     // Round 0 has no finite gains (empty assignment): the 1-medoid is the
-    // candidate minimizing total distance. Scanned candidate-parallel and
-    // folded in index order (strict `<` keeps the serial tie-break).
+    // candidate minimizing total distance. Scanned candidate-parallel over
+    // blocked distances (elements accumulate in ascending order within
+    // each candidate) and folded in index order (strict `<` keeps the
+    // serial tie-break).
     let totals: Vec<f32> = Pool::gated(r * r, PAR_MIN_WORK).map(r, |j| {
+        let mut buf = [0.0f32; GAIN_CHUNK];
         let mut tot = 0.0f32;
-        for i in 0..r {
-            tot += ctx.sqdist(j, i);
+        let mut c = 0;
+        while c < r {
+            let e = (c + GAIN_CHUNK).min(r);
+            let b = &mut buf[..e - c];
+            ctx.sqdist_block(j, c..e, b);
+            for &v in b.iter() {
+                tot += v;
+            }
+            c = e;
         }
         tot
     });
@@ -314,7 +473,10 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
         }
     }
     let j0 = first.0;
-    let mut mind: Vec<f32> = (0..r).map(|i| ctx.sqdist(j0, i)).collect();
+    let mut mind = vec![0.0f32; r];
+    Pool::gated(r, MIND_PAR_MIN).for_rows(&mut mind, 1, GAIN_CHUNK, |i0, chunk| {
+        ctx.sqdist_block(j0, i0..i0 + chunk.len(), chunk);
+    });
     let mut idx = Vec::with_capacity(m);
     idx.push(j0);
     // covered-element skip threshold: a small fraction of the mean initial
@@ -398,6 +560,18 @@ fn best_untaken<M: SqDistMetric>(
 /// gain evaluations — the standard way CRAIG scales to full-dataset
 /// selection (paper challenge C3).
 pub fn facility_location_stochastic<M: SqDistMetric>(
+    ctx: &M,
+    m: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Selection {
+    match GramMetric::try_cache(ctx) {
+        Some(gram) => stochastic_greedy(&gram, m, rng),
+        None => stochastic_greedy(ctx, m, rng),
+    }
+}
+
+/// The sampled-greedy core behind [`facility_location_stochastic`].
+fn stochastic_greedy<M: SqDistMetric>(
     ctx: &M,
     m: usize,
     rng: &mut crate::util::rng::Rng,
@@ -728,6 +902,106 @@ mod tests {
             let s = run(t);
             assert_eq!(base.idx, s.idx, "threads={t}");
             assert_eq!(base.gamma, s.gamma, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn blocked_sqdist_matches_scalar_for_builtin_metrics() {
+        // odd ground-set sizes and odd dims exercise every remainder path
+        // of the dot panels; values must be bitwise-identical
+        for (r, c) in [(1usize, 1usize), (3, 5), (7, 4), (33, 9), (130, 17)] {
+            let g = random_embed(r, c, 31);
+            let a = random_embed(r, c + 3, 32);
+            let euclid = EuclidMetric::new(&g);
+            let prod = ProdMetric::new(&a, &g);
+            let mut blk = vec![0.0f32; r];
+            for j in [0, r / 2, r - 1] {
+                euclid.sqdist_block(j, 0..r, &mut blk);
+                for i in 0..r {
+                    assert_eq!(
+                        blk[i].to_bits(),
+                        euclid.sqdist(j, i).to_bits(),
+                        "euclid r={r} c={c} j={j} i={i}"
+                    );
+                }
+                prod.sqdist_block(j, 0..r, &mut blk);
+                for i in 0..r {
+                    assert_eq!(
+                        blk[i].to_bits(),
+                        prod.sqdist(j, i).to_bits(),
+                        "prod r={r} c={c} j={j} i={i}"
+                    );
+                }
+            }
+            // empty and offset sub-ranges
+            euclid.sqdist_block(0, 0..0, &mut []);
+            let lo = r / 3;
+            let hi = (lo + 5).min(r);
+            let mut part = vec![0.0f32; hi - lo];
+            euclid.sqdist_block(r - 1, lo..hi, &mut part);
+            for (k, &v) in part.iter().enumerate() {
+                assert_eq!(v.to_bits(), euclid.sqdist(r - 1, lo + k).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn gram_metric_is_bitwise_transparent() {
+        let g = random_embed(97, 6, 33);
+        let a = random_embed(97, 13, 34);
+        let inner = ProdMetric::new(&a, &g);
+        let gram = GramMetric::new(&inner);
+        assert_eq!(gram.len(), 97);
+        assert!(gram.is_cached());
+        for j in [0usize, 13, 96] {
+            for i in 0..97 {
+                assert_eq!(gram.sqdist(j, i).to_bits(), inner.sqdist(j, i).to_bits());
+            }
+        }
+        // selections through the cache match the uncached metric exactly
+        let direct = facility_location_metric(&inner, 12);
+        let cached = facility_location_metric(&gram, 12);
+        assert_eq!(direct.idx, cached.idx);
+        assert_eq!(direct.gamma, cached.gamma);
+        // and the stochastic selector agrees too (same RNG stream)
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let s1 = facility_location_stochastic(&inner, 20, &mut r1);
+        let s2 = facility_location_stochastic(&gram, 20, &mut r2);
+        assert_eq!(s1.idx, s2.idx);
+        assert_eq!(s1.gamma, s2.gamma);
+    }
+
+    #[test]
+    fn gram_metric_handles_empty_ground_set() {
+        let g = MatF32::zeros(0, 4);
+        let inner = EuclidMetric::new(&g);
+        let gram = GramMetric::new(&inner);
+        assert_eq!(gram.len(), 0);
+        assert!(gram.is_empty());
+    }
+
+    #[test]
+    fn gram_cap_parses_opt_in_values() {
+        assert_eq!(gram_cap(None), None);
+        assert_eq!(gram_cap(Some("")), None);
+        assert_eq!(gram_cap(Some("0")), None);
+        assert_eq!(gram_cap(Some("false")), None);
+        assert_eq!(gram_cap(Some("1")), Some(DEFAULT_GRAM_CAP));
+        assert_eq!(gram_cap(Some("true")), Some(DEFAULT_GRAM_CAP));
+        assert_eq!(gram_cap(Some("4096")), Some(4096));
+        assert_eq!(gram_cap(Some("nope")), None);
+    }
+
+    #[test]
+    fn gain_scan_matches_per_candidate_gains() {
+        let g = random_embed(120, 5, 35);
+        let ctx = EuclidMetric::new(&g);
+        let mind: Vec<f32> = (0..120).map(|i| ctx.sqdist(0, i)).collect();
+        let scan = gain_scan(&ctx, &mind);
+        assert_eq!(scan.len(), 120);
+        for (j, &s) in scan.iter().enumerate() {
+            assert_eq!(s.to_bits(), gain(&ctx, &mind, j).to_bits(), "candidate {j}");
         }
     }
 

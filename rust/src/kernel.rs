@@ -1,0 +1,727 @@
+//! Block-at-a-time CPU kernels — the shared compute substrate under both
+//! hot paths (the native backend's matmuls and the facility-location
+//! distance scans).
+//!
+//! Two kernel families live here:
+//!
+//! * **Register-tiled matmul microkernels** ([`add_matmul`],
+//!   [`add_matmul_nt`], [`add_matmul_nt_masked`], [`accum_wgrad`]): fixed
+//!   MR×NR output tiles accumulate in registers across the whole reduction
+//!   dimension, so each output element is loaded/stored once instead of
+//!   once per reduction step. Remainder rows/columns fall back to narrower
+//!   tiles with identical per-element accumulation order.
+//! * **Dot-product panels** ([`dot4`], [`dot4_rows`]): one probe row
+//!   against a block of matrix rows, sharing the probe loads across the
+//!   block — the building block of the blocked squared-distance kernels in
+//!   `coreset::facility`.
+//!
+//! **Determinism contract.** Every tile and chunk boundary is a function
+//! of the problem shape only — never the worker count — and every output
+//! element accumulates its terms in a fixed order (ascending reduction
+//! index; [`dot4`]'s four-lane order for the dot-product family). The
+//! tiled kernels are therefore bitwise-identical to the scalar references
+//! in [`reference`] at every thread count, which the `kernels`
+//! integration-test suite asserts across odd shapes and remainder tiles.
+//!
+//! [`Workspace`] and [`WorkspacePool`] round out the layer: reusable
+//! scratch-buffer arenas that let the native backend run its
+//! forward/backward/HVP pipelines without per-call `vec!` allocations.
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+use crate::tensor::MatF32;
+use crate::util::pool::Pool;
+
+/// Minimum MAC count before a matmul kernel fans out to the pool (below
+/// this the scoped-thread spawn cost exceeds the parallel win).
+pub const PAR_MIN_OPS: usize = 1 << 19;
+/// Batch rows per parallel work unit in the row-partitioned kernels.
+pub const ROW_GRAIN: usize = 16;
+/// Input features per work unit in the weight-gradient kernel.
+pub const K_GRAIN: usize = 32;
+/// Minimum element count before the element-wise kernels (bias gradient,
+/// ReLU mask) fan out — they are memory-bound, so the bar is higher.
+pub const ELEM_PAR_MIN: usize = 1 << 20;
+/// Elements per work unit in the element-wise kernels.
+pub const ELEM_GRAIN: usize = 1 << 12;
+
+/// Output rows per register tile (batch dimension).
+const MR: usize = 4;
+/// Output columns per register tile (feature dimension).
+const NR: usize = 16;
+
+// ----------------------------------------------------------- dot panels
+
+/// 4-lane unrolled dot product (auto-vectorizes well in release builds).
+/// Lane `l` accumulates elements `k ≡ l (mod 4)`; the lanes are summed
+/// left-to-right and the tail elements are added in ascending order.
+#[inline]
+pub fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Four independent [`dot4`]s of `a` against `b0..b3`, sharing the `a`
+/// loads across the panel. Each result is bitwise-identical to calling
+/// [`dot4`] on that pair alone (same lanes, same fold, same tail order).
+#[inline]
+fn dot4_1x4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    debug_assert!(b0.len() == n && b1.len() == n && b2.len() == n && b3.len() == n);
+    let c = n & !3;
+    let mut acc = [[0.0f32; 4]; 4];
+    let mut k = 0;
+    while k < c {
+        for l in 0..4 {
+            let av = a[k + l];
+            acc[0][l] += av * b0[k + l];
+            acc[1][l] += av * b1[k + l];
+            acc[2][l] += av * b2[k + l];
+            acc[3][l] += av * b3[k + l];
+        }
+        k += 4;
+    }
+    let mut out = [0.0f32; 4];
+    for (o, lanes) in out.iter_mut().zip(&acc) {
+        *o = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    }
+    for k in c..n {
+        let av = a[k];
+        out[0] += av * b0[k];
+        out[1] += av * b1[k];
+        out[2] += av * b2[k];
+        out[3] += av * b3[k];
+    }
+    out
+}
+
+/// Dot products of probe row `a` against rows `range` of `m`, written to
+/// `out` (`out.len() == range.len()`). Four matrix rows are processed per
+/// panel step so the probe row is loaded once per four pairs; every value
+/// is bitwise-identical to `dot4(a, m.row(i))`.
+pub fn dot4_rows(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), range.len());
+    debug_assert_eq!(a.len(), m.cols);
+    let mut i = range.start;
+    let mut o = 0;
+    while i + 4 <= range.end {
+        let r = dot4_1x4(a, m.row(i), m.row(i + 1), m.row(i + 2), m.row(i + 3));
+        out[o..o + 4].copy_from_slice(&r);
+        i += 4;
+        o += 4;
+    }
+    while i < range.end {
+        out[o] = dot4(a, m.row(i));
+        i += 1;
+        o += 1;
+    }
+}
+
+// ------------------------------------------------- tiled matmul kernels
+
+/// `out += x·W` (x: rows×d_in, W: d_in×d_out row-major). Register-tiled
+/// MR×NR microkernel, row-parallel across pool workers. Each output
+/// element accumulates `x[i][k]·W[k][j]` over ascending `k` into one
+/// register lane and is added to `out` exactly once, so the result is
+/// bitwise-identical to [`reference::add_matmul`] at every thread count.
+pub fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
+    debug_assert_eq!(out.rows, x.rows);
+    debug_assert_eq!(out.cols, d_out);
+    debug_assert_eq!(w.len(), x.cols * d_out);
+    if d_out == 0 || x.rows == 0 {
+        return;
+    }
+    let pool = Pool::gated(x.rows * x.cols * d_out, PAR_MIN_OPS);
+    pool.for_rows(&mut out.data, d_out, ROW_GRAIN, |row0, rows_out| {
+        matmul_panel(rows_out, row0, x, w, d_out);
+    });
+}
+
+/// One row-panel of [`add_matmul`]: `rows_out` holds the panel's output
+/// rows contiguously, starting at batch row `row0`.
+fn matmul_panel(rows_out: &mut [f32], row0: usize, x: &MatF32, w: &[f32], d_out: usize) {
+    let rows = rows_out.len() / d_out;
+    let d_in = x.cols;
+    let mut i = 0;
+    while i + MR <= rows {
+        let x0 = x.row(row0 + i);
+        let x1 = x.row(row0 + i + 1);
+        let x2 = x.row(row0 + i + 2);
+        let x3 = x.row(row0 + i + 3);
+        let mut j = 0;
+        while j + NR <= d_out {
+            // full MR×NR register tile: NR-wide lanes vectorize, the W row
+            // segment is loaded once per k and reused for all MR rows
+            let mut acc = [[0.0f32; NR]; MR];
+            for k in 0..d_in {
+                let wk = &w[k * d_out + j..k * d_out + j + NR];
+                let xv = [x0[k], x1[k], x2[k], x3[k]];
+                for (ar, &xr) in acc.iter_mut().zip(&xv) {
+                    for (a, &wv) in ar.iter_mut().zip(wk) {
+                        *a += xr * wv;
+                    }
+                }
+            }
+            for (r, ar) in acc.iter().enumerate() {
+                let o = &mut rows_out[(i + r) * d_out + j..(i + r) * d_out + j + NR];
+                for (ov, &av) in o.iter_mut().zip(ar) {
+                    *ov += av;
+                }
+            }
+            j += NR;
+        }
+        // column remainder: MR rows, one column at a time
+        while j < d_out {
+            let mut acc = [0.0f32; MR];
+            for k in 0..d_in {
+                let wv = w[k * d_out + j];
+                acc[0] += x0[k] * wv;
+                acc[1] += x1[k] * wv;
+                acc[2] += x2[k] * wv;
+                acc[3] += x3[k] * wv;
+            }
+            for (r, &av) in acc.iter().enumerate() {
+                rows_out[(i + r) * d_out + j] += av;
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    // row remainder: one row at a time, still NR-wide where possible
+    while i < rows {
+        let xi = x.row(row0 + i);
+        let orow = &mut rows_out[i * d_out..(i + 1) * d_out];
+        let mut j = 0;
+        while j + NR <= d_out {
+            let mut acc = [0.0f32; NR];
+            for (k, &xv) in xi.iter().enumerate() {
+                let wk = &w[k * d_out + j..k * d_out + j + NR];
+                for (a, &wv) in acc.iter_mut().zip(wk) {
+                    *a += xv * wv;
+                }
+            }
+            for (o, &av) in orow[j..j + NR].iter_mut().zip(&acc) {
+                *o += av;
+            }
+            j += NR;
+        }
+        while j < d_out {
+            let mut acc = 0.0f32;
+            for (k, &xv) in xi.iter().enumerate() {
+                acc += xv * w[k * d_out + j];
+            }
+            orow[j] += acc;
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+/// `out += d·Wᵀ` (d: rows×d_out, W: d_in×d_out row-major, out: rows×d_in).
+/// Each output element is `dot4(d.row(i), W.row(j))` added once, computed
+/// through 2×2 panels that share the row loads — bitwise-identical to
+/// [`reference::add_matmul_nt`] at every thread count.
+pub fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
+    debug_assert_eq!(out.rows, d.rows);
+    debug_assert_eq!(d.cols, d_out);
+    debug_assert_eq!(w.len(), out.cols * d_out);
+    if out.cols == 0 || out.rows == 0 {
+        return;
+    }
+    let d_in = out.cols;
+    let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
+    pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
+        nt_panel(rows_out, row0, d_in, d, w, d_out, None);
+    });
+}
+
+/// Fused backward matmul + ReLU mask: accumulate `(d·Wᵀ)[i][j]` into
+/// `out[i][j]` only where `act[i][j] > 0`, skipping the dot product for
+/// masked elements entirely. With a fresh zeroed `out` this equals
+/// `relu_mask(matmul_nt(d, W), act)` without the extra full-matrix pass;
+/// repeated calls accumulate under the same mask (the HVP tangent path).
+pub fn add_matmul_nt_masked(
+    out: &mut MatF32,
+    d: &MatF32,
+    w: &[f32],
+    d_out: usize,
+    act: &MatF32,
+) {
+    debug_assert_eq!(out.rows, d.rows);
+    debug_assert_eq!(d.cols, d_out);
+    debug_assert_eq!(w.len(), out.cols * d_out);
+    debug_assert_eq!(act.rows, out.rows);
+    debug_assert_eq!(act.cols, out.cols);
+    if out.cols == 0 || out.rows == 0 {
+        return;
+    }
+    let d_in = out.cols;
+    let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
+    pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
+        nt_panel(rows_out, row0, d_in, d, w, d_out, Some(act));
+    });
+}
+
+/// Four independent [`dot4`]s forming a 2×2 panel (`a0·b0, a0·b1, a1·b0,
+/// a1·b1`), sharing the row loads. Each result is bitwise-identical to
+/// [`dot4`] on that pair alone.
+#[inline]
+fn dot4_2x2(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32]) -> [f32; 4] {
+    let n = a0.len();
+    debug_assert!(a1.len() == n && b0.len() == n && b1.len() == n);
+    let c = n & !3;
+    let mut acc = [[0.0f32; 4]; 4];
+    let mut k = 0;
+    while k < c {
+        for l in 0..4 {
+            let x0 = a0[k + l];
+            let x1 = a1[k + l];
+            let y0 = b0[k + l];
+            let y1 = b1[k + l];
+            acc[0][l] += x0 * y0;
+            acc[1][l] += x0 * y1;
+            acc[2][l] += x1 * y0;
+            acc[3][l] += x1 * y1;
+        }
+        k += 4;
+    }
+    let mut out = [0.0f32; 4];
+    for (o, lanes) in out.iter_mut().zip(&acc) {
+        *o = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    }
+    for k in c..n {
+        let x0 = a0[k];
+        let x1 = a1[k];
+        let y0 = b0[k];
+        let y1 = b1[k];
+        out[0] += x0 * y0;
+        out[1] += x0 * y1;
+        out[2] += x1 * y0;
+        out[3] += x1 * y1;
+    }
+    out
+}
+
+/// One row-panel of the Wᵀ product, optionally ReLU-masked. 2×2 tiles of
+/// independent [`dot4`]s share the `d`-row and `W`-row loads; masked
+/// elements are never computed or written.
+#[allow(clippy::too_many_arguments)]
+fn nt_panel(
+    rows_out: &mut [f32],
+    row0: usize,
+    d_in: usize,
+    d: &MatF32,
+    w: &[f32],
+    d_out: usize,
+    act: Option<&MatF32>,
+) {
+    let rows = rows_out.len() / d_in;
+    let mut i = 0;
+    while i + 2 <= rows {
+        let d0 = d.row(row0 + i);
+        let d1 = d.row(row0 + i + 1);
+        let mut j = 0;
+        while j + 2 <= d_in {
+            let keep = match act {
+                Some(a) => [
+                    a.row(row0 + i)[j] > 0.0,
+                    a.row(row0 + i)[j + 1] > 0.0,
+                    a.row(row0 + i + 1)[j] > 0.0,
+                    a.row(row0 + i + 1)[j + 1] > 0.0,
+                ],
+                None => [true; 4],
+            };
+            if keep.iter().any(|&k| k) {
+                let w0 = &w[j * d_out..(j + 1) * d_out];
+                let w1 = &w[(j + 1) * d_out..(j + 2) * d_out];
+                let s = dot4_2x2(d0, d1, w0, w1);
+                if keep[0] {
+                    rows_out[i * d_in + j] += s[0];
+                }
+                if keep[1] {
+                    rows_out[i * d_in + j + 1] += s[1];
+                }
+                if keep[2] {
+                    rows_out[(i + 1) * d_in + j] += s[2];
+                }
+                if keep[3] {
+                    rows_out[(i + 1) * d_in + j + 1] += s[3];
+                }
+            }
+            j += 2;
+        }
+        while j < d_in {
+            let wj = &w[j * d_out..(j + 1) * d_out];
+            for (r, dr) in [d0, d1].into_iter().enumerate() {
+                let keep = match act {
+                    Some(a) => a.row(row0 + i + r)[j] > 0.0,
+                    None => true,
+                };
+                if keep {
+                    rows_out[(i + r) * d_in + j] += dot4(dr, wj);
+                }
+            }
+            j += 1;
+        }
+        i += 2;
+    }
+    while i < rows {
+        let di = d.row(row0 + i);
+        for j in 0..d_in {
+            let keep = match act {
+                Some(a) => a.row(row0 + i)[j] > 0.0,
+                None => true,
+            };
+            if keep {
+                rows_out[i * d_in + j] += dot4(di, &w[j * d_out..(j + 1) * d_out]);
+            }
+        }
+        i += 1;
+    }
+}
+
+// ------------------------------------------------------- weight gradient
+
+/// `gw += inputᵀ·d` accumulated into the flat weight-gradient slice
+/// (`gw[k][j] += Σ_i input[i][k]·d[i][j]`, batch order ascending).
+/// Parallel over input features: each worker owns a disjoint k-range of
+/// `gw` rows. Rows of `input` equal to zero for a feature are skipped
+/// (ReLU sparsity), exactly as in [`reference::accum_wgrad`].
+pub fn accum_wgrad(gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
+    debug_assert_eq!(input.rows, d.rows);
+    debug_assert_eq!(gw.len(), input.cols * d_out);
+    if d_out == 0 || gw.is_empty() {
+        return;
+    }
+    let pool = Pool::gated(input.rows * input.cols * d_out, PAR_MIN_OPS);
+    pool.for_rows(gw, d_out, K_GRAIN, |k0, gw_rows| {
+        wgrad_panel(gw_rows, k0, input, d, d_out);
+    });
+}
+
+/// One k-panel of [`accum_wgrad`]: `gw_rows` holds the gradient rows for
+/// input features `k0..k0 + gw_rows.len()/d_out`.
+fn wgrad_panel(gw_rows: &mut [f32], k0: usize, input: &MatF32, d: &MatF32, d_out: usize) {
+    let kn = gw_rows.len() / d_out;
+    let rows = input.rows;
+    let mut kk = 0;
+    while kk + MR <= kn {
+        let mut j = 0;
+        while j + NR <= d_out {
+            let mut acc = [[0.0f32; NR]; MR];
+            for i in 0..rows {
+                let hi = input.row(i);
+                let di = &d.row(i)[j..j + NR];
+                let hv = [hi[k0 + kk], hi[k0 + kk + 1], hi[k0 + kk + 2], hi[k0 + kk + 3]];
+                for (ar, &h) in acc.iter_mut().zip(&hv) {
+                    if h == 0.0 {
+                        continue;
+                    }
+                    for (a, &dv) in ar.iter_mut().zip(di) {
+                        *a += h * dv;
+                    }
+                }
+            }
+            for (r, ar) in acc.iter().enumerate() {
+                let g = &mut gw_rows[(kk + r) * d_out + j..(kk + r) * d_out + j + NR];
+                for (gv, &av) in g.iter_mut().zip(ar) {
+                    *gv += av;
+                }
+            }
+            j += NR;
+        }
+        while j < d_out {
+            let mut acc = [0.0f32; MR];
+            for i in 0..rows {
+                let hi = input.row(i);
+                let dv = d.row(i)[j];
+                for (r, a) in acc.iter_mut().enumerate() {
+                    let h = hi[k0 + kk + r];
+                    if h != 0.0 {
+                        *a += h * dv;
+                    }
+                }
+            }
+            for (r, &av) in acc.iter().enumerate() {
+                gw_rows[(kk + r) * d_out + j] += av;
+            }
+            j += 1;
+        }
+        kk += MR;
+    }
+    // feature remainder: one k at a time
+    while kk < kn {
+        let mut j = 0;
+        while j + NR <= d_out {
+            let mut acc = [0.0f32; NR];
+            for i in 0..rows {
+                let h = input.row(i)[k0 + kk];
+                if h == 0.0 {
+                    continue;
+                }
+                let di = &d.row(i)[j..j + NR];
+                for (a, &dv) in acc.iter_mut().zip(di) {
+                    *a += h * dv;
+                }
+            }
+            for (g, &av) in gw_rows[kk * d_out + j..kk * d_out + j + NR].iter_mut().zip(&acc)
+            {
+                *g += av;
+            }
+            j += NR;
+        }
+        while j < d_out {
+            let mut acc = 0.0f32;
+            for i in 0..rows {
+                let h = input.row(i)[k0 + kk];
+                if h != 0.0 {
+                    acc += h * d.row(i)[j];
+                }
+            }
+            gw_rows[kk * d_out + j] += acc;
+            j += 1;
+        }
+        kk += 1;
+    }
+}
+
+// ----------------------------------------------------- element-wise ops
+
+/// `gb += Σ_rows d` (column sums). Column-partitioned across workers;
+/// every column accumulates its rows in ascending order, so the result is
+/// thread-count independent.
+pub fn accum_bgrad(gb: &mut [f32], d: &MatF32) {
+    debug_assert_eq!(gb.len(), d.cols);
+    if gb.is_empty() {
+        return;
+    }
+    let pool = Pool::gated(d.rows * d.cols, ELEM_PAR_MIN);
+    pool.for_rows(gb, 1, ELEM_GRAIN.min(gb.len()).max(1), |j0, gbc| {
+        for i in 0..d.rows {
+            let di = &d.row(i)[j0..j0 + gbc.len()];
+            for (g, &dv) in gbc.iter_mut().zip(di) {
+                *g += dv;
+            }
+        }
+    });
+}
+
+/// Zero entries of `m` wherever the matching post-ReLU activation is zero
+/// (element-wise, chunk-partitioned — thread-count independent).
+pub fn relu_mask(m: &mut MatF32, act: &MatF32) {
+    debug_assert_eq!(m.data.len(), act.data.len());
+    if m.data.is_empty() {
+        return;
+    }
+    let pool = Pool::gated(m.data.len(), ELEM_PAR_MIN);
+    let act_data: &[f32] = &act.data;
+    pool.for_rows(&mut m.data, 1, ELEM_GRAIN, |o0, chunk| {
+        for (v, &a) in chunk.iter_mut().zip(&act_data[o0..o0 + chunk.len()]) {
+            if a <= 0.0 {
+                *v = 0.0;
+            }
+        }
+    });
+}
+
+// ------------------------------------------------------------ workspace
+
+/// Reusable scratch-buffer arena for one backend call chain.
+///
+/// Buffers are recycled LIFO: the capacities in the free list converge to
+/// the call sequence's working set after one warmup call, after which the
+/// forward/backward/HVP pipelines run allocation-free. Buffers handed out
+/// for values that escape the call (e.g. `grad_embed`'s embeddings) simply
+/// never come back — the free list shrinks and is refilled by the next
+/// allocation, so reuse degrades gracefully instead of leaking.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    free: Vec<Vec<f32>>,
+}
+
+impl Workspace {
+    /// Fresh workspace with an empty free list.
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// A zeroed buffer of `len` elements, reusing pooled capacity.
+    pub fn buf(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// A buffer initialized as a copy of `src`, reusing pooled capacity.
+    pub fn buf_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer.
+    pub fn mat(&mut self, rows: usize, cols: usize) -> MatF32 {
+        MatF32 { rows, cols, data: self.buf(rows * cols) }
+    }
+
+    /// A matrix copy of `src` backed by a pooled buffer.
+    pub fn mat_copy(&mut self, src: &MatF32) -> MatF32 {
+        MatF32 { rows: src.rows, cols: src.cols, data: self.buf_copy(&src.data) }
+    }
+
+    /// A `rows × row.len()` matrix with every row initialized to `row`
+    /// (the broadcast-bias pattern of the affine kernels).
+    pub fn mat_rows(&mut self, rows: usize, row: &[f32]) -> MatF32 {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.reserve(rows * row.len());
+        for _ in 0..rows {
+            v.extend_from_slice(row);
+        }
+        MatF32 { rows, cols: row.len(), data: v }
+    }
+
+    /// Return a buffer to the free list for reuse.
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+
+    /// Return a matrix's backing buffer to the free list.
+    pub fn recycle_mat(&mut self, m: MatF32) {
+        self.recycle(m.into_data());
+    }
+
+    /// Number of buffers currently pooled (for tests).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Shared pool of [`Workspace`]s: each concurrent backend call borrows one
+/// for its duration, so a backend behind `&self` reuses buffers across
+/// steps without serializing concurrent callers.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    stack: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    /// Empty pool.
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    /// Borrow a workspace for the duration of `f`. The workspace (with
+    /// whatever buffers `f` recycled into it) returns to the pool when `f`
+    /// completes; on panic it is simply dropped.
+    pub fn with<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let mut ws = self
+            .stack
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .pop()
+            .unwrap_or_default();
+        let out = f(&mut ws);
+        self.stack.lock().unwrap_or_else(|e| e.into_inner()).push(ws);
+        out
+    }
+}
+
+// ------------------------------------------------------------ references
+
+/// Scalar reference kernels: the semantics the tiled kernels must match
+/// bitwise. Used by the `kernels` equivalence tests and kept deliberately
+/// naive — one accumulator per output element, reduction index ascending.
+pub mod reference {
+    use super::dot4;
+    use crate::tensor::MatF32;
+
+    /// Scalar `out += x·W`: per element, accumulate over ascending `k`
+    /// into one register, then add to `out` once.
+    pub fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
+        for i in 0..x.rows {
+            let xi = x.row(i);
+            for j in 0..d_out {
+                let mut acc = 0.0f32;
+                for (k, &xv) in xi.iter().enumerate() {
+                    acc += xv * w[k * d_out + j];
+                }
+                out.data[i * d_out + j] += acc;
+            }
+        }
+    }
+
+    /// Scalar `out += d·Wᵀ`: per element, one [`dot4`] added to `out`.
+    pub fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
+        let d_in = out.cols;
+        for i in 0..d.rows {
+            let di = d.row(i);
+            for j in 0..d_in {
+                out.data[i * d_in + j] += dot4(di, &w[j * d_out..(j + 1) * d_out]);
+            }
+        }
+    }
+
+    /// Scalar masked `out += d·Wᵀ`: elements with `act ≤ 0` are skipped.
+    pub fn add_matmul_nt_masked(
+        out: &mut MatF32,
+        d: &MatF32,
+        w: &[f32],
+        d_out: usize,
+        act: &MatF32,
+    ) {
+        let d_in = out.cols;
+        for i in 0..d.rows {
+            let di = d.row(i);
+            for j in 0..d_in {
+                if act.data[i * d_in + j] > 0.0 {
+                    out.data[i * d_in + j] += dot4(di, &w[j * d_out..(j + 1) * d_out]);
+                }
+            }
+        }
+    }
+
+    /// Scalar `gw += inputᵀ·d` with the ReLU-sparsity skip (`input == 0`
+    /// contributes nothing), batch index ascending per element.
+    pub fn accum_wgrad(gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
+        let d_in = input.cols;
+        for k in 0..d_in {
+            for j in 0..d_out {
+                let mut acc = 0.0f32;
+                for i in 0..input.rows {
+                    let h = input.row(i)[k];
+                    if h != 0.0 {
+                        acc += h * d.row(i)[j];
+                    }
+                }
+                gw[k * d_out + j] += acc;
+            }
+        }
+    }
+
+    /// Scalar `gb += Σ_rows d`, row index ascending per column.
+    pub fn accum_bgrad(gb: &mut [f32], d: &MatF32) {
+        for j in 0..d.cols {
+            for i in 0..d.rows {
+                gb[j] += d.row(i)[j];
+            }
+        }
+    }
+}

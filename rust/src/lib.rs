@@ -37,6 +37,7 @@ pub mod coordinator;
 pub mod coreset;
 pub mod data;
 pub mod exclusion;
+pub mod kernel;
 pub mod metrics;
 pub mod model;
 pub mod opt;

@@ -5,6 +5,7 @@
 //!   compare  run several methods on one variant (Table-1-style rows)
 //!   sweep    run a resumable (variant × method × seed × budget) grid
 //!            with per-cell checkpoints and mean±std aggregate tables
+//!   bench-diff  gate fresh bench records against a committed baseline
 //!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
 //!
@@ -77,6 +78,12 @@ const COMMANDS: &[Command] = &[
         about: "run a resumable (variant × method × seed × budget) grid",
         flags: sweep_flags,
         run: cmd_sweep,
+    },
+    Command {
+        name: "bench-diff",
+        about: "diff fresh bench records against a committed baseline",
+        flags: bench_diff_flags,
+        run: cmd_bench_diff,
     },
     Command {
         name: "inspect",
@@ -314,6 +321,32 @@ fn cmd_sweep(ctx: &Ctx) -> Result<()> {
         let records: Vec<Json> = outcome.rows.iter().map(|r| r.to_json()).collect();
         let n = bench_util::append_json_records(Path::new(out), records)?;
         println!("appended {n} aggregate rows to {out}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- bench-diff
+
+fn bench_diff_flags(c: Cli) -> Cli {
+    c.opt("baseline", "BENCH_perf.json", "committed baseline trajectory (JSON array)")
+        .opt("fresh", "fresh.json", "freshly measured records to gate")
+        .opt("factor", "2.0", "allowed p50 regression factor (fresh ≤ factor × baseline)")
+}
+
+fn cmd_bench_diff(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
+    let factor = p.f32("factor")? as f64;
+    let out = bench_util::diff_baseline(
+        Path::new(&p.str("baseline")),
+        Path::new(&p.str("fresh")),
+        factor,
+    )?;
+    print!("{}", out.report);
+    if !out.regressions.is_empty() {
+        bail!(
+            "{} bench regression(s) beyond {factor}x the committed baseline",
+            out.regressions.len()
+        );
     }
     Ok(())
 }

@@ -21,6 +21,7 @@
 use anyhow::{ensure, Result};
 
 use crate::coreset::facility;
+use crate::kernel::{self, Workspace, WorkspacePool, PAR_MIN_OPS, ROW_GRAIN};
 use crate::model::param_offsets;
 use crate::runtime::manifest::VariantManifest;
 use crate::runtime::{Backend, ProbeOut, StepOut};
@@ -29,19 +30,16 @@ use crate::util::pool::Pool;
 
 // ---------------------------------------------------------------- threading
 //
-// Every kernel below is either row-partitioned (matmuls, softmax) or
-// partitioned over input features (weight-gradient accumulation), so each
-// output element is produced by exactly one worker with the same
-// per-element accumulation order as the serial loop — results are
-// bitwise-identical at every thread count, including 1.
+// The dense kernels live in `crate::kernel`: register-tiled microkernels
+// that are row-partitioned (matmuls), feature-partitioned (weight
+// gradients) or chunk-partitioned (bias gradients, masks) with boundaries
+// that depend only on problem shapes. Each output element is produced by
+// exactly one worker with a fixed per-element accumulation order, so
+// every backend result is bitwise-identical at every thread count,
+// including 1. Scratch buffers come from a shared [`WorkspacePool`]: the
+// forward/backward/HVP pipelines reuse their intermediate matrices across
+// steps instead of allocating per call.
 
-/// Minimum MAC count before a kernel fans out to the pool (below this the
-/// scoped-thread spawn cost exceeds the parallel win).
-const PAR_MIN_OPS: usize = 1 << 19;
-/// Batch rows per parallel work unit.
-const ROW_GRAIN: usize = 16;
-/// Input features per work unit in the weight-gradient kernel.
-const K_GRAIN: usize = 32;
 /// Minimum flat-parameter count before the SGD update parallelizes.
 const SGD_PAR_MIN: usize = 1 << 17;
 /// Flat parameter elements per work unit in the SGD update.
@@ -72,6 +70,9 @@ impl Layer {
 pub struct NativeBackend {
     man: VariantManifest,
     layers: Vec<Layer>,
+    /// Scratch-buffer pool shared by all five computations: intermediate
+    /// activations/gradients reuse their allocations across steps.
+    ws: WorkspacePool,
 }
 
 impl NativeBackend {
@@ -81,7 +82,7 @@ impl NativeBackend {
             .into_iter()
             .map(|(w_off, (d_in, d_out), b_off, _)| Layer { w_off, d_in, d_out, b_off })
             .collect();
-        NativeBackend { man, layers }
+        NativeBackend { man, layers, ws: WorkspacePool::new() }
     }
 
     /// The manifest this backend was built from.
@@ -108,16 +109,32 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// Full forward pass: hidden activations, softmax probabilities,
-    /// per-example CE losses, 0/1 correctness.
+    /// Full forward pass through a pool-borrowed workspace — the form the
+    /// unit tests drive directly (the hot paths use [`Self::forward_ws`]
+    /// inside their own workspace scope, so this has no non-test caller).
+    #[cfg(test)]
     fn forward(&self, params: &[f32], x: &MatF32, y: &[i32]) -> Result<Forward> {
+        self.ws.with(|ws| self.forward_ws(ws, params, x, y))
+    }
+
+    /// Full forward pass: hidden activations, softmax probabilities,
+    /// per-example CE losses, 0/1 correctness — all backed by workspace
+    /// buffers (return them with [`Workspace::recycle_mat`] when done).
+    fn forward_ws(
+        &self,
+        ws: &mut Workspace,
+        params: &[f32],
+        x: &MatF32,
+        y: &[i32],
+    ) -> Result<Forward> {
         self.check_inputs(params, x, y)?;
         let n_layers = self.layers.len();
         let mut hidden: Vec<MatF32> = Vec::with_capacity(n_layers.saturating_sub(1));
         for l in 0..n_layers - 1 {
             let layer = &self.layers[l];
             let input = if l == 0 { x } else { &hidden[l - 1] };
-            let mut z = affine(
+            let mut z = affine_ws(
+                ws,
                 input,
                 &params[layer.w_range()],
                 &params[layer.b_range()],
@@ -133,34 +150,46 @@ impl NativeBackend {
         let last = &self.layers[n_layers - 1];
         let input = if n_layers == 1 { x } else { &hidden[n_layers - 2] };
         let logits =
-            affine(input, &params[last.w_range()], &params[last.b_range()], last.d_out);
-        let (probs, ce, correct) = softmax_ce(&logits, y);
+            affine_ws(ws, input, &params[last.w_range()], &params[last.b_range()], last.d_out);
+        let (probs, ce, correct) = softmax_ce(ws, &logits, y);
+        ws.recycle_mat(logits);
         Ok(Forward { hidden, probs, ce, correct })
     }
 
     /// Reverse pass: accumulate the flat parameter gradient from the logit
     /// gradient `dlogits` (which must already carry per-example scaling).
+    /// The ReLU mask is fused into the backward matmul (masked elements
+    /// are never computed), and the returned gradient buffer comes from
+    /// the workspace — recycle it when it does not escape.
     fn backward(
         &self,
+        ws: &mut Workspace,
         params: &[f32],
         x: &MatF32,
         hidden: &[MatF32],
         dlogits: MatF32,
     ) -> Vec<f32> {
-        let mut grad = vec![0.0f32; self.man.p_dim];
+        let mut grad = ws.buf(self.man.p_dim);
         let mut d = dlogits;
         for l in (0..self.layers.len()).rev() {
             let layer = self.layers[l];
             let input = if l == 0 { x } else { &hidden[l - 1] };
-            accum_wgrad(&mut grad[layer.w_range()], input, &d, layer.d_out);
-            accum_bgrad(&mut grad[layer.b_range()], &d);
+            kernel::accum_wgrad(&mut grad[layer.w_range()], input, &d, layer.d_out);
+            kernel::accum_bgrad(&mut grad[layer.b_range()], &d);
             if l > 0 {
-                let mut dprev =
-                    matmul_nt(&d, &params[layer.w_range()], layer.d_in, layer.d_out);
-                relu_mask(&mut dprev, &hidden[l - 1]);
-                d = dprev;
+                let act = &hidden[l - 1];
+                let mut dprev = ws.mat(d.rows, layer.d_in);
+                kernel::add_matmul_nt_masked(
+                    &mut dprev,
+                    &d,
+                    &params[layer.w_range()],
+                    layer.d_out,
+                    act,
+                );
+                ws.recycle_mat(std::mem::replace(&mut d, dprev));
             }
         }
+        ws.recycle_mat(d);
         grad
     }
 }
@@ -201,50 +230,60 @@ impl Backend for NativeBackend {
             momentum.len(),
             self.man.p_dim
         );
-        let fwd = self.forward(params, x, y)?;
-        // dlogits_i = (gamma_i / m) · (p_i − onehot(y_i)) — gradient of
-        // (1/m)·Σ gamma_i·ce_i, the weighted objective of model.py
-        let mut dlogits = fwd.probs.clone();
-        for i in 0..m {
-            let row = dlogits.row_mut(i);
-            row[y[i] as usize] -= 1.0;
-            let s = gamma[i] / m as f32;
-            for v in row.iter_mut() {
-                *v *= s;
-            }
-        }
-        let mut grad = self.backward(params, x, &fwd.hidden, dlogits);
-        for (g, &p) in grad.iter_mut().zip(params) {
-            *g += wd * p;
-        }
-        let mu = self.man.momentum;
-        let p_dim = params.len();
-        let mut mom_new = vec![0.0f32; p_dim];
-        let mut params_new = vec![0.0f32; p_dim];
-        // element-wise, so the parallel split cannot change any result
-        let grad_ref: &[f32] = &grad;
-        Pool::gated(p_dim, SGD_PAR_MIN).for_rows2(
-            &mut mom_new,
-            1,
-            &mut params_new,
-            1,
-            SGD_GRAIN,
-            |off, mom_c, par_c| {
-                for k in 0..mom_c.len() {
-                    let v_new = mu * momentum[off + k] + grad_ref[off + k];
-                    mom_c[k] = v_new;
-                    par_c[k] = params[off + k] - lr * v_new;
+        self.ws.with(|ws| {
+            let fwd = self.forward_ws(ws, params, x, y)?;
+            // dlogits_i = (gamma_i / m) · (p_i − onehot(y_i)) — gradient of
+            // (1/m)·Σ gamma_i·ce_i, the weighted objective of model.py
+            let mut dlogits = ws.mat_copy(&fwd.probs);
+            for i in 0..m {
+                let row = dlogits.row_mut(i);
+                row[y[i] as usize] -= 1.0;
+                let s = gamma[i] / m as f32;
+                for v in row.iter_mut() {
+                    *v *= s;
                 }
-            },
-        );
-        let mean_loss = fwd
-            .ce
-            .iter()
-            .zip(gamma)
-            .map(|(&c, &g)| (c * g) as f64)
-            .sum::<f64>() as f32
-            / m as f32;
-        Ok(StepOut { params: params_new, momentum: mom_new, mean_loss, per_ex_loss: fwd.ce })
+            }
+            let mut grad = self.backward(ws, params, x, &fwd.hidden, dlogits);
+            for (g, &p) in grad.iter_mut().zip(params) {
+                *g += wd * p;
+            }
+            let mu = self.man.momentum;
+            let p_dim = params.len();
+            let mut mom_new = vec![0.0f32; p_dim];
+            let mut params_new = vec![0.0f32; p_dim];
+            // element-wise, so the parallel split cannot change any result
+            let grad_ref: &[f32] = &grad;
+            Pool::gated(p_dim, SGD_PAR_MIN).for_rows2(
+                &mut mom_new,
+                1,
+                &mut params_new,
+                1,
+                SGD_GRAIN,
+                |off, mom_c, par_c| {
+                    for k in 0..mom_c.len() {
+                        let v_new = mu * momentum[off + k] + grad_ref[off + k];
+                        mom_c[k] = v_new;
+                        par_c[k] = params[off + k] - lr * v_new;
+                    }
+                },
+            );
+            let mean_loss = fwd
+                .ce
+                .iter()
+                .zip(gamma)
+                .map(|(&c, &g)| (c * g) as f64)
+                .sum::<f64>() as f32
+                / m as f32;
+            // recycle the scratch (ce escapes as per_ex_loss)
+            ws.recycle(grad);
+            let Forward { hidden, probs, ce, correct } = fwd;
+            for h in hidden {
+                ws.recycle_mat(h);
+            }
+            ws.recycle_mat(probs);
+            ws.recycle(correct);
+            Ok(StepOut { params: params_new, momentum: mom_new, mean_loss, per_ex_loss: ce })
+        })
     }
 
     fn grad_embed(
@@ -253,13 +292,20 @@ impl Backend for NativeBackend {
         x: &MatF32,
         y: &[i32],
     ) -> Result<(MatF32, MatF32, Vec<f32>)> {
-        let mut fwd = self.forward(params, x, y)?;
-        let mut g = fwd.probs;
-        for (i, &label) in y.iter().enumerate() {
-            g.row_mut(i)[label as usize] -= 1.0;
-        }
-        let act = fwd.hidden.pop().expect("at least one hidden layer");
-        Ok((g, act, fwd.ce))
+        self.ws.with(|ws| {
+            let mut fwd = self.forward_ws(ws, params, x, y)?;
+            let mut g = fwd.probs;
+            for (i, &label) in y.iter().enumerate() {
+                g.row_mut(i)[label as usize] -= 1.0;
+            }
+            // g, act and ce escape the workspace; the rest is recycled
+            let act = fwd.hidden.pop().expect("at least one hidden layer");
+            for h in fwd.hidden {
+                ws.recycle_mat(h);
+            }
+            ws.recycle(fwd.correct);
+            Ok((g, act, fwd.ce))
+        })
     }
 
     fn eval_chunk(
@@ -268,10 +314,16 @@ impl Backend for NativeBackend {
         x: &MatF32,
         y: &[i32],
     ) -> Result<(f32, f32, Vec<f32>, Vec<f32>)> {
-        let fwd = self.forward(params, x, y)?;
-        let sum_loss = fwd.ce.iter().map(|&v| v as f64).sum::<f64>() as f32;
-        let n_correct = fwd.correct.iter().map(|&v| v as f64).sum::<f64>() as f32;
-        Ok((sum_loss, n_correct, fwd.ce, fwd.correct))
+        self.ws.with(|ws| {
+            let fwd = self.forward_ws(ws, params, x, y)?;
+            let sum_loss = fwd.ce.iter().map(|&v| v as f64).sum::<f64>() as f32;
+            let n_correct = fwd.correct.iter().map(|&v| v as f64).sum::<f64>() as f32;
+            for h in fwd.hidden {
+                ws.recycle_mat(h);
+            }
+            ws.recycle_mat(fwd.probs);
+            Ok((sum_loss, n_correct, fwd.ce, fwd.correct))
+        })
     }
 
     fn hess_probe(
@@ -290,81 +342,109 @@ impl Backend for NativeBackend {
         let r = x.rows;
         let s = 1.0 / r as f32;
         let n_layers = self.layers.len();
-        let fwd = self.forward(params, x, y)?;
+        self.ws.with(|ws| {
+            let fwd = self.forward_ws(ws, params, x, y)?;
 
-        // --- tangent forward: d/dε of every activation at params + ε·z ---
-        // t(z_l) = t(h_{l−1})·W_l + h_{l−1}·tW_l + tb_l ; t(h_l) = 1[h_l>0]∘t(z_l)
-        let mut thidden: Vec<MatF32> = Vec::with_capacity(n_layers - 1);
-        for l in 0..n_layers - 1 {
-            let layer = &self.layers[l];
-            let input = if l == 0 { x } else { &fwd.hidden[l - 1] };
-            let mut tz =
-                affine(input, &z[layer.w_range()], &z[layer.b_range()], layer.d_out);
-            if l > 0 {
-                add_matmul(&mut tz, &thidden[l - 1], &params[layer.w_range()], layer.d_out);
+            // --- tangent forward: d/dε of every activation at params + ε·z ---
+            // t(z_l) = t(h_{l−1})·W_l + h_{l−1}·tW_l + tb_l ; t(h_l) = 1[h_l>0]∘t(z_l)
+            let mut thidden: Vec<MatF32> = Vec::with_capacity(n_layers - 1);
+            for l in 0..n_layers - 1 {
+                let layer = &self.layers[l];
+                let input = if l == 0 { x } else { &fwd.hidden[l - 1] };
+                let mut tz =
+                    affine_ws(ws, input, &z[layer.w_range()], &z[layer.b_range()], layer.d_out);
+                if l > 0 {
+                    kernel::add_matmul(
+                        &mut tz,
+                        &thidden[l - 1],
+                        &params[layer.w_range()],
+                        layer.d_out,
+                    );
+                }
+                kernel::relu_mask(&mut tz, &fwd.hidden[l]);
+                thidden.push(tz);
             }
-            relu_mask(&mut tz, &fwd.hidden[l]);
-            thidden.push(tz);
-        }
-        let last = &self.layers[n_layers - 1];
-        let input = if n_layers == 1 { x } else { &fwd.hidden[n_layers - 2] };
-        let mut tlogits =
-            affine(input, &z[last.w_range()], &z[last.b_range()], last.d_out);
-        if n_layers > 1 {
-            add_matmul(&mut tlogits, &thidden[n_layers - 2], &params[last.w_range()], last.d_out);
-        }
+            let last = &self.layers[n_layers - 1];
+            let input = if n_layers == 1 { x } else { &fwd.hidden[n_layers - 2] };
+            let mut tlogits =
+                affine_ws(ws, input, &z[last.w_range()], &z[last.b_range()], last.d_out);
+            if n_layers > 1 {
+                kernel::add_matmul(
+                    &mut tlogits,
+                    &thidden[n_layers - 2],
+                    &params[last.w_range()],
+                    last.d_out,
+                );
+            }
 
-        // --- logit gradient and its tangent ---
-        // δ_i = s·(p_i − y_i) ; t(δ_i) = s·t(p_i) with the softmax Jacobian
-        // t(p) = p ∘ (t(logit) − ⟨p, t(logit)⟩)
-        let classes = self.man.classes;
-        let mut d = fwd.probs.clone();
-        for (i, &label) in y.iter().enumerate() {
-            let row = d.row_mut(i);
-            row[label as usize] -= 1.0;
-            for v in row.iter_mut() {
-                *v *= s;
+            // --- logit gradient and its tangent ---
+            // δ_i = s·(p_i − y_i) ; t(δ_i) = s·t(p_i) with the softmax Jacobian
+            // t(p) = p ∘ (t(logit) − ⟨p, t(logit)⟩)
+            let classes = self.man.classes;
+            let mut d = ws.mat_copy(&fwd.probs);
+            for (i, &label) in y.iter().enumerate() {
+                let row = d.row_mut(i);
+                row[label as usize] -= 1.0;
+                for v in row.iter_mut() {
+                    *v *= s;
+                }
             }
-        }
-        let mut td = MatF32::zeros(r, classes);
-        for i in 0..r {
-            let p = fwd.probs.row(i);
-            let tl = tlogits.row(i);
-            let dot: f32 = p.iter().zip(tl).map(|(&a, &b)| a * b).sum();
-            for ((tv, &pv), &tlv) in td.row_mut(i).iter_mut().zip(p).zip(tl) {
-                *tv = s * pv * (tlv - dot);
+            let mut td = ws.mat(r, classes);
+            for i in 0..r {
+                let p = fwd.probs.row(i);
+                let tl = tlogits.row(i);
+                let dot: f32 = p.iter().zip(tl).map(|(&a, &b)| a * b).sum();
+                for ((tv, &pv), &tlv) in td.row_mut(i).iter_mut().zip(p).zip(tl) {
+                    *tv = s * pv * (tlv - dot);
+                }
             }
-        }
+            ws.recycle_mat(tlogits);
 
-        // --- primal + tangent backward ---
-        // t(gW_l) = t(h_{l−1})ᵀ·δ_l + h_{l−1}ᵀ·t(δ_l)
-        // t(δ_{l−1}) = (t(δ_l)·W_lᵀ + δ_l·tW_lᵀ) ∘ 1[h_{l−1}>0]
-        let mut grad = vec![0.0f32; self.man.p_dim];
-        let mut hz = vec![0.0f32; self.man.p_dim];
-        for l in (0..n_layers).rev() {
-            let layer = self.layers[l];
-            let input = if l == 0 { x } else { &fwd.hidden[l - 1] };
-            accum_wgrad(&mut grad[layer.w_range()], input, &d, layer.d_out);
-            accum_wgrad(&mut hz[layer.w_range()], input, &td, layer.d_out);
-            if l > 0 {
-                accum_wgrad(&mut hz[layer.w_range()], &thidden[l - 1], &d, layer.d_out);
+            // --- primal + tangent backward ---
+            // t(gW_l) = t(h_{l−1})ᵀ·δ_l + h_{l−1}ᵀ·t(δ_l)
+            // t(δ_{l−1}) = (t(δ_l)·W_lᵀ + δ_l·tW_lᵀ) ∘ 1[h_{l−1}>0]
+            // (the mask is fused into the backward matmuls: masked elements
+            // of δ_{l−1} and t(δ_{l−1}) are never computed)
+            let mut grad = vec![0.0f32; self.man.p_dim];
+            let mut hz = vec![0.0f32; self.man.p_dim];
+            for l in (0..n_layers).rev() {
+                let layer = self.layers[l];
+                let input = if l == 0 { x } else { &fwd.hidden[l - 1] };
+                kernel::accum_wgrad(&mut grad[layer.w_range()], input, &d, layer.d_out);
+                kernel::accum_wgrad(&mut hz[layer.w_range()], input, &td, layer.d_out);
+                if l > 0 {
+                    kernel::accum_wgrad(&mut hz[layer.w_range()], &thidden[l - 1], &d, layer.d_out);
+                }
+                kernel::accum_bgrad(&mut grad[layer.b_range()], &d);
+                kernel::accum_bgrad(&mut hz[layer.b_range()], &td);
+                if l > 0 {
+                    let w = &params[layer.w_range()];
+                    let tw = &z[layer.w_range()];
+                    let act = &fwd.hidden[l - 1];
+                    let mut dprev = ws.mat(r, layer.d_in);
+                    kernel::add_matmul_nt_masked(&mut dprev, &d, w, layer.d_out, act);
+                    let mut tdprev = ws.mat(r, layer.d_in);
+                    kernel::add_matmul_nt_masked(&mut tdprev, &td, w, layer.d_out, act);
+                    kernel::add_matmul_nt_masked(&mut tdprev, &d, tw, layer.d_out, act);
+                    ws.recycle_mat(std::mem::replace(&mut d, dprev));
+                    ws.recycle_mat(std::mem::replace(&mut td, tdprev));
+                }
             }
-            accum_bgrad(&mut grad[layer.b_range()], &d);
-            accum_bgrad(&mut hz[layer.b_range()], &td);
-            if l > 0 {
-                let w = &params[layer.w_range()];
-                let tw = &z[layer.w_range()];
-                let mut dprev = matmul_nt(&d, w, layer.d_in, layer.d_out);
-                let mut tdprev = matmul_nt(&td, w, layer.d_in, layer.d_out);
-                add_matmul_nt(&mut tdprev, &d, tw, layer.d_out);
-                relu_mask(&mut dprev, &fwd.hidden[l - 1]);
-                relu_mask(&mut tdprev, &fwd.hidden[l - 1]);
-                d = dprev;
-                td = tdprev;
+            let mean_loss = fwd.ce.iter().map(|&v| v as f64).sum::<f64>() as f32 / r as f32;
+            ws.recycle_mat(d);
+            ws.recycle_mat(td);
+            for t in thidden {
+                ws.recycle_mat(t);
             }
-        }
-        let mean_loss = fwd.ce.iter().map(|&v| v as f64).sum::<f64>() as f32 / r as f32;
-        Ok(ProbeOut { hz, grad, mean_loss })
+            let Forward { hidden, probs, ce, correct } = fwd;
+            for h in hidden {
+                ws.recycle_mat(h);
+            }
+            ws.recycle_mat(probs);
+            ws.recycle(ce);
+            ws.recycle(correct);
+            Ok(ProbeOut { hz, grad, mean_loss })
+        })
     }
 
     fn select_greedy(&self, g: &MatF32, a: &MatF32) -> Result<(Vec<usize>, Vec<f32>)> {
@@ -376,127 +456,28 @@ impl Backend for NativeBackend {
 }
 
 // ------------------------------------------------------------ dense kernels
+//
+// The matmul microkernels live in `crate::kernel`; what remains here is
+// the bias-broadcast affine wrapper and the softmax head, both drawing
+// their outputs from the call's workspace.
 
-/// `out = x·W + b` with `W` row-major `(d_in × d_out)`, `b` broadcast.
-fn affine(x: &MatF32, w: &[f32], b: &[f32], d_out: usize) -> MatF32 {
-    let mut out = MatF32::zeros(x.rows, d_out);
-    for i in 0..x.rows {
-        out.row_mut(i).copy_from_slice(b);
-    }
-    add_matmul(&mut out, x, w, d_out);
+/// `x·W + b` with `W` row-major `(d_in × d_out)`, `b` broadcast into a
+/// workspace-backed output fed to the register-tiled matmul.
+fn affine_ws(ws: &mut Workspace, x: &MatF32, w: &[f32], b: &[f32], d_out: usize) -> MatF32 {
+    let mut out = ws.mat_rows(x.rows, b);
+    kernel::add_matmul(&mut out, x, w, d_out);
     out
-}
-
-/// `out += x·W` (x: rows×d_in, W: d_in×d_out row-major). The `xv == 0`
-/// skip exploits ReLU sparsity on hidden activations. Row-parallel: each
-/// output row is produced by one worker in serial element order.
-fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
-    debug_assert_eq!(out.rows, x.rows);
-    debug_assert_eq!(out.cols, d_out);
-    debug_assert_eq!(w.len(), x.cols * d_out);
-    let pool = Pool::gated(x.rows * x.cols * d_out, PAR_MIN_OPS);
-    pool.for_rows(&mut out.data, d_out, ROW_GRAIN, |row0, rows_out| {
-        for (i, oi) in rows_out.chunks_mut(d_out).enumerate() {
-            let xi = x.row(row0 + i);
-            for (k, &xv) in xi.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let wrow = &w[k * d_out..(k + 1) * d_out];
-                for (o, &wv) in oi.iter_mut().zip(wrow) {
-                    *o += xv * wv;
-                }
-            }
-        }
-    });
-}
-
-/// `out += d·Wᵀ` (d: rows×d_out, W: d_in×d_out row-major, out: rows×d_in).
-/// Row-parallel like [`add_matmul`].
-fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
-    debug_assert_eq!(out.rows, d.rows);
-    debug_assert_eq!(d.cols, d_out);
-    debug_assert_eq!(w.len(), out.cols * d_out);
-    let d_in = out.cols;
-    let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
-    pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
-        for (i, oi) in rows_out.chunks_mut(d_in).enumerate() {
-            let di = d.row(row0 + i);
-            for (k, ov) in oi.iter_mut().enumerate() {
-                let wrow = &w[k * d_out..(k + 1) * d_out];
-                let mut acc = 0.0f32;
-                for (&dv, &wv) in di.iter().zip(wrow) {
-                    acc += dv * wv;
-                }
-                *ov += acc;
-            }
-        }
-    });
-}
-
-/// `d·Wᵀ` into a fresh matrix.
-fn matmul_nt(d: &MatF32, w: &[f32], d_in: usize, d_out: usize) -> MatF32 {
-    let mut out = MatF32::zeros(d.rows, d_in);
-    add_matmul_nt(&mut out, d, w, d_out);
-    out
-}
-
-/// `gw += inputᵀ·d` accumulated into the flat weight-gradient slice.
-/// Parallel over input features: each worker owns a disjoint k-range of
-/// `gw` rows and walks the batch rows in order, so every element sees the
-/// exact serial accumulation order regardless of thread count.
-fn accum_wgrad(gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
-    debug_assert_eq!(input.rows, d.rows);
-    debug_assert_eq!(gw.len(), input.cols * d_out);
-    let pool = Pool::gated(input.rows * input.cols * d_out, PAR_MIN_OPS);
-    pool.for_rows(gw, d_out, K_GRAIN, |k0, gw_rows| {
-        let kn = gw_rows.len() / d_out;
-        for i in 0..input.rows {
-            let hi = input.row(i);
-            let di = d.row(i);
-            for kk in 0..kn {
-                let hv = hi[k0 + kk];
-                if hv == 0.0 {
-                    continue;
-                }
-                let grow = &mut gw_rows[kk * d_out..(kk + 1) * d_out];
-                for (g, &dv) in grow.iter_mut().zip(di) {
-                    *g += hv * dv;
-                }
-            }
-        }
-    });
-}
-
-/// `gb += Σ_rows d`.
-fn accum_bgrad(gb: &mut [f32], d: &MatF32) {
-    debug_assert_eq!(gb.len(), d.cols);
-    for i in 0..d.rows {
-        for (g, &dv) in gb.iter_mut().zip(d.row(i)) {
-            *g += dv;
-        }
-    }
-}
-
-/// Zero entries of `m` wherever the matching post-ReLU activation is zero.
-fn relu_mask(m: &mut MatF32, act: &MatF32) {
-    debug_assert_eq!(m.data.len(), act.data.len());
-    for (v, &a) in m.data.iter_mut().zip(&act.data) {
-        if a <= 0.0 {
-            *v = 0.0;
-        }
-    }
 }
 
 /// Row-wise stable softmax + cross-entropy + argmax correctness.
 /// Row-parallel: all three outputs are partitioned on the same row
 /// boundaries, so every row is computed exactly as in the serial loop.
-fn softmax_ce(logits: &MatF32, y: &[i32]) -> (MatF32, Vec<f32>, Vec<f32>) {
+fn softmax_ce(ws: &mut Workspace, logits: &MatF32, y: &[i32]) -> (MatF32, Vec<f32>, Vec<f32>) {
     let rows = logits.rows;
     let cols = logits.cols;
-    let mut probs = MatF32::zeros(rows, cols);
-    let mut ce = vec![0.0f32; rows];
-    let mut correct = vec![0.0f32; rows];
+    let mut probs = ws.mat(rows, cols);
+    let mut ce = ws.buf(rows);
+    let mut correct = ws.buf(rows);
     // exp-heavy rows: weigh each element ~32 MACs for the spawn gate
     let pool = Pool::gated(rows * cols * 32, PAR_MIN_OPS);
     pool.for_rows3(
@@ -820,6 +801,31 @@ mod tests {
         let base = run(1);
         for t in [2, 4] {
             assert_eq!(base, run(t), "thread count {t} changed backend results");
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_run_to_run_deterministic() {
+        // the workspace pool must never change results: repeated calls
+        // (first call allocates, later calls reuse buffers) and
+        // interleaved ops must be bitwise-identical
+        let bk = tiny_backend();
+        let (params, x, y) = random_batch(&bk, 8, 21);
+        let gamma = [1.0f32; 8];
+        let mom = vec![0.01f32; params.len()];
+        let mut z = vec![0.0f32; params.len()];
+        let mut zrng = Rng::new(3);
+        zrng.rademacher_fill(&mut z);
+        let run = || {
+            let s = bk.train_step(&params, &mom, &x, &y, &gamma, 0.05, 1e-4).unwrap();
+            let (g, a, l) = bk.grad_embed(&params, &x, &y).unwrap();
+            let p = bk.hess_probe(&params, &x, &y, &z).unwrap();
+            let e = bk.eval_chunk(&params, &x, &y).unwrap();
+            (s.params, s.momentum, s.per_ex_loss, g, a, l, p.hz, p.grad, e)
+        };
+        let first = run();
+        for rep in 0..3 {
+            assert_eq!(first, run(), "workspace reuse changed results on rep {rep}");
         }
     }
 

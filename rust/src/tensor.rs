@@ -31,6 +31,13 @@ impl MatF32 {
         Ok(MatF32 { rows, cols, data })
     }
 
+    /// Consume the matrix, returning its backing buffer (used by the
+    /// kernel layer's [`crate::kernel::Workspace`] to recycle storage).
+    #[inline]
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {

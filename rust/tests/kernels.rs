@@ -1,0 +1,334 @@
+//! Kernel-equivalence properties for the block-at-a-time layer.
+//!
+//! The register-tiled matmul microkernels and the blocked distance
+//! kernels are pure speed: every test here asserts **bitwise** equality
+//! against the scalar references (`crest::kernel::reference`, or the
+//! `SqDistMetric::sqdist_block` trait default) across odd shapes that
+//! exercise every remainder-tile path, empty/singleton ground sets, and
+//! pool worker counts 1/2/4/8.
+
+use std::ops::Range;
+
+use crest::coreset::facility::{
+    self, facility_location_metric, facility_location_prod, gain_scan, EuclidMetric,
+    GramMetric, ProdMetric, SqDistMetric,
+};
+use crest::kernel::{self, reference, Workspace};
+use crest::prop::{forall, usize_in, vec_f32};
+use crest::tensor::MatF32;
+use crest::util::pool;
+use crest::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF32 {
+    MatF32::from_vec(rows, cols, vec_f32(rng, rows * cols, scale)).unwrap()
+}
+
+/// Random matrix with roughly half its entries zeroed (a post-ReLU
+/// activation pattern — exercises the sparsity-skip paths).
+fn relu_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
+    let mut m = rand_mat(rng, rows, cols, 3.0);
+    for v in m.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!(
+                "element {k}: {x} ({:#x}) != {y} ({:#x})",
+                x.to_bits(),
+                y.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Forwarder that hides any tiled `sqdist_block` override, so the trait's
+/// scalar default is what runs.
+struct ScalarMetric<'a, M: SqDistMetric>(&'a M);
+
+impl<M: SqDistMetric> SqDistMetric for ScalarMetric<'_, M> {
+    fn len(&self) -> usize {
+        self.0.len()
+    }
+    fn sqdist(&self, i: usize, j: usize) -> f32 {
+        self.0.sqdist(i, j)
+    }
+}
+
+fn block_vs_scalar<M: SqDistMetric>(m: &M, j: usize, range: Range<usize>) -> Result<(), String> {
+    let mut tiled = vec![0.0f32; range.len()];
+    let mut scalar = vec![0.0f32; range.len()];
+    m.sqdist_block(j, range.clone(), &mut tiled);
+    ScalarMetric(m).sqdist_block(j, range, &mut scalar);
+    bits_eq(&tiled, &scalar)
+}
+
+// ------------------------------------------------------- distance kernels
+
+#[test]
+fn prop_blocked_sqdist_matches_scalar_default() {
+    forall(
+        "blocked-sqdist-bitwise",
+        0xB10C,
+        60,
+        |rng| {
+            let n = usize_in(rng, 1, 90);
+            let c = usize_in(rng, 1, 20);
+            let h = usize_in(rng, 1, 20);
+            let g = rand_mat(rng, n, c, 4.0);
+            let a = rand_mat(rng, n, h, 4.0);
+            let j = usize_in(rng, 0, n);
+            let lo = usize_in(rng, 0, n);
+            let hi = usize_in(rng, lo, n + 1);
+            (g, a, j, lo, hi)
+        },
+        |(g, a, j, lo, hi)| {
+            let euclid = EuclidMetric::new(g);
+            block_vs_scalar(&euclid, *j, 0..g.rows)?;
+            block_vs_scalar(&euclid, *j, *lo..*hi)?;
+            let prod = ProdMetric::new(a, g);
+            block_vs_scalar(&prod, *j, 0..g.rows)?;
+            block_vs_scalar(&prod, *j, *lo..*hi)?;
+            let gram = GramMetric::new(&prod);
+            block_vs_scalar(&gram, *j, *lo..*hi)
+        },
+    );
+}
+
+#[test]
+fn empty_and_singleton_ground_sets() {
+    // empty: metrics exist, blocks over empty ranges are no-ops
+    let g0 = MatF32::zeros(0, 3);
+    let e0 = EuclidMetric::new(&g0);
+    assert!(e0.is_empty());
+    e0.sqdist_block(0, 0..0, &mut []);
+    assert!(gain_scan(&e0, &[]).is_empty());
+    assert_eq!(GramMetric::new(&e0).len(), 0);
+    // singleton: one medoid, gamma covers the whole (1-element) ground set
+    let mut rng = Rng::new(9);
+    let g1 = rand_mat(&mut rng, 1, 5, 2.0);
+    let sel = facility::facility_location(&g1, 1);
+    assert_eq!(sel.idx, vec![0]);
+    assert_eq!(sel.gamma, vec![1.0]);
+    let e1 = EuclidMetric::new(&g1);
+    let mut d = [7.0f32];
+    e1.sqdist_block(0, 0..1, &mut d);
+    assert_eq!(d[0], 0.0);
+}
+
+#[test]
+fn gain_scan_identical_across_thread_counts() {
+    let mut rng = Rng::new(11);
+    // large enough that the candidate-parallel scan engages
+    let g = rand_mat(&mut rng, 700, 7, 3.0);
+    let a = rand_mat(&mut rng, 700, 33, 3.0);
+    let prod = ProdMetric::new(&a, &g);
+    let mind: Vec<f32> = (0..700).map(|i| prod.sqdist(3, i)).collect();
+    let base = pool::with_threads(1, || gain_scan(&prod, &mind));
+    for t in [2, 4, 8] {
+        let scan = pool::with_threads(t, || gain_scan(&prod, &mind));
+        bits_eq(&base, &scan).unwrap_or_else(|e| panic!("threads={t}: {e}"));
+    }
+}
+
+#[test]
+fn selection_identical_across_thread_counts_and_gram_cache() {
+    let mut rng = Rng::new(12);
+    let g = rand_mat(&mut rng, 520, 6, 3.0);
+    let a = rand_mat(&mut rng, 520, 24, 3.0);
+    let base = pool::with_threads(1, || facility_location_prod(&a, &g, 40));
+    for t in [2, 4, 8] {
+        let sel = pool::with_threads(t, || facility_location_prod(&a, &g, 40));
+        assert_eq!(base.idx, sel.idx, "threads={t}");
+        assert_eq!(base.gamma, sel.gamma, "threads={t}");
+    }
+    // the Gram cache changes flops, never the selection — at any count
+    let prod = ProdMetric::new(&a, &g);
+    let gram = GramMetric::new(&prod);
+    for t in [1, 4] {
+        let sel = pool::with_threads(t, || facility_location_metric(&gram, 40));
+        assert_eq!(base.idx, sel.idx, "gram threads={t}");
+        assert_eq!(base.gamma, sel.gamma, "gram threads={t}");
+    }
+}
+
+// --------------------------------------------------------- tiled matmuls
+
+#[test]
+fn prop_tiled_add_matmul_matches_reference() {
+    forall(
+        "tiled-add-matmul-bitwise",
+        0x7117,
+        60,
+        |rng| {
+            let rows = usize_in(rng, 1, 40);
+            let d_in = usize_in(rng, 1, 40);
+            let d_out = usize_in(rng, 1, 40);
+            let x = rand_mat(rng, rows, d_in, 2.0);
+            let w = vec_f32(rng, d_in * d_out, 2.0);
+            let out = rand_mat(rng, rows, d_out, 1.0);
+            (x, w, out)
+        },
+        |(x, w, out)| {
+            let d_out = out.cols;
+            let mut tiled = out.clone();
+            let mut scalar = out.clone();
+            kernel::add_matmul(&mut tiled, x, w, d_out);
+            reference::add_matmul(&mut scalar, x, w, d_out);
+            bits_eq(&tiled.data, &scalar.data)
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_nt_and_masked_match_reference() {
+    forall(
+        "tiled-nt-bitwise",
+        0x7118,
+        60,
+        |rng| {
+            let rows = usize_in(rng, 1, 30);
+            let d_in = usize_in(rng, 1, 30);
+            let d_out = usize_in(rng, 1, 30);
+            let d = rand_mat(rng, rows, d_out, 2.0);
+            let w = vec_f32(rng, d_in * d_out, 2.0);
+            let out = rand_mat(rng, rows, d_in, 1.0);
+            let act = relu_mat(rng, rows, d_in);
+            (d, w, out, act)
+        },
+        |(d, w, out, act)| {
+            let d_out = d.cols;
+            let mut tiled = out.clone();
+            let mut scalar = out.clone();
+            kernel::add_matmul_nt(&mut tiled, d, w, d_out);
+            reference::add_matmul_nt(&mut scalar, d, w, d_out);
+            bits_eq(&tiled.data, &scalar.data)?;
+            let mut tiled_m = out.clone();
+            let mut scalar_m = out.clone();
+            kernel::add_matmul_nt_masked(&mut tiled_m, d, w, d_out, act);
+            reference::add_matmul_nt_masked(&mut scalar_m, d, w, d_out, act);
+            bits_eq(&tiled_m.data, &scalar_m.data)
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_wgrad_and_bgrad_match_reference() {
+    forall(
+        "tiled-wgrad-bitwise",
+        0x7119,
+        60,
+        |rng| {
+            let rows = usize_in(rng, 1, 30);
+            let d_in = usize_in(rng, 1, 40);
+            let d_out = usize_in(rng, 1, 40);
+            let input = relu_mat(rng, rows, d_in);
+            let d = rand_mat(rng, rows, d_out, 2.0);
+            let gw = vec_f32(rng, d_in * d_out, 1.0);
+            let gb = vec_f32(rng, d_out, 1.0);
+            (input, d, gw, gb)
+        },
+        |(input, d, gw, gb)| {
+            let d_out = d.cols;
+            let mut tiled = gw.clone();
+            let mut scalar = gw.clone();
+            kernel::accum_wgrad(&mut tiled, input, d, d_out);
+            reference::accum_wgrad(&mut scalar, input, d, d_out);
+            bits_eq(&tiled, &scalar)?;
+            let mut tb = gb.clone();
+            let mut sb = gb.clone();
+            kernel::accum_bgrad(&mut tb, d);
+            reference::accum_bgrad(&mut sb, d);
+            bits_eq(&tb, &sb)
+        },
+    );
+}
+
+#[test]
+fn matmuls_identical_across_thread_counts() {
+    // sized above the parallel gate (64·128·160 ≈ 1.3M MACs) with ragged
+    // remainder tiles (rows/cols not multiples of the tile shape)
+    let mut rng = Rng::new(13);
+    let (rows, d_in, d_out) = (67, 129, 161);
+    let x = relu_mat(&mut rng, rows, d_in);
+    let w = vec_f32(&mut rng, d_in * d_out, 1.0);
+    let d = rand_mat(&mut rng, rows, d_out, 1.0);
+    let act = relu_mat(&mut rng, rows, d_in);
+    let run = |t: usize| {
+        pool::with_threads(t, || {
+            let mut mm = MatF32::zeros(rows, d_out);
+            kernel::add_matmul(&mut mm, &x, &w, d_out);
+            let mut nt = MatF32::zeros(rows, d_in);
+            kernel::add_matmul_nt_masked(&mut nt, &d, &w, d_out, &act);
+            let mut gw = vec![0.0f32; d_in * d_out];
+            kernel::accum_wgrad(&mut gw, &x, &d, d_out);
+            let mut gb = vec![0.0f32; d_out];
+            kernel::accum_bgrad(&mut gb, &d);
+            (mm.data, nt.data, gw, gb)
+        })
+    };
+    let base = run(1);
+    for t in [2, 4, 8] {
+        assert_eq!(base, run(t), "thread count {t} changed a tiled kernel result");
+    }
+}
+
+#[test]
+fn relu_mask_matches_serial_semantics() {
+    let mut rng = Rng::new(14);
+    let act = relu_mat(&mut rng, 37, 29);
+    let m0 = rand_mat(&mut rng, 37, 29, 2.0);
+    let run = |t: usize| {
+        pool::with_threads(t, || {
+            let mut m = m0.clone();
+            kernel::relu_mask(&mut m, &act);
+            m.data
+        })
+    };
+    let masked = run(1);
+    for (k, (&v, &a)) in masked.iter().zip(&act.data).enumerate() {
+        if a <= 0.0 {
+            assert_eq!(v, 0.0, "element {k} not masked");
+        } else {
+            assert_eq!(v.to_bits(), m0.data[k].to_bits(), "element {k} changed");
+        }
+    }
+    for t in [2, 8] {
+        assert_eq!(masked, run(t), "threads={t}");
+    }
+}
+
+// ------------------------------------------------------------- workspace
+
+#[test]
+fn workspace_reuses_capacity_and_zeroes_buffers() {
+    let mut ws = Workspace::new();
+    let mut a = ws.buf(100);
+    a.iter_mut().for_each(|v| *v = 7.0);
+    let cap = a.capacity();
+    ws.recycle(a);
+    assert_eq!(ws.pooled(), 1);
+    // reuse must hand back zeroed contents on the same allocation
+    let b = ws.buf(64);
+    assert!(b.capacity() >= 64 && b.capacity() <= cap.max(64));
+    assert!(b.iter().all(|&v| v == 0.0));
+    ws.recycle(b);
+    // copies and broadcast rows
+    let src = MatF32::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+    let c = ws.mat_copy(&src);
+    assert_eq!(c.data, src.data);
+    ws.recycle_mat(c);
+    let r = ws.mat_rows(3, &[9.0, 8.0]);
+    assert_eq!(r.rows, 3);
+    assert_eq!(r.cols, 2);
+    assert_eq!(r.data, vec![9.0, 8.0, 9.0, 8.0, 9.0, 8.0]);
+}
