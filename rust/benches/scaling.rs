@@ -3,14 +3,18 @@
 //! Measures train_step, grad_embed and facility-location selection at
 //! 1/2/4/8 pool workers on a model sized so the batch-row loops dominate
 //! thread-spawn overhead, printing per-count speedups vs the 1-thread
-//! baseline and finishing with a bitwise-determinism spot check. With
-//! `CREST_BENCH_JSON=<path>` the per-count records seed the perf
-//! trajectory; `CREST_BENCH_QUICK=1` shrinks the model for the CI
-//! perf-smoke job.
+//! baseline and a bitwise-determinism spot check. It closes with the
+//! out-of-core scenario: stream-pack a ≥10^6-example corpus into the
+//! sharded format, reopen it through the mmap store, and train a
+//! budgeted CREST cell on it end to end. With `CREST_BENCH_JSON=<path>`
+//! the records seed the perf trajectory; `CREST_BENCH_QUICK=1` shrinks
+//! the model and corpus for the CI perf-smoke job.
 //!
 //! Run with `cargo bench --bench scaling`.
 
+use crest::bench_util::scenario as sc;
 use crest::bench_util::{self, bench_recorded, format_secs, section};
+use crest::config::Method;
 use crest::coreset::facility;
 use crest::model::init_params;
 use crest::runtime::manifest::{ModelSpec, VariantManifest};
@@ -122,6 +126,50 @@ fn main() -> anyhow::Result<()> {
     println!("\ndeterminism: threads=1 and threads=4 outputs are bitwise-identical");
 
     pool::set_threads(initial_threads);
+
+    // ---------------------------------------------------- out-of-core
+    section("scaling: out-of-core mmap store (pack + train ≥10^6 examples)");
+    // 2^20 = 1,048,576 training examples at d=16: a 64 MB feature payload
+    // streamed to shards and trained through the mmap store without ever
+    // being resident. Quick mode keeps the same code path at 2^16.
+    let n_train = if quick { 1 << 16 } else { 1 << 20 };
+    let oospec = sc::oocore_spec(n_train, 1);
+    let root = std::env::temp_dir()
+        .join(format!("crest-scaling-oocore-{}", std::process::id()))
+        .join(format!("{}-s{}", oospec.name, oospec.seed));
+    let _ = std::fs::remove_dir_all(root.parent().unwrap());
+    bench_recorded(&format!("oocore pack n={n_train}"), 0, 1, || {
+        crest::data::generate_packed(&oospec, &root, crest::data::shard::DEFAULT_SHARD_ROWS)
+            .unwrap()
+    });
+    let mut loaded = None;
+    bench_recorded(&format!("oocore load n={n_train}"), 0, 1, || {
+        loaded = Some(crest::data::shard::load_packed_splits(&root).unwrap());
+    });
+    let splits = loaded.expect("load bench ran at least once");
+    assert_eq!(splits.train.store_kind(), "mmap");
+    assert_eq!(splits.train.n(), n_train);
+    let smoke_rt = Runtime::native_variant("smoke")?;
+    let mut trained = None;
+    bench_recorded(&format!("oocore crest train n={n_train}"), 0, 1, || {
+        let rep = sc::cell(&smoke_rt, &splits, "smoke", Method::crest(), 1, |cfg| {
+            // ~1% of one epoch: hundreds of steps, every batch gathered
+            // through the mmap shards
+            cfg.epochs_full = 1;
+            cfg.budget_frac = 0.01;
+        })
+        .unwrap();
+        trained = Some(rep);
+    });
+    let rep = trained.expect("train bench ran at least once");
+    println!(
+        "    -> trained on {} packed examples via {} store: final test acc {:.4}",
+        n_train,
+        splits.train.store_kind(),
+        rep.final_test_acc
+    );
+    std::fs::remove_dir_all(root.parent().unwrap()).ok();
+
     bench_util::flush_json()?;
     Ok(())
 }

@@ -33,7 +33,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::Coordinator;
-use crate::data::{generate, Splits, SynthSpec};
+use crate::data::{prepare_spec_splits, Splits, SynthSpec};
 use crate::report::RunReport;
 use crate::runtime::Runtime;
 use crate::util::json::Json;
@@ -229,11 +229,14 @@ impl ExperimentBuilder {
         let rt = Runtime::load(&self.artifact_root, &cfg.variant)?;
         let splits = match self.splits {
             Some(s) => s,
-            None => Arc::new(generate(
-                &SynthSpec::preset(&cfg.variant, cfg.seed).with_context(|| {
+            None => {
+                // honors the session store selection: resident under mem,
+                // lazily packed + mmap-backed under mmap
+                let spec = SynthSpec::preset(&cfg.variant, cfg.seed).with_context(|| {
                     format!("no synthetic preset for variant {:?}", cfg.variant)
-                })?,
-            )),
+                })?;
+                prepare_spec_splits(&spec)?
+            }
         };
         Ok(Experiment { cfg, rt, splits, observers: self.observers })
     }

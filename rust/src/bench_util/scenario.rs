@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::config::{ExperimentConfig, Method};
 use crate::coordinator::run_experiment;
-use crate::data::{generate, Splits, SynthSpec};
+use crate::data::{prepare_splits, Splits, SynthSpec};
 use crate::report::RunReport;
 use crate::runtime::Runtime;
 use crate::util::stats;
@@ -83,14 +83,20 @@ pub fn variants() -> Vec<String> {
 }
 
 /// Load a variant's runtime + data, or None (with a notice) when the
-/// variant is unknown.
+/// variant is unknown. Data goes through [`prepare_splits`], so benches
+/// honor `--data-store` / `CREST_DATA_STORE` like the CLI does (a
+/// `Splits` clone is shallow: the feature store sits behind an `Arc`).
 pub fn load(variant: &str, seed: u64) -> Option<(Runtime, Splits)> {
     let root = artifact_root();
+    SynthSpec::preset(variant, seed)?;
     match Runtime::load(&root, variant) {
-        Ok(rt) => {
-            let splits = generate(&SynthSpec::preset(variant, seed)?);
-            Some((rt, splits))
-        }
+        Ok(rt) => match prepare_splits(variant, seed) {
+            Ok(splits) => Some((rt, splits.as_ref().clone())),
+            Err(e) => {
+                println!("[skip] {variant}: data preparation failed ({e:#})");
+                None
+            }
+        },
         Err(e) => {
             println!("[skip] {variant}: no runtime available ({e:#})");
             None
@@ -121,4 +127,18 @@ pub fn fmt_mean_std(vals: &[f32]) -> String {
 /// Relative error (%) per paper Table 1 definition.
 pub fn rel_err(acc_coreset: f32, acc_full: f32) -> f32 {
     crate::metrics::relative_error_pct(acc_coreset * 100.0, acc_full * 100.0)
+}
+
+/// Spec for the out-of-core scaling scenario: the smoke model geometry
+/// (d=16, 4 classes — so the builtin smoke runtime trains it) with the
+/// training split scaled to `n_train` examples. At 10^6 examples the
+/// feature payload is 64 MB per copy, big enough to exercise the sharded
+/// mmap path honestly while staying inside CI disk budgets.
+pub fn oocore_spec(n_train: usize, seed: u64) -> SynthSpec {
+    SynthSpec {
+        n_train,
+        n_val: 512,
+        n_test: 1024,
+        ..SynthSpec::preset("smoke", seed).expect("smoke preset exists")
+    }
 }

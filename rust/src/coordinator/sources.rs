@@ -18,6 +18,7 @@ use anyhow::Result;
 
 use crate::api::registry::{MethodSpec, SourceCtx};
 use crate::config::ExperimentConfig;
+use crate::coreset::embed_cache::{region_id, subset_key, subset_key_all, EmbedCache};
 use crate::coreset::{craig, facility, glister, gradmatch, MiniBatchCoreset};
 use crate::data::Dataset;
 use crate::exclusion::ExclusionTracker;
@@ -120,6 +121,7 @@ fn make_epoch<'a>(
         into_epoch: 0,
         entries: Vec::new(),
         rng,
+        embed_cache: EmbedCache::from_env(),
         n_updates: 0,
         update_steps: Vec::new(),
     })
@@ -290,6 +292,8 @@ struct EpochCoresetSource<'a> {
     /// (global index, batch gamma) shuffled each epoch
     entries: Vec<(usize, f32)>,
     rng: Rng,
+    /// optional on-disk embedding cache (`CREST_EMBED_CACHE`)
+    embed_cache: Option<EmbedCache>,
     n_updates: usize,
     update_steps: Vec<usize>,
 }
@@ -325,6 +329,27 @@ pub fn full_embeddings(
 }
 
 impl<'a> EpochCoresetSource<'a> {
+    /// Full-data embeddings, consulting the region-scoped on-disk cache
+    /// when enabled. The region fingerprints the reselection ordinal and
+    /// the current params: parameters change between reselections, so
+    /// prior entries are evicted, and a hit (same round, bitwise-same
+    /// params — e.g. an identical rerun) can only return what this round
+    /// would have recomputed.
+    fn cached_full_embeddings(&mut self, state: &TrainState) -> Result<(MatF32, MatF32, Vec<f32>)> {
+        let key = subset_key_all(self.train.n());
+        if let Some(cache) = self.embed_cache.as_mut() {
+            cache.enter_region(region_id(self.n_updates as u64, &state.params));
+            if let Some(hit) = cache.load(key) {
+                return Ok(hit);
+            }
+        }
+        let out = full_embeddings(self.rt, &state.params, self.train)?;
+        if let Some(cache) = self.embed_cache.as_ref() {
+            cache.store(key, &out.0, &out.1, &out.2);
+        }
+        Ok(out)
+    }
+
     fn reselect(
         &mut self,
         step: usize,
@@ -332,7 +357,7 @@ impl<'a> EpochCoresetSource<'a> {
         timers: &mut PhaseTimers,
     ) -> Result<()> {
         let t0 = Instant::now();
-        let (gl, al, _) = full_embeddings(self.rt, &state.params, self.train)?;
+        let (gl, al, _) = self.cached_full_embeddings(state)?;
         let entries: Vec<(usize, f32)> = match self.selector {
             EpochSelector::Craig => {
                 let sel = craig::craig_select(&al, &gl, self.k, &mut self.rng);
@@ -470,6 +495,9 @@ pub struct CrestSource<'a> {
     // state
     quad: QuadraticModel,
     excl: ExclusionTracker,
+    /// optional on-disk embedding cache (`CREST_EMBED_CACHE`), keyed by
+    /// (quadratic-region id, subset hash)
+    embed_cache: Option<EmbedCache>,
     coresets: Vec<MiniBatchCoreset>,
     update: bool,
     t1: usize,
@@ -516,6 +544,7 @@ impl<'a> CrestSource<'a> {
             exclude_after: (steps_total as f32 * cfg.exclude_after_frac) as usize,
             quad: QuadraticModel::new(rt.man.p_dim, cfg.beta1, cfg.beta2, opts),
             excl: ExclusionTracker::new(train.n(), cfg.alpha, cfg.crest.exclude),
+            embed_cache: EmbedCache::from_env(),
             coresets: Vec::new(),
             update: true,
             t1: 1,
@@ -548,13 +577,45 @@ impl<'a> CrestSource<'a> {
     fn select(&mut self, step: usize, state: &TrainState, timers: &mut PhaseTimers) -> Result<()> {
         let r = self.rt.man.r;
         let m = self.rt.man.m;
-        // --- embeddings for P random subsets (backend, serial) ---
+        // --- embeddings for P random subsets ---
         let t0 = Instant::now();
-        let mut subsets: Vec<(Vec<usize>, MatF32, MatF32)> = Vec::with_capacity(self.p);
+        // Draw all P index sets first. The RNG stream is identical to the
+        // historical interleaved loop (draws happen in the same order and
+        // observe_batch never alters the active pool mid-round), but with
+        // the draws hoisted, batch assembly becomes a pure read fan-out.
+        let mut index_sets: Vec<Vec<usize>> = Vec::with_capacity(self.p);
         for _ in 0..self.p {
-            let idx = self.sample_subset(r);
-            let (x, y) = self.train.batch(&idx);
-            let (gl, al, losses) = self.rt.grad_embed(&state.params, &x, &y)?;
+            index_sets.push(self.sample_subset(r));
+        }
+        // Shard-parallel gathers through the dataset's store: results come
+        // back in subset order, and gathers are pure reads, so the bytes
+        // are identical at any thread count and for either store backend.
+        let batches: Vec<(MatF32, Vec<i32>)> = {
+            let train = self.train;
+            let sets = &index_sets;
+            Pool::global().map(sets.len(), |i| train.batch(&sets[i]))
+        };
+        // Embeddings per subset (backend, serial), consulting the
+        // region-scoped cache when enabled: within one quadratic region
+        // the params are fixed, so a hit returns exactly what grad_embed
+        // would recompute — including the losses fed to the exclusion
+        // tracker, which therefore observes identical values either way.
+        if let Some(cache) = self.embed_cache.as_mut() {
+            cache.enter_region(region_id(self.n_updates as u64, &state.params));
+        }
+        let mut subsets: Vec<(Vec<usize>, MatF32, MatF32)> = Vec::with_capacity(self.p);
+        for (idx, (x, y)) in index_sets.into_iter().zip(batches) {
+            let key = subset_key(&idx);
+            let (gl, al, losses) = match self.embed_cache.as_ref().and_then(|c| c.load(key)) {
+                Some(hit) => hit,
+                None => {
+                    let out = self.rt.grad_embed(&state.params, &x, &y)?;
+                    if let Some(cache) = self.embed_cache.as_ref() {
+                        cache.store(key, &out.0, &out.1, &out.2);
+                    }
+                    out
+                }
+            };
             self.excl.observe_batch(&idx, &losses);
             subsets.push((idx, gl, al));
         }

@@ -8,6 +8,7 @@
 //! functions — the coordinator owns all backend interaction.
 
 pub mod craig;
+pub mod embed_cache;
 pub mod facility;
 pub mod glister;
 pub mod gradmatch;

@@ -1,4 +1,4 @@
-//! Binary on-disk dataset format (write once, memory-load fast).
+//! Monolithic binary on-disk dataset format (write once, memory-load fast).
 //!
 //! Examples and benches cache generated corpora so repeated runs skip
 //! synthesis. Format (little-endian):
@@ -14,6 +14,11 @@
 //! is_noisy   n u8
 //! cluster    n u32
 //! ```
+//!
+//! This format is always loaded fully resident, so it keeps a sanity cap
+//! on `n*d`; corpora beyond it belong in the sharded format
+//! ([`super::shard`], written by `crest pack`), which has no cap and
+//! backs the mmap store.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -26,15 +31,39 @@ use crate::tensor::MatF32;
 
 const MAGIC: &[u8; 8] = b"CRSTDS1\0";
 
+/// Monolithic caches cap the resident payload at 2^31 f32 elements
+/// (8 GiB of features); larger corpora must use the sharded format.
+pub const MAX_RESIDENT_ELEMS: u64 = 1 << 31;
+
+/// Total file size implied by the header dims.
+fn expected_len(n: u64, d: u64) -> Option<u64> {
+    // header + features + y + difficulty + is_noisy + cluster
+    let feat = n.checked_mul(d)?.checked_mul(4)?;
+    Some(8 + 24 + feat + n * 4 + n * 4 + n + n * 4)
+}
+
 /// Write a dataset to the binary cache format at `path`.
+///
+/// Features stream out block-at-a-time through the dataset's store, so a
+/// disk-backed dataset can be re-cached without materializing it (the
+/// *result* must still fit the resident cap to be loadable).
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
     w.write_all(MAGIC)?;
     for v in [ds.n() as u64, ds.d() as u64, ds.classes as u64] {
         w.write_all(&v.to_le_bytes())?;
     }
-    for &f in &ds.x.data {
-        w.write_all(&f.to_le_bytes())?;
+    let (n, d) = (ds.n(), ds.d());
+    let block = 4096.min(n.max(1));
+    let mut buf = vec![0.0f32; block * d];
+    let mut start = 0;
+    while start < n {
+        let rows = block.min(n - start);
+        ds.read_block(start, rows, &mut buf[..rows * d]);
+        for &f in &buf[..rows * d] {
+            w.write_all(&f.to_le_bytes())?;
+        }
+        start += rows;
     }
     for &y in &ds.y {
         w.write_all(&y.to_le_bytes())?;
@@ -53,8 +82,14 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
 }
 
 /// Read a dataset written by [`save`].
+///
+/// The header dims are validated against the file's actual size before
+/// any payload is read, so truncated or padded files fail with one clear
+/// error instead of a mid-stream `read_exact` failure.
 pub fn load(path: &Path) -> Result<Dataset> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = file.metadata()?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -65,12 +100,28 @@ pub fn load(path: &Path) -> Result<Dataset> {
         r.read_exact(&mut u64buf)?;
         Ok(u64::from_le_bytes(u64buf))
     };
-    let n = read_u64(&mut r)? as usize;
-    let d = read_u64(&mut r)? as usize;
+    let n64 = read_u64(&mut r)?;
+    let d64 = read_u64(&mut r)?;
     let classes = read_u64(&mut r)? as usize;
-    if n.checked_mul(d).is_none() || n * d > (1 << 31) {
-        bail!("{path:?}: implausible dims n={n} d={d}");
+    let elems = match n64.checked_mul(d64) {
+        Some(e) => e,
+        None => bail!("{path:?}: implausible dims n={n64} d={d64}"),
+    };
+    if elems > MAX_RESIDENT_ELEMS {
+        bail!(
+            "{path:?}: n*d = {elems} exceeds the monolithic cache cap ({MAX_RESIDENT_ELEMS}); \
+             pack corpora this large into the sharded format (`crest pack`) instead"
+        );
     }
+    match expected_len(n64, d64) {
+        Some(want) if want == file_len => {}
+        Some(want) => bail!(
+            "{path:?}: {file_len} bytes on disk, expected {want} for n={n64} d={d64} \
+             (truncated or corrupt cache)"
+        ),
+        None => bail!("{path:?}: implausible dims n={n64} d={d64}"),
+    }
+    let (n, d) = (n64 as usize, d64 as usize);
 
     let mut xbuf = vec![0u8; n * d * 4];
     r.read_exact(&mut xbuf)?;
@@ -94,20 +145,7 @@ pub fn load(path: &Path) -> Result<Dataset> {
     let cluster: Vec<u32> =
         cbuf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
 
-    // trailing garbage check
-    let mut extra = [0u8; 1];
-    if r.read(&mut extra)? != 0 {
-        bail!("{path:?}: trailing bytes after dataset payload");
-    }
-
-    Ok(Dataset {
-        x: MatF32::from_vec(n, d, x)?,
-        y,
-        classes,
-        difficulty,
-        is_noisy,
-        cluster,
-    })
+    Ok(Dataset::from_mat(MatF32::from_vec(n, d, x)?, y, classes, difficulty, is_noisy, cluster))
 }
 
 #[cfg(test)]
@@ -121,9 +159,8 @@ mod tests {
         p
     }
 
-    #[test]
-    fn roundtrip() {
-        let spec = SynthSpec {
+    fn small(seed: u64) -> SynthSpec {
+        SynthSpec {
             name: "t",
             n_train: 64,
             n_val: 8,
@@ -136,13 +173,17 @@ mod tests {
             margin: 2.0,
             easy_sigma: 0.3,
             hard_sigma: 1.0,
-            seed: 3,
-        };
-        let ds = generate(&spec).train;
+            seed,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = generate(&small(3)).train;
         let path = tmpfile("roundtrip.bin");
         save(&ds, &path).unwrap();
         let back = load(&path).unwrap();
-        assert_eq!(back.x.data, ds.x.data);
+        assert_eq!(back.to_mat().data, ds.to_mat().data);
         assert_eq!(back.y, ds.y);
         assert_eq!(back.difficulty, ds.difficulty);
         assert_eq!(back.is_noisy, ds.is_noisy);
@@ -160,28 +201,55 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated() {
-        let spec = SynthSpec {
-            name: "t",
-            n_train: 16,
-            n_val: 4,
-            n_test: 4,
-            d: 4,
-            classes: 2,
-            clusters_per_class: 1,
-            redundancy: 0.5,
-            label_noise: 0.0,
-            margin: 2.0,
-            easy_sigma: 0.3,
-            hard_sigma: 1.0,
-            seed: 4,
-        };
-        let ds = generate(&spec).train;
+    fn rejects_truncated_with_expected_size() {
+        let ds = generate(&small(4)).train;
         let path = tmpfile("trunc.bin");
         save(&ds, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = load(&path).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("expected"), "unhelpful error: {msg}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_bytes_up_front() {
+        let ds = generate(&small(5)).train;
+        let path = tmpfile("trailing.bin");
+        save(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 7]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_header_dims() {
+        let ds = generate(&small(6)).train;
+        let path = tmpfile("dims.bin");
+        save(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // overwrite n with an absurd value; size check must catch it
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn oversized_dims_point_at_sharded_format() {
+        let path = tmpfile("huge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(1u64 << 32).to_le_bytes()); // n
+        bytes.extend_from_slice(&16u64.to_le_bytes()); // d
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // classes
+        std::fs::write(&path, &bytes).unwrap();
+        let msg = format!("{:#}", load(&path).unwrap_err());
+        assert!(msg.contains("crest pack"), "cap error should redirect: {msg}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -1,16 +1,27 @@
-//! In-memory labeled dataset with per-example provenance metadata.
+//! Labeled dataset as a thin handle over a pluggable feature store.
 //!
-//! The provenance fields (`difficulty`, `is_noisy`, `cluster`) exist so the
-//! analysis benches (Fig. 5/7) can relate what CREST selects to ground-truth
-//! example structure — they are never visible to the training path.
+//! Features live behind [`DataStore`] — RAM-resident ([`MemStore`]) or
+//! memory-mapped shards ([`super::store::MmapStore`]) — so the ground set
+//! can exceed host memory. Labels and the per-example provenance metadata
+//! (`difficulty`, `is_noisy`, `cluster`) stay resident: they are O(n)
+//! bytes, not O(n·d), and the analysis benches (Fig. 5/7) index them at
+//! random. Provenance is never visible to the training path.
+//!
+//! All feature access goes through [`Dataset::batch`],
+//! [`Dataset::gather_into`] and [`Dataset::read_block`]; nothing above
+//! this layer may assume a resident `x.data`. `Clone` is shallow (the
+//! store is behind an `Arc`), which is what makes handing a dataset to
+//! the prefetching loader thread cheap.
 
+use std::sync::Arc;
+
+use crate::data::store::{DataStore, MemStore};
 use crate::tensor::MatF32;
 
-/// A labeled dataset plus synthesis provenance.
+/// A labeled dataset plus synthesis provenance, backed by a [`DataStore`].
 #[derive(Debug, Clone)]
 pub struct Dataset {
-    /// Features, one row per example.
-    pub x: MatF32,
+    store: Arc<dyn DataStore>,
     /// Integer class labels.
     pub y: Vec<i32>,
     /// Number of classes.
@@ -25,31 +36,94 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Wrap an in-memory feature matrix (the historical representation).
+    pub fn from_mat(
+        x: MatF32,
+        y: Vec<i32>,
+        classes: usize,
+        difficulty: Vec<f32>,
+        is_noisy: Vec<bool>,
+        cluster: Vec<u32>,
+    ) -> Dataset {
+        Dataset::with_store(Arc::new(MemStore::new(x)), y, classes, difficulty, is_noisy, cluster)
+    }
+
+    /// Wrap an arbitrary feature store. Metadata lengths must match `store.n()`.
+    pub fn with_store(
+        store: Arc<dyn DataStore>,
+        y: Vec<i32>,
+        classes: usize,
+        difficulty: Vec<f32>,
+        is_noisy: Vec<bool>,
+        cluster: Vec<u32>,
+    ) -> Dataset {
+        let n = store.n();
+        assert_eq!(y.len(), n, "labels/store length mismatch");
+        assert_eq!(difficulty.len(), n, "difficulty/store length mismatch");
+        assert_eq!(is_noisy.len(), n, "is_noisy/store length mismatch");
+        assert_eq!(cluster.len(), n, "cluster/store length mismatch");
+        Dataset { store, y, classes, difficulty, is_noisy, cluster }
+    }
+
     /// Number of examples.
     pub fn n(&self) -> usize {
-        self.x.rows
+        self.store.n()
     }
 
     /// Feature dimensionality.
     pub fn d(&self) -> usize {
-        self.x.cols
+        self.store.d()
     }
 
-    /// Gather a sub-dataset by example indices.
+    /// Which store backs the features (`"mem"` or `"mmap"`).
+    pub fn store_kind(&self) -> &'static str {
+        self.store.kind()
+    }
+
+    /// Read `rows` consecutive feature rows starting at `start` into `out`
+    /// (length `rows * d`) — the block-at-a-time access path.
+    pub fn read_block(&self, start: usize, rows: usize, out: &mut [f32]) {
+        self.store.read_rows(start, rows, out);
+    }
+
+    /// Gather the feature rows for `idx` into a caller-provided matrix
+    /// (shape `idx.len() × d`), allocating nothing. Pair with a
+    /// [`crate::kernel::Workspace`] buffer for zero-allocation staging.
+    pub fn gather_into(&self, idx: &[usize], x: &mut MatF32) {
+        assert_eq!(x.rows, idx.len(), "gather_into: row count mismatch");
+        assert_eq!(x.cols, self.d(), "gather_into: width mismatch");
+        self.store.gather_into(idx, &mut x.data);
+    }
+
+    /// Gather a sub-dataset by example indices. The result is always
+    /// RAM-resident (subsets are small working sets: coresets, eval
+    /// slices), regardless of the parent's store.
     pub fn subset(&self, idx: &[usize]) -> Dataset {
-        Dataset {
-            x: self.x.gather_rows(idx),
-            y: idx.iter().map(|&i| self.y[i]).collect(),
-            classes: self.classes,
-            difficulty: idx.iter().map(|&i| self.difficulty[i]).collect(),
-            is_noisy: idx.iter().map(|&i| self.is_noisy[i]).collect(),
-            cluster: idx.iter().map(|&i| self.cluster[i]).collect(),
-        }
+        let (x, y) = self.batch(idx);
+        Dataset::from_mat(
+            x,
+            y,
+            self.classes,
+            idx.iter().map(|&i| self.difficulty[i]).collect(),
+            idx.iter().map(|&i| self.is_noisy[i]).collect(),
+            idx.iter().map(|&i| self.cluster[i]).collect(),
+        )
     }
 
     /// (features, labels) for the given indices — batch assembly.
     pub fn batch(&self, idx: &[usize]) -> (MatF32, Vec<i32>) {
-        (self.x.gather_rows(idx), idx.iter().map(|&i| self.y[i]).collect())
+        let mut x = MatF32::zeros(idx.len(), self.d());
+        self.store.gather_into(idx, &mut x.data);
+        (x, idx.iter().map(|&i| self.y[i]).collect())
+    }
+
+    /// Materialize all features as one resident matrix. Intended for
+    /// tests, the monolithic cache writer and small analysis paths — do
+    /// not call on corpora that only fit via the mmap store.
+    pub fn to_mat(&self) -> MatF32 {
+        let mut x = MatF32::zeros(self.n(), self.d());
+        self.store.read_rows(0, self.n(), &mut x.data);
+        x
     }
 
     /// Class histogram.
@@ -78,14 +152,14 @@ mod tests {
     use super::*;
 
     fn tiny() -> Dataset {
-        Dataset {
-            x: MatF32::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap(),
-            y: vec![0, 1, 0, 1],
-            classes: 2,
-            difficulty: vec![0.1, 0.2, 0.3, 0.4],
-            is_noisy: vec![false, true, false, false],
-            cluster: vec![0, 1, 0, 1],
-        }
+        Dataset::from_mat(
+            MatF32::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap(),
+            vec![0, 1, 0, 1],
+            2,
+            vec![0.1, 0.2, 0.3, 0.4],
+            vec![false, true, false, false],
+            vec![0, 1, 0, 1],
+        )
     }
 
     #[test]
@@ -95,6 +169,7 @@ mod tests {
         assert_eq!(d.y, vec![0, 0]);
         assert_eq!(d.difficulty, vec![0.3, 0.1]);
         assert_eq!(d.cluster, vec![0, 0]);
+        assert_eq!(d.store_kind(), "mem");
     }
 
     #[test]
@@ -102,6 +177,25 @@ mod tests {
         let (x, y) = tiny().batch(&[1, 3]);
         assert_eq!(x.data, vec![1., 1., 3., 3.]);
         assert_eq!(y, vec![1, 1]);
+    }
+
+    #[test]
+    fn gather_into_matches_batch() {
+        let d = tiny();
+        let idx = [3, 0, 2];
+        let (want, _) = d.batch(&idx);
+        let mut got = MatF32::zeros(3, 2);
+        d.gather_into(&idx, &mut got);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn read_block_and_to_mat_agree() {
+        let d = tiny();
+        let mut block = vec![0.0f32; 2 * 2];
+        d.read_block(1, 2, &mut block);
+        assert_eq!(block, vec![1., 1., 2., 2.]);
+        assert_eq!(d.to_mat().data, vec![0., 0., 1., 1., 2., 2., 3., 3.]);
     }
 
     #[test]

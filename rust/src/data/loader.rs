@@ -2,9 +2,11 @@
 //!
 //! Host-side batch assembly (row gathers + label copies) overlaps with XLA
 //! execution: a worker thread materializes upcoming batches into a bounded
-//! channel while the trainer consumes them. This is the streaming-pipeline
-//! substrate of the coordinator; selection methods that
-//! choose their own indices use `Dataset::batch` directly instead.
+//! channel while the trainer consumes them. Batch assembly goes through
+//! `Dataset::batch`, so the worker reads blocks from whichever store backs
+//! the split — with the mmap store this is what overlaps shard I/O with
+//! compute. Selection methods that choose their own indices use
+//! `Dataset::batch` directly instead.
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
@@ -26,16 +28,17 @@ pub struct Batch {
 
 /// Epoch-shuffled prefetching loader over a dataset.
 pub struct Loader {
-    rx: Receiver<Batch>,
+    rx: Option<Receiver<Batch>>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Loader {
     /// Stream `total_batches` batches of size `m`, reshuffling each epoch.
     /// `depth` bounds how many batches may be in flight (backpressure).
+    /// The index stream depends only on `seed`, never on `depth`.
     pub fn spawn(ds: &Dataset, m: usize, total_batches: usize, seed: u64, depth: usize) -> Loader {
         assert!(m <= ds.n(), "batch {} > dataset {}", m, ds.n());
-        let ds = ds.clone();
+        let ds = ds.clone(); // shallow: the feature store is behind an Arc
         let (tx, rx) = sync_channel(depth.max(1));
         let handle = std::thread::spawn(move || {
             let mut rng = Rng::new(seed);
@@ -54,21 +57,27 @@ impl Loader {
                 }
             }
         });
-        Loader { rx, handle: Some(handle) }
+        Loader { rx: Some(rx), handle: Some(handle) }
     }
 
     /// Blocking next; `None` when the planned stream is exhausted.
     pub fn next(&mut self) -> Option<Batch> {
-        self.rx.recv().ok()
+        self.rx.as_ref()?.recv().ok()
     }
 }
 
 impl Drop for Loader {
     fn drop(&mut self) {
-        // Draining is unnecessary: sender exits on send error once rx drops.
+        // Close the channel first so the worker's next send fails and it
+        // exits, then join so worker panics surface here instead of being
+        // silently detached (and so no worker outlives process teardown).
+        self.rx.take();
         if let Some(h) = self.handle.take() {
-            let _ = h;
-            // detach: the worker exits as soon as it observes the closed channel
+            if let Err(panic) = h.join() {
+                if !std::thread::panicking() {
+                    std::panic::resume_unwind(panic);
+                }
+            }
         }
     }
 }
@@ -139,16 +148,40 @@ mod tests {
         let d = ds();
         let mut l = Loader::spawn(&d, 8, 1, 4, 1);
         let b = l.next().unwrap();
-        for (k, &i) in b.idx.iter().enumerate() {
-            assert_eq!(b.x.row(k), d.x.row(i));
-            assert_eq!(b.y[k], d.y[i]);
+        let (want_x, want_y) = d.batch(&b.idx);
+        assert_eq!(b.x.data, want_x.data);
+        assert_eq!(b.y, want_y);
+    }
+
+    #[test]
+    fn early_drop_joins_worker_without_hanging() {
+        let d = ds();
+        // depth 1 keeps the worker blocked mid-send at drop time; deeper
+        // channels exercise the drained/partially-drained paths
+        for depth in [1, 2, 8] {
+            let mut l = Loader::spawn(&d, 16, 1000, 5, depth);
+            if depth > 1 {
+                let _ = l.next(); // consume one, then abandon the rest
+            }
+            drop(l); // Drop must close the channel, then join the worker
         }
     }
 
     #[test]
-    fn early_drop_does_not_hang() {
+    fn index_stream_ignores_channel_depth() {
         let d = ds();
-        let l = Loader::spawn(&d, 16, 1000, 5, 1);
-        drop(l); // worker must exit via send error
+        let drain = |depth: usize| -> Vec<Vec<usize>> {
+            let mut l = Loader::spawn(&d, 10, 25, 9, depth);
+            let mut out = Vec::new();
+            while let Some(b) = l.next() {
+                out.push(b.idx);
+            }
+            out
+        };
+        let base = drain(1);
+        assert_eq!(base.len(), 25);
+        for depth in [2, 4, 16] {
+            assert_eq!(base, drain(depth), "depth {depth} perturbed the stream");
+        }
     }
 }

@@ -1,10 +1,92 @@
-//! Data substrate: datasets, synthetic corpus generation, on-disk cache,
-//! prefetching loader.
+//! Data substrate: pluggable feature stores, sharded on-disk packs,
+//! synthetic corpus generation, on-disk cache, prefetching loader.
+//!
+//! The split preparation entry points ([`prepare_splits`] /
+//! [`prepare_spec_splits`]) honor the session-wide store selection
+//! (`--data-store` / `CREST_DATA_STORE`): under [`StoreKind::Mem`] they
+//! generate resident splits; under [`StoreKind::Mmap`] they lazily pack
+//! the corpus into the sharded format (under `CREST_PACK_DIR`, or the
+//! system temp dir) and hand back mmap-backed handles. Both paths yield
+//! bitwise-identical features, so every report downstream is identical
+//! regardless of store.
 
 pub mod cache;
 pub mod dataset;
 pub mod loader;
+pub mod shard;
+pub mod store;
 pub mod synth;
 
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
 pub use dataset::{Dataset, Splits};
-pub use synth::{generate, SynthSpec};
+pub use store::{default_store, set_default_store, DataStore, MemStore, MmapStore, StoreKind};
+pub use synth::{generate, generate_packed, SynthSpec};
+
+/// Root directory for lazily packed corpora: `CREST_PACK_DIR` if set,
+/// else `<tmp>/crest-pack`.
+pub fn pack_root() -> PathBuf {
+    match std::env::var("CREST_PACK_DIR") {
+        Ok(dir) if !dir.is_empty() => PathBuf::from(dir),
+        _ => std::env::temp_dir().join("crest-pack"),
+    }
+}
+
+/// Materialize the splits for `spec` through the session's default store.
+pub fn prepare_spec_splits(spec: &SynthSpec) -> Result<Arc<Splits>> {
+    match default_store() {
+        StoreKind::Mem => Ok(Arc::new(generate(spec))),
+        StoreKind::Mmap => {
+            let root = pack_root().join(format!("{}-s{}", spec.name, spec.seed));
+            generate_packed(spec, &root, shard::DEFAULT_SHARD_ROWS)
+                .with_context(|| format!("packing corpus at {root:?}"))?;
+            let splits = shard::load_packed_splits(&root)
+                .with_context(|| format!("loading packed corpus at {root:?}"))?;
+            Ok(Arc::new(splits))
+        }
+    }
+}
+
+/// Materialize the splits for a named variant + seed through the
+/// session's default store.
+pub fn prepare_splits(variant: &str, seed: u64) -> Result<Arc<Splits>> {
+    let Some(spec) = SynthSpec::preset(variant, seed) else {
+        bail!("unknown data variant '{variant}'");
+    };
+    prepare_spec_splits(&spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prepare_splits_rejects_unknown_variant() {
+        assert!(prepare_splits("bogus", 0).is_err());
+    }
+
+    #[test]
+    fn prepare_splits_honors_store_kinds() {
+        let base = SynthSpec::preset("smoke", 77).unwrap();
+        let spec = SynthSpec { n_train: 64, n_val: 16, n_test: 16, ..base };
+        let prev = default_store();
+        set_default_store(StoreKind::Mem);
+        let mem = prepare_spec_splits(&spec).unwrap();
+        assert_eq!(mem.train.store_kind(), "mem");
+        // route the lazy pack to a private dir so parallel tests can't collide
+        let dir = std::env::temp_dir().join(format!("crest_prepare_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::env::set_var("CREST_PACK_DIR", &dir);
+        set_default_store(StoreKind::Mmap);
+        let mm = prepare_spec_splits(&spec).unwrap();
+        std::env::remove_var("CREST_PACK_DIR");
+        set_default_store(prev);
+        assert_eq!(mm.train.store_kind(), "mmap");
+        assert_eq!(mem.train.to_mat().data, mm.train.to_mat().data);
+        assert_eq!(mem.val.y, mm.val.y);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

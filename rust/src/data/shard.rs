@@ -1,0 +1,398 @@
+//! The sharded on-disk dataset format behind [`super::store::MmapStore`].
+//!
+//! A packed split is a directory:
+//!
+//! ```text
+//! meta.json        {"version":1,"n":…,"d":…,"classes":…,"shard_rows":…,"n_shards":…}
+//! labels.bin       magic "CRSTSH1\0", n u64, then y (n i32le),
+//!                  difficulty (n f32le), is_noisy (n u8), cluster (n u32le)
+//! shard_00000.bin  raw f32le feature rows (shard_rows rows; last may be short)
+//! …
+//! ```
+//!
+//! Feature shards carry no header so every row offset is a multiple of 4
+//! and a mapping can be indexed directly; all bookkeeping lives in
+//! `meta.json`. Labels and provenance stay RAM-resident (13 bytes/example
+//! — ~13 MB at 10^6 examples) while features, the dominant `n*d` payload,
+//! go through the store. Unlike the monolithic [`super::cache`] format
+//! there is no element-count cap: shards are what `crest pack` and the
+//! ≥10^6-example scaling scenario write.
+//!
+//! All sizes are validated against file metadata up front, so truncated
+//! or corrupt packs fail loudly at load instead of mid-training.
+
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::{Dataset, Splits};
+use crate::data::store::MmapStore;
+use crate::util::json::Json;
+
+/// Default rows per shard file (`8192 * d * 4` bytes per shard).
+pub const DEFAULT_SHARD_ROWS: usize = 8192;
+
+const LABELS_MAGIC: &[u8; 8] = b"CRSTSH1\0";
+
+/// Shard-file name of shard `s`.
+pub fn shard_file(s: usize) -> String {
+    format!("shard_{s:05}.bin")
+}
+
+/// The parsed `meta.json` of one packed split.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackMeta {
+    /// Examples in the split.
+    pub n: usize,
+    /// Feature dimensionality.
+    pub d: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Rows per shard (last shard may be short).
+    pub shard_rows: usize,
+    /// Number of shard files.
+    pub n_shards: usize,
+}
+
+impl PackMeta {
+    fn new(n: usize, d: usize, classes: usize, shard_rows: usize) -> PackMeta {
+        let n_shards = if n == 0 { 0 } else { (n + shard_rows - 1) / shard_rows };
+        PackMeta { n, d, classes, shard_rows, n_shards }
+    }
+
+    fn save(&self, dir: &Path) -> Result<()> {
+        let j = Json::obj()
+            .set("version", 1usize)
+            .set("n", self.n)
+            .set("d", self.d)
+            .set("classes", self.classes)
+            .set("shard_rows", self.shard_rows)
+            .set("n_shards", self.n_shards);
+        std::fs::write(dir.join("meta.json"), j.to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Read and validate a packed split's `meta.json`.
+    pub fn load(dir: &Path) -> Result<PackMeta> {
+        let path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
+        let version = j.req("version")?.as_usize()?;
+        if version != 1 {
+            bail!("{path:?}: unsupported pack version {version}");
+        }
+        let meta = PackMeta::new(
+            j.req("n")?.as_usize()?,
+            j.req("d")?.as_usize()?,
+            j.req("classes")?.as_usize()?,
+            j.req("shard_rows")?.as_usize()?,
+        );
+        if meta.n_shards != j.req("n_shards")?.as_usize()? {
+            bail!("{path:?}: n_shards inconsistent with n and shard_rows");
+        }
+        if meta.shard_rows == 0 && meta.n > 0 {
+            bail!("{path:?}: shard_rows must be positive");
+        }
+        Ok(meta)
+    }
+}
+
+// ------------------------------------------------------------------ write
+
+/// Incremental writer for one packed split: rows stream in block by
+/// block, labels/provenance accumulate in RAM, and [`SplitWriter::finish`]
+/// seals the directory. Used by [`pack_dataset`] and by the streaming
+/// synthesis path ([`crate::data::synth::generate_packed`]), so a corpus
+/// never has to be resident to be packed.
+pub struct SplitWriter {
+    dir: PathBuf,
+    meta: PackMeta,
+    rows_written: usize,
+    shard: Option<BufWriter<std::fs::File>>,
+    shard_idx: usize,
+    rows_in_shard: usize,
+    y: Vec<i32>,
+    difficulty: Vec<f32>,
+    is_noisy: Vec<bool>,
+    cluster: Vec<u32>,
+}
+
+impl SplitWriter {
+    /// Start a packed split of `n` rows at `dir` (created if missing).
+    pub fn create(
+        dir: &Path,
+        n: usize,
+        d: usize,
+        classes: usize,
+        shard_rows: usize,
+    ) -> Result<Self> {
+        if shard_rows == 0 {
+            bail!("shard_rows must be positive");
+        }
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(SplitWriter {
+            dir: dir.to_path_buf(),
+            meta: PackMeta::new(n, d, classes, shard_rows),
+            rows_written: 0,
+            shard: None,
+            shard_idx: 0,
+            rows_in_shard: 0,
+            y: Vec::with_capacity(n),
+            difficulty: Vec::with_capacity(n),
+            is_noisy: Vec::with_capacity(n),
+            cluster: Vec::with_capacity(n),
+        })
+    }
+
+    /// Append one example (feature row + labels/provenance).
+    pub fn push_row(
+        &mut self,
+        row: &[f32],
+        y: i32,
+        difficulty: f32,
+        noisy: bool,
+        cluster: u32,
+    ) -> Result<()> {
+        if row.len() != self.meta.d {
+            bail!("row has {} features, pack wants {}", row.len(), self.meta.d);
+        }
+        if self.rows_written >= self.meta.n {
+            bail!("pack already holds the declared {} rows", self.meta.n);
+        }
+        if self.shard.is_none() {
+            let path = self.dir.join(shard_file(self.shard_idx));
+            let f = std::fs::File::create(&path).with_context(|| format!("create {path:?}"))?;
+            self.shard = Some(BufWriter::new(f));
+            self.rows_in_shard = 0;
+        }
+        let w = self.shard.as_mut().expect("shard writer opened above");
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        self.rows_in_shard += 1;
+        self.rows_written += 1;
+        if self.rows_in_shard == self.meta.shard_rows {
+            self.shard.take().expect("open shard").flush()?;
+            self.shard_idx += 1;
+        }
+        self.y.push(y);
+        self.difficulty.push(difficulty);
+        self.is_noisy.push(noisy);
+        self.cluster.push(cluster);
+        Ok(())
+    }
+
+    /// Flush the tail shard, write `labels.bin` and `meta.json`.
+    pub fn finish(mut self) -> Result<PackMeta> {
+        if self.rows_written != self.meta.n {
+            bail!("pack got {} of the declared {} rows", self.rows_written, self.meta.n);
+        }
+        if let Some(mut w) = self.shard.take() {
+            w.flush()?;
+        }
+        let path = self.dir.join("labels.bin");
+        let mut w = BufWriter::new(std::fs::File::create(&path)?);
+        w.write_all(LABELS_MAGIC)?;
+        w.write_all(&(self.meta.n as u64).to_le_bytes())?;
+        for v in &self.y {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for v in &self.difficulty {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for &b in &self.is_noisy {
+            w.write_all(&[b as u8])?;
+        }
+        for v in &self.cluster {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()?;
+        self.meta.save(&self.dir)?;
+        Ok(self.meta)
+    }
+}
+
+/// Pack an in-memory dataset into the sharded format at `dir`. Features
+/// stream through a block buffer, so this also works for re-packing an
+/// already disk-backed dataset without materializing it.
+pub fn pack_dataset(ds: &Dataset, dir: &Path, shard_rows: usize) -> Result<PackMeta> {
+    let (n, d) = (ds.n(), ds.d());
+    let mut w = SplitWriter::create(dir, n, d, ds.classes, shard_rows)?;
+    let block = shard_rows.min(n.max(1));
+    let mut buf = vec![0.0f32; block * d];
+    let mut start = 0;
+    while start < n {
+        let rows = block.min(n - start);
+        ds.read_block(start, rows, &mut buf[..rows * d]);
+        for k in 0..rows {
+            let i = start + k;
+            let row = &buf[k * d..(k + 1) * d];
+            w.push_row(row, ds.y[i], ds.difficulty[i], ds.is_noisy[i], ds.cluster[i])?;
+        }
+        start += rows;
+    }
+    w.finish()
+}
+
+/// Pack all three splits under `root` (`root/train`, `root/val`,
+/// `root/test`).
+pub fn pack_splits(splits: &Splits, root: &Path, shard_rows: usize) -> Result<()> {
+    for (name, ds) in [("train", &splits.train), ("val", &splits.val), ("test", &splits.test)] {
+        pack_dataset(ds, &root.join(name), shard_rows)?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- read
+
+fn load_labels(dir: &Path, n: usize) -> Result<(Vec<i32>, Vec<f32>, Vec<bool>, Vec<u32>)> {
+    let path = dir.join("labels.bin");
+    let file = std::fs::File::open(&path).with_context(|| format!("open {path:?}"))?;
+    let want = 16 + (n as u64) * 13;
+    let got = file.metadata()?.len();
+    if got != want {
+        bail!("{path:?}: {got} bytes on disk, expected {want} for n={n}");
+    }
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != LABELS_MAGIC {
+        bail!("{path:?}: bad magic (not a CREST shard-labels file)");
+    }
+    let mut nbuf = [0u8; 8];
+    r.read_exact(&mut nbuf)?;
+    if u64::from_le_bytes(nbuf) != n as u64 {
+        bail!("{path:?}: row count disagrees with meta.json");
+    }
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    let y = buf.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+    r.read_exact(&mut buf)?;
+    let difficulty =
+        buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    let mut bbuf = vec![0u8; n];
+    r.read_exact(&mut bbuf)?;
+    let is_noisy = bbuf.iter().map(|&b| b != 0).collect();
+    r.read_exact(&mut buf)?;
+    let cluster = buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    Ok((y, difficulty, is_noisy, cluster))
+}
+
+/// Load one packed split as an mmap-backed [`Dataset`]. Features stay on
+/// disk behind [`MmapStore`]; labels and provenance load into RAM.
+pub fn load_packed(dir: &Path) -> Result<Dataset> {
+    let meta = PackMeta::load(dir)?;
+    let (y, difficulty, is_noisy, cluster) = load_labels(dir, meta.n)?;
+    let paths: Vec<PathBuf> = (0..meta.n_shards).map(|s| dir.join(shard_file(s))).collect();
+    let store = MmapStore::open(&paths, meta.n, meta.d, meta.shard_rows.max(1))
+        .with_context(|| format!("opening shards under {dir:?}"))?;
+    Ok(Dataset::with_store(Arc::new(store), y, meta.classes, difficulty, is_noisy, cluster))
+}
+
+/// Load all three packed splits under `root`.
+pub fn load_packed_splits(root: &Path) -> Result<Splits> {
+    Ok(Splits {
+        train: load_packed(&root.join("train"))?,
+        val: load_packed(&root.join("val"))?,
+        test: load_packed(&root.join("test"))?,
+    })
+}
+
+/// True when `root` holds all three packed splits.
+pub fn is_packed(root: &Path) -> bool {
+    ["train", "val", "test"].iter().all(|s| root.join(s).join("meta.json").exists())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn tdir(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("crest_shard_test_{}_{name}", std::process::id()))
+    }
+
+    fn small() -> SynthSpec {
+        SynthSpec {
+            name: "t",
+            n_train: 130,
+            n_val: 17,
+            n_test: 9,
+            d: 6,
+            classes: 3,
+            clusters_per_class: 2,
+            redundancy: 0.5,
+            label_noise: 0.1,
+            margin: 2.0,
+            easy_sigma: 0.3,
+            hard_sigma: 1.0,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn pack_load_roundtrip_bitwise() {
+        let splits = generate(&small());
+        let root = tdir("roundtrip");
+        let _ = std::fs::remove_dir_all(&root);
+        // shard_rows=32 gives a short tail shard on every split
+        pack_splits(&splits, &root, 32).unwrap();
+        let back = load_packed_splits(&root).unwrap();
+        for (a, b) in [
+            (&splits.train, &back.train),
+            (&splits.val, &back.val),
+            (&splits.test, &back.test),
+        ] {
+            assert_eq!(b.store_kind(), "mmap");
+            assert_eq!(a.to_mat().data, b.to_mat().data);
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.difficulty, b.difficulty);
+            assert_eq!(a.is_noisy, b.is_noisy);
+            assert_eq!(a.cluster, b.cluster);
+            assert_eq!(a.classes, b.classes);
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn load_rejects_truncated_labels_and_shards() {
+        let splits = generate(&small());
+        let root = tdir("trunc");
+        let _ = std::fs::remove_dir_all(&root);
+        pack_splits(&splits, &root, 64).unwrap();
+        // truncated labels sidecar: caught by the up-front size check
+        let labels = root.join("val").join("labels.bin");
+        let bytes = std::fs::read(&labels).unwrap();
+        std::fs::write(&labels, &bytes[..bytes.len() - 3]).unwrap();
+        let err = load_packed(&root.join("val")).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        // truncated feature shard: caught when the store opens
+        let shard = root.join("train").join(shard_file(0));
+        let bytes = std::fs::read(&shard).unwrap();
+        std::fs::write(&shard, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_packed(&root.join("train")).is_err());
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn writer_enforces_declared_row_count() {
+        let root = tdir("count");
+        let _ = std::fs::remove_dir_all(&root);
+        let mut w = SplitWriter::create(&root, 2, 3, 2, 8).unwrap();
+        w.push_row(&[0.0, 1.0, 2.0], 0, 0.0, false, 0).unwrap();
+        // short: finish must refuse
+        let err = SplitWriter::create(&tdir("count2"), 2, 3, 2, 8).unwrap().finish().unwrap_err();
+        assert!(format!("{err:#}").contains("declared"));
+        // wrong width
+        assert!(w.push_row(&[0.0], 1, 0.0, false, 0).is_err());
+        w.push_row(&[3.0, 4.0, 5.0], 1, 0.5, true, 1).unwrap();
+        // overflow
+        assert!(w.push_row(&[6.0, 7.0, 8.0], 0, 0.0, false, 0).is_err());
+        let meta = w.finish().unwrap();
+        assert_eq!((meta.n, meta.n_shards), (2, 1));
+        std::fs::remove_dir_all(&root).ok();
+        std::fs::remove_dir_all(tdir("count2")).ok();
+    }
+}

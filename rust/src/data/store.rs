@@ -1,0 +1,483 @@
+//! Pluggable feature storage — the out-of-core substrate under `Dataset`.
+//!
+//! A [`DataStore`] owns the feature matrix of one split and serves it
+//! through chunked block reads, so everything above (batch gathers,
+//! subsetting, the prefetching loader, selection embeddings) is agnostic
+//! to whether rows live in RAM or in sharded files on disk:
+//!
+//! * [`MemStore`] — the historical in-RAM `MatF32` (zero-cost reads);
+//! * [`MmapStore`] — fixed-size row shards written by `crest pack` (see
+//!   [`super::shard`]), memory-mapped read-only via a raw `mmap(2)` FFI
+//!   call, degrading per shard to `pread(2)` when mapping fails and to a
+//!   resident buffer on non-unix hosts.
+//!
+//! Shard payloads are raw little-endian f32 rows, so a read decodes to
+//! exactly the bytes synthesis produced — mem- and mmap-backed runs are
+//! bitwise-identical by construction (asserted by the `data_store`
+//! integration tests).
+//!
+//! The process-wide default backend is selected with
+//! [`set_default_store`] (`--data-store` / `CREST_DATA_STORE`); consumers
+//! go through [`crate::data::prepare_splits`].
+
+use std::fmt;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::MatF32;
+
+/// Feature storage of one split: `n` rows of `d` f32 features, served
+/// through block reads.
+pub trait DataStore: Send + Sync + fmt::Debug {
+    /// Number of rows.
+    fn n(&self) -> usize;
+
+    /// Feature dimensionality (row width).
+    fn d(&self) -> usize;
+
+    /// Backend name for reports and tests (`"mem"` / `"mmap"`).
+    fn kind(&self) -> &'static str;
+
+    /// Copy the contiguous block of `rows` rows starting at `start` into
+    /// `out` (`rows * d` elements).
+    fn read_rows(&self, start: usize, rows: usize, out: &mut [f32]);
+
+    /// Gather arbitrary rows into `out` (`idx.len() * d` elements) — the
+    /// batch-assembly primitive. The default goes row by row through
+    /// [`DataStore::read_rows`]; backends override with cheaper paths.
+    fn gather_into(&self, idx: &[usize], out: &mut [f32]) {
+        let d = self.d();
+        debug_assert_eq!(out.len(), idx.len() * d);
+        for (k, &i) in idx.iter().enumerate() {
+            self.read_rows(i, 1, &mut out[k * d..(k + 1) * d]);
+        }
+    }
+}
+
+// ------------------------------------------------------------------- mem
+
+/// The in-RAM store: a plain row-major `MatF32` (the pre-refactor
+/// representation, now behind the trait).
+#[derive(Debug)]
+pub struct MemStore {
+    x: MatF32,
+}
+
+impl MemStore {
+    /// Wrap an in-memory feature matrix.
+    pub fn new(x: MatF32) -> MemStore {
+        MemStore { x }
+    }
+}
+
+impl DataStore for MemStore {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    fn d(&self) -> usize {
+        self.x.cols
+    }
+
+    fn kind(&self) -> &'static str {
+        "mem"
+    }
+
+    fn read_rows(&self, start: usize, rows: usize, out: &mut [f32]) {
+        let d = self.x.cols;
+        out[..rows * d].copy_from_slice(&self.x.data[start * d..(start + rows) * d]);
+    }
+
+    fn gather_into(&self, idx: &[usize], out: &mut [f32]) {
+        let d = self.x.cols;
+        debug_assert_eq!(out.len(), idx.len() * d);
+        for (o, &i) in out.chunks_exact_mut(d).zip(idx) {
+            o.copy_from_slice(self.x.row(i));
+        }
+    }
+}
+
+// ------------------------------------------------------------------ mmap
+
+/// Decode packed little-endian f32 bytes into `dst`.
+pub(crate) fn decode_f32le(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 4);
+    for (o, c) in dst.iter_mut().zip(src.chunks_exact(4)) {
+        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+}
+
+#[cfg(unix)]
+#[allow(unsafe_code)] // the crate-wide deny's one exception: raw mmap(2)
+mod mm {
+    //! Minimal read-only `mmap(2)` binding. The offline crate registry has
+    //! no `libc`/`memmap2`, so the two syscalls are declared directly;
+    //! constants are the Linux/BSD values for a read-only private mapping.
+    use std::ffi::c_void;
+    use std::os::unix::io::AsRawFd;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// One read-only private mapping of a whole shard file.
+    pub struct Mapping {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+    // lifetime, so sharing the pointer across threads is sound.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        /// Map `len` bytes of `file` read-only; `None` when the kernel
+        /// refuses (callers fall back to pread).
+        pub fn map(file: &std::fs::File, len: usize) -> Option<Mapping> {
+            if len == 0 {
+                return None;
+            }
+            let p = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if p.is_null() || p as isize == -1 {
+                return None;
+            }
+            Some(Mapping { ptr: p as *const u8, len })
+        }
+
+        /// The mapped bytes.
+        pub fn bytes(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr as *mut c_void, self.len);
+            }
+        }
+    }
+
+    impl std::fmt::Debug for Mapping {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Mapping({} bytes)", self.len)
+        }
+    }
+}
+
+/// How one shard's bytes are served.
+#[derive(Debug)]
+enum ShardData {
+    /// Memory-mapped read-only (the fast path).
+    #[cfg(unix)]
+    Mapped(mm::Mapping),
+    /// Positional reads (`pread`) when the kernel refuses to map.
+    #[cfg(unix)]
+    Pread(std::fs::File),
+    /// Whole shard resident in RAM — the non-unix fallback (also keeps
+    /// the store usable where neither mmap nor pread exists).
+    #[allow(dead_code)]
+    Resident(Vec<f32>),
+}
+
+#[derive(Debug)]
+struct Shard {
+    data: ShardData,
+    rows: usize,
+}
+
+/// Sharded on-disk store: fixed-size row chunks, one raw-f32le file per
+/// shard, written by [`super::shard::pack_dataset`].
+#[derive(Debug)]
+pub struct MmapStore {
+    n: usize,
+    d: usize,
+    shard_rows: usize,
+    shards: Vec<Shard>,
+}
+
+impl MmapStore {
+    /// Open the shard files of one split. `paths` must be in shard order;
+    /// shard `s` holds rows `[s*shard_rows, min((s+1)*shard_rows, n))`.
+    /// Each file's size is validated against its expected row count up
+    /// front, so a truncated shard fails here with a clear error instead
+    /// of mid-training.
+    pub fn open(
+        paths: &[std::path::PathBuf],
+        n: usize,
+        d: usize,
+        shard_rows: usize,
+    ) -> Result<Self> {
+        if shard_rows == 0 {
+            bail!("shard_rows must be positive");
+        }
+        let want_shards = if n == 0 { 0 } else { (n + shard_rows - 1) / shard_rows };
+        if paths.len() != want_shards {
+            bail!(
+                "expected {want_shards} shard files for n={n} shard_rows={shard_rows}, got {}",
+                paths.len()
+            );
+        }
+        let mut shards = Vec::with_capacity(paths.len());
+        for (s, path) in paths.iter().enumerate() {
+            let rows = shard_rows.min(n - s * shard_rows);
+            let want = (rows as u64) * (d as u64) * 4;
+            let file = std::fs::File::open(path)
+                .map_err(|e| anyhow::anyhow!("open shard {path:?}: {e}"))?;
+            let got = file.metadata()?.len();
+            if got != want {
+                bail!(
+                    "shard {path:?}: {got} bytes on disk, expected {want} ({rows} rows x {d} f32)"
+                );
+            }
+            shards.push(Shard { data: Self::shard_data(file, want as usize), rows });
+        }
+        Ok(MmapStore { n, d, shard_rows, shards })
+    }
+
+    #[cfg(unix)]
+    fn shard_data(file: std::fs::File, len: usize) -> ShardData {
+        match mm::Mapping::map(&file, len) {
+            Some(m) => ShardData::Mapped(m),
+            None => ShardData::Pread(file),
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn shard_data(mut file: std::fs::File, len: usize) -> ShardData {
+        use std::io::Read;
+        let mut bytes = vec![0u8; len];
+        file.read_exact(&mut bytes).expect("shard size validated above");
+        let mut vals = vec![0.0f32; len / 4];
+        decode_f32le(&bytes, &mut vals);
+        ShardData::Resident(vals)
+    }
+
+    /// Rows per shard (the pack-time chunking).
+    pub fn shard_rows(&self) -> usize {
+        self.shard_rows
+    }
+
+    /// Read `rows` rows starting at local row `row0` of shard `s`.
+    fn read_shard(&self, s: usize, row0: usize, rows: usize, out: &mut [f32]) {
+        let d = self.d;
+        let shard = &self.shards[s];
+        debug_assert!(row0 + rows <= shard.rows);
+        match &shard.data {
+            #[cfg(unix)]
+            ShardData::Mapped(m) => {
+                let bytes = &m.bytes()[row0 * d * 4..(row0 + rows) * d * 4];
+                decode_f32le(bytes, &mut out[..rows * d]);
+            }
+            #[cfg(unix)]
+            ShardData::Pread(file) => {
+                use std::os::unix::fs::FileExt;
+                let mut bytes = vec![0u8; rows * d * 4];
+                file.read_exact_at(&mut bytes, (row0 * d * 4) as u64)
+                    .expect("shard size validated at open");
+                decode_f32le(&bytes, &mut out[..rows * d]);
+            }
+            ShardData::Resident(vals) => {
+                out[..rows * d].copy_from_slice(&vals[row0 * d..(row0 + rows) * d]);
+            }
+        }
+    }
+}
+
+impl DataStore for MmapStore {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn kind(&self) -> &'static str {
+        "mmap"
+    }
+
+    fn read_rows(&self, start: usize, rows: usize, out: &mut [f32]) {
+        debug_assert!(start + rows <= self.n);
+        // split the block at shard boundaries
+        let (d, mut row, mut done) = (self.d, start, 0usize);
+        while done < rows {
+            let s = row / self.shard_rows;
+            let local = row - s * self.shard_rows;
+            let take = (self.shard_rows - local).min(rows - done);
+            self.read_shard(s, local, take, &mut out[done * d..(done + take) * d]);
+            row += take;
+            done += take;
+        }
+    }
+
+    fn gather_into(&self, idx: &[usize], out: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(out.len(), idx.len() * d);
+        // coalesce runs of consecutive indices into one block read per
+        // run — epoch-ordered and chunked access patterns touch each
+        // shard once instead of once per row
+        let mut k = 0;
+        while k < idx.len() {
+            let start = idx[k];
+            let mut run = 1;
+            while k + run < idx.len() && idx[k + run] == start + run {
+                run += 1;
+            }
+            self.read_rows(start, run, &mut out[k * d..(k + run) * d]);
+            k += run;
+        }
+    }
+}
+
+// ------------------------------------------------- default-store plumbing
+
+/// Which [`DataStore`] backend [`crate::data::prepare_splits`] builds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreKind {
+    /// In-RAM features (the default).
+    Mem,
+    /// Sharded on-disk features, memory-mapped.
+    Mmap,
+}
+
+impl StoreKind {
+    /// Parse a CLI/env value (`mem` | `mmap`).
+    pub fn parse(s: &str) -> Result<StoreKind> {
+        match s {
+            "mem" => Ok(StoreKind::Mem),
+            "mmap" => Ok(StoreKind::Mmap),
+            other => bail!("unknown data store {other:?} (expected mem|mmap)"),
+        }
+    }
+
+    /// Canonical name (`"mem"` / `"mmap"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreKind::Mem => "mem",
+            StoreKind::Mmap => "mmap",
+        }
+    }
+}
+
+fn kind_cell() -> &'static RwLock<StoreKind> {
+    static KIND: OnceLock<RwLock<StoreKind>> = OnceLock::new();
+    KIND.get_or_init(|| {
+        let k = std::env::var("CREST_DATA_STORE")
+            .ok()
+            .and_then(|v| StoreKind::parse(&v).ok())
+            .unwrap_or(StoreKind::Mem);
+        RwLock::new(k)
+    })
+}
+
+/// The process-wide default store backend (`CREST_DATA_STORE` at first
+/// use, unless overridden by [`set_default_store`]).
+pub fn default_store() -> StoreKind {
+    *kind_cell().read().unwrap()
+}
+
+/// Override the process-wide default store backend (the `--data-store`
+/// flag lands here).
+pub fn set_default_store(kind: StoreKind) {
+    *kind_cell().write().unwrap() = kind;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize) -> MatF32 {
+        let data: Vec<f32> = (0..rows * cols).map(|i| i as f32 * 0.5 - 3.0).collect();
+        MatF32::from_vec(rows, cols, data).unwrap()
+    }
+
+    fn write_shards(x: &MatF32, shard_rows: usize, tag: &str) -> Vec<std::path::PathBuf> {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir().join(format!("crest_store_test_{pid}_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        let mut start = 0;
+        let mut s = 0;
+        while start < x.rows {
+            let rows = shard_rows.min(x.rows - start);
+            let mut bytes = Vec::with_capacity(rows * x.cols * 4);
+            for v in &x.data[start * x.cols..(start + rows) * x.cols] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            let p = dir.join(format!("shard_{s:05}.bin"));
+            std::fs::write(&p, bytes).unwrap();
+            paths.push(p);
+            start += rows;
+            s += 1;
+        }
+        paths
+    }
+
+    #[test]
+    fn mem_and_mmap_serve_identical_bytes() {
+        let x = mat(23, 5);
+        let paths = write_shards(&x, 7, "ident");
+        let mem = MemStore::new(x.clone());
+        let mm = MmapStore::open(&paths, 23, 5, 7).unwrap();
+        assert_eq!(mm.kind(), "mmap");
+        assert_eq!((mm.n(), mm.d()), (23, 5));
+        // block reads across shard boundaries
+        for &(start, rows) in &[(0usize, 23usize), (5, 10), (6, 1), (20, 3), (0, 7), (7, 7)] {
+            let mut a = vec![0.0f32; rows * 5];
+            let mut b = vec![0.0f32; rows * 5];
+            mem.read_rows(start, rows, &mut a);
+            mm.read_rows(start, rows, &mut b);
+            assert_eq!(a, b, "block ({start},{rows})");
+        }
+        // gathers, including runs that coalesce and wrap shards
+        let idx = vec![22, 0, 1, 2, 6, 7, 8, 13, 13, 5];
+        let mut a = vec![0.0f32; idx.len() * 5];
+        let mut b = vec![0.0f32; idx.len() * 5];
+        mem.gather_into(&idx, &mut a);
+        mm.gather_into(&idx, &mut b);
+        assert_eq!(a, b);
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn open_rejects_wrong_sized_shards() {
+        let x = mat(10, 3);
+        let paths = write_shards(&x, 4, "badsize");
+        // truncate the middle shard
+        let bytes = std::fs::read(&paths[1]).unwrap();
+        std::fs::write(&paths[1], &bytes[..bytes.len() - 4]).unwrap();
+        let err = MmapStore::open(&paths, 10, 3, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        // wrong shard count
+        assert!(MmapStore::open(&paths[..2], 10, 3, 4).is_err());
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn store_kind_parse_roundtrip() {
+        assert_eq!(StoreKind::parse("mem").unwrap(), StoreKind::Mem);
+        assert_eq!(StoreKind::parse("mmap").unwrap(), StoreKind::Mmap);
+        assert!(StoreKind::parse("tape").is_err());
+        assert_eq!(StoreKind::Mmap.name(), "mmap");
+    }
+}

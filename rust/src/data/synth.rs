@@ -14,8 +14,23 @@
 //!
 //! Per-example ground truth (difficulty, noise flag, cluster id) is kept as
 //! metadata for the analysis benches.
+//!
+//! Two emission paths share one row generator ([`Synth`]): [`generate`]
+//! materializes the corpus in RAM, and [`generate_packed`] streams it
+//! straight into the sharded on-disk format so the ≥10^6-example scaling
+//! corpora never have to be resident. Both consume the RNG streams in the
+//! same order and normalize with the same f64 accumulation sequence, so
+//! packing a generated corpus and streaming one are bitwise identical —
+//! the mem-vs-mmap determinism tests rely on this.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
 
 use crate::data::dataset::{Dataset, Splits};
+use crate::data::shard::{self, shard_file, PackMeta, SplitWriter};
+use crate::data::store::decode_f32le;
 use crate::tensor::MatF32;
 use crate::util::rng::Rng;
 
@@ -140,7 +155,15 @@ impl SynthSpec {
     }
 }
 
-/// Generate the train/val/test splits for a spec.
+/// One generated example's labels and provenance.
+struct RowMeta {
+    y: i32,
+    difficulty: f32,
+    is_noisy: bool,
+    cluster: u32,
+}
+
+/// The shared row generator: cluster geometry plus the generation RNG.
 ///
 /// Geometry: a "Gaussian checkerboard". Sub-cluster centers are scattered
 /// i.i.d. in a low-dimensional latent subspace (dimension grows with the
@@ -149,66 +172,92 @@ impl SynthSpec {
 /// per sub-cluster. That is what makes convergence take many epochs
 /// (one-blob-per-class mixtures are fit by an MLP in a few hundred steps)
 /// while keeping the redundancy/difficulty structure coresets exploit.
-pub fn generate(spec: &SynthSpec) -> Splits {
-    let mut rng = Rng::new(spec.seed ^ 0xC0FF_EE00);
-    let k = spec.clusters_per_class;
-    let n_clusters = spec.classes * k;
-    // latent subspace dimension: enough to scatter clusters, far below d
-    let latent = ((n_clusters as f32).log2() as usize + 3).min(spec.d);
-    let mut sub = MatF32::zeros(n_clusters, spec.d);
-    for cl in 0..n_clusters {
-        let row = sub.row_mut(cl);
-        for v in row.iter_mut().take(latent) {
-            *v = rng.normal() * spec.margin * 2.0;
+struct Synth {
+    spec: SynthSpec,
+    sub: MatF32,
+    latent: usize,
+    n_clusters: usize,
+    rng: Rng,
+}
+
+impl Synth {
+    fn new(spec: &SynthSpec) -> Synth {
+        let mut rng = Rng::new(spec.seed ^ 0xC0FF_EE00);
+        let k = spec.clusters_per_class;
+        let n_clusters = spec.classes * k;
+        // latent subspace dimension: enough to scatter clusters, far below d
+        let latent = ((n_clusters as f32).log2() as usize + 3).min(spec.d);
+        let mut sub = MatF32::zeros(n_clusters, spec.d);
+        for cl in 0..n_clusters {
+            let row = sub.row_mut(cl);
+            for v in row.iter_mut().take(latent) {
+                *v = rng.normal() * spec.margin * 2.0;
+            }
+            // tiny off-subspace jitter keeps the embedding full-rank
+            for v in row.iter_mut().skip(latent) {
+                *v = rng.normal() * 0.01;
+            }
         }
-        // tiny off-subspace jitter keeps the embedding full-rank
-        for v in row.iter_mut().skip(latent) {
-            *v = rng.normal() * 0.01;
-        }
+        Synth { spec: spec.clone(), sub, latent, n_clusters, rng }
     }
 
-    let gen_split = |n: usize, rng: &mut Rng| -> Dataset {
-        let mut x = MatF32::zeros(n, spec.d);
+    /// Emit the next example's (un-normalized) features into `row`.
+    fn gen_row(&mut self, row: &mut [f32]) -> RowMeta {
+        let spec = &self.spec;
+        // round-robin label assignment over scattered clusters
+        let cl = self.rng.gen_range(self.n_clusters);
+        let c = cl % spec.classes;
+        let easy = self.rng.uniform() < spec.redundancy;
+        let sigma = if easy { spec.easy_sigma } else { spec.hard_sigma };
+        let center = self.sub.row(cl);
+        let mut dist2 = 0.0f32;
+        // displacement lives in the latent subspace (plus tiny ambient
+        // noise) so "hard" means near a *different* cluster's region
+        for (j, (o, &b)) in row.iter_mut().zip(center).enumerate() {
+            let scale = if j < self.latent { sigma } else { 0.05 };
+            let noise = self.rng.normal() * scale;
+            *o = b + noise;
+            dist2 += noise * noise;
+        }
+        // difficulty: displacement relative to cluster spacing, in [0,1)
+        let rel = dist2.sqrt() / (spec.margin * 2.0 * (self.latent as f32).sqrt());
+        let mut difficulty = rel / (1.0 + rel);
+        let mut label = c;
+        let mut is_noisy = false;
+        if self.rng.uniform() < spec.label_noise {
+            label = (c + 1 + self.rng.gen_range(spec.classes - 1)) % spec.classes;
+            is_noisy = true;
+            difficulty = 1.0; // mislabeled = unlearnable without memorizing
+        }
+        RowMeta { y: label as i32, difficulty, is_noisy, cluster: cl as u32 }
+    }
+
+    fn gen_split(&mut self, n: usize) -> Dataset {
+        let spec_d = self.spec.d;
+        let classes = self.spec.classes;
+        let mut x = MatF32::zeros(n, spec_d);
         let mut y = vec![0i32; n];
         let mut difficulty = vec![0.0f32; n];
         let mut is_noisy = vec![false; n];
         let mut cluster = vec![0u32; n];
         for i in 0..n {
-            // round-robin label assignment over scattered clusters
-            let cl = rng.gen_range(n_clusters);
-            let c = cl % spec.classes;
-            let easy = rng.uniform() < spec.redundancy;
-            let sigma = if easy { spec.easy_sigma } else { spec.hard_sigma };
-            let center = sub.row(cl).to_vec();
-            let row = x.row_mut(i);
-            let mut dist2 = 0.0f32;
-            // displacement lives in the latent subspace (plus tiny ambient
-            // noise) so "hard" means near a *different* cluster's region
-            for (j, (o, &b)) in row.iter_mut().zip(&center).enumerate() {
-                let scale = if j < latent { sigma } else { 0.05 };
-                let noise = rng.normal() * scale;
-                *o = b + noise;
-                dist2 += noise * noise;
-            }
-            // difficulty: displacement relative to cluster spacing, in [0,1)
-            let rel = dist2.sqrt() / (spec.margin * 2.0 * (latent as f32).sqrt());
-            difficulty[i] = rel / (1.0 + rel);
-            let mut label = c;
-            if rng.uniform() < spec.label_noise {
-                label = (c + 1 + rng.gen_range(spec.classes - 1)) % spec.classes;
-                is_noisy[i] = true;
-                difficulty[i] = 1.0; // mislabeled = unlearnable without memorizing
-            }
-            y[i] = label as i32;
-            cluster[i] = cl as u32;
+            let m = self.gen_row(x.row_mut(i));
+            y[i] = m.y;
+            difficulty[i] = m.difficulty;
+            is_noisy[i] = m.is_noisy;
+            cluster[i] = m.cluster;
         }
         normalize_features(&mut x);
-        Dataset { x, y, classes: spec.classes, difficulty, is_noisy, cluster }
-    };
+        Dataset::from_mat(x, y, classes, difficulty, is_noisy, cluster)
+    }
+}
 
-    let train = gen_split(spec.n_train, &mut rng);
-    let val = gen_split(spec.n_val, &mut rng);
-    let test = gen_split(spec.n_test, &mut rng);
+/// Generate the train/val/test splits for a spec, resident in RAM.
+pub fn generate(spec: &SynthSpec) -> Splits {
+    let mut g = Synth::new(spec);
+    let train = g.gen_split(spec.n_train);
+    let val = g.gen_split(spec.n_val);
+    let test = g.gen_split(spec.n_test);
     Splits { train, val, test }
 }
 
@@ -237,6 +286,126 @@ fn normalize_features(x: &mut MatF32) {
             *v = ((*v as f64 - mean) * inv) as f32;
         }
     }
+}
+
+static PACK_TMP: AtomicU64 = AtomicU64::new(0);
+
+/// Generate a corpus directly into the sharded on-disk format at `root`
+/// (`root/train` etc.) without ever materializing a split in RAM.
+///
+/// Three streaming passes per split replicate [`normalize_features`]
+/// exactly: generation accumulates the per-dimension f64 mean sums in row
+/// order (the same addition sequence per accumulator as the resident
+/// j-outer loop), a read-back pass accumulates variances against those
+/// means, and a rewrite pass normalizes each shard in place. The result
+/// is bitwise identical to `pack_splits(&generate(spec), root, …)`.
+///
+/// Publication is atomic: everything is written to a sibling temp
+/// directory and `rename`d onto `root`, so concurrent callers (the sweep
+/// orchestrator packs lazily) either win the rename or find a complete
+/// pack already in place — never a torn one.
+pub fn generate_packed(spec: &SynthSpec, root: &Path, shard_rows: usize) -> Result<()> {
+    if shard.is_packed(root) {
+        return Ok(());
+    }
+    let parent = root.parent().unwrap_or_else(|| Path::new("."));
+    std::fs::create_dir_all(parent)?;
+    let stamp = PACK_TMP.fetch_add(1, Ordering::Relaxed);
+    let base = root.file_name().and_then(|s| s.to_str()).unwrap_or("pack");
+    let tmp = parent.join(format!(".tmp-{base}-{}-{stamp}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+
+    let result = (|| -> Result<()> {
+        let mut g = Synth::new(spec);
+        for (name, n) in [("train", spec.n_train), ("val", spec.n_val), ("test", spec.n_test)] {
+            stream_split(&mut g, n, &tmp.join(name), shard_rows)
+                .with_context(|| format!("packing split {name}"))?;
+        }
+        Ok(())
+    })();
+    if let Err(e) = result {
+        let _ = std::fs::remove_dir_all(&tmp);
+        return Err(e);
+    }
+
+    match std::fs::rename(&tmp, root) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&tmp);
+            if shard.is_packed(root) {
+                // a concurrent packer published first; its output is
+                // bitwise identical, so just use it
+                Ok(())
+            } else {
+                Err(e).with_context(|| format!("publishing pack at {root:?}"))
+            }
+        }
+    }
+}
+
+/// Stream one split to disk: generate + accumulate means, then normalize
+/// the raw shards in place.
+fn stream_split(g: &mut Synth, n: usize, dir: &Path, shard_rows: usize) -> Result<()> {
+    let d = g.spec.d;
+    let mut w = SplitWriter::create(dir, n, d, g.spec.classes, shard_rows)?;
+    let mut row = vec![0.0f32; d];
+    let mut mean = vec![0.0f64; d];
+    for _ in 0..n {
+        let m = g.gen_row(&mut row);
+        for (s, &v) in mean.iter_mut().zip(&row) {
+            *s += v as f64;
+        }
+        w.push_row(&row, m.y, m.difficulty, m.is_noisy, m.cluster)?;
+    }
+    let meta = w.finish()?;
+    if n == 0 {
+        return Ok(());
+    }
+    for s in mean.iter_mut() {
+        *s /= n as f64;
+    }
+    normalize_shards(dir, &meta, &mean)
+}
+
+/// Second and third normalization passes over a split's raw shards.
+fn normalize_shards(dir: &Path, meta: &PackMeta, mean: &[f64]) -> Result<()> {
+    let (n, d) = (meta.n, meta.d);
+    let mut var = vec![0.0f64; d];
+    let mut buf: Vec<f32> = Vec::new();
+    for s in 0..meta.n_shards {
+        read_shard_f32(&dir.join(shard_file(s)), &mut buf)?;
+        for row in buf.chunks_exact(d) {
+            for j in 0..d {
+                let v = row[j] as f64 - mean[j];
+                var[j] += v * v;
+            }
+        }
+    }
+    let inv: Vec<f64> = var.iter().map(|&v| 1.0 / (v / n as f64).sqrt().max(1e-6)).collect();
+    let mut bytes: Vec<u8> = Vec::new();
+    for s in 0..meta.n_shards {
+        let path = dir.join(shard_file(s));
+        read_shard_f32(&path, &mut buf)?;
+        bytes.clear();
+        bytes.reserve(buf.len() * 4);
+        for (k, &v) in buf.iter().enumerate() {
+            let j = k % d;
+            let norm = ((v as f64 - mean[j]) * inv[j]) as f32;
+            bytes.extend_from_slice(&norm.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).with_context(|| format!("rewrite {path:?}"))?;
+    }
+    Ok(())
+}
+
+fn read_shard_f32(path: &Path, out: &mut Vec<f32>) -> Result<()> {
+    let raw = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    if raw.len() % 4 != 0 {
+        bail!("{path:?}: length {} is not a whole number of f32s", raw.len());
+    }
+    out.resize(raw.len() / 4, 0.0);
+    decode_f32le(&raw, out);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -276,12 +445,12 @@ mod tests {
     fn deterministic_by_seed() {
         let a = generate(&small_spec());
         let b = generate(&small_spec());
-        assert_eq!(a.train.x.data, b.train.x.data);
+        assert_eq!(a.train.to_mat().data, b.train.to_mat().data);
         assert_eq!(a.train.y, b.train.y);
         let mut spec2 = small_spec();
         spec2.seed = 2;
         let c = generate(&spec2);
-        assert_ne!(a.train.x.data, c.train.x.data);
+        assert_ne!(a.train.to_mat().data, c.train.to_mat().data);
     }
 
     #[test]
@@ -295,7 +464,7 @@ mod tests {
     #[test]
     fn features_standardized() {
         let s = generate(&small_spec());
-        let x = &s.train.x;
+        let x = s.train.to_mat();
         for j in [0, 7, 15] {
             let col: Vec<f32> = (0..x.rows).map(|i| x.row(i)[j]).collect();
             assert!(crate::util::stats::mean(&col).abs() < 0.05);
@@ -328,5 +497,33 @@ mod tests {
         for c in s.train.class_counts() {
             assert!((50..150).contains(&c), "count {c}");
         }
+    }
+
+    #[test]
+    fn streaming_pack_matches_in_memory_pack_bitwise() {
+        let spec = small_spec();
+        let base = std::env::temp_dir()
+            .join(format!("crest_synth_stream_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let streamed = base.join("streamed");
+        let packed = base.join("packed");
+        // shard_rows=96 leaves a short tail shard on the train split
+        generate_packed(&spec, &streamed, 96).unwrap();
+        shard::pack_splits(&generate(&spec), &packed, 96).unwrap();
+        for split in ["train", "val", "test"] {
+            let (a, b) = (streamed.join(split), packed.join(split));
+            let meta = PackMeta::load(&a).unwrap();
+            assert_eq!(meta, PackMeta::load(&b).unwrap());
+            let mut files: Vec<String> = (0..meta.n_shards).map(shard_file).collect();
+            files.push("labels.bin".into());
+            for f in files {
+                let fa = std::fs::read(a.join(&f)).unwrap();
+                let fb = std::fs::read(b.join(&f)).unwrap();
+                assert_eq!(fa, fb, "split {split} file {f} differs");
+            }
+        }
+        // idempotent: an existing complete pack short-circuits
+        generate_packed(&spec, &streamed, 96).unwrap();
+        std::fs::remove_dir_all(&base).ok();
     }
 }

@@ -8,11 +8,12 @@
 //!   bench-diff  gate fresh bench records against a committed baseline
 //!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
+//!   pack     generate a proxy dataset as a sharded pack (mmap store)
 //!
 //! Every subcommand flows through one shared pre-dispatch setup path
-//! (`dispatch`): the common `--artifacts`/`--threads` flags are
-//! registered and applied there exactly once, so a new subcommand can
-//! never silently miss them. Method names (`--method`/`--methods`) are
+//! (`dispatch`): the common `--artifacts`/`--threads`/`--data-store`
+//! flags are registered and applied there exactly once, so a new
+//! subcommand can never silently miss them. Method names (`--method`/`--methods`) are
 //! resolved against the `api::MethodRegistry`, so registered methods —
 //! builtin or custom — are uniformly available everywhere.
 //!
@@ -25,13 +26,12 @@
 //!   crest sweep --variant smoke --methods crest,random --seeds 1,2 --out sweep.json
 
 use std::path::{Path, PathBuf};
-use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crest::api::{Experiment, Method, MethodRegistry};
 use crest::bench_util;
-use crest::data::{cache, generate, SynthSpec};
+use crest::data::{self, cache, shard, synth, SynthSpec};
 use crest::metrics::relative_error_pct;
 use crest::report::{aggregate_markdown, Table};
 use crest::runtime::Runtime;
@@ -97,6 +97,12 @@ const COMMANDS: &[Command] = &[
         flags: gen_data_flags,
         run: cmd_gen_data,
     },
+    Command {
+        name: "pack",
+        about: "generate a proxy dataset as a sharded on-disk pack",
+        flags: pack_flags,
+        run: cmd_pack,
+    },
 ];
 
 /// The one shared pre-dispatch setup path: register the common flags,
@@ -105,10 +111,14 @@ const COMMANDS: &[Command] = &[
 fn dispatch(cmd: &Command, args: &[String]) -> Result<()> {
     let cli = (cmd.flags)(Cli::new(&format!("crest {}", cmd.name), cmd.about))
         .opt("artifacts", "artifacts", "artifact root directory")
-        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)");
+        .opt_maybe("threads", "pool worker threads (default: CREST_THREADS or all cores)")
+        .opt_maybe("data-store", "feature store: mem|mmap (default: CREST_DATA_STORE or mem)");
     let p = cli.parse(args)?;
     if let Some(t) = p.get("threads") {
         pool::set_threads(t.parse::<usize>().context("parsing --threads")?);
+    }
+    if let Some(s) = p.get("data-store") {
+        data::set_default_store(data::StoreKind::parse(s)?);
     }
     let root = p.str("artifacts");
     let artifacts =
@@ -233,9 +243,9 @@ fn cmd_compare(ctx: &Ctx) -> Result<()> {
     let p = &ctx.args;
     let variant = p.str("variant");
     let seed = p.u64("seed")?;
-    // one corpus shared by every method row (same (variant, seed) data)
-    let splits =
-        Arc::new(generate(&SynthSpec::preset(&variant, seed).context("no preset")?));
+    // one corpus shared by every method row (same (variant, seed) data),
+    // prepared through the selected feature store
+    let splits = data::prepare_splits(&variant, seed)?;
 
     let mut full_acc = None;
     let mut table = Table::new(&["method", "test acc", "rel err %", "updates", "time (s)"]);
@@ -375,7 +385,7 @@ fn cmd_gen_data(ctx: &Ctx) -> Result<()> {
     let p = &ctx.args;
     let variant = p.str("variant");
     let spec = SynthSpec::preset(&variant, p.u64("seed")?).context("no preset")?;
-    let splits = generate(&spec);
+    let splits = data::generate(&spec);
     let dir = PathBuf::from(p.str("out"));
     std::fs::create_dir_all(&dir)?;
     for (name, ds) in
@@ -385,5 +395,51 @@ fn cmd_gen_data(ctx: &Ctx) -> Result<()> {
         cache::save(ds, &path)?;
         println!("wrote {} examples to {}", ds.n(), path.display());
     }
+    Ok(())
+}
+
+// ------------------------------------------------------------------- pack
+
+fn pack_flags(c: Cli) -> Cli {
+    c.opt("variant", "cifar10-proxy", "dataset variant")
+        .opt("seed", "1", "generation seed")
+        .opt_maybe("out", "output directory (default: <CREST_PACK_DIR>/<variant>-s<seed>)")
+        .opt("shard-rows", "8192", "feature rows per shard file")
+        .opt_maybe("n-train", "override the training-split size (scaling corpora)")
+}
+
+fn cmd_pack(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
+    let variant = p.str("variant");
+    let mut spec = SynthSpec::preset(&variant, p.u64("seed")?).context("no preset")?;
+    if let Some(n) = p.get("n-train") {
+        spec.n_train = n.parse().context("parsing --n-train")?;
+    }
+    let shard_rows = p.usize("shard-rows")?;
+    let root = match p.get("out") {
+        Some(out) => PathBuf::from(out),
+        // the canonical location `--data-store mmap` resolves lazily
+        None => data::pack_root().join(format!("{}-s{}", spec.name, spec.seed)),
+    };
+    // streams straight to shards: the corpus is never resident, so
+    // --n-train far beyond RAM is fine
+    synth::generate_packed(&spec, &root, shard_rows)?;
+    let packed = shard::load_packed_splits(&root)?;
+    for (name, ds) in
+        [("train", &packed.train), ("val", &packed.val), ("test", &packed.test)]
+    {
+        println!(
+            "packed {} examples ({} features each) into {}",
+            ds.n(),
+            ds.d(),
+            root.join(name).display()
+        );
+    }
+    // `--data-store mmap` resolves packs under CREST_PACK_DIR as
+    // <variant>-s<seed>, so point the trainer at this pack's parent
+    println!(
+        "train with: CREST_PACK_DIR={} crest train --variant {variant} --data-store mmap",
+        root.parent().unwrap_or(&root).display()
+    );
     Ok(())
 }

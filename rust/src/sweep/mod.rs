@@ -33,7 +33,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::api::Experiment;
-use crate::data::{generate, Splits, SynthSpec};
+use crate::data::{prepare_splits, Splits};
 use crate::report::{AggregateRow, RunReport};
 use crate::util::pool::{self, Pool};
 
@@ -107,10 +107,9 @@ impl SweepOutcome {
 /// from (variant, seed), never from the method or budget — which is what
 /// lets [`run`] share one corpus across every cell of a (variant, seed)
 /// pair.
-pub fn cell_splits(key: &CellKey) -> Result<Splits> {
-    let spec = SynthSpec::preset(&key.variant, key.seed)
-        .with_context(|| format!("no synthetic preset for variant {:?}", key.variant))?;
-    Ok(generate(&spec))
+pub fn cell_splits(key: &CellKey) -> Result<Arc<Splits>> {
+    prepare_splits(&key.variant, key.seed)
+        .with_context(|| format!("preparing corpus for variant {:?}", key.variant))
 }
 
 /// Run one cell against prepared splits (the caller owns corpus reuse).
@@ -138,7 +137,7 @@ fn run_cell_on(
 /// derives from the key (plus `epochs_full`), so a cell is reproducible in
 /// isolation — the unit of resume.
 pub fn run_cell(key: &CellKey, epochs_full: usize, artifact_root: &Path) -> Result<RunReport> {
-    run_cell_on(key, epochs_full, artifact_root, Arc::new(cell_splits(key)?))
+    run_cell_on(key, epochs_full, artifact_root, cell_splits(key)?)
 }
 
 /// Execute a sweep: restore completed cells from the checkpoint store,
@@ -173,7 +172,7 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
         if let Some(s) = splits_cache.lock().unwrap().get(&pair) {
             return Ok(s.clone());
         }
-        let generated = Arc::new(cell_splits(key)?);
+        let generated = cell_splits(key)?;
         Ok(splits_cache.lock().unwrap().entry(pair).or_insert(generated).clone())
     };
 

@@ -3,11 +3,15 @@
 //!
 //! Parameter and momentum state live as host vectors and flow through the
 //! active `runtime::Backend`, so the loop is identical under the native and
-//! PJRT execution paths.
+//! PJRT execution paths. Batch staging gathers feature rows from the
+//! dataset's store into [`Workspace`]-pooled buffers, so steady-state
+//! stepping allocates nothing per step and never assumes the features are
+//! RAM-resident.
 
 use anyhow::Result;
 
 use crate::data::Dataset;
+use crate::kernel::Workspace;
 use crate::runtime::Runtime;
 
 /// Mutable training state (flat params + momentum vectors).
@@ -18,6 +22,10 @@ pub struct TrainState {
     pub momentum: Vec<f32>,
     /// Steps taken so far.
     pub step: usize,
+    /// Pooled staging buffers for batch assembly (features).
+    ws: Workspace,
+    /// Reused label staging buffer.
+    y_buf: Vec<i32>,
 }
 
 impl TrainState {
@@ -27,11 +35,14 @@ impl TrainState {
             params: rt.params_from_host(init)?,
             momentum: rt.zero_momentum(),
             step: 0,
+            ws: Workspace::new(),
+            y_buf: Vec::new(),
         })
     }
 
     /// One weighted SGD step on the given examples. Returns
-    /// (mean batch loss, per-example losses).
+    /// (mean batch loss, per-example losses). Staging reuses this state's
+    /// workspace, so repeated steps are allocation-free.
     pub fn step_batch(
         &mut self,
         rt: &Runtime,
@@ -41,8 +52,12 @@ impl TrainState {
         lr: f32,
         wd: f32,
     ) -> Result<(f32, Vec<f32>)> {
-        let (x, y) = ds.batch(idx);
-        let out = rt.train_step(&self.params, &self.momentum, &x, &y, gamma, lr, wd)?;
+        let mut x = self.ws.mat(idx.len(), ds.d());
+        ds.gather_into(idx, &mut x);
+        self.y_buf.clear();
+        self.y_buf.extend(idx.iter().map(|&i| ds.y[i]));
+        let out = rt.train_step(&self.params, &self.momentum, &x, &self.y_buf, gamma, lr, wd)?;
+        self.ws.recycle_mat(x);
         self.params = out.params;
         self.momentum = out.momentum;
         self.step += 1;
@@ -69,7 +84,8 @@ pub struct EvalOut {
 }
 
 /// Chunked evaluation with tail padding (pad indices wrap; padded outputs
-/// are discarded so statistics are exact).
+/// are discarded so statistics are exact). Each chunk is gathered from the
+/// dataset's store into one reused staging matrix.
 pub fn evaluate(rt: &Runtime, params: &[f32], ds: &Dataset) -> Result<EvalOut> {
     let e = rt.man.eval_chunk;
     let n = ds.n();
@@ -77,13 +93,21 @@ pub fn evaluate(rt: &Runtime, params: &[f32], ds: &Dataset) -> Result<EvalOut> {
     let mut per_ex_correct = Vec::with_capacity(n);
     let mut sum_loss = 0.0f64;
     let mut n_correct = 0.0f64;
+    let mut ws = Workspace::new();
+    let mut idx = Vec::with_capacity(e);
+    let mut y = Vec::with_capacity(e);
     let mut start = 0;
     while start < n {
         let end = (start + e).min(n);
         let valid = end - start;
-        let idx: Vec<usize> = (start..start + e).map(|i| i % n).collect();
-        let (x, y) = ds.batch(&idx);
+        idx.clear();
+        idx.extend((start..start + e).map(|i| i % n));
+        let mut x = ws.mat(e, ds.d());
+        ds.gather_into(&idx, &mut x);
+        y.clear();
+        y.extend(idx.iter().map(|&i| ds.y[i]));
         let (_, _, pl, pc) = rt.eval_chunk(params, &x, &y)?;
+        ws.recycle_mat(x);
         for k in 0..valid {
             sum_loss += pl[k] as f64;
             n_correct += pc[k] as f64;

@@ -1,0 +1,114 @@
+//! Cross-layer tests for the pluggable data-store layer.
+//!
+//! The contract under test: the storage backend is invisible to every
+//! consumer. A training run must produce a bitwise-identical
+//! deterministic report whether the corpus lives in RAM (`MemStore`) or
+//! in sharded files behind the mmap store, the prefetching loader must
+//! stream identical batches from either, and the optional on-disk
+//! embedding cache must never change a report.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crest::api::MethodRegistry;
+use crest::config::{ExperimentConfig, Method};
+use crest::coordinator::run_experiment;
+use crest::data::loader::Loader;
+use crest::data::shard::{load_packed_splits, pack_splits};
+use crest::data::{generate, Dataset, Splits, SynthSpec};
+use crest::report::RunReport;
+use crest::runtime::Runtime;
+
+/// Serializes the tests in this binary: one of them mutates process-wide
+/// env state (`CREST_EMBED_CACHE`), which must not leak into a
+/// concurrently running experiment.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tdir(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("crest_data_store_test_{}_{name}", std::process::id()))
+}
+
+/// Pack a generated corpus and reopen it through the mmap store, with
+/// shard_rows small enough that every split spans several shards and
+/// ends in a short tail.
+fn packed_copy(mem: &Splits, name: &str, shard_rows: usize) -> (PathBuf, Splits) {
+    let root = tdir(name);
+    let _ = std::fs::remove_dir_all(&root);
+    pack_splits(mem, &root, shard_rows).unwrap();
+    let mmap = load_packed_splits(&root).unwrap();
+    assert_eq!(mmap.train.store_kind(), "mmap");
+    assert_eq!(mem.train.store_kind(), "mem");
+    (root, mmap)
+}
+
+fn smoke_cell(rt: &Runtime, splits: &Splits, method: Method, seed: u64) -> RunReport {
+    let mut cfg = ExperimentConfig::preset("smoke", method, seed).unwrap();
+    cfg.epochs_full = 2;
+    run_experiment(rt, splits, cfg).unwrap()
+}
+
+/// The headline acceptance check: every registered method, run on the
+/// smoke grid, reports bitwise-identically from the mem and mmap stores.
+#[test]
+fn mem_and_mmap_reports_bitwise_identical_for_every_method() {
+    let _g = lock();
+    let rt = Runtime::native_variant("smoke").unwrap();
+    let mem = generate(&SynthSpec::preset("smoke", 3).unwrap());
+    let (root, mmap) = packed_copy(&mem, "method_grid", 100);
+    for method in MethodRegistry::all() {
+        let a = smoke_cell(&rt, &mem, method, 3);
+        let b = smoke_cell(&rt, &mmap, method, 3);
+        assert_eq!(
+            a.deterministic_json().to_string_pretty(),
+            b.deterministic_json().to_string_pretty(),
+            "{method:?}: mem and mmap stores must produce identical reports"
+        );
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The prefetching loader sees the store only through `Dataset::batch`,
+/// so its index stream and batch payloads must match across backends.
+#[test]
+fn loader_streams_identical_batches_from_either_store() {
+    let _g = lock();
+    let mem = generate(&SynthSpec::preset("smoke", 9).unwrap());
+    let (root, mmap) = packed_copy(&mem, "loader", 64);
+    let drain = |ds: &Dataset| -> Vec<(Vec<usize>, Vec<f32>, Vec<i32>)> {
+        let mut l = Loader::spawn(ds, 32, 20, 17, 4);
+        std::iter::from_fn(|| l.next()).map(|b| (b.idx, b.x.data, b.y)).collect()
+    };
+    let a = drain(&mem.train);
+    let b = drain(&mmap.train);
+    assert_eq!(a.len(), 20);
+    assert_eq!(a, b, "loader batches must not depend on the store backend");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Enabling the embedding cache (cold or warm) must never change a
+/// report: hits return exactly what recomputation would have produced.
+#[test]
+fn embed_cache_never_changes_reports() {
+    let _g = lock();
+    let rt = Runtime::native_variant("smoke").unwrap();
+    let splits = generate(&SynthSpec::preset("smoke", 5).unwrap());
+    let baseline = smoke_cell(&rt, &splits, Method::crest(), 5);
+
+    let dir = tdir("embcache");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::env::set_var("CREST_EMBED_CACHE", &dir);
+    let cold = smoke_cell(&rt, &splits, Method::crest(), 5);
+    let n_entries = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+    let warm = smoke_cell(&rt, &splits, Method::crest(), 5);
+    std::env::remove_var("CREST_EMBED_CACHE");
+
+    assert!(n_entries > 0, "cold run should have populated the cache");
+    let want = baseline.deterministic_json().to_string_pretty();
+    assert_eq!(cold.deterministic_json().to_string_pretty(), want, "cold cache changed the run");
+    assert_eq!(warm.deterministic_json().to_string_pretty(), want, "warm cache changed the run");
+    std::fs::remove_dir_all(&dir).ok();
+}
