@@ -3,12 +3,18 @@
 //! Measures train_step, grad_embed and facility-location selection at
 //! 1/2/4/8 pool workers on a model sized so the batch-row loops dominate
 //! thread-spawn overhead, printing per-count speedups vs the 1-thread
-//! baseline and a bitwise-determinism spot check. It closes with the
+//! baseline and a bitwise-determinism spot check. It continues with the
 //! out-of-core scenario: stream-pack a ≥10^6-example corpus into the
 //! sharded format, reopen it through the mmap store, and train a
-//! budgeted CREST cell on it end to end. With `CREST_BENCH_JSON=<path>`
-//! the records seed the perf trajectory; `CREST_BENCH_QUICK=1` shrinks
-//! the model and corpus for the CI perf-smoke job.
+//! budgeted CREST cell on it end to end. It closes with the selection
+//! crossover: every [`SelectionStrategy`] from the scenario table runs
+//! over a 10^5-scale ground set fed from the same mmap pack, recording
+//! wall-clock per strategy and the coverage-cost rel-err vs exact — the
+//! sub-quadratic strategies must beat exact wall-clock at that scale
+//! while the sweep-aggregate rel-err stays ≤ 5%. With
+//! `CREST_BENCH_JSON=<path>` the records seed the perf trajectory;
+//! `CREST_BENCH_QUICK=1` shrinks the model and corpus for the CI
+//! perf-smoke and scaling-smoke jobs.
 //!
 //! Run with `cargo bench --bench scaling`.
 
@@ -16,6 +22,7 @@ use crest::bench_util::scenario as sc;
 use crest::bench_util::{self, bench_recorded, format_secs, section};
 use crest::config::Method;
 use crest::coreset::facility;
+use crest::coreset::strategy::{self, SelectionStrategy};
 use crest::model::init_params;
 use crest::runtime::manifest::{ModelSpec, VariantManifest};
 use crest::runtime::Runtime;
@@ -168,6 +175,72 @@ fn main() -> anyhow::Result<()> {
         splits.train.store_kind(),
         rep.final_test_acc
     );
+
+    // ------------------------------------------- selection crossover
+    section("scaling: exact vs approximate selection (mmap-fed ground set)");
+    // The ground set is the head of the packed train split, read
+    // block-at-a-time out of the mmap shards (never a resident Dataset
+    // copy), with the resident label vector alongside. 2^17 examples in
+    // full mode — past the 10^5 mark where exact greedy's super-linear
+    // scan cost dominates; quick mode keeps the code path at 2^13.
+    let n_sel = if quick { 1 << 13 } else { 1 << 17 };
+    assert!(n_sel <= splits.train.n(), "ground set drawn from the packed corpus");
+    let d = splits.train.d();
+    let mut ground = MatF32::zeros(n_sel, d);
+    splits.train.read_block(0, n_sel, &mut ground.data);
+    let ylab: Vec<i32> = splits.train.y[..n_sel].to_vec();
+    let g = strategy::Ground { gl: &ground, al: None, labels: Some(&ylab) };
+    let m_sel = 256;
+    let reps_sel = if quick { 1 } else { 3 };
+    let mut exact_p50 = None;
+    let mut exact_cost = None;
+    let mut approx: Vec<(&str, f64, f64)> = Vec::new(); // (name, p50, rel-err %)
+    for (name, strat) in sc::selection_strategies() {
+        let mut picked = None;
+        let r = bench_recorded(
+            &format!("selection {name} n={n_sel} m={m_sel}"),
+            0,
+            reps_sel,
+            || picked = Some(strat.select(&g, m_sel, &mut Rng::new(11), &strategy::CraigSelector)),
+        );
+        let sel = picked.expect("selection ran at least once");
+        let cost = facility::coverage_cost(&ground, &sel.idx);
+        match strat {
+            SelectionStrategy::Exact => {
+                exact_p50 = Some(r.p50_secs);
+                exact_cost = Some(cost);
+            }
+            _ => {
+                let base = exact_cost.expect("exact strategy measured first");
+                // coverage cost: lower is better; a strategy that beats
+                // the (stochastic) exact baseline counts as zero error
+                let rel = ((cost - base) / base.max(1e-12) * 100.0).max(0.0);
+                println!(
+                    "    -> {name}: coverage rel-err {rel:.2}% vs exact, speedup {:.2}x",
+                    exact_p50.expect("exact strategy measured first") / r.p50_secs.max(1e-12)
+                );
+                approx.push((name, r.p50_secs, rel));
+            }
+        }
+    }
+    let exact_p50 = exact_p50.expect("strategy table contains exact");
+    let mean_rel = approx.iter().map(|&(_, _, e)| e).sum::<f64>() / approx.len() as f64;
+    let best = approx.iter().map(|&(_, p50, _)| p50).fold(f64::INFINITY, f64::min);
+    println!(
+        "    -> sweep aggregate: rel-err {mean_rel:.2}% (bound 5%), best approx p50 {} vs exact {}",
+        format_secs(best),
+        format_secs(exact_p50)
+    );
+    assert!(
+        mean_rel <= 5.0,
+        "approximate selection sweep aggregate rel-err {mean_rel:.2}% exceeds 5%"
+    );
+    if !quick {
+        assert!(
+            best < exact_p50,
+            "at n={n_sel} (>=10^5) an approximate strategy must beat exact wall-clock"
+        );
+    }
     std::fs::remove_dir_all(root.parent().unwrap()).ok();
 
     bench_util::flush_json()?;

@@ -41,6 +41,9 @@ use crate::util::json::Json;
 use super::observer::RunObserver;
 use super::registry::Method;
 
+pub use crate::coreset::strategy::SelectionStrategy;
+pub use crate::runtime_config::RuntimeConfig;
+
 enum MethodSel {
     Name(String),
     Handle(Method),
@@ -68,6 +71,8 @@ impl Experiment {
             epochs_full: None,
             artifact_root: PathBuf::from("artifacts"),
             splits: None,
+            selection: None,
+            runtime_config: None,
             overrides: Vec::new(),
             tweaks: Vec::new(),
             observers: Vec::new(),
@@ -115,6 +120,8 @@ pub struct ExperimentBuilder {
     epochs_full: Option<usize>,
     artifact_root: PathBuf,
     splits: Option<Arc<Splits>>,
+    selection: Option<SelectionStrategy>,
+    runtime_config: Option<RuntimeConfig>,
     overrides: Vec<Json>,
     tweaks: Vec<Box<dyn FnOnce(&mut ExperimentConfig)>>,
     observers: Vec<Box<dyn RunObserver>>,
@@ -176,6 +183,23 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Selection strategy applied uniformly to every method's ground-set
+    /// traversal (default [`SelectionStrategy::Exact`]; also settable
+    /// through the `selection` JSON key or `--selection` CLI flag).
+    pub fn selection(mut self, strategy: SelectionStrategy) -> Self {
+        self.selection = Some(strategy);
+        self
+    }
+
+    /// Install session-level runtime overrides (threads, caches, data
+    /// store, pack dir) before the corpus is prepared — the typed
+    /// equivalent of exporting the `CREST_*` env vars. The overrides are
+    /// process-wide (see [`crate::runtime_config::set_session`]).
+    pub fn runtime_config(mut self, rc: RuntimeConfig) -> Self {
+        self.runtime_config = Some(rc);
+        self
+    }
+
     /// Apply a partial JSON config override at build time (same schema as
     /// [`ExperimentConfig::apply_json`]; unknown keys fail the build).
     pub fn override_json(mut self, overrides: &Json) -> Self {
@@ -207,12 +231,18 @@ impl ExperimentBuilder {
             Some(MethodSel::Name(name)) => Method::parse(&name)?,
             None => Method::crest(),
         };
+        if let Some(rc) = self.runtime_config {
+            crate::runtime_config::set_session(rc);
+        }
         let mut cfg = ExperimentConfig::preset(&self.variant, method, self.seed)?;
         if let Some(b) = self.budget_frac {
             cfg.budget_frac = b;
         }
         if let Some(e) = self.epochs_full {
             cfg.epochs_full = e;
+        }
+        if let Some(s) = self.selection {
+            cfg.selection = s;
         }
         for overrides in &self.overrides {
             cfg.apply_json(overrides)?;

@@ -45,7 +45,7 @@ pub mod experiment;
 pub mod observer;
 pub mod registry;
 
-pub use experiment::{Experiment, ExperimentBuilder};
+pub use experiment::{Experiment, ExperimentBuilder, RuntimeConfig, SelectionStrategy};
 pub use observer::{
     EvalEvent, ExclusionEvent, ReportObserver, RunEnd, RunObserver, SelectionEvent, Signal,
     StepEvent,

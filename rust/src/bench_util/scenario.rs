@@ -142,3 +142,18 @@ pub fn oocore_spec(n_train: usize, seed: u64) -> SynthSpec {
         ..SynthSpec::preset("smoke", seed).expect("smoke preset exists")
     }
 }
+
+/// The strategy axis of the selection-crossover scaling scenario:
+/// `Exact` plus each approximate strategy at its auto parameter, labeled
+/// with its canonical name. `benches/scaling.rs` and the CI scaling-smoke
+/// job both sweep this one table, so the measured strategies cannot drift
+/// from the shipped ones.
+pub fn selection_strategies() -> Vec<(&'static str, crate::coreset::SelectionStrategy)> {
+    use crate::coreset::SelectionStrategy as S;
+    vec![
+        ("exact", S::Exact),
+        ("class-sharded", S::ClassSharded { shards: 0 }),
+        ("clustered", S::Clustered { k: 0 }),
+        ("knn", S::Knn { neighbors: 0 }),
+    ]
+}

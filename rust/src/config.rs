@@ -10,6 +10,7 @@ use anyhow::{bail, Result};
 use crate::util::json::Json;
 
 pub use crate::api::registry::Method;
+pub use crate::coreset::strategy::SelectionStrategy;
 
 /// CREST-specific switches (ablations of Table 3 / Fig. 4).
 #[derive(Debug, Clone, Copy)]
@@ -49,6 +50,7 @@ const CONFIG_KEYS: &[&str] = &[
     "exclude",
     "compiled_selection",
     "selection_threads",
+    "selection",
 ];
 
 /// One experiment: a (variant, method, budget, seed) cell plus knobs.
@@ -104,6 +106,10 @@ pub struct ExperimentConfig {
     pub compiled_selection: bool,
     /// Host-side selection worker threads (P subproblems in parallel).
     pub selection_threads: usize,
+    /// How selections traverse their ground set: exact greedy or one of
+    /// the sub-quadratic approximations (applies uniformly to every
+    /// registered method through the strategy layer).
+    pub selection: SelectionStrategy,
     /// Number of evaluation points along training (history resolution).
     pub eval_points: usize,
 }
@@ -151,6 +157,7 @@ impl ExperimentConfig {
             coreset_lr_scale: None,
             compiled_selection: false,
             selection_threads: 4,
+            selection: SelectionStrategy::Exact,
             eval_points: 16,
         })
     }
@@ -181,6 +188,7 @@ impl ExperimentConfig {
             .set("exclude", self.crest.exclude)
             .set("compiled_selection", self.compiled_selection)
             .set("selection_threads", self.selection_threads)
+            .set("selection", self.selection.to_string().as_str())
     }
 
     /// Apply overrides parsed from JSON (partial object). Keys outside
@@ -247,6 +255,9 @@ impl ExperimentConfig {
         if let Some(v) = j.get("selection_threads") {
             self.selection_threads = v.as_usize()?.max(1);
         }
+        if let Some(v) = j.get("selection") {
+            self.selection = SelectionStrategy::parse(v.as_str()?)?;
+        }
         if let Some(v) = j.get("method") {
             self.method = Method::parse(v.as_str()?)?;
         }
@@ -297,6 +308,11 @@ mod tests {
         assert_eq!(c.method, Method::craig());
         assert_eq!(c.epochs_full, 5);
         assert_eq!(c.selection_threads, 2);
+        // selection strategies parse through the one strategy table, and
+        // bad values are rejected like any other malformed knob
+        c.apply_json(&Json::parse(r#"{"selection": "class-sharded:2"}"#).unwrap()).unwrap();
+        assert_eq!(c.selection, SelectionStrategy::ClassSharded { shards: 2 });
+        assert!(c.apply_json(&Json::parse(r#"{"selection": "bogus"}"#).unwrap()).is_err());
         // serialized form parses back
         let s = c.to_json().to_string_pretty();
         let j2 = Json::parse(&s).unwrap();
@@ -352,6 +368,7 @@ mod tests {
         c.crest = CrestOptions { second_order: false, smooth: false, exclude: false };
         c.compiled_selection = true;
         c.selection_threads = 2;
+        c.selection = SelectionStrategy::Clustered { k: 64 };
 
         let doc = Json::parse(&c.to_json().to_string_pretty()).unwrap();
         let mut restored = ExperimentConfig::preset("cifar10-proxy", Method::crest(), 0).unwrap();
@@ -373,6 +390,7 @@ mod tests {
         assert!(!restored.crest.exclude);
         assert!(restored.compiled_selection);
         assert_eq!(restored.selection_threads, 2);
+        assert_eq!(restored.selection, SelectionStrategy::Clustered { k: 64 });
         // a second round-trip is a fixed point
         let again = Json::parse(&restored.to_json().to_string_pretty()).unwrap();
         assert_eq!(again.to_string_pretty(), doc.to_string_pretty());

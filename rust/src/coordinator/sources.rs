@@ -19,7 +19,8 @@ use anyhow::Result;
 use crate::api::registry::{MethodSpec, SourceCtx};
 use crate::config::ExperimentConfig;
 use crate::coreset::embed_cache::{region_id, subset_key, subset_key_all, EmbedCache};
-use crate::coreset::{craig, facility, glister, gradmatch, MiniBatchCoreset};
+use crate::coreset::strategy::{self, SelectionStrategy};
+use crate::coreset::{craig, facility, MiniBatchCoreset};
 use crate::data::Dataset;
 use crate::exclusion::ExclusionTracker;
 use crate::quadratic::{QuadOptions, QuadraticModel};
@@ -101,7 +102,13 @@ fn make_random<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource +
 }
 
 fn make_greedy_per_batch<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
-    Ok(Box::new(GreedyPerBatchSource { rt: ctx.rt, train: ctx.train, rng, n_updates: 0 }))
+    Ok(Box::new(GreedyPerBatchSource {
+        rt: ctx.rt,
+        train: ctx.train,
+        selection: ctx.cfg.selection,
+        rng,
+        n_updates: 0,
+    }))
 }
 
 fn make_epoch<'a>(
@@ -116,6 +123,7 @@ fn make_epoch<'a>(
         rt: ctx.rt,
         train: ctx.train,
         val: ctx.val,
+        selection: ctx.cfg.selection,
         k,
         epoch_steps,
         into_epoch: 0,
@@ -286,6 +294,8 @@ struct EpochCoresetSource<'a> {
     rt: &'a Runtime,
     train: &'a Dataset,
     val: &'a Dataset,
+    /// exact vs. approximate ground-set traversal (`cfg.selection`)
+    selection: SelectionStrategy,
     k: usize,
     epoch_steps: usize,
     into_epoch: usize,
@@ -360,12 +370,21 @@ impl<'a> EpochCoresetSource<'a> {
         let (gl, al, _) = self.cached_full_embeddings(state)?;
         let entries: Vec<(usize, f32)> = match self.selector {
             EpochSelector::Craig => {
-                let sel = craig::craig_select(&al, &gl, self.k, &mut self.rng);
+                let ground =
+                    strategy::Ground { gl: &gl, al: Some(&al), labels: Some(&self.train.y) };
+                let sel =
+                    self.selection.select(&ground, self.k, &mut self.rng, &strategy::CraigSelector);
                 let gamma = craig::craig_batch_gamma(&sel);
                 sel.idx.into_iter().zip(gamma).collect()
             }
             EpochSelector::GradMatch => {
-                let sel = gradmatch::gradmatch_select(&gl, self.k, &mut self.rng);
+                let ground = strategy::Ground { gl: &gl, al: None, labels: Some(&self.train.y) };
+                let sel = self.selection.select(
+                    &ground,
+                    self.k,
+                    &mut self.rng,
+                    &strategy::GradMatchSelector,
+                );
                 // scale Σγ=n down to batch convention (mean 1 over coreset)
                 let k = sel.idx.len() as f32;
                 let sum: f32 = sel.gamma.iter().sum();
@@ -379,7 +398,13 @@ impl<'a> EpochCoresetSource<'a> {
                 let (x, y) = self.val.batch(&idx);
                 let (gval, _, _) = self.rt.grad_embed(&state.params, &x, &y)?;
                 let vmean = gval.mean_row();
-                let sel = glister::glister_select(&gl, &vmean, self.k);
+                let ground = strategy::Ground { gl: &gl, al: None, labels: Some(&self.train.y) };
+                let sel = self.selection.select(
+                    &ground,
+                    self.k,
+                    &mut self.rng,
+                    &strategy::GlisterSelector { vmean },
+                );
                 sel.idx.into_iter().zip(sel.gamma).collect()
             }
         };
@@ -437,6 +462,8 @@ impl<'a> BatchSource for EpochCoresetSource<'a> {
 struct GreedyPerBatchSource<'a> {
     rt: &'a Runtime,
     train: &'a Dataset,
+    /// exact vs. approximate traversal of the per-batch pool
+    selection: SelectionStrategy,
     rng: Rng,
     n_updates: usize,
 }
@@ -454,7 +481,7 @@ impl<'a> BatchSource for GreedyPerBatchSource<'a> {
         let pool = self.rng.sample_indices(self.train.n(), r);
         let (x, y) = self.train.batch(&pool);
         let (gl, al, _) = self.rt.grad_embed(&state.params, &x, &y)?;
-        let sel = facility::facility_location_prod(&al, &gl, m);
+        let sel = strategy::facility_select(self.selection, &al, &gl, &y, m);
         let mut mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
         if std::env::var("CREST_UNIT_GAMMA").is_ok() {
             mb.gamma = vec![1.0; mb.gamma.len()];
@@ -489,6 +516,8 @@ pub struct CrestSource<'a> {
     max_p: usize,
     compiled_selection: bool,
     selection_threads: usize,
+    /// exact vs. approximate traversal of each subset pool (`cfg.selection`)
+    selection: SelectionStrategy,
     exclude: bool,
     /// first step at which exclusion windows may close (§4.3 timing)
     exclude_after: usize,
@@ -540,6 +569,7 @@ impl<'a> CrestSource<'a> {
             max_p: cfg.max_p.max(1),
             compiled_selection: cfg.compiled_selection,
             selection_threads: cfg.selection_threads.max(1),
+            selection: cfg.selection,
             exclude: cfg.crest.exclude,
             exclude_after: (steps_total as f32 * cfg.exclude_after_frac) as usize,
             quad: QuadraticModel::new(rt.man.p_dim, cfg.beta1, cfg.beta2, opts),
@@ -603,7 +633,7 @@ impl<'a> CrestSource<'a> {
         if let Some(cache) = self.embed_cache.as_mut() {
             cache.enter_region(region_id(self.n_updates as u64, &state.params));
         }
-        let mut subsets: Vec<(Vec<usize>, MatF32, MatF32)> = Vec::with_capacity(self.p);
+        let mut subsets: Vec<(Vec<usize>, Vec<i32>, MatF32, MatF32)> = Vec::with_capacity(self.p);
         for (idx, (x, y)) in index_sets.into_iter().zip(batches) {
             let key = subset_key(&idx);
             let (gl, al, losses) = match self.embed_cache.as_ref().and_then(|c| c.load(key)) {
@@ -617,12 +647,12 @@ impl<'a> CrestSource<'a> {
                 }
             };
             self.excl.observe_batch(&idx, &losses);
-            subsets.push((idx, gl, al));
+            subsets.push((idx, y, gl, al));
         }
         // --- greedy per subset (host, parallel over P) ---
         let coresets: Vec<MiniBatchCoreset> = if self.compiled_selection {
             let mut out = Vec::with_capacity(self.p);
-            for (idx, gl, al) in &subsets {
+            for (idx, _ys, gl, al) in &subsets {
                 let (sel_idx, w) = self.rt.select_greedy(gl, al)?;
                 let sel = facility::Selection { idx: sel_idx, gamma: w };
                 out.push(MiniBatchCoreset::from_selection(&sel, idx, m));
@@ -635,16 +665,17 @@ impl<'a> CrestSource<'a> {
             // Capped by the global count so --threads/CREST_THREADS=1
             // forces serial execution here too (results never change).
             let pool = Pool::new(self.selection_threads.min(crate::util::pool::threads()));
+            let selection = self.selection;
             pool.map(subsets.len(), |i| {
-                let (idx, gl, al) = &subsets[i];
-                let sel = facility::facility_location_prod(al, gl, m);
+                let (idx, ys, gl, al) = &subsets[i];
+                let sel = strategy::facility_select(selection, al, gl, ys, m);
                 MiniBatchCoreset::from_selection(&sel, idx, m)
             })
         } else {
             subsets
                 .iter()
-                .map(|(idx, gl, al)| {
-                    let sel = facility::facility_location_prod(al, gl, m);
+                .map(|(idx, ys, gl, al)| {
+                    let sel = strategy::facility_select(self.selection, al, gl, ys, m);
                     MiniBatchCoreset::from_selection(&sel, idx, m)
                 })
                 .collect()

@@ -19,7 +19,7 @@ use crate::util::rng::Rng;
 
 /// Ground sets past this size use stochastic greedy (full lazy greedy's
 /// O(n²) seeding pass dominates otherwise — paper challenge C3).
-const STOCHASTIC_THRESHOLD: usize = 2048;
+pub const STOCHASTIC_THRESHOLD: usize = 2048;
 
 /// Select a size-k coreset from the full embedding matrices (last-layer
 /// weight-gradient metric: activations + logit gradients).

@@ -99,12 +99,13 @@ impl EmbedCache {
         EmbedCache { dir: dir.to_path_buf(), region: None }
     }
 
-    /// Build from `CREST_EMBED_CACHE`; `None` (cache disabled) when unset.
+    /// Build from `CREST_EMBED_CACHE` (or a session
+    /// [`RuntimeConfig`](crate::runtime_config::RuntimeConfig) override);
+    /// `None` (cache disabled) when unset.
     pub fn from_env() -> Option<EmbedCache> {
-        match std::env::var("CREST_EMBED_CACHE") {
-            Ok(dir) if !dir.is_empty() => Some(EmbedCache::new(Path::new(&dir))),
-            _ => None,
-        }
+        crate::runtime_config::RuntimeConfig::current()
+            .embed_cache
+            .map(|dir| EmbedCache::new(&dir))
     }
 
     fn entry_path(&self, region: u64, key: u64) -> PathBuf {

@@ -280,7 +280,7 @@ impl GramMetric {
     /// Precompute the full pairwise table (row-parallel; each table row is
     /// written by exactly one worker, so the table is thread-count
     /// independent).
-    pub fn new<M: SqDistMetric>(inner: &M) -> GramMetric {
+    pub fn new<M: SqDistMetric + ?Sized>(inner: &M) -> GramMetric {
         let n = inner.len();
         if n == 0 {
             return GramMetric { n, d: Vec::new() };
@@ -292,13 +292,15 @@ impl GramMetric {
         GramMetric { n, d }
     }
 
-    /// Cache `inner` when `CREST_GRAM_CACHE` opts in and `n²` fits the
-    /// configured cap; `None` leaves the caller on the uncached metric.
-    pub fn try_cache<M: SqDistMetric>(inner: &M) -> Option<GramMetric> {
+    /// Cache `inner` when the runtime config (`CREST_GRAM_CACHE` or a
+    /// session [`RuntimeConfig`](crate::runtime_config::RuntimeConfig)
+    /// override) opts in and `n²` fits the configured cap; `None` leaves
+    /// the caller on the uncached metric.
+    pub fn try_cache<M: SqDistMetric + ?Sized>(inner: &M) -> Option<GramMetric> {
         if inner.is_cached() {
             return None;
         }
-        let cap = gram_cap(std::env::var("CREST_GRAM_CACHE").ok().as_deref())?;
+        let cap = crate::runtime_config::RuntimeConfig::current().gram_cache?;
         let n = inner.len();
         if n == 0 || n.saturating_mul(n) > cap {
             return None;
@@ -326,12 +328,183 @@ impl SqDistMetric for GramMetric {
     }
 }
 
+// --------------------------------------------------------- sparse k-NN
+
+/// Deterministic random-projection value of every row of `feat`: one
+/// gaussian direction drawn from the fixed `seed` (shape-only — the
+/// direction depends on the column count, never on the data), dotted with
+/// each row on the same unrolled kernel the metrics use. Row values are
+/// independent, so the parallel map is thread-count invariant.
+pub(crate) fn projection_values(feat: &MatF32, seed: u64) -> Vec<f32> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let dir: Vec<f32> = (0..feat.cols).map(|_| rng.normal()).collect();
+    Pool::gated(feat.rows * feat.cols.max(1), PAR_MIN_WORK)
+        .map(feat.rows, |i| dot4(feat.row(i), &dir))
+}
+
+/// Row indices of `feat` sorted by projection value (ties broken by index)
+/// — a deterministic 1-D locality ordering shared by the sparse k-NN
+/// candidate windows and the clustered-selection buckets.
+pub(crate) fn projection_order(feat: &MatF32, seed: u64) -> Vec<usize> {
+    let proj = projection_values(feat, seed);
+    let mut order: Vec<usize> = (0..feat.rows).collect();
+    order.sort_unstable_by(|&a, &b| proj[a].total_cmp(&proj[b]).then(a.cmp(&b)));
+    order
+}
+
+/// Fixed seed of the k-NN candidate-window projection (any constant works;
+/// it only has to be the same for every build of the same shape).
+const KNN_PROJ_SEED: u64 = 0x5eed_4b8a_11ce_7e01;
+
+/// Sparse k-nearest-neighbor squared-distance metric.
+///
+/// Instead of the full n×n panel, each ground-set element keeps its
+/// `neighbors` nearest candidates (by the inner metric, searched inside a
+/// random-projection rank window), and every other pair reports one finite
+/// `far` sentinel distance. Greedy gain scans against this metric touch
+/// O(n·neighbors) entries per pass instead of O(n²) — the sparse mode of
+/// CRAIG's reference implementation.
+///
+/// The stored lists are *row-oriented*: `sqdist(j, i)` answers "distance
+/// from candidate `j` to element `i`" out of row `j`'s list, which is the
+/// orientation every scan in this module uses (candidate first). Pairs
+/// outside the list are `far` in both orientations, but listed pairs are
+/// only guaranteed exact in candidate-row order — the metric trades exact
+/// symmetry for O(neighbors) rows, which changes approximation quality,
+/// never determinism.
+///
+/// Construction is deterministic and thread-count invariant: the candidate
+/// window comes from the shape-only projection ordering, per-row searches
+/// are independent, and the `far` sentinel folds row maxima in index order.
+pub struct SparseKnnMetric {
+    n: usize,
+    /// neighbors kept per row (uniform across rows)
+    k: usize,
+    /// per-row neighbor ids, ascending within each row (`n * k` entries)
+    ids: Vec<u32>,
+    /// inner-metric distances aligned with `ids`
+    d: Vec<f32>,
+    /// finite stand-in distance for every non-neighbor pair
+    far: f32,
+}
+
+impl SparseKnnMetric {
+    /// Precompute the neighbor lists of `inner` (whose element order must
+    /// match the rows of `feat`, the embedding matrix used for the
+    /// candidate-window projection). `neighbors` counts the element itself;
+    /// it is clamped to `[1, n]`.
+    pub fn build<M: SqDistMetric + ?Sized>(
+        inner: &M,
+        feat: &MatF32,
+        neighbors: usize,
+    ) -> SparseKnnMetric {
+        let n = inner.len();
+        assert_eq!(feat.rows, n, "SparseKnnMetric: feature rows must match the metric");
+        if n == 0 {
+            return SparseKnnMetric { n, k: 0, ids: Vec::new(), d: Vec::new(), far: 1.0 };
+        }
+        let k = neighbors.clamp(1, n);
+        let order = projection_order(feat, KNN_PROJ_SEED);
+        let mut rank = vec![0u32; n];
+        for (p, &i) in order.iter().enumerate() {
+            rank[i] = p as u32;
+        }
+        // Candidate window: the k projection-ranks on either side of each
+        // row's own rank — 2k+1 candidates interior, never fewer than k+1
+        // at the edges, so every row keeps exactly k entries.
+        let rows: Vec<(Vec<u32>, Vec<f32>)> =
+            Pool::gated(n * (2 * k + 1), PAR_MIN_WORK).map(n, |i| {
+                let p = rank[i] as usize;
+                let lo = p.saturating_sub(k);
+                let hi = (p + k + 1).min(n);
+                let mut cand: Vec<(f32, u32)> = (lo..hi)
+                    .map(|q| {
+                        let j = order[q];
+                        (inner.sqdist(i, j), j as u32)
+                    })
+                    .collect();
+                cand.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                cand.truncate(k);
+                cand.sort_unstable_by_key(|c| c.1);
+                (cand.iter().map(|c| c.1).collect(), cand.iter().map(|c| c.0).collect())
+            });
+        let mut ids = Vec::with_capacity(n * k);
+        let mut d = Vec::with_capacity(n * k);
+        let mut maxd = 0.0f32;
+        for (rid, rd) in rows {
+            for &v in &rd {
+                if v > maxd {
+                    maxd = v;
+                }
+            }
+            ids.extend_from_slice(&rid);
+            d.extend_from_slice(&rd);
+        }
+        // finite sentinel strictly beyond every kept distance: INF here
+        // would put INF−INF = NaN into the gain arithmetic
+        let far = if maxd > 0.0 { 2.0 * maxd } else { 1.0 };
+        SparseKnnMetric { n, k, ids, d, far }
+    }
+
+    /// Neighbors kept per element (after clamping).
+    pub fn neighbors(&self) -> usize {
+        self.k
+    }
+
+    /// The finite sentinel distance reported for non-neighbor pairs.
+    pub fn far(&self) -> f32 {
+        self.far
+    }
+
+    #[inline]
+    fn row_ids(&self, j: usize) -> &[u32] {
+        &self.ids[j * self.k..(j + 1) * self.k]
+    }
+}
+
+impl SqDistMetric for SparseKnnMetric {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn sqdist(&self, i: usize, j: usize) -> f32 {
+        if i == j {
+            return 0.0;
+        }
+        match self.row_ids(i).binary_search(&(j as u32)) {
+            Ok(p) => self.d[i * self.k + p],
+            Err(_) => self.far,
+        }
+    }
+
+    fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        out.fill(self.far);
+        for (p, &id) in self.row_ids(j).iter().enumerate() {
+            let id = id as usize;
+            if range.contains(&id) {
+                out[id - range.start] = self.d[j * self.k + p];
+            }
+        }
+        if range.contains(&j) {
+            out[j - range.start] = 0.0;
+        }
+    }
+
+    fn is_cached(&self) -> bool {
+        // already a precomputed table: densifying it through GramMetric
+        // would undo the whole point
+        true
+    }
+}
+
 // ------------------------------------------------------------- gain scans
 
 /// Marginal gain of candidate `j` given current min-distances, summed in
 /// fixed chunks (see [`GAIN_CHUNK`]) for thread-count independence. Each
 /// chunk's distances come from one `sqdist_block` call.
-fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
+fn gain<M: SqDistMetric + ?Sized>(ctx: &M, mind: &[f32], j: usize) -> f32 {
     chunked_sum(mind.len(), |range| {
         let mut buf = [0.0f32; GAIN_CHUNK];
         let b = &mut buf[..range.len()];
@@ -349,7 +522,7 @@ fn gain<M: SqDistMetric>(ctx: &M, mind: &[f32], j: usize) -> f32 {
 /// Dense marginal-gain scan of every candidate against `mind` — the heap
 /// seeding pass of the lazy greedy, exposed for `benches/perf.rs` and the
 /// kernel equivalence tests.
-pub fn gain_scan<M: SqDistMetric>(ctx: &M, mind: &[f32]) -> Vec<f32> {
+pub fn gain_scan<M: SqDistMetric + ?Sized>(ctx: &M, mind: &[f32]) -> Vec<f32> {
     Pool::gated(ctx.len() * mind.len(), PAR_MIN_WORK).map(ctx.len(), |j| gain(ctx, mind, j))
 }
 
@@ -357,7 +530,7 @@ pub fn gain_scan<M: SqDistMetric>(ctx: &M, mind: &[f32]) -> Vec<f32> {
 /// min-distance has fallen below `floor` can contribute at most `floor`
 /// each, so skipping them changes any gain by < active_floor_mass — the
 /// hot-loop optimization measured by `benches/perf.rs`.
-fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize) -> f32 {
+fn gain_active<M: SqDistMetric + ?Sized>(ctx: &M, mind: &[f32], active: &[u32], j: usize) -> f32 {
     // dense scan is faster until the list actually thins out
     if active.len() == mind.len() {
         return gain(ctx, mind, j);
@@ -377,7 +550,7 @@ fn gain_active<M: SqDistMetric>(ctx: &M, mind: &[f32], active: &[u32], j: usize)
 
 /// Lower `mind` against the distances to a freshly selected medoid `j`
 /// (element-wise over blocked distances, hence thread-count independent).
-fn update_mind<M: SqDistMetric>(ctx: &M, mind: &mut [f32], j: usize) {
+fn update_mind<M: SqDistMetric + ?Sized>(ctx: &M, mind: &mut [f32], j: usize) {
     Pool::gated(mind.len(), MIND_PAR_MIN).for_rows(mind, 1, GAIN_CHUNK, |i0, chunk| {
         let mut buf = [0.0f32; GAIN_CHUNK];
         let b = &mut buf[..chunk.len()];
@@ -392,7 +565,7 @@ fn update_mind<M: SqDistMetric>(ctx: &M, mind: &mut [f32], j: usize) {
 
 /// Cluster sizes under nearest-medoid assignment. The per-element nearest
 /// scan keeps the serial tie-break (strict `<`, first medoid wins).
-fn assign_gamma<M: SqDistMetric>(ctx: &M, idx: &[usize], r: usize) -> Vec<f32> {
+fn assign_gamma<M: SqDistMetric + ?Sized>(ctx: &M, idx: &[usize], r: usize) -> Vec<f32> {
     let assign: Vec<u32> = Pool::gated(r * idx.len(), PAR_MIN_WORK).map(r, |i| {
         let mut best = 0usize;
         let mut bd = f32::INFINITY;
@@ -435,7 +608,7 @@ pub fn facility_location_prod(a: &MatF32, g: &MatF32, m: usize) -> Selection {
 /// With `CREST_GRAM_CACHE` opted in (and `n²` under the cap) the scans run
 /// against a precomputed [`GramMetric`] table — same selection, fewer
 /// flops.
-pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
+pub fn facility_location_metric<M: SqDistMetric + ?Sized>(ctx: &M, m: usize) -> Selection {
     match GramMetric::try_cache(ctx) {
         Some(gram) => lazy_greedy(&gram, m),
         None => lazy_greedy(ctx, m),
@@ -443,7 +616,7 @@ pub fn facility_location_metric<M: SqDistMetric>(ctx: &M, m: usize) -> Selection
 }
 
 /// The lazy-greedy core behind [`facility_location_metric`].
-fn lazy_greedy<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
+fn lazy_greedy<M: SqDistMetric + ?Sized>(ctx: &M, m: usize) -> Selection {
     let r = ctx.len();
     assert!(m >= 1 && m <= r, "facility_location: m={m} out of range for r={r}");
     // Round 0 has no finite gains (empty assignment): the 1-medoid is the
@@ -525,7 +698,7 @@ fn lazy_greedy<M: SqDistMetric>(ctx: &M, m: usize) -> Selection {
 /// Highest-gain untaken candidate under the current min-distances — the
 /// scored fallback of stochastic greedy for rounds where every sampled
 /// candidate was already taken.
-fn best_untaken<M: SqDistMetric>(
+fn best_untaken<M: SqDistMetric + ?Sized>(
     ctx: &M,
     mind: &[f32],
     active: &[u32],
@@ -559,7 +732,7 @@ fn best_untaken<M: SqDistMetric>(
 /// `s = (n/m)·ln(1/ε)`, giving a (1 − 1/e − ε) guarantee in O(n·ln(1/ε))
 /// gain evaluations — the standard way CRAIG scales to full-dataset
 /// selection (paper challenge C3).
-pub fn facility_location_stochastic<M: SqDistMetric>(
+pub fn facility_location_stochastic<M: SqDistMetric + ?Sized>(
     ctx: &M,
     m: usize,
     rng: &mut crate::util::rng::Rng,
@@ -571,7 +744,7 @@ pub fn facility_location_stochastic<M: SqDistMetric>(
 }
 
 /// The sampled-greedy core behind [`facility_location_stochastic`].
-fn stochastic_greedy<M: SqDistMetric>(
+fn stochastic_greedy<M: SqDistMetric + ?Sized>(
     ctx: &M,
     m: usize,
     rng: &mut crate::util::rng::Rng,
@@ -1020,5 +1193,116 @@ mod tests {
             coverage_cost(&g, &s.idx) < rand_cost * 0.5,
             "greedy should cover clusters far better than random"
         );
+    }
+
+    #[test]
+    fn sparse_knn_block_matches_scalar_bitwise() {
+        for (r, c, k) in [(1usize, 3usize, 1usize), (7, 4, 3), (130, 9, 16), (257, 5, 300)] {
+            let g = random_embed(r, c, 41);
+            let inner = EuclidMetric::new(&g);
+            let sparse = SparseKnnMetric::build(&inner, &g, k);
+            assert_eq!(sparse.len(), r);
+            assert_eq!(sparse.neighbors(), k.min(r));
+            assert!(sparse.is_cached(), "must not be re-wrapped by GramMetric");
+            let mut blk = vec![0.0f32; r];
+            for j in [0, r / 2, r - 1] {
+                sparse.sqdist_block(j, 0..r, &mut blk);
+                for i in 0..r {
+                    assert_eq!(
+                        blk[i].to_bits(),
+                        sparse.sqdist(j, i).to_bits(),
+                        "r={r} k={k} j={j} i={i}"
+                    );
+                }
+                assert_eq!(sparse.sqdist(j, j), 0.0, "self distance");
+            }
+            // offset sub-range
+            let lo = r / 3;
+            let hi = (lo + 7).min(r);
+            let mut part = vec![0.0f32; hi - lo];
+            sparse.sqdist_block(r - 1, lo..hi, &mut part);
+            for (p, &v) in part.iter().enumerate() {
+                assert_eq!(v.to_bits(), sparse.sqdist(r - 1, lo + p).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_knn_neighbors_exact_rest_far() {
+        let g = random_embed(64, 6, 42);
+        let inner = EuclidMetric::new(&g);
+        let sparse = SparseKnnMetric::build(&inner, &g, 8);
+        let far = sparse.far();
+        assert!(far.is_finite() && far > 0.0);
+        let mut listed = 0usize;
+        for j in 0..64 {
+            for i in 0..64 {
+                let d = sparse.sqdist(j, i);
+                if i == j {
+                    assert_eq!(d, 0.0);
+                } else if d < far {
+                    // listed pairs report the inner metric's exact value
+                    assert_eq!(d.to_bits(), inner.sqdist(j, i).to_bits(), "j={j} i={i}");
+                    listed += 1;
+                } else {
+                    assert_eq!(d, far);
+                }
+            }
+        }
+        assert!(listed > 0, "some true neighbor distances must survive");
+        assert!(listed <= 64 * 8, "at most k entries per row");
+    }
+
+    #[test]
+    fn sparse_knn_full_neighborhood_recovers_exact_selection() {
+        // neighbors = n keeps every pair (the rank window spans the whole
+        // ordering), so greedy over the sparse metric must match the dense
+        // metric exactly
+        let g = random_embed(96, 5, 43);
+        let inner = EuclidMetric::new(&g);
+        let sparse = SparseKnnMetric::build(&inner, &g, 96);
+        let dense = facility_location_metric(&inner, 12);
+        let approx = facility_location_metric(&sparse, 12);
+        assert_eq!(dense.idx, approx.idx);
+        assert_eq!(dense.gamma, approx.gamma);
+    }
+
+    #[test]
+    fn sparse_knn_build_bitwise_deterministic_across_thread_counts() {
+        use crate::util::pool;
+        let g = random_embed(1024, 6, 44);
+        let run = |t: usize| {
+            pool::with_threads(t, || {
+                let inner = EuclidMetric::new(&g);
+                let sparse = SparseKnnMetric::build(&inner, &g, 16);
+                let sel = facility_location_metric(&sparse, 32);
+                (sparse.ids.clone(), sparse.d.clone(), sparse.far, sel.idx, sel.gamma)
+            })
+        };
+        let base = run(1);
+        for t in [2, 4] {
+            let got = run(t);
+            assert_eq!(base.0, got.0, "ids threads={t}");
+            assert_eq!(
+                base.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "dists threads={t}"
+            );
+            assert_eq!(base.2.to_bits(), got.2.to_bits(), "far threads={t}");
+            assert_eq!(base.3, got.3, "selection threads={t}");
+            assert_eq!(base.4, got.4, "gamma threads={t}");
+        }
+    }
+
+    #[test]
+    fn sparse_knn_selection_approximates_dense_coverage() {
+        // clustered data: a 32-neighbor sparse metric must still find one
+        // medoid per cluster (cluster diameters are tiny vs. separation)
+        let g = clustered_embed(8, 32, 6, 45);
+        let inner = EuclidMetric::new(&g);
+        let sparse = SparseKnnMetric::build(&inner, &g, 32);
+        let sel = facility_location_metric(&sparse, 8);
+        let clusters: std::collections::HashSet<_> = sel.idx.iter().map(|&i| i / 32).collect();
+        assert_eq!(clusters.len(), 8, "one medoid per cluster through the sparse metric");
     }
 }

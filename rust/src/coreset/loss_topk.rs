@@ -17,8 +17,10 @@ use anyhow::Result;
 
 use crate::api::registry::{MethodSpec, SourceCtx};
 use crate::coordinator::sources::{BatchSource, SelectionRecord, SourceStats, SourcedBatch};
+use crate::coreset::strategy::{self, SelectionStrategy};
 use crate::data::Dataset;
 use crate::runtime::Runtime;
+use crate::tensor::MatF32;
 use crate::train::{evaluate, TrainState};
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimers;
@@ -27,6 +29,8 @@ use crate::util::timer::PhaseTimers;
 pub struct LossTopKSource<'a> {
     rt: &'a Runtime,
     train: &'a Dataset,
+    /// exact vs. approximate ground-set traversal (`cfg.selection`)
+    selection: SelectionStrategy,
     k: usize,
     epoch_steps: usize,
     into_epoch: usize,
@@ -46,13 +50,14 @@ impl<'a> LossTopKSource<'a> {
     ) -> Result<()> {
         let t0 = Instant::now();
         let ev = evaluate(self.rt, &state.params, self.train)?;
-        let mut order: Vec<usize> = (0..self.train.n()).collect();
-        // highest loss first; ties break toward the lower index so the
-        // selection is a pure function of the model state
-        order.sort_unstable_by(|&a, &b| {
-            ev.per_ex_loss[b].total_cmp(&ev.per_ex_loss[a]).then(a.cmp(&b))
-        });
-        order.truncate(self.k);
+        // the per-example losses as a one-column ground set: under `Exact`
+        // the TopK selector reproduces the historical sort (highest loss
+        // first, ties toward the lower index) bit for bit, and the
+        // approximate strategies shard/cluster the same view
+        let losses = MatF32::from_vec(self.train.n(), 1, ev.per_ex_loss.clone())?;
+        let ground = strategy::Ground { gl: &losses, al: None, labels: Some(&self.train.y) };
+        let sel = self.selection.select(&ground, self.k, &mut self.rng, &strategy::TopKSelector);
+        let mut order = sel.idx;
         self.rng.shuffle(&mut order);
         self.order = order;
         self.into_epoch = 0;
@@ -100,6 +105,7 @@ fn make_loss_topk<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn BatchSourc
     Ok(Box::new(LossTopKSource {
         rt: ctx.rt,
         train: ctx.train,
+        selection: ctx.cfg.selection,
         k,
         epoch_steps: (k / m).max(1),
         into_epoch: 0,

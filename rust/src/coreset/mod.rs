@@ -13,8 +13,10 @@ pub mod facility;
 pub mod glister;
 pub mod gradmatch;
 pub mod loss_topk;
+pub mod strategy;
 
 pub use facility::{coverage_cost, facility_location, Selection};
+pub use strategy::SelectionStrategy;
 
 /// A selected mini-batch coreset: global example indices + per-element
 /// step sizes normalized so the weighted batch loss is an unbiased

@@ -1,0 +1,872 @@
+//! The selection-strategy layer: exact vs. sub-quadratic approximate
+//! selection, composable with every registered method.
+//!
+//! Greedy facility location is O(n·|candidates|·d) per step — fine for
+//! per-batch pools, super-linear for epoch-level selection over 10⁵–10⁶
+//! example ground sets (the scaling wall AdaCore documents; CRAIG's
+//! reference implementation ships `dense | sparse | clustered` escape
+//! hatches for the same reason). A [`SelectionStrategy`] decides *how* a
+//! ground set is traversed; a [`GroundSelector`] decides *what* exact
+//! selection runs on each piece. Methods supply the selector, experiments
+//! supply the strategy, and the two compose without any per-method
+//! dispatch edits:
+//!
+//! * [`SelectionStrategy::Exact`] — hand the whole ground set to the
+//!   selector. Bit-for-bit the pre-strategy behavior.
+//! * [`SelectionStrategy::ClassSharded`] — partition by label into
+//!   contiguous class shards (CRAIG's per-class mode), select per shard
+//!   with a size-proportional budget, remap and concatenate.
+//! * [`SelectionStrategy::Clustered`] — random-projection bucketing of the
+//!   gradient embeddings; the selector sees one representative per bucket,
+//!   winning buckets expand back to their members under an apportioned
+//!   budget.
+//! * [`SelectionStrategy::Knn`] — run the selector against a sparse
+//!   [`SparseKnnMetric`] that scores gains only on precomputed neighbor
+//!   lists (metric-driven selectors only; others keep their exact path).
+//!
+//! Determinism contract (same as the kernel layer): partition boundaries
+//! are functions of shapes and labels only, per-piece work folds in a
+//! fixed order, and child RNG streams split from the caller's stream in
+//! piece order — so every strategy is bitwise-identical at any thread
+//! count, and the degenerate parameters (`ClassSharded` with one shard,
+//! `Clustered` with `k ≥ n`, `Knn` with `neighbors ≥ n`) short-circuit to
+//! `Exact` *before* touching the RNG, making the equivalence exact.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coreset::craig;
+use crate::coreset::facility::{
+    self, facility_location_metric, facility_location_stochastic, EuclidMetric, ProdMetric,
+    Selection, SparseKnnMetric, SqDistMetric,
+};
+use crate::coreset::{glister, gradmatch};
+use crate::tensor::MatF32;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+/// Fixed seed of the clustered-selection bucketing projection (shape-only;
+/// independent of [`facility`]'s k-NN window seed so the two layers don't
+/// alias).
+const CLUSTER_PROJ_SEED: u64 = 0xc1a5_7e4e_d00d_5eed;
+
+/// Neighbors kept by `knn` when the parameter is elided (`knn` == `knn:0`).
+const DEFAULT_KNN_NEIGHBORS: usize = 32;
+
+/// Fixed RNG stream for strategy entry points whose base selector never
+/// draws randomness (the facility-location pool paths) — keeps those call
+/// sites free of the caller's RNG stream, so `Exact` consumes nothing.
+const FACILITY_STREAM_SEED: u64 = 0x5e1e_c7ed_0000_0001;
+
+// ---------------------------------------------------------------- strategy
+
+/// How a selection traverses its ground set: exactly, or through one of
+/// three sub-quadratic approximations. A parameter of `0` means "auto"
+/// (one shard per class / `4·⌈√n⌉` clusters / 32 neighbors) and is the
+/// canonical spelling of the elided CLI/JSON forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionStrategy {
+    /// Full greedy over the whole ground set (the default).
+    Exact,
+    /// Per-class sharded selection: `shards` label shards (0 = one per
+    /// class), each selected independently with a size-proportional budget.
+    ClassSharded {
+        /// Number of label shards; 0 = one shard per class.
+        shards: usize,
+    },
+    /// Clustered selection on bucket representatives (0 = `4·⌈√n⌉`
+    /// buckets), expanded back to member indices.
+    Clustered {
+        /// Number of projection buckets; 0 = auto.
+        k: usize,
+    },
+    /// Sparse k-NN gains: greedy against precomputed neighbor lists
+    /// (0 = 32 neighbors).
+    Knn {
+        /// Neighbors kept per element (including itself); 0 = auto.
+        neighbors: usize,
+    },
+}
+
+/// One row of the strategy parse table — the single source for `--selection`
+/// parsing, help text, and the JSON config key (mirrors how `--method`
+/// derives everything from the method registry).
+struct StrategySpec {
+    name: &'static str,
+    usage: &'static str,
+    help: &'static str,
+    takes_param: bool,
+    build: fn(usize) -> SelectionStrategy,
+}
+
+/// The strategy table. `parse`, `help_names`, and `describe_all` all derive
+/// from this list — adding a strategy is one new row plus its `select` arm.
+const STRATEGIES: &[StrategySpec] = &[
+    StrategySpec {
+        name: "exact",
+        usage: "exact",
+        help: "full greedy over the whole ground set (default)",
+        takes_param: false,
+        build: |_| SelectionStrategy::Exact,
+    },
+    StrategySpec {
+        name: "class-sharded",
+        usage: "class-sharded[:shards]",
+        help: "per-class sharded greedy, size-proportional budgets (0 = one shard per class)",
+        takes_param: true,
+        build: |p| SelectionStrategy::ClassSharded { shards: p },
+    },
+    StrategySpec {
+        name: "clustered",
+        usage: "clustered[:k]",
+        help: "greedy on projection-bucket representatives, expanded to members (0 = 4*ceil(sqrt(n)))",
+        takes_param: true,
+        build: |p| SelectionStrategy::Clustered { k: p },
+    },
+    StrategySpec {
+        name: "knn",
+        usage: "knn[:neighbors]",
+        help: "greedy over a sparse k-NN distance panel (0 = 32 neighbors)",
+        takes_param: true,
+        build: |p| SelectionStrategy::Knn { neighbors: p },
+    },
+];
+
+impl fmt::Display for SelectionStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            SelectionStrategy::Exact => write!(f, "exact"),
+            SelectionStrategy::ClassSharded { shards: 0 } => write!(f, "class-sharded"),
+            SelectionStrategy::ClassSharded { shards } => write!(f, "class-sharded:{shards}"),
+            SelectionStrategy::Clustered { k: 0 } => write!(f, "clustered"),
+            SelectionStrategy::Clustered { k } => write!(f, "clustered:{k}"),
+            SelectionStrategy::Knn { neighbors: 0 } => write!(f, "knn"),
+            SelectionStrategy::Knn { neighbors } => write!(f, "knn:{neighbors}"),
+        }
+    }
+}
+
+impl Default for SelectionStrategy {
+    fn default() -> Self {
+        SelectionStrategy::Exact
+    }
+}
+
+impl SelectionStrategy {
+    /// Parse a `--selection` / config value: a table name, optionally with
+    /// a `:<param>` suffix (`class-sharded:4`, `knn:64`, ...). Round-trips
+    /// with [`fmt::Display`].
+    pub fn parse(s: &str) -> Result<SelectionStrategy> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (s, None),
+        };
+        let spec = STRATEGIES
+            .iter()
+            .find(|spec| spec.name == name)
+            .with_context(|| {
+                format!("unknown selection strategy `{s}` (expected {})", Self::help_names())
+            })?;
+        let value = match param {
+            None => 0,
+            Some(_) if !spec.takes_param => {
+                bail!("selection strategy `{name}` takes no parameter (got `{s}`)")
+            }
+            Some(p) => p.parse::<usize>().ok().with_context(|| {
+                format!("selection strategy `{s}`: parameter must be a non-negative integer")
+            })?,
+        };
+        Ok((spec.build)(value))
+    }
+
+    /// `usage | usage | ...` summary of every strategy, for `--help` text
+    /// (the one-table analogue of `MethodRegistry::help_names`).
+    pub fn help_names() -> String {
+        STRATEGIES.iter().map(|s| s.usage).collect::<Vec<_>>().join(" | ")
+    }
+
+    /// `(usage, help)` rows of the strategy table, for long-form help.
+    pub fn describe_all() -> Vec<(&'static str, &'static str)> {
+        STRATEGIES.iter().map(|s| (s.usage, s.help)).collect()
+    }
+
+    /// Run `base` over `g` under this strategy, selecting `k` elements.
+    ///
+    /// `Exact` forwards untouched (and consumes nothing from `rng` unless
+    /// the selector itself draws); the approximate strategies partition the
+    /// work as documented on the enum and split child RNG streams from
+    /// `rng` in partition order.
+    pub fn select(
+        &self,
+        g: &Ground<'_>,
+        k: usize,
+        rng: &mut Rng,
+        base: &dyn GroundSelector,
+    ) -> Selection {
+        match *self {
+            SelectionStrategy::Exact => base.select(g, k, rng),
+            SelectionStrategy::ClassSharded { shards } => class_sharded(g, k, rng, base, shards),
+            SelectionStrategy::Clustered { k: buckets } => clustered(g, k, rng, base, buckets),
+            SelectionStrategy::Knn { neighbors } => knn(g, k, rng, base, neighbors),
+        }
+    }
+}
+
+// ------------------------------------------------------------ ground view
+
+/// A borrowed view of one selection ground set: gradient embeddings, the
+/// optional activation matrix of the product metric, and optional labels
+/// (required only by class sharding).
+pub struct Ground<'a> {
+    /// Gradient embeddings, one row per example — the feature space the
+    /// clustering/k-NN approximations partition.
+    pub gl: &'a MatF32,
+    /// Activations paired with `gl` for the last-layer weight-gradient
+    /// metric; `None` selects the plain Euclidean metric over `gl`.
+    pub al: Option<&'a MatF32>,
+    /// Class labels aligned with the rows of `gl`; `None` disables
+    /// class sharding (the strategy falls back to exact).
+    pub labels: Option<&'a [i32]>,
+}
+
+impl<'a> Ground<'a> {
+    /// Ground-set size.
+    pub fn n(&self) -> usize {
+        self.gl.rows
+    }
+}
+
+/// Owned sub-ground gathered for one shard/bucket (compact matrices keep
+/// the tiled kernels fed).
+struct OwnedGround {
+    gl: MatF32,
+    al: Option<MatF32>,
+    labels: Option<Vec<i32>>,
+}
+
+impl OwnedGround {
+    fn view(&self) -> Ground<'_> {
+        Ground { gl: &self.gl, al: self.al.as_ref(), labels: self.labels.as_deref() }
+    }
+}
+
+fn gather_ground(g: &Ground<'_>, idx: &[usize]) -> OwnedGround {
+    OwnedGround {
+        gl: g.gl.gather_rows(idx),
+        al: g.al.map(|a| a.gather_rows(idx)),
+        labels: g.labels.map(|y| idx.iter().map(|&i| y[i]).collect()),
+    }
+}
+
+// ---------------------------------------------------------- base selectors
+
+/// The exact selection a method runs on each piece of a partition. Every
+/// registered method supplies one (facility for CREST/greedy pools, CRAIG's
+/// thresholded greedy, OMP for GradMatch, ...); strategies call it on the
+/// whole ground set (`Exact`), per shard, on representatives, or — for
+/// selectors that are metric-driven — against a sparse metric.
+pub trait GroundSelector: Sync {
+    /// Select `k` elements of `g` exactly.
+    fn select(&self, g: &Ground<'_>, k: usize, rng: &mut Rng) -> Selection;
+
+    /// True when the selector's gains come from a [`SqDistMetric`] (so the
+    /// sparse k-NN strategy applies). Override together with
+    /// [`GroundSelector::select_metric`].
+    fn uses_metric(&self) -> bool {
+        false
+    }
+
+    /// Select against an arbitrary (possibly sparse) metric; `None` for
+    /// selectors whose objective is not distance-driven, in which case the
+    /// k-NN strategy falls back to [`GroundSelector::select`].
+    fn select_metric(&self, _m: &dyn SqDistMetric, _k: usize, _rng: &mut Rng) -> Option<Selection> {
+        None
+    }
+}
+
+/// Lazy-greedy facility location — the CREST per-batch and
+/// greedy-per-batch selector. Never draws from the RNG.
+pub struct FacilitySelector;
+
+impl GroundSelector for FacilitySelector {
+    fn select(&self, g: &Ground<'_>, k: usize, _rng: &mut Rng) -> Selection {
+        match g.al {
+            Some(al) => facility::facility_location_prod(al, g.gl, k),
+            None => facility::facility_location(g.gl, k),
+        }
+    }
+
+    fn uses_metric(&self) -> bool {
+        true
+    }
+
+    fn select_metric(&self, m: &dyn SqDistMetric, k: usize, _rng: &mut Rng) -> Option<Selection> {
+        Some(facility_location_metric(m, k))
+    }
+}
+
+/// CRAIG's epoch-level selector: lazy greedy up to
+/// [`craig::STOCHASTIC_THRESHOLD`], stochastic greedy past it.
+pub struct CraigSelector;
+
+impl GroundSelector for CraigSelector {
+    fn select(&self, g: &Ground<'_>, k: usize, rng: &mut Rng) -> Selection {
+        match g.al {
+            Some(al) => craig::craig_select(al, g.gl, k, rng),
+            None => {
+                let metric = EuclidMetric::new(g.gl);
+                if g.n() > craig::STOCHASTIC_THRESHOLD {
+                    facility_location_stochastic(&metric, k, rng)
+                } else {
+                    facility_location_metric(&metric, k)
+                }
+            }
+        }
+    }
+
+    fn uses_metric(&self) -> bool {
+        true
+    }
+
+    fn select_metric(&self, m: &dyn SqDistMetric, k: usize, rng: &mut Rng) -> Option<Selection> {
+        Some(if m.len() > craig::STOCHASTIC_THRESHOLD {
+            facility_location_stochastic(m, k, rng)
+        } else {
+            facility_location_metric(m, k)
+        })
+    }
+}
+
+/// GradMatch's orthogonal-matching-pursuit selector (not metric-driven:
+/// its objective is gradient-sum residual, not pairwise distance).
+pub struct GradMatchSelector;
+
+impl GroundSelector for GradMatchSelector {
+    fn select(&self, g: &Ground<'_>, k: usize, rng: &mut Rng) -> Selection {
+        gradmatch::gradmatch_select(g.gl, k, rng)
+    }
+}
+
+/// GLISTER's validation-alignment selector: greedy on `⟨g_i, ∇L_val⟩`
+/// (not metric-driven).
+pub struct GlisterSelector {
+    /// Mean validation gradient embedding the training gains align to.
+    pub vmean: Vec<f32>,
+}
+
+impl GroundSelector for GlisterSelector {
+    fn select(&self, g: &Ground<'_>, k: usize, _rng: &mut Rng) -> Selection {
+        glister::glister_select(g.gl, &self.vmean, k)
+    }
+}
+
+/// Top-k by the first embedding column, descending (ties to the lower
+/// index) — the loss-topk scorer viewed as a one-column ground set.
+pub struct TopKSelector;
+
+impl GroundSelector for TopKSelector {
+    fn select(&self, g: &Ground<'_>, k: usize, _rng: &mut Rng) -> Selection {
+        let n = g.n();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&a, &b| g.gl.row(b)[0].total_cmp(&g.gl.row(a)[0]).then(a.cmp(&b)));
+        order.truncate(k.min(n));
+        Selection { gamma: vec![1.0; order.len()], idx: order }
+    }
+}
+
+/// Strategy-driven facility location over one mini-batch pool (the CREST
+/// and greedy-per-batch hot paths). [`FacilitySelector`] never draws
+/// randomness, so the RNG stream is a fixed constant: under `Exact` this
+/// is bit-for-bit `facility_location_prod(al, gl, m)`, and the call site
+/// keeps its own RNG stream untouched.
+pub fn facility_select(
+    strategy: SelectionStrategy,
+    al: &MatF32,
+    gl: &MatF32,
+    labels: &[i32],
+    m: usize,
+) -> Selection {
+    let g = Ground { gl, al: Some(al), labels: Some(labels) };
+    let mut rng = Rng::new(FACILITY_STREAM_SEED);
+    strategy.select(&g, m, &mut rng, &FacilitySelector)
+}
+
+// ----------------------------------------------------------- class shards
+
+/// Largest-remainder apportionment of `k` over pieces of the given sizes:
+/// floor quotas, remainders to the largest fractional parts (ties to the
+/// lower index), capped at each piece's size with overflow redistributed
+/// in index order. Deterministic, sums to `min(k, Σ sizes)`.
+fn apportion(k: usize, sizes: &[usize]) -> Vec<usize> {
+    let n: usize = sizes.iter().sum();
+    if n == 0 || k == 0 {
+        return vec![0; sizes.len()];
+    }
+    let k = k.min(n);
+    let quota = |sz: usize| (k as u128 * sz as u128 / n as u128) as usize;
+    let frac = |sz: usize| k as u128 * sz as u128 % n as u128;
+    let mut out: Vec<usize> = sizes.iter().map(|&sz| quota(sz)).collect();
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by(|&a, &b| frac(sizes[b]).cmp(&frac(sizes[a])).then(a.cmp(&b)));
+    let mut short = k - out.iter().sum::<usize>();
+    for &i in &order {
+        if short == 0 {
+            break;
+        }
+        if out[i] < sizes[i] {
+            out[i] += 1;
+            short -= 1;
+        }
+    }
+    // cap overflow (possible only when many pieces saturate): sweep spare
+    // room in index order until the budget is placed
+    while short > 0 {
+        let before = short;
+        for i in 0..out.len() {
+            if short == 0 {
+                break;
+            }
+            if out[i] < sizes[i] {
+                out[i] += 1;
+                short -= 1;
+            }
+        }
+        if short == before {
+            break;
+        }
+    }
+    out
+}
+
+/// Per-class sharded selection. Classes map to `s` contiguous shards
+/// (`shard = class·s/classes` — shape-only boundaries given the label
+/// alphabet), each shard selects independently under a size-proportional
+/// budget with its own child RNG stream (split in shard order), and the
+/// results concatenate shard-major with local indices remapped.
+fn class_sharded(
+    g: &Ground<'_>,
+    k: usize,
+    rng: &mut Rng,
+    base: &dyn GroundSelector,
+    shards: usize,
+) -> Selection {
+    let Some(labels) = g.labels else {
+        return base.select(g, k, rng);
+    };
+    let classes = labels.iter().map(|&y| y.max(0) as usize + 1).max().unwrap_or(1);
+    let s = if shards == 0 { classes } else { shards.min(classes) };
+    if s <= 1 {
+        // one shard ≡ exact — and the RNG stream is untouched, so the
+        // equivalence is bitwise
+        return base.select(g, k, rng);
+    }
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); s];
+    for (i, &y) in labels.iter().enumerate() {
+        let c = (y.max(0) as usize).min(classes - 1);
+        members[c * s / classes].push(i);
+    }
+    let sizes: Vec<usize> = members.iter().map(|m| m.len()).collect();
+    let budgets = apportion(k, &sizes);
+    let mut shard_rngs: Vec<Rng> = members.iter().map(|_| rng.split()).collect();
+    let mut idx = Vec::with_capacity(k);
+    let mut gamma = Vec::with_capacity(k);
+    for (sh, mem) in members.iter().enumerate() {
+        let ks = budgets[sh];
+        if ks == 0 {
+            continue;
+        }
+        let sub = gather_ground(g, mem);
+        let sel = base.select(&sub.view(), ks, &mut shard_rngs[sh]);
+        for (&p, &ga) in sel.idx.iter().zip(sel.gamma.iter()) {
+            idx.push(mem[p]);
+            gamma.push(ga);
+        }
+    }
+    Selection { idx, gamma }
+}
+
+// -------------------------------------------------------------- clustering
+
+fn auto_clusters(n: usize) -> usize {
+    (4 * (n as f64).sqrt().ceil() as usize).max(1)
+}
+
+/// Members of one bucket ordered by squared distance to the bucket's mean
+/// embedding (f64 accumulation in member order; stable sort keeps the
+/// projection-rank order on ties). The head of the list is the bucket's
+/// representative.
+fn rank_by_centroid(gl: &MatF32, members: &[usize]) -> Vec<usize> {
+    let d = gl.cols;
+    let mut mean = vec![0.0f64; d];
+    for &i in members {
+        for (a, &v) in mean.iter_mut().zip(gl.row(i)) {
+            *a += v as f64;
+        }
+    }
+    let inv = 1.0 / members.len() as f64;
+    let mean: Vec<f32> = mean.iter().map(|&v| (v * inv) as f32).collect();
+    let mut scored: Vec<(f32, usize)> = members
+        .iter()
+        .map(|&i| {
+            let mut s = 0.0f32;
+            for (&v, &mu) in gl.row(i).iter().zip(&mean) {
+                let dl = v - mu;
+                s += dl * dl;
+            }
+            (s, i)
+        })
+        .collect();
+    scored.sort_by(|a, b| a.0.total_cmp(&b.0));
+    scored.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Clustered selection. Rows bucket by deterministic random-projection
+/// rank (`k` equal-rank contiguous buckets — shape-only boundaries), the
+/// selector runs on one representative per bucket (the member nearest the
+/// bucket mean), and winning buckets expand back to their members nearest
+/// the mean under a size-apportioned budget. Expanded members share their
+/// representative's weight scaled by the bucket's share of the ground set.
+fn clustered(
+    g: &Ground<'_>,
+    m: usize,
+    rng: &mut Rng,
+    base: &dyn GroundSelector,
+    buckets: usize,
+) -> Selection {
+    let n = g.n();
+    let k = if buckets == 0 { auto_clusters(n) } else { buckets };
+    if k >= n {
+        // every element its own bucket ≡ exact (RNG untouched)
+        return base.select(g, m, rng);
+    }
+    let order = facility::projection_order(g.gl, CLUSTER_PROJ_SEED);
+    let lo = |b: usize| b * n / k;
+    // per-bucket centroid ranking: buckets are independent, results fold
+    // in bucket order — thread-count invariant
+    let ranked: Vec<Vec<usize>> =
+        Pool::global().map(k, |b| rank_by_centroid(g.gl, &order[lo(b)..lo(b + 1)]));
+    let reps: Vec<usize> = ranked.iter().map(|r| r[0]).collect();
+    let rep_ground = gather_ground(g, &reps);
+    let j = m.min(k);
+    let mut crng = rng.split();
+    let sel = base.select(&rep_ground.view(), j, &mut crng);
+    // apportion the full budget over the winning buckets by member count
+    let sizes: Vec<usize> = sel.idx.iter().map(|&b| ranked[b].len()).collect();
+    let budgets = apportion(m, &sizes);
+    let scale = n as f32 / k as f32; // each representative stands for ~n/k members
+    let mut idx = Vec::with_capacity(m);
+    let mut gamma = Vec::with_capacity(m);
+    for (w, &b) in sel.idx.iter().enumerate() {
+        let mc = budgets[w];
+        if mc == 0 {
+            continue;
+        }
+        let ga = sel.gamma[w] * scale / mc as f32;
+        for &i in &ranked[b][..mc] {
+            idx.push(i);
+            gamma.push(ga);
+        }
+    }
+    Selection { idx, gamma }
+}
+
+// -------------------------------------------------------------- sparse knn
+
+/// Sparse k-NN selection: build a [`SparseKnnMetric`] over the ground set
+/// and run the selector's metric path against it. Selectors that are not
+/// metric-driven keep their exact path (documented fallback).
+fn knn(
+    g: &Ground<'_>,
+    m: usize,
+    rng: &mut Rng,
+    base: &dyn GroundSelector,
+    neighbors: usize,
+) -> Selection {
+    let n = g.n();
+    let nb = if neighbors == 0 { DEFAULT_KNN_NEIGHBORS } else { neighbors };
+    if nb >= n || !base.uses_metric() {
+        // full neighborhood ≡ exact; non-metric selectors have no sparse
+        // path — both fall through without touching the RNG beyond what
+        // the exact selector itself draws
+        return base.select(g, m, rng);
+    }
+    let sel = match g.al {
+        Some(al) => {
+            let inner = ProdMetric::new(al, g.gl);
+            let sparse = SparseKnnMetric::build(&inner, g.gl, nb);
+            base.select_metric(&sparse, m, rng)
+        }
+        None => {
+            let inner = EuclidMetric::new(g.gl);
+            let sparse = SparseKnnMetric::build(&inner, g.gl, nb);
+            base.select_metric(&sparse, m, rng)
+        }
+    };
+    match sel {
+        Some(sel) => sel,
+        None => base.select(g, m, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coreset::coverage_cost;
+    use crate::util::pool;
+
+    fn random_mat(r: usize, c: usize, seed: u64) -> MatF32 {
+        let mut rng = Rng::new(seed);
+        let mut m = MatF32::zeros(r, c);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    fn fixture(n: usize, classes: usize, seed: u64) -> (MatF32, MatF32, Vec<i32>) {
+        let al = random_mat(n, 7, seed);
+        let gl = random_mat(n, 5, seed + 1);
+        let labels: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+        (al, gl, labels)
+    }
+
+    #[test]
+    fn parse_display_roundtrip_all_forms() {
+        for s in [
+            "exact",
+            "class-sharded",
+            "class-sharded:4",
+            "clustered",
+            "clustered:128",
+            "knn",
+            "knn:64",
+        ] {
+            let parsed = SelectionStrategy::parse(s).unwrap();
+            assert_eq!(parsed.to_string(), s, "canonical form round-trips");
+            assert_eq!(SelectionStrategy::parse(&parsed.to_string()).unwrap(), parsed);
+        }
+        // elided and explicit-zero spell the same strategy
+        assert_eq!(
+            SelectionStrategy::parse("clustered:0").unwrap(),
+            SelectionStrategy::Clustered { k: 0 }
+        );
+        assert_eq!(SelectionStrategy::default(), SelectionStrategy::Exact);
+    }
+
+    #[test]
+    fn parse_rejects_bad_values() {
+        assert!(SelectionStrategy::parse("nope").is_err());
+        assert!(SelectionStrategy::parse("exact:3").is_err(), "exact takes no parameter");
+        assert!(SelectionStrategy::parse("knn:abc").is_err());
+        assert!(SelectionStrategy::parse("knn:-1").is_err());
+        let help = SelectionStrategy::help_names();
+        for spec in ["exact", "class-sharded[:shards]", "clustered[:k]", "knn[:neighbors]"] {
+            assert!(help.contains(spec), "help `{help}` missing `{spec}`");
+        }
+        assert_eq!(SelectionStrategy::describe_all().len(), 4);
+    }
+
+    #[test]
+    fn apportion_sums_caps_and_orders() {
+        assert_eq!(apportion(10, &[50, 30, 20]), vec![5, 3, 2]);
+        // remainders go to the largest fractional parts
+        let a = apportion(10, &[35, 35, 30]);
+        assert_eq!(a.iter().sum::<usize>(), 10);
+        assert!(a.iter().zip(&[35usize, 35, 30]).all(|(&q, &s)| q <= s));
+        // caps respected, overflow redistributed
+        assert_eq!(apportion(5, &[1, 1, 100]), vec![1, 1, 3]);
+        // k beyond the pool clamps
+        assert_eq!(apportion(100, &[2, 3]), vec![2, 3]);
+        // zero-size pieces never receive budget
+        assert_eq!(apportion(4, &[0, 4, 0]), vec![0, 4, 0]);
+        assert_eq!(apportion(3, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn degenerate_parameters_match_exact_bitwise() {
+        let (al, gl, labels) = fixture(192, 4, 60);
+        let g = Ground { gl: &gl, al: Some(&al), labels: Some(&labels) };
+        let exact = {
+            let mut rng = Rng::new(7);
+            SelectionStrategy::Exact.select(&g, 24, &mut rng, &FacilitySelector)
+        };
+        for strat in [
+            SelectionStrategy::ClassSharded { shards: 1 },
+            SelectionStrategy::Clustered { k: 192 },
+            SelectionStrategy::Clustered { k: usize::MAX },
+            SelectionStrategy::Knn { neighbors: 192 },
+            SelectionStrategy::Knn { neighbors: usize::MAX },
+        ] {
+            let mut rng = Rng::new(7);
+            let got = strat.select(&g, 24, &mut rng, &FacilitySelector);
+            assert_eq!(exact.idx, got.idx, "{strat}");
+            let eb: Vec<u32> = exact.gamma.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.gamma.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(eb, gb, "{strat}");
+        }
+    }
+
+    #[test]
+    fn class_sharded_covers_classes_with_proportional_budget() {
+        let (al, gl, labels) = fixture(240, 4, 61);
+        let g = Ground { gl: &gl, al: Some(&al), labels: Some(&labels) };
+        let mut rng = Rng::new(9);
+        let strat = SelectionStrategy::ClassSharded { shards: 0 };
+        let sel = strat.select(&g, 24, &mut rng, &FacilitySelector);
+        assert_eq!(sel.idx.len(), 24);
+        let uniq: std::collections::HashSet<_> = sel.idx.iter().collect();
+        assert_eq!(uniq.len(), 24, "indices unique across shards");
+        // balanced classes, balanced budget: 6 picks per class
+        for c in 0..4 {
+            let got = sel.idx.iter().filter(|&&i| labels[i] == c as i32).count();
+            assert_eq!(got, 6, "class {c}");
+        }
+        // per-shard gammas partition the shard, so the total partitions n
+        assert!((sel.gamma.iter().sum::<f32>() - 240.0).abs() < 1e-3);
+        // labels absent -> exact fallback
+        let g2 = Ground { gl: &gl, al: Some(&al), labels: None };
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let a = strat.select(&g2, 12, &mut r1, &FacilitySelector);
+        let b = SelectionStrategy::Exact.select(&g2, 12, &mut r2, &FacilitySelector);
+        assert_eq!(a.idx, b.idx);
+    }
+
+    #[test]
+    fn clustered_expands_winners_to_budget() {
+        let (al, gl, labels) = fixture(300, 4, 62);
+        let g = Ground { gl: &gl, al: Some(&al), labels: Some(&labels) };
+        let mut rng = Rng::new(11);
+        let strat = SelectionStrategy::Clustered { k: 30 };
+        let sel = strat.select(&g, 24, &mut rng, &FacilitySelector);
+        assert_eq!(sel.idx.len(), 24, "expansion fills the budget exactly");
+        let uniq: std::collections::HashSet<_> = sel.idx.iter().collect();
+        assert_eq!(uniq.len(), 24, "buckets are disjoint, so picks are unique");
+        assert!(sel.idx.iter().all(|&i| i < 300));
+        assert!(sel.gamma.iter().all(|&ga| ga >= 0.0));
+    }
+
+    #[test]
+    fn knn_strategy_selects_reasonable_coreset() {
+        // two well-separated blobs: sparse-knn greedy must cover both
+        let n = 256;
+        let mut gl = random_mat(n, 4, 63);
+        for i in n / 2..n {
+            for v in gl.row_mut(i) {
+                *v += 25.0;
+            }
+        }
+        let g = Ground { gl: &gl, al: None, labels: None };
+        let mut rng = Rng::new(13);
+        let strat = SelectionStrategy::Knn { neighbors: 16 };
+        let sel = strat.select(&g, 8, &mut rng, &FacilitySelector);
+        assert_eq!(sel.idx.len(), 8);
+        assert!(sel.idx.iter().any(|&i| i < n / 2));
+        assert!(sel.idx.iter().any(|&i| i >= n / 2));
+        let exact_cost = {
+            let mut r = Rng::new(13);
+            let e = SelectionStrategy::Exact.select(&g, 8, &mut r, &FacilitySelector);
+            coverage_cost(&gl, &e.idx)
+        };
+        let knn_cost = coverage_cost(&gl, &sel.idx);
+        assert!(
+            knn_cost <= exact_cost * 2.0 + 1e-6,
+            "sparse coverage {knn_cost} vs exact {exact_cost}"
+        );
+    }
+
+    #[test]
+    fn knn_falls_back_for_non_metric_selectors() {
+        let (_, gl, _) = fixture(64, 4, 64);
+        let g = Ground { gl: &gl, al: None, labels: None };
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = SelectionStrategy::Knn { neighbors: 8 }.select(&g, 6, &mut r1, &TopKSelector);
+        let b = SelectionStrategy::Exact.select(&g, 6, &mut r2, &TopKSelector);
+        assert_eq!(a.idx, b.idx, "non-metric selector keeps its exact path");
+    }
+
+    #[test]
+    fn topk_selector_orders_by_first_column_desc() {
+        let gl = MatF32::from_vec(5, 1, vec![0.5, 2.0, -1.0, 2.0, 1.0]).unwrap();
+        let g = Ground { gl: &gl, al: None, labels: None };
+        let sel = TopKSelector.select(&g, 3, &mut Rng::new(0));
+        assert_eq!(sel.idx, vec![1, 3, 4], "desc order, ties to the lower index");
+        assert_eq!(sel.gamma, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn strategies_bitwise_deterministic_across_thread_counts() {
+        let (al, gl, labels) = fixture(1024, 8, 65);
+        for strat in [
+            SelectionStrategy::ClassSharded { shards: 0 },
+            SelectionStrategy::ClassSharded { shards: 3 },
+            SelectionStrategy::Clustered { k: 64 },
+            SelectionStrategy::Knn { neighbors: 24 },
+        ] {
+            let run = |t: usize| {
+                pool::with_threads(t, || {
+                    let g = Ground { gl: &gl, al: Some(&al), labels: Some(&labels) };
+                    let mut rng = Rng::new(17);
+                    strat.select(&g, 64, &mut rng, &FacilitySelector)
+                })
+            };
+            let base = run(1);
+            for t in [2, 4] {
+                let got = run(t);
+                assert_eq!(base.idx, got.idx, "{strat} threads={t}");
+                let bb: Vec<u32> = base.gamma.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.gamma.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bb, gb, "{strat} threads={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn facility_select_exact_matches_direct_call() {
+        let (al, gl, labels) = fixture(160, 4, 66);
+        let direct = facility::facility_location_prod(&al, &gl, 16);
+        let via = facility_select(SelectionStrategy::Exact, &al, &gl, &labels, 16);
+        assert_eq!(direct.idx, via.idx);
+        let db: Vec<u32> = direct.gamma.iter().map(|v| v.to_bits()).collect();
+        let vb: Vec<u32> = via.gamma.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(db, vb);
+    }
+
+    #[test]
+    fn approximate_strategies_cut_selection_work_quality_bounded() {
+        // clustered blobs: every strategy should land within a modest
+        // factor of exact coverage
+        let n = 512;
+        let mut rng = Rng::new(67);
+        let mut gl = MatF32::zeros(n, 6);
+        for i in 0..n {
+            let c = (i % 8) as f32 * 12.0;
+            for v in gl.row_mut(i) {
+                *v = c + rng.normal() * 0.3;
+            }
+        }
+        let labels: Vec<i32> = (0..n).map(|i| (i % 8) as i32).collect();
+        let g = Ground { gl: &gl, al: None, labels: Some(&labels) };
+        let exact_cost = {
+            let mut r = Rng::new(1);
+            let e = SelectionStrategy::Exact.select(&g, 16, &mut r, &FacilitySelector);
+            coverage_cost(&gl, &e.idx)
+        };
+        for strat in [
+            SelectionStrategy::ClassSharded { shards: 0 },
+            SelectionStrategy::Clustered { k: 64 },
+            SelectionStrategy::Knn { neighbors: 64 },
+        ] {
+            let mut r = Rng::new(1);
+            let sel = strat.select(&g, 16, &mut r, &FacilitySelector);
+            assert_eq!(sel.idx.len(), 16, "{strat}");
+            let cost = coverage_cost(&gl, &sel.idx);
+            assert!(
+                cost <= exact_cost * 3.0 + 1e-6,
+                "{strat}: cost {cost} vs exact {exact_cost}"
+            );
+        }
+    }
+}

@@ -26,13 +26,11 @@ pub use dataset::{Dataset, Splits};
 pub use store::{default_store, set_default_store, DataStore, MemStore, MmapStore, StoreKind};
 pub use synth::{generate, generate_packed, SynthSpec};
 
-/// Root directory for lazily packed corpora: `CREST_PACK_DIR` if set,
-/// else `<tmp>/crest-pack`.
+/// Root directory for lazily packed corpora: `CREST_PACK_DIR` (or a
+/// session [`RuntimeConfig`](crate::runtime_config::RuntimeConfig)
+/// override) if set, else `<tmp>/crest-pack`.
 pub fn pack_root() -> PathBuf {
-    match std::env::var("CREST_PACK_DIR") {
-        Ok(dir) if !dir.is_empty() => PathBuf::from(dir),
-        _ => std::env::temp_dir().join("crest-pack"),
-    }
+    crate::runtime_config::RuntimeConfig::current().resolved_pack_root()
 }
 
 /// Materialize the splits for `spec` through the session's default store.

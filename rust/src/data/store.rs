@@ -378,11 +378,7 @@ impl StoreKind {
 fn kind_cell() -> &'static RwLock<StoreKind> {
     static KIND: OnceLock<RwLock<StoreKind>> = OnceLock::new();
     KIND.get_or_init(|| {
-        let k = std::env::var("CREST_DATA_STORE")
-            .ok()
-            .and_then(|v| StoreKind::parse(&v).ok())
-            .unwrap_or(StoreKind::Mem);
-        RwLock::new(k)
+        RwLock::new(crate::runtime_config::RuntimeConfig::current().resolved_store())
     })
 }
 

@@ -45,6 +45,7 @@ pub mod prop;
 pub mod quadratic;
 pub mod report;
 pub mod runtime;
+pub mod runtime_config;
 pub mod sweep;
 pub mod tensor;
 pub mod train;

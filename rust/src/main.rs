@@ -29,7 +29,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crest::api::{Experiment, Method, MethodRegistry};
+use crest::api::{Experiment, Method, MethodRegistry, SelectionStrategy};
 use crest::bench_util;
 use crest::data::{self, cache, shard, synth, SynthSpec};
 use crest::metrics::relative_error_pct;
@@ -151,6 +151,9 @@ fn train_flags(c: Cli) -> Cli {
         // from what Method::parse accepts (see the registry round-trip
         // test); custom-registered methods appear here automatically
         .opt("method", "crest", MethodRegistry::help_names())
+        // generated from the strategy table the same way, for the same
+        // reason: parse and help share one source
+        .opt("selection", "exact", SelectionStrategy::help_names())
         .opt("seed", "1", "experiment seed")
         .opt("budget", "0.1", "training budget as a fraction of full")
         .opt("epochs-full", "60", "epochs of the full reference run")
@@ -177,6 +180,7 @@ fn cmd_train(ctx: &Ctx) -> Result<()> {
     let report = Experiment::builder()
         .variant(p.str("variant"))
         .method(p.str("method"))
+        .selection(SelectionStrategy::parse(&p.str("selection"))?)
         .seed(p.u64("seed")?)
         .budget_frac(p.f32("budget")?)
         .epochs_full(p.usize("epochs-full")?)
@@ -234,6 +238,7 @@ fn compare_flags(c: Cli) -> Cli {
             "full,random,crest,craig",
             format!("comma-separated method list ({})", MethodRegistry::help_names()),
         )
+        .opt("selection", "exact", SelectionStrategy::help_names())
         .opt("seed", "1", "experiment seed")
         .opt("budget", "0.1", "training budget fraction")
         .opt("epochs-full", "60", "epochs of the full reference run")
@@ -243,6 +248,7 @@ fn cmd_compare(ctx: &Ctx) -> Result<()> {
     let p = &ctx.args;
     let variant = p.str("variant");
     let seed = p.u64("seed")?;
+    let selection = SelectionStrategy::parse(&p.str("selection"))?;
     // one corpus shared by every method row (same (variant, seed) data),
     // prepared through the selected feature store
     let splits = data::prepare_splits(&variant, seed)?;
@@ -254,6 +260,7 @@ fn cmd_compare(ctx: &Ctx) -> Result<()> {
         let rep = Experiment::builder()
             .variant(&variant)
             .with_method(method)
+            .selection(selection)
             .seed(seed)
             .budget_frac(p.f32("budget")?)
             .epochs_full(p.usize("epochs-full")?)
@@ -289,6 +296,7 @@ fn sweep_flags(c: Cli) -> Cli {
             "full,random,crest",
             format!("comma-separated method list ({})", MethodRegistry::help_names()),
         )
+        .opt("selection", "exact", SelectionStrategy::help_names())
         .opt("seeds", "1,2", "comma-separated seed list (the mean±std axis)")
         .opt("budgets", "0.1", "comma-separated budget fractions")
         .opt("epochs-full", "60", "epochs of the full reference run")
@@ -311,6 +319,7 @@ fn cmd_sweep(ctx: &Ctx) -> Result<()> {
         budgets: sweep::grid::parse_budgets(&p.str("budgets"))?,
     };
     let mut spec = SweepSpec::new(grid, p.usize("epochs-full")?);
+    spec.selection = SelectionStrategy::parse(&p.str("selection"))?;
     spec.artifact_root = ctx.artifacts.clone();
     if !p.bool("no-checkpoint") {
         spec.checkpoint_dir = Some(PathBuf::from(p.str("checkpoint-dir")));

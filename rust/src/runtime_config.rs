@@ -1,0 +1,169 @@
+//! Typed runtime configuration — the single place the `CREST_*` process
+//! environment is read.
+//!
+//! Five knobs tune how a process executes without changing *what* any
+//! experiment computes: worker threads, the opt-in gram cache, the on-disk
+//! gradient-embedding cache, the default data-store backend, and the packed
+//! corpus root. Historically each consumer read its own env var; every such
+//! site now goes through [`RuntimeConfig::current`], which merges
+//! session-level overrides (installed by
+//! [`Experiment::builder().runtime_config(..)`](crate::api::ExperimentBuilder::runtime_config)
+//! or [`set_session`]) over a fresh read of the environment.
+//!
+//! Reading the environment *fresh on every call* is deliberate: tests and
+//! embedding applications flip `CREST_PACK_DIR`/`CREST_GRAM_CACHE` between
+//! phases and expect the change to take effect. The two consumers that
+//! memoize their value ([`pool::threads`](crate::util::pool::threads)
+//! caches the worker count on first use; the data-store default is a
+//! process-wide cell) keep their own caching semantics — this module only
+//! centralizes *where the value comes from*.
+
+use std::path::PathBuf;
+use std::sync::RwLock;
+
+use crate::coreset::facility::gram_cap;
+use crate::data::StoreKind;
+
+/// One env var's name and its one-line role (drives `--help` text and the
+/// README-coverage test).
+pub const VARS: &[(&str, &str)] = &[
+    ("CREST_THREADS", "worker thread count (default: available cores)"),
+    ("CREST_GRAM_CACHE", "opt-in n\u{00d7}n distance table: 1/true or an element cap"),
+    ("CREST_EMBED_CACHE", "directory for the on-disk gradient-embedding cache"),
+    ("CREST_DATA_STORE", "default dataset backend: mem | mmap"),
+    ("CREST_PACK_DIR", "root directory for packed (sharded) corpora"),
+];
+
+/// Typed snapshot of the runtime knobs. `None` everywhere means "use the
+/// built-in default" — the struct distinguishes *unset* from *set to the
+/// default* so overrides compose.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RuntimeConfig {
+    /// Worker thread count (`CREST_THREADS`); `None` = available cores.
+    pub threads: Option<usize>,
+    /// Gram-cache element cap (`CREST_GRAM_CACHE`); `None` = cache off.
+    pub gram_cache: Option<usize>,
+    /// Gradient-embedding cache directory (`CREST_EMBED_CACHE`);
+    /// `None` = cache off.
+    pub embed_cache: Option<PathBuf>,
+    /// Default data-store backend (`CREST_DATA_STORE`); `None` = mem.
+    pub data_store: Option<StoreKind>,
+    /// Packed-corpus root (`CREST_PACK_DIR`); `None` = `<tmp>/crest-pack`.
+    pub pack_dir: Option<PathBuf>,
+}
+
+/// Session-level overrides installed by [`set_session`]. Fields left `None`
+/// fall through to the environment.
+fn session() -> &'static RwLock<RuntimeConfig> {
+    static SESSION: RwLock<RuntimeConfig> = RwLock::new(RuntimeConfig {
+        threads: None,
+        gram_cache: None,
+        embed_cache: None,
+        data_store: None,
+        pack_dir: None,
+    });
+    &SESSION
+}
+
+impl RuntimeConfig {
+    /// Read every `CREST_*` runtime var from the process environment. This
+    /// function is the only place in the crate those names are consulted.
+    pub fn from_env() -> RuntimeConfig {
+        let var = |name: &str| std::env::var(name).ok().filter(|v| !v.is_empty());
+        RuntimeConfig {
+            threads: var("CREST_THREADS").and_then(|s| s.parse().ok()).filter(|&n| n >= 1),
+            gram_cache: gram_cap(std::env::var("CREST_GRAM_CACHE").ok().as_deref()),
+            embed_cache: var("CREST_EMBED_CACHE").map(PathBuf::from),
+            data_store: var("CREST_DATA_STORE").and_then(|v| StoreKind::parse(&v).ok()),
+            pack_dir: var("CREST_PACK_DIR").map(PathBuf::from),
+        }
+    }
+
+    /// The effective runtime config: session overrides merged over a fresh
+    /// environment read (override fields win when set).
+    pub fn current() -> RuntimeConfig {
+        let env = RuntimeConfig::from_env();
+        session().read().unwrap().merged_over(env)
+    }
+
+    /// `self`'s set fields layered over `fallback` (the merge behind
+    /// [`RuntimeConfig::current`]).
+    pub fn merged_over(&self, fallback: RuntimeConfig) -> RuntimeConfig {
+        RuntimeConfig {
+            threads: self.threads.or(fallback.threads),
+            gram_cache: self.gram_cache.or(fallback.gram_cache),
+            embed_cache: self.embed_cache.clone().or(fallback.embed_cache),
+            data_store: self.data_store.or(fallback.data_store),
+            pack_dir: self.pack_dir.clone().or(fallback.pack_dir),
+        }
+    }
+
+    /// Effective packed-corpus root.
+    pub fn resolved_pack_root(&self) -> PathBuf {
+        self.pack_dir.clone().unwrap_or_else(|| std::env::temp_dir().join("crest-pack"))
+    }
+
+    /// Effective default store backend.
+    pub fn resolved_store(&self) -> StoreKind {
+        self.data_store.unwrap_or(StoreKind::Mem)
+    }
+}
+
+/// Install `rc` as the session override set (merged over the environment by
+/// every subsequent [`RuntimeConfig::current`] call) and push the two
+/// consumers with their own process-wide cells: the pool worker count and
+/// the data-store default.
+pub fn set_session(rc: RuntimeConfig) {
+    if let Some(t) = rc.threads {
+        crate::util::pool::set_threads(t);
+    }
+    if let Some(k) = rc.data_store {
+        crate::data::set_default_store(k);
+    }
+    *session().write().unwrap() = rc;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn readme_documents_every_runtime_var() {
+        // the README env table must cover each consolidated var — a new
+        // knob cannot ship undocumented
+        let readme = include_str!("../../README.md");
+        for (name, _) in VARS {
+            assert!(readme.contains(name), "README.md env table is missing {name}");
+        }
+    }
+
+    #[test]
+    fn overrides_merge_over_fallback_fieldwise() {
+        // pure merge check — deliberately does not touch the global session
+        // cell, which concurrently running tests read
+        let over = RuntimeConfig {
+            gram_cache: Some(12345),
+            pack_dir: Some(PathBuf::from("/tmp/rc-test")),
+            ..RuntimeConfig::default()
+        };
+        let fallback = RuntimeConfig {
+            threads: Some(3),
+            gram_cache: Some(999),
+            data_store: Some(StoreKind::Mmap),
+            ..RuntimeConfig::default()
+        };
+        let m = over.merged_over(fallback);
+        assert_eq!(m.threads, Some(3), "unset override falls through");
+        assert_eq!(m.gram_cache, Some(12345), "set override wins");
+        assert_eq!(m.data_store, Some(StoreKind::Mmap));
+        assert_eq!(m.pack_dir.as_deref(), Some(std::path::Path::new("/tmp/rc-test")));
+        assert_eq!(m.embed_cache, None);
+    }
+
+    #[test]
+    fn resolved_defaults() {
+        let rc = RuntimeConfig::default();
+        assert_eq!(rc.resolved_store(), StoreKind::Mem);
+        assert!(rc.resolved_pack_root().ends_with("crest-pack"));
+    }
+}

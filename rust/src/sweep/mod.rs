@@ -32,7 +32,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::api::Experiment;
+use crate::api::{Experiment, SelectionStrategy};
 use crate::data::{prepare_splits, Splits};
 use crate::report::{AggregateRow, RunReport};
 use crate::util::pool::{self, Pool};
@@ -47,6 +47,9 @@ pub struct SweepSpec {
     /// Artifact root consulted for manifest overrides; the native backend
     /// falls back to builtin manifests when the directory is absent.
     pub artifact_root: PathBuf,
+    /// Selection strategy applied to every cell (part of checkpoint
+    /// identity: cells checkpointed under a different strategy re-run).
+    pub selection: SelectionStrategy,
     /// Checkpoint directory; `None` disables resume.
     pub checkpoint_dir: Option<PathBuf>,
     /// Cells scheduled concurrently. 0 = auto: the pool's global worker
@@ -64,6 +67,7 @@ impl SweepSpec {
             grid,
             epochs_full,
             artifact_root: PathBuf::from("artifacts"),
+            selection: SelectionStrategy::Exact,
             checkpoint_dir: None,
             jobs: 0,
         }
@@ -117,6 +121,7 @@ pub fn cell_splits(key: &CellKey) -> Result<Arc<Splits>> {
 fn run_cell_on(
     key: &CellKey,
     epochs_full: usize,
+    selection: SelectionStrategy,
     artifact_root: &Path,
     splits: Arc<Splits>,
 ) -> Result<RunReport> {
@@ -126,18 +131,19 @@ fn run_cell_on(
         .seed(key.seed)
         .budget_frac(key.budget_frac)
         .epochs_full(epochs_full)
+        .selection(selection)
         .artifact_root(artifact_root)
         .splits(splits)
         .build()?
         .run()
 }
 
-/// Run one cell from scratch: load the variant runtime, regenerate its
-/// proxy corpus from the cell seed, and drive the coordinator. Everything
-/// derives from the key (plus `epochs_full`), so a cell is reproducible in
-/// isolation — the unit of resume.
+/// Run one cell from scratch under exact selection: load the variant
+/// runtime, regenerate its proxy corpus from the cell seed, and drive the
+/// coordinator. Everything derives from the key (plus `epochs_full`), so a
+/// cell is reproducible in isolation — the unit of resume.
 pub fn run_cell(key: &CellKey, epochs_full: usize, artifact_root: &Path) -> Result<RunReport> {
-    run_cell_on(key, epochs_full, artifact_root, cell_splits(key)?)
+    run_cell_on(key, epochs_full, SelectionStrategy::Exact, artifact_root, cell_splits(key)?)
 }
 
 /// Execute a sweep: restore completed cells from the checkpoint store,
@@ -151,9 +157,10 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
         Some(dir) => Some(CheckpointStore::open(dir)?),
         None => None,
     };
+    let sel = spec.selection.to_string();
     let mut restored: Vec<Option<RunReport>> = cells
         .iter()
-        .map(|k| store.as_ref().and_then(|s| s.load(k, spec.epochs_full)))
+        .map(|k| store.as_ref().and_then(|s| s.load(k, spec.epochs_full, &sel)))
         .collect();
     let todo: Vec<usize> = (0..cells.len()).filter(|&i| restored[i].is_none()).collect();
     log::info!(
@@ -196,10 +203,10 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
         let key = &cells[todo[t]];
         log::info!("sweep cell {} ({}/{})", key.label(), t + 1, todo.len());
         let splits = splits_for(key)?;
-        let report = run_cell_on(key, spec.epochs_full, &spec.artifact_root, splits)
+        let report = run_cell_on(key, spec.epochs_full, spec.selection, &spec.artifact_root, splits)
             .with_context(|| format!("sweep cell {}", key.label()))?;
         if let Some(s) = &store {
-            s.save(key, spec.epochs_full, &report)
+            s.save(key, spec.epochs_full, &sel, &report)
                 .with_context(|| format!("checkpointing {}", key.label()))?;
         }
         Ok(report)

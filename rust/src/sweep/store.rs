@@ -1,11 +1,11 @@
 //! Resumable on-disk checkpoint store: one JSON file per completed cell.
 //!
 //! Layout: `<dir>/<variant>__<method>__s<seed>__b<budget>.json`, each file
-//! holding `{"key": ..., "epochs_full": ..., "report": ...}`. Writes go
-//! through a temp file +
-//! rename, so an interrupted sweep never leaves a half-written checkpoint
-//! that could poison a resume; unreadable or key-mismatched files are
-//! treated as missing and the cell simply re-executes.
+//! holding `{"key": ..., "epochs_full": ..., "selection": ..., "report":
+//! ...}`. Writes go through a temp file + rename, so an interrupted sweep
+//! never leaves a half-written checkpoint that could poison a resume;
+//! unreadable or key-mismatched files are treated as missing and the cell
+//! simply re-executes.
 
 use std::path::{Path, PathBuf};
 
@@ -36,28 +36,45 @@ impl CheckpointStore {
     }
 
     /// Load the completed report for `key`, or `None` when the cell has no
-    /// readable checkpoint matching both the key and the requested
-    /// `epochs_full` — the caller re-executes it. `epochs_full` is part of
-    /// the identity because it sets the budget denominator: a cell
-    /// checkpointed under a different `--epochs-full` is a different
-    /// experiment and must not be restored silently. (Artifact-root
-    /// manifest overrides are *not* tracked; point different roots at
-    /// different checkpoint dirs.)
-    pub fn load(&self, key: &CellKey, epochs_full: usize) -> Option<RunReport> {
+    /// readable checkpoint matching the key, the requested `epochs_full`,
+    /// and the `selection` strategy (canonical display form) — the caller
+    /// re-executes it. `epochs_full` is part of the identity because it
+    /// sets the budget denominator, and `selection` because an approximate
+    /// strategy changes what the cell trained on; a cell checkpointed
+    /// under either knob set differently is a different experiment and
+    /// must not be restored silently. Checkpoints written before the
+    /// selection layer carry no `selection` field and read as `"exact"`.
+    /// (Artifact-root manifest overrides are *not* tracked; point
+    /// different roots at different checkpoint dirs.)
+    pub fn load(&self, key: &CellKey, epochs_full: usize, selection: &str) -> Option<RunReport> {
         let text = std::fs::read_to_string(self.path(key)).ok()?;
         let doc = Json::parse(&text).ok()?;
         let stored = CellKey::from_json(doc.get("key")?).ok()?;
         if stored != *key || doc.get("epochs_full")?.as_usize().ok()? != epochs_full {
             return None;
         }
+        let stored_sel = match doc.get("selection") {
+            Some(v) => v.as_str().ok()?.to_string(),
+            None => "exact".to_string(),
+        };
+        if stored_sel != selection {
+            return None;
+        }
         RunReport::from_json(doc.get("report")?).ok()
     }
 
     /// Persist a completed cell atomically (temp file + rename).
-    pub fn save(&self, key: &CellKey, epochs_full: usize, report: &RunReport) -> Result<()> {
+    pub fn save(
+        &self,
+        key: &CellKey,
+        epochs_full: usize,
+        selection: &str,
+        report: &RunReport,
+    ) -> Result<()> {
         let doc = Json::obj()
             .set("key", key.to_json())
             .set("epochs_full", epochs_full)
+            .set("selection", selection)
             .set("report", report.to_json());
         json::write_atomic(&self.path(key), &doc)
             .with_context(|| format!("checkpointing {}", key.label()))
@@ -106,42 +123,60 @@ mod tests {
     fn save_load_roundtrip_preserves_deterministic_fields() {
         let store = tmp_store("roundtrip");
         let k = key(1);
-        assert!(store.load(&k, 2).is_none(), "empty store has no checkpoint");
+        assert!(store.load(&k, 2, "exact").is_none(), "empty store has no checkpoint");
         let r = report(0.75);
-        store.save(&k, 2, &r).unwrap();
-        let restored = store.load(&k, 2).expect("checkpoint restores");
+        store.save(&k, 2, "exact", &r).unwrap();
+        let restored = store.load(&k, 2, "exact").expect("checkpoint restores");
         assert_eq!(
             restored.deterministic_json().to_string_pretty(),
             r.deterministic_json().to_string_pretty(),
             "deterministic report core must round-trip bitwise"
         );
         // a different epochs-full setting is a different experiment
-        assert!(store.load(&k, 60).is_none(), "epochs_full mismatch must not restore");
+        assert!(store.load(&k, 60, "exact").is_none(), "epochs_full mismatch must not restore");
     }
 
     #[test]
     fn mismatched_or_corrupt_checkpoints_read_as_missing() {
         let store = tmp_store("corrupt");
         let k = key(1);
-        store.save(&k, 2, &report(0.5)).unwrap();
+        store.save(&k, 2, "exact", &report(0.5)).unwrap();
         // same file, different key -> missing (stale dir protection)
         let other = key(2);
         std::fs::rename(store.path(&k), store.path(&other)).unwrap();
-        assert!(store.load(&other, 2).is_none(), "key mismatch must not restore");
+        assert!(store.load(&other, 2, "exact").is_none(), "key mismatch must not restore");
         // corrupt file -> missing, not an error
         std::fs::write(store.path(&k), "{truncated").unwrap();
-        assert!(store.load(&k, 2).is_none(), "corrupt checkpoint must read as missing");
+        assert!(store.load(&k, 2, "exact").is_none(), "corrupt checkpoint must read as missing");
+    }
+
+    #[test]
+    fn selection_mismatch_and_legacy_checkpoints() {
+        let store = tmp_store("selection");
+        let k = key(1);
+        store.save(&k, 2, "clustered:64", &report(0.5)).unwrap();
+        assert!(store.load(&k, 2, "exact").is_none(), "selection mismatch must not restore");
+        assert!(store.load(&k, 2, "clustered:64").is_some(), "matching strategy restores");
+        // checkpoints from before the selection layer carry no selection
+        // field and must restore as exact only
+        let legacy = Json::obj()
+            .set("key", k.to_json())
+            .set("epochs_full", 2usize)
+            .set("report", report(0.5).to_json());
+        json::write_atomic(&store.path(&k), &legacy).unwrap();
+        assert!(store.load(&k, 2, "exact").is_some(), "legacy checkpoint reads as exact");
+        assert!(store.load(&k, 2, "knn").is_none());
     }
 
     #[test]
     fn remove_deletes_exactly_one_cell() {
         let store = tmp_store("remove");
         let (a, b) = (key(1), key(2));
-        store.save(&a, 2, &report(0.5)).unwrap();
-        store.save(&b, 2, &report(0.6)).unwrap();
+        store.save(&a, 2, "exact", &report(0.5)).unwrap();
+        store.save(&b, 2, "exact", &report(0.6)).unwrap();
         assert!(store.remove(&a));
         assert!(!store.remove(&a), "second removal is a no-op");
-        assert!(store.load(&a, 2).is_none());
-        assert!(store.load(&b, 2).is_some(), "other cells untouched");
+        assert!(store.load(&a, 2, "exact").is_none());
+        assert!(store.load(&b, 2, "exact").is_some(), "other cells untouched");
     }
 }

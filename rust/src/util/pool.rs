@@ -31,10 +31,8 @@ thread_local! {
 }
 
 fn default_threads() -> usize {
-    std::env::var("CREST_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .filter(|&n| n >= 1)
+    crate::runtime_config::RuntimeConfig::current()
+        .threads
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 

@@ -1,0 +1,125 @@
+//! End-to-end acceptance tests for the approximate-selection layer
+//! (ISSUE 7):
+//!
+//! * degenerate strategy parameters are the identity: for **every**
+//!   registered method, `ClassSharded { shards: 1 }`, `Clustered { k: n }`
+//!   and `Knn { neighbors: n }` reproduce `SelectionStrategy::Exact`
+//!   bit for bit on `deterministic_json` — the approximate layer
+//!   composes with the registry without per-method dispatch edits, and
+//!   collapses to the exact path before consuming any randomness
+//! * the determinism contract holds per strategy: a full experiment
+//!   under each *non*-degenerate strategy is bitwise-identical across
+//!   thread counts and across repeated runs
+//! * `SelectionStrategy` round-trips through the builder and the JSON
+//!   config override surface, and unknown spellings are rejected like
+//!   any other unknown config value
+
+use std::sync::Arc;
+
+use crest::api::{Experiment, MethodRegistry, SelectionStrategy};
+use crest::config::Method;
+use crest::data::{generate, Splits, SynthSpec};
+use crest::util::json::Json;
+use crest::util::pool;
+
+const SMOKE: &str = "smoke";
+
+fn smoke_splits(seed: u64) -> Arc<Splits> {
+    Arc::new(generate(&SynthSpec::preset(SMOKE, seed).unwrap()))
+}
+
+/// Run one smoke cell and return its deterministic report rendering.
+fn run_cell(splits: &Arc<Splits>, method: Method, strat: SelectionStrategy, seed: u64) -> String {
+    Experiment::builder()
+        .variant(SMOKE)
+        .with_method(method)
+        .seed(seed)
+        .budget_frac(0.1)
+        .epochs_full(2)
+        .configure(|cfg| cfg.eval_points = 2)
+        .selection(strat)
+        .splits(splits.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .deterministic_json()
+        .to_string_pretty()
+}
+
+#[test]
+fn degenerate_parameters_reproduce_exact_bitwise_for_every_method() {
+    let splits = smoke_splits(7);
+    let n = splits.train.n();
+    // parameters at (or beyond) the ground-set size collapse each
+    // approximate strategy to the exact traversal
+    let degenerate = [
+        SelectionStrategy::ClassSharded { shards: 1 },
+        SelectionStrategy::Clustered { k: n },
+        SelectionStrategy::Knn { neighbors: n },
+    ];
+    for method in MethodRegistry::all() {
+        let exact = run_cell(&splits, method, SelectionStrategy::Exact, 7);
+        for s in degenerate {
+            let approx = run_cell(&splits, method, s, 7);
+            assert_eq!(
+                approx,
+                exact,
+                "{s} must reproduce exact output bitwise for {}",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn approximate_strategies_are_bitwise_deterministic_across_thread_counts() {
+    let splits = smoke_splits(11);
+    // genuinely approximate parameterizations: small shard/cluster/
+    // neighbor counts relative to the smoke ground set
+    let strategies = [
+        SelectionStrategy::ClassSharded { shards: 0 },
+        SelectionStrategy::Clustered { k: 64 },
+        SelectionStrategy::Knn { neighbors: 8 },
+    ];
+    for method in ["crest", "craig"] {
+        let m = Method::parse(method).unwrap();
+        for s in strategies {
+            let t1 = pool::with_threads(1, || run_cell(&splits, m, s, 11));
+            let t4 = pool::with_threads(4, || run_cell(&splits, m, s, 11));
+            assert_eq!(t1, t4, "{s} for {method} must not depend on thread count");
+            let again = pool::with_threads(4, || run_cell(&splits, m, s, 11));
+            assert_eq!(t4, again, "{s} for {method} must be run-to-run deterministic");
+        }
+    }
+}
+
+#[test]
+fn selection_round_trips_through_json_overrides() {
+    let splits = smoke_splits(13);
+    let m = Method::parse("craig").unwrap();
+    // the JSON override surface and the typed builder argument are the
+    // same knob: identical settings produce identical reports
+    let typed = run_cell(&splits, m, SelectionStrategy::Clustered { k: 64 }, 13);
+    let json = Experiment::builder()
+        .variant(SMOKE)
+        .with_method(m)
+        .seed(13)
+        .budget_frac(0.1)
+        .epochs_full(2)
+        .configure(|cfg| cfg.eval_points = 2)
+        .override_json(&Json::obj().set("selection", "clustered:64"))
+        .splits(splits.clone())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .deterministic_json()
+        .to_string_pretty();
+    assert_eq!(typed, json, "builder and JSON override must set the same strategy");
+    // unknown strategy spellings are rejected at parse time, not at run
+    // time — same contract as any other config key
+    assert!(SelectionStrategy::parse("voronoi").is_err());
+    assert!(SelectionStrategy::parse("clustered:sixty-four").is_err());
+    assert!(SelectionStrategy::parse("exact:3").is_err());
+}
