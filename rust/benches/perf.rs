@@ -14,10 +14,12 @@
 use crest::bench_util::scenario as sc;
 use crest::bench_util::{self, bench_recorded, bench_recorded_flops, section};
 use crest::coreset::facility;
+use crest::kernel;
 use crest::model::init_params;
 use crest::runtime::manifest::VariantManifest;
 use crest::tensor::MatF32;
 use crest::train::TrainState;
+use crest::util::pool;
 use crest::util::rng::Rng;
 
 fn random_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
@@ -38,10 +40,94 @@ fn mlp_flops(man: &VariantManifest, batch: usize, passes: u64) -> u64 {
     passes * 2 * macs * batch as u64
 }
 
+/// L0 kernel microbenches, one record per `(kernel, ISA)` pair — the
+/// SIMD-vs-scalar comparison the dispatch layer is judged by. Shapes are
+/// fixed (independent of quick mode, odd to exercise remainder tiles) and
+/// the pool is pinned to one worker so records are comparable across
+/// machines with different core counts.
+fn kernel_benches(rng: &mut Rng) {
+    section("L0 kernels: scalar vs SIMD microbenches (threads pinned to 1)");
+    let (m, k, n) = (96usize, 67usize, 130usize);
+    let x = random_mat(rng, m, k);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let d = random_mat(rng, m, n);
+    let wt: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let mut act = random_mat(rng, m, k);
+    for v in act.data.iter_mut() {
+        *v = v.max(0.0); // half-zero ReLU activation pattern for the masked kernel
+    }
+    let (bn, bc, bh) = (768usize, 10usize, 66usize);
+    let g = random_mat(rng, bn, bc);
+    let a = random_mat(rng, bn, bh);
+    let gsq: Vec<f32> = (0..bn).map(|i| kernel::dot4(g.row(i), g.row(i))).collect();
+    let asq: Vec<f32> = (0..bn).map(|i| kernel::dot4(a.row(i), a.row(i))).collect();
+    pool::with_threads(1, || {
+        for isa in kernel::available_isas() {
+            let mm_flops = 2 * (m * k * n) as u64;
+            let mut out = MatF32::zeros(m, n);
+            bench_recorded_flops(
+                &format!("kernel add_matmul m={m} k={k} n={n} isa={isa}"),
+                3,
+                20,
+                mm_flops,
+                || kernel::add_matmul_isa(isa, &mut out, &x, &w, n),
+            );
+            let mut outk = MatF32::zeros(m, k);
+            bench_recorded_flops(
+                &format!("kernel add_matmul_nt m={m} k={k} n={n} isa={isa}"),
+                3,
+                20,
+                mm_flops,
+                || kernel::add_matmul_nt_isa(isa, &mut outk, &d, &wt, n),
+            );
+            let mut outm = MatF32::zeros(m, k);
+            bench_recorded_flops(
+                &format!("kernel add_matmul_nt_masked m={m} k={k} n={n} isa={isa}"),
+                3,
+                20,
+                mm_flops,
+                || kernel::add_matmul_nt_masked_isa(isa, &mut outm, &d, &wt, n, &act),
+            );
+            let mut gw = vec![0.0f32; k * n];
+            bench_recorded_flops(
+                &format!("kernel accum_wgrad m={m} k={k} n={n} isa={isa}"),
+                3,
+                20,
+                mm_flops,
+                || kernel::accum_wgrad_isa(isa, &mut gw, &x, &d, n),
+            );
+            let mut db = vec![0.0f32; bn];
+            bench_recorded_flops(
+                &format!("kernel dot4_rows n={bn} d={bh} isa={isa}"),
+                3,
+                20,
+                2 * (bn * bh) as u64,
+                || kernel::dot4_rows_isa(isa, a.row(0), &a, 0..bn, &mut db),
+            );
+            bench_recorded_flops(
+                &format!("kernel euclid_block n={bn} c={bc} isa={isa}"),
+                3,
+                20,
+                (bn * (2 * bc + 4)) as u64,
+                || kernel::euclid_block_isa(isa, &g, &gsq, 0, 0..bn, &mut db),
+            );
+            bench_recorded_flops(
+                &format!("kernel prod_block n={bn} c={bc} h={bh} isa={isa}"),
+                3,
+                20,
+                (bn * (2 * (bc + bh) + 6)) as u64,
+                || kernel::prod_block_isa(isa, &a, &g, &asq, 0, 0..bn, &mut db),
+            );
+        }
+    });
+}
+
 fn main() -> anyhow::Result<()> {
     crest::util::logging::init();
     let quick = bench_util::quick();
     let mut rng = Rng::new(42);
+
+    kernel_benches(&mut rng);
 
     section("L3 host: facility-location greedy");
     let grid: &[(usize, usize, usize)] = if quick {

@@ -23,6 +23,7 @@ use crest::bench_util::{self, bench_recorded, format_secs, section};
 use crest::config::Method;
 use crest::coreset::facility;
 use crest::coreset::strategy::{self, SelectionStrategy};
+use crest::kernel;
 use crest::model::init_params;
 use crest::runtime::manifest::{ModelSpec, VariantManifest};
 use crest::runtime::Runtime;
@@ -117,6 +118,36 @@ fn main() -> anyhow::Result<()> {
         let mut srng = Rng::new(7);
         facility::facility_location_stochastic(&metric, msel_s, &mut srng)
     });
+
+    section("scaling: SIMD matmul kernel (dispatched ISA across thread counts)");
+    {
+        // one thread-sweep row per available ISA over the same matmul, so
+        // the trajectory records how the SIMD win composes with threading
+        let (km, kk, kn) = (512usize, 256usize, 256usize);
+        let kx = random_mat(&mut rng, km, kk);
+        let kw: Vec<f32> = (0..kk * kn).map(|_| rng.normal()).collect();
+        for isa in kernel::available_isas() {
+            let mut kout = MatF32::zeros(km, kn);
+            sweep(&format!("add_matmul m={km} k={kk} n={kn} isa={isa}"), 2, reps, || {
+                kernel::add_matmul_isa(isa, &mut kout, &kx, &kw, kn)
+            });
+        }
+        // SIMD-vs-scalar determinism: the dispatched ISA must reproduce the
+        // scalar path bitwise (lanes map across output elements, never
+        // within one dot product's accumulation)
+        let mut o_scalar = MatF32::zeros(km, kn);
+        let mut o_active = MatF32::zeros(km, kn);
+        kernel::add_matmul_isa(crest::kernel::KernelIsa::Scalar, &mut o_scalar, &kx, &kw, kn);
+        kernel::add_matmul_isa(kernel::active_isa(), &mut o_active, &kx, &kw, kn);
+        assert_eq!(
+            o_scalar.data, o_active.data,
+            "dispatched ISA must be bitwise-identical to scalar"
+        );
+        println!(
+            "\ndeterminism: {} and scalar matmul outputs are bitwise-identical",
+            kernel::active_isa()
+        );
+    }
 
     // determinism spot check across the sweep's thread counts
     let d1 = pool::with_threads(1, || facility::facility_location_prod(&al, &gl, msel));

@@ -53,6 +53,13 @@ fn index(path: &Path) -> Result<HashMap<Key, f64>> {
     Ok(map)
 }
 
+/// Count the gateable records in a trajectory file (records carrying a
+/// `name` and a `p50_secs`). Lets callers refuse to run against a baseline
+/// that is still the empty `[]` seed — see `bench-diff --require-baseline`.
+pub fn baseline_records(path: &Path) -> Result<usize> {
+    Ok(index(path)?.len())
+}
+
 /// Diff `fresh` against `baseline`: every key present in both must have a
 /// fresh p50 within `factor ×` the baseline p50. Returns the comparison
 /// report and the list of regressions (empty = gate passes).
@@ -189,6 +196,16 @@ mod tests {
         let out = diff_baseline(&b, &f, 2.0).unwrap();
         assert_eq!(out.compared, 1);
         assert!(out.regressions.is_empty());
+    }
+
+    #[test]
+    fn baseline_records_counts_gateable_rows_only() {
+        let b = tmp("base-count.json");
+        write(&b, vec![Json::obj().set("variant", "smoke"), rec("op/a", 1, false, 1.0)]);
+        assert_eq!(baseline_records(&b).unwrap(), 1);
+        let e = tmp("base-count-empty.json");
+        write(&e, Vec::new());
+        assert_eq!(baseline_records(&e).unwrap(), 0);
     }
 
     #[test]

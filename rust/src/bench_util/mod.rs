@@ -21,7 +21,7 @@
 pub mod diff;
 pub mod scenario;
 
-pub use diff::{diff_baseline, DiffOutcome};
+pub use diff::{baseline_records, diff_baseline, DiffOutcome};
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -57,6 +57,9 @@ pub struct BenchResult {
     /// True when the bench ran in quick (CI smoke) mode — quick and full
     /// records are never diffed against each other.
     pub quick: bool,
+    /// Kernel ISA the dispatching kernels used during the bench (records
+    /// carry it so a trajectory mixing machines stays interpretable).
+    pub isa: String,
 }
 
 impl BenchResult {
@@ -95,7 +98,8 @@ impl BenchResult {
             .set("p50_secs", self.p50_secs)
             .set("p95_secs", self.p95_secs)
             .set("mad_secs", self.mad_secs)
-            .set("quick", self.quick);
+            .set("quick", self.quick)
+            .set("isa", self.isa.as_str());
         if let Some(g) = self.gflops_p50() {
             j = j.set("flops", self.flops as f64).set("gflops_p50", g);
         }
@@ -158,6 +162,7 @@ pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T
         threads: pool::threads(),
         flops: 0,
         quick: quick(),
+        isa: crate::kernel::active_isa().name().to_string(),
     }
 }
 
@@ -298,7 +303,7 @@ mod tests {
         assert!(r.threads >= 1);
         let j = r.to_json();
         for key in
-            ["name", "reps", "threads", "mean_secs", "min_secs", "p50_secs", "p95_secs", "mad_secs"]
+            ["name", "reps", "threads", "mean_secs", "min_secs", "p50_secs", "p95_secs", "mad_secs", "isa"]
         {
             assert!(j.get(key).is_some(), "to_json missing {key}");
         }

@@ -10,7 +10,7 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::ops::Range;
 
-use crate::kernel::{dot4, dot4_rows};
+use crate::kernel::{self, dot4};
 use crate::tensor::MatF32;
 use crate::util::pool::Pool;
 
@@ -173,12 +173,7 @@ impl<'a> SqDistMetric for EuclidMetric<'a> {
     }
 
     fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), range.len());
-        dot4_rows(self.g.row(j), self.g, range.clone(), out);
-        let sj = self.sq[j];
-        for (o, i) in out.iter_mut().zip(range) {
-            *o = (self.sq[i] + sj - 2.0 * *o).max(0.0);
-        }
+        kernel::euclid_block(self.g, &self.sq, j, range, out);
     }
 }
 
@@ -208,10 +203,6 @@ impl<'a> ProdMetric<'a> {
     }
 }
 
-/// Inner block length of [`ProdMetric::sqdist_block`]'s stack scratch for
-/// the logit-gradient dot panel.
-const PROD_BLOCK: usize = 64;
-
 impl<'a> SqDistMetric for ProdMetric<'a> {
     fn len(&self) -> usize {
         self.a.rows
@@ -225,25 +216,7 @@ impl<'a> SqDistMetric for ProdMetric<'a> {
     }
 
     fn sqdist_block(&self, j: usize, range: Range<usize>, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), range.len());
-        let aj = self.a.row(j);
-        let gj = self.g.row(j);
-        let sj = self.sq[j];
-        let mut gbuf = [0.0f32; PROD_BLOCK];
-        let mut start = range.start;
-        let mut o = 0;
-        while start < range.end {
-            let end = (start + PROD_BLOCK).min(range.end);
-            let n = end - start;
-            dot4_rows(aj, self.a, start..end, &mut out[o..o + n]);
-            dot4_rows(gj, self.g, start..end, &mut gbuf[..n]);
-            for (k, ov) in out[o..o + n].iter_mut().enumerate() {
-                let i = start + k;
-                *ov = (self.sq[i] + sj - 2.0 * *ov * gbuf[k]).max(0.0);
-            }
-            o += n;
-            start = end;
-        }
+        kernel::prod_block(self.a, self.g, &self.sq, j, range, out);
     }
 }
 
@@ -344,8 +317,10 @@ pub(crate) fn projection_values(feat: &MatF32, seed: u64) -> Vec<f32> {
 
 /// Row indices of `feat` sorted by projection value (ties broken by index)
 /// — a deterministic 1-D locality ordering shared by the sparse k-NN
-/// candidate windows and the clustered-selection buckets.
-pub(crate) fn projection_order(feat: &MatF32, seed: u64) -> Vec<usize> {
+/// candidate windows and the clustered-selection buckets. Public so the
+/// property suite can verify [`SparseKnnMetric`]'s candidate-window
+/// bounds against the exact ordering the build used.
+pub fn projection_order(feat: &MatF32, seed: u64) -> Vec<usize> {
     let proj = projection_values(feat, seed);
     let mut order: Vec<usize> = (0..feat.rows).collect();
     order.sort_unstable_by(|&a, &b| proj[a].total_cmp(&proj[b]).then(a.cmp(&b)));
@@ -353,8 +328,9 @@ pub(crate) fn projection_order(feat: &MatF32, seed: u64) -> Vec<usize> {
 }
 
 /// Fixed seed of the k-NN candidate-window projection (any constant works;
-/// it only has to be the same for every build of the same shape).
-const KNN_PROJ_SEED: u64 = 0x5eed_4b8a_11ce_7e01;
+/// it only has to be the same for every build of the same shape). Public
+/// alongside [`projection_order`] for the candidate-window bound tests.
+pub const KNN_PROJ_SEED: u64 = 0x5eed_4b8a_11ce_7e01;
 
 /// Sparse k-nearest-neighbor squared-distance metric.
 ///

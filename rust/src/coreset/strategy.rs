@@ -397,8 +397,9 @@ pub fn facility_select(
 /// Largest-remainder apportionment of `k` over pieces of the given sizes:
 /// floor quotas, remainders to the largest fractional parts (ties to the
 /// lower index), capped at each piece's size with overflow redistributed
-/// in index order. Deterministic, sums to `min(k, Σ sizes)`.
-fn apportion(k: usize, sizes: &[usize]) -> Vec<usize> {
+/// in index order. Deterministic, sums to `min(k, Σ sizes)`. Public so the
+/// strategy property suite can drive it directly with generated inputs.
+pub fn apportion(k: usize, sizes: &[usize]) -> Vec<usize> {
     let n: usize = sizes.iter().sum();
     if n == 0 || k == 0 {
         return vec![0; sizes.len()];

@@ -23,11 +23,26 @@
 //! in [`reference`] at every thread count, which the `kernels`
 //! integration-test suite asserts across odd shapes and remainder tiles.
 //!
+//! **SIMD dispatch.** Each public kernel resolves a [`KernelIsa`] once per
+//! call (a memoized atomic load, see [`active_isa`]) and runs either the
+//! portable scalar tiles or the AVX2 panels in [`avx2`]. The AVX2 panels
+//! keep the exact determinism contract above: hardware lanes map across
+//! *independent output elements* (the NR/column dimension, or independent
+//! dot products of a panel), never across one dot product's reduction, and
+//! multiplies and adds stay separate instructions (no FMA contraction), so
+//! SIMD output is bitwise-identical to the scalar path — the `simd`
+//! integration suite asserts exact equality, not a tolerance.
+//! `CREST_FORCE_SCALAR=1` (or
+//! [`RuntimeConfig::force_scalar`](crate::runtime_config::RuntimeConfig))
+//! pins the scalar path; the `*_isa` entry points pin an explicit ISA for
+//! differential testing and benchmarking.
+//!
 //! [`Workspace`] and [`WorkspacePool`] round out the layer: reusable
 //! scratch-buffer arenas that let the native backend run its
 //! forward/backward/HVP pipelines without per-call `vec!` allocations.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Mutex;
 
 use crate::tensor::MatF32;
@@ -50,6 +65,101 @@ pub const ELEM_GRAIN: usize = 1 << 12;
 const MR: usize = 4;
 /// Output columns per register tile (feature dimension).
 const NR: usize = 16;
+
+// --------------------------------------------------------- ISA dispatch
+
+/// Instruction-set family a kernel call executes with.
+///
+/// The two members compute bit-for-bit identical results (see the module
+/// docs); the choice only affects speed. [`active_isa`] picks the widest
+/// supported family at runtime unless `CREST_FORCE_SCALAR` pins scalar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelIsa {
+    /// Portable scalar tiles — the reference accumulation order, always
+    /// available on every target.
+    Scalar,
+    /// 256-bit AVX2 panels (`x86_64` only, runtime-detected).
+    Avx2,
+}
+
+impl KernelIsa {
+    /// Short stable name, used in bench records and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelIsa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Memoized dispatch decision: 0 = undecided, 1 = scalar, 2 = AVX2.
+static ACTIVE_ISA: AtomicU8 = AtomicU8::new(0);
+
+fn isa_from_u8(v: u8) -> Option<KernelIsa> {
+    match v {
+        1 => Some(KernelIsa::Scalar),
+        2 => Some(KernelIsa::Avx2),
+        _ => None,
+    }
+}
+
+/// Pure dispatch rule: forced scalar wins; otherwise the widest ISA the
+/// running CPU supports. Factored out of [`active_isa`] so tests can
+/// exercise the rule without touching process state.
+pub fn resolve_isa(force_scalar: bool) -> KernelIsa {
+    if force_scalar {
+        return KernelIsa::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2::available() {
+            return KernelIsa::Avx2;
+        }
+    }
+    KernelIsa::Scalar
+}
+
+/// The ISA the dispatching kernel entry points currently use. Resolved
+/// once from [`RuntimeConfig::current`](crate::runtime_config::RuntimeConfig::current)
+/// (so `CREST_FORCE_SCALAR` and session overrides apply) and memoized;
+/// [`refresh_isa`] re-resolves after a configuration change.
+pub fn active_isa() -> KernelIsa {
+    if let Some(isa) = isa_from_u8(ACTIVE_ISA.load(Ordering::Relaxed)) {
+        return isa;
+    }
+    refresh_isa()
+}
+
+/// Re-resolve the active ISA from the current runtime configuration and
+/// install it. Called by
+/// [`runtime_config::set_session`](crate::runtime_config::set_session) so
+/// a session-level `force_scalar` override takes effect immediately.
+pub fn refresh_isa() -> KernelIsa {
+    let force = crate::runtime_config::RuntimeConfig::current().force_scalar.unwrap_or(false);
+    let isa = resolve_isa(force);
+    let code = match isa {
+        KernelIsa::Scalar => 1,
+        KernelIsa::Avx2 => 2,
+    };
+    ACTIVE_ISA.store(code, Ordering::Relaxed);
+    isa
+}
+
+/// Every ISA the running CPU can execute, scalar first — the iteration
+/// set of the SIMD differential tests.
+pub fn available_isas() -> Vec<KernelIsa> {
+    let mut v = vec![KernelIsa::Scalar];
+    if resolve_isa(false) == KernelIsa::Avx2 {
+        v.push(KernelIsa::Avx2);
+    }
+    v
+}
 
 // ----------------------------------------------------------- dot panels
 
@@ -108,13 +218,41 @@ fn dot4_1x4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 
     out
 }
 
+/// [`dot4`] under an explicit ISA: the SSE accumulator vector *is*
+/// `dot4`'s four lanes, folded in the same left-to-right order, so both
+/// members return identical bits.
+pub fn dot4_isa(isa: KernelIsa, a: &[f32], b: &[f32]) -> f32 {
+    match isa {
+        KernelIsa::Scalar => dot4(a, b),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => avx2::dot4(a, b),
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => dot4(a, b),
+    }
+}
+
 /// Dot products of probe row `a` against rows `range` of `m`, written to
 /// `out` (`out.len() == range.len()`). Four matrix rows are processed per
 /// panel step so the probe row is loaded once per four pairs; every value
-/// is bitwise-identical to `dot4(a, m.row(i))`.
+/// is bitwise-identical to `dot4(a, m.row(i))`. Dispatches on
+/// [`active_isa`].
 pub fn dot4_rows(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
+    dot4_rows_isa(active_isa(), a, m, range, out)
+}
+
+/// [`dot4_rows`] under an explicit ISA (the SIMD differential tests and
+/// kernel benches pin both members).
+pub fn dot4_rows_isa(isa: KernelIsa, a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
     debug_assert_eq!(out.len(), range.len());
     debug_assert_eq!(a.len(), m.cols);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa == KernelIsa::Avx2 {
+            avx2::dot4_rows(a, m, range, out);
+            return;
+        }
+    }
+    let _ = isa;
     let mut i = range.start;
     let mut o = 0;
     while i + 4 <= range.end {
@@ -130,14 +268,99 @@ pub fn dot4_rows(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
     }
 }
 
+// ------------------------------------------------- blocked distance panels
+
+/// Inner block length of [`prod_block`]'s stack scratch for the
+/// logit-gradient dot panel.
+pub const PROD_BLOCK: usize = 64;
+
+/// Squared Euclidean distances of row `j` of `g` to rows `range` of `g`,
+/// given precomputed squared norms `sq` (`‖g_i‖² + ‖g_j‖² − 2·g_i·g_j`,
+/// clamped at zero). The dot panel dispatches on [`active_isa`]; the
+/// O(block) epilogue stays scalar (the O(block·d) dots dominate).
+pub fn euclid_block(g: &MatF32, sq: &[f32], j: usize, range: Range<usize>, out: &mut [f32]) {
+    euclid_block_isa(active_isa(), g, sq, j, range, out)
+}
+
+/// [`euclid_block`] under an explicit ISA.
+pub fn euclid_block_isa(
+    isa: KernelIsa,
+    g: &MatF32,
+    sq: &[f32],
+    j: usize,
+    range: Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), range.len());
+    dot4_rows_isa(isa, g.row(j), g, range.clone(), out);
+    let sj = sq[j];
+    for (o, i) in out.iter_mut().zip(range) {
+        *o = (sq[i] + sj - 2.0 * *o).max(0.0);
+    }
+}
+
+/// Gradient-product distances of example `j` to examples `range` under the
+/// factorized last-layer metric (`sq[i] + sq[j] − 2(a_i·a_j)(g_i·g_j)`,
+/// clamped at zero), with `sq` the precomputed per-example squared norms.
+/// Two dot panels per [`PROD_BLOCK`] chunk share a stack scratch; panels
+/// dispatch on [`active_isa`], the epilogue stays scalar.
+pub fn prod_block(
+    a: &MatF32,
+    g: &MatF32,
+    sq: &[f32],
+    j: usize,
+    range: Range<usize>,
+    out: &mut [f32],
+) {
+    prod_block_isa(active_isa(), a, g, sq, j, range, out)
+}
+
+/// [`prod_block`] under an explicit ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn prod_block_isa(
+    isa: KernelIsa,
+    a: &MatF32,
+    g: &MatF32,
+    sq: &[f32],
+    j: usize,
+    range: Range<usize>,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), range.len());
+    let aj = a.row(j);
+    let gj = g.row(j);
+    let sj = sq[j];
+    let mut gbuf = [0.0f32; PROD_BLOCK];
+    let mut start = range.start;
+    let mut o = 0;
+    while start < range.end {
+        let end = (start + PROD_BLOCK).min(range.end);
+        let n = end - start;
+        dot4_rows_isa(isa, aj, a, start..end, &mut out[o..o + n]);
+        dot4_rows_isa(isa, gj, g, start..end, &mut gbuf[..n]);
+        for (k, ov) in out[o..o + n].iter_mut().enumerate() {
+            let i = start + k;
+            *ov = (sq[i] + sj - 2.0 * *ov * gbuf[k]).max(0.0);
+        }
+        o += n;
+        start = end;
+    }
+}
+
 // ------------------------------------------------- tiled matmul kernels
 
 /// `out += x·W` (x: rows×d_in, W: d_in×d_out row-major). Register-tiled
 /// MR×NR microkernel, row-parallel across pool workers. Each output
 /// element accumulates `x[i][k]·W[k][j]` over ascending `k` into one
 /// register lane and is added to `out` exactly once, so the result is
-/// bitwise-identical to [`reference::add_matmul`] at every thread count.
+/// bitwise-identical to [`reference::add_matmul`] at every thread count
+/// and under either ISA (dispatches on [`active_isa`]).
 pub fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
+    add_matmul_isa(active_isa(), out, x, w, d_out)
+}
+
+/// [`add_matmul`] under an explicit ISA.
+pub fn add_matmul_isa(isa: KernelIsa, out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
     debug_assert_eq!(out.rows, x.rows);
     debug_assert_eq!(out.cols, d_out);
     debug_assert_eq!(w.len(), x.cols * d_out);
@@ -145,8 +368,12 @@ pub fn add_matmul(out: &mut MatF32, x: &MatF32, w: &[f32], d_out: usize) {
         return;
     }
     let pool = Pool::gated(x.rows * x.cols * d_out, PAR_MIN_OPS);
-    pool.for_rows(&mut out.data, d_out, ROW_GRAIN, |row0, rows_out| {
-        matmul_panel(rows_out, row0, x, w, d_out);
+    pool.for_rows(&mut out.data, d_out, ROW_GRAIN, |row0, rows_out| match isa {
+        KernelIsa::Scalar => matmul_panel(rows_out, row0, x, w, d_out),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => avx2::matmul_panel(rows_out, row0, x, w, d_out),
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => matmul_panel(rows_out, row0, x, w, d_out),
     });
 }
 
@@ -235,6 +462,11 @@ fn matmul_panel(rows_out: &mut [f32], row0: usize, x: &MatF32, w: &[f32], d_out:
 /// through 2×2 panels that share the row loads — bitwise-identical to
 /// [`reference::add_matmul_nt`] at every thread count.
 pub fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
+    add_matmul_nt_isa(active_isa(), out, d, w, d_out)
+}
+
+/// [`add_matmul_nt`] under an explicit ISA.
+pub fn add_matmul_nt_isa(isa: KernelIsa, out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
     debug_assert_eq!(out.rows, d.rows);
     debug_assert_eq!(d.cols, d_out);
     debug_assert_eq!(w.len(), out.cols * d_out);
@@ -244,7 +476,7 @@ pub fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
     let d_in = out.cols;
     let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
     pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
-        nt_panel(rows_out, row0, d_in, d, w, d_out, None);
+        nt_panel_isa(isa, rows_out, row0, d_in, d, w, d_out, None);
     });
 }
 
@@ -254,6 +486,18 @@ pub fn add_matmul_nt(out: &mut MatF32, d: &MatF32, w: &[f32], d_out: usize) {
 /// `relu_mask(matmul_nt(d, W), act)` without the extra full-matrix pass;
 /// repeated calls accumulate under the same mask (the HVP tangent path).
 pub fn add_matmul_nt_masked(
+    out: &mut MatF32,
+    d: &MatF32,
+    w: &[f32],
+    d_out: usize,
+    act: &MatF32,
+) {
+    add_matmul_nt_masked_isa(active_isa(), out, d, w, d_out, act)
+}
+
+/// [`add_matmul_nt_masked`] under an explicit ISA.
+pub fn add_matmul_nt_masked_isa(
+    isa: KernelIsa,
     out: &mut MatF32,
     d: &MatF32,
     w: &[f32],
@@ -271,8 +515,29 @@ pub fn add_matmul_nt_masked(
     let d_in = out.cols;
     let pool = Pool::gated(d.rows * d_in * d_out, PAR_MIN_OPS);
     pool.for_rows(&mut out.data, d_in, ROW_GRAIN, |row0, rows_out| {
-        nt_panel(rows_out, row0, d_in, d, w, d_out, Some(act));
+        nt_panel_isa(isa, rows_out, row0, d_in, d, w, d_out, Some(act));
     });
+}
+
+/// ISA fan-out for one row-panel of the Wᵀ product.
+#[allow(clippy::too_many_arguments)]
+fn nt_panel_isa(
+    isa: KernelIsa,
+    rows_out: &mut [f32],
+    row0: usize,
+    d_in: usize,
+    d: &MatF32,
+    w: &[f32],
+    d_out: usize,
+    act: Option<&MatF32>,
+) {
+    match isa {
+        KernelIsa::Scalar => nt_panel(rows_out, row0, d_in, d, w, d_out, act),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => avx2::nt_panel(rows_out, row0, d_in, d, w, d_out, act),
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => nt_panel(rows_out, row0, d_in, d, w, d_out, act),
+    }
 }
 
 /// Four independent [`dot4`]s forming a 2×2 panel (`a0·b0, a0·b1, a1·b0,
@@ -401,14 +666,23 @@ fn nt_panel(
 /// `gw` rows. Rows of `input` equal to zero for a feature are skipped
 /// (ReLU sparsity), exactly as in [`reference::accum_wgrad`].
 pub fn accum_wgrad(gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
+    accum_wgrad_isa(active_isa(), gw, input, d, d_out)
+}
+
+/// [`accum_wgrad`] under an explicit ISA.
+pub fn accum_wgrad_isa(isa: KernelIsa, gw: &mut [f32], input: &MatF32, d: &MatF32, d_out: usize) {
     debug_assert_eq!(input.rows, d.rows);
     debug_assert_eq!(gw.len(), input.cols * d_out);
     if d_out == 0 || gw.is_empty() {
         return;
     }
     let pool = Pool::gated(input.rows * input.cols * d_out, PAR_MIN_OPS);
-    pool.for_rows(gw, d_out, K_GRAIN, |k0, gw_rows| {
-        wgrad_panel(gw_rows, k0, input, d, d_out);
+    pool.for_rows(gw, d_out, K_GRAIN, |k0, gw_rows| match isa {
+        KernelIsa::Scalar => wgrad_panel(gw_rows, k0, input, d, d_out),
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 => avx2::wgrad_panel(gw_rows, k0, input, d, d_out),
+        #[cfg(not(target_arch = "x86_64"))]
+        KernelIsa::Avx2 => wgrad_panel(gw_rows, k0, input, d, d_out),
     });
 }
 
@@ -641,6 +915,517 @@ impl WorkspacePool {
         let out = f(&mut ws);
         self.stack.lock().unwrap_or_else(|e| e.into_inner()).push(ws);
         out
+    }
+}
+
+// ------------------------------------------------------------ AVX2 panels
+
+/// AVX2 implementations of the microkernels.
+///
+/// Same tiling, same per-element accumulation order as the scalar panels:
+/// hardware lanes map across *independent output elements* (the NR/column
+/// dimension, or the independent dot products of a panel), never across
+/// one dot product's reduction, and multiplies and adds stay separate
+/// instructions — `_mm256_mul_ps` + `_mm256_add_ps`, never `fmadd`, whose
+/// fused rounding would change bits. Horizontal folds of a dot product's
+/// four lanes are done in scalar code in the exact left-to-right order of
+/// [`dot4`](super::dot4). Every function here is therefore
+/// bitwise-identical to its scalar counterpart, which `tests/simd.rs`
+/// asserts exactly.
+///
+/// The public wrappers assert AVX2 support before entering the
+/// `#[target_feature]` bodies, so dispatching [`KernelIsa::Avx2`] on an
+/// unsupported CPU panics instead of executing illegal instructions.
+#[cfg(target_arch = "x86_64")]
+#[allow(unsafe_code)] // scoped exception (see Cargo.toml): std::arch SIMD intrinsics
+#[allow(clippy::needless_range_loop)] // tile loops index several arrays in lockstep
+mod avx2 {
+    use core::arch::x86_64::{
+        __m128, __m256, _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+        _mm256_set_m128, _mm256_setzero_ps, _mm256_storeu_ps, _mm_add_ps, _mm_loadu_ps,
+        _mm_mul_ps, _mm_setzero_ps, _mm_storeu_ps,
+    };
+    use std::ops::Range;
+
+    use super::{MR, NR};
+    use crate::tensor::MatF32;
+
+    /// True when the running CPU supports AVX2 (std memoizes the CPUID
+    /// probe, so this is an atomic load after the first call).
+    #[inline]
+    pub(super) fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[inline]
+    fn assert_avx2() {
+        assert!(available(), "KernelIsa::Avx2 dispatched on a CPU without AVX2");
+    }
+
+    /// Fold one dot product's four accumulator lanes exactly as
+    /// [`super::dot4`] does: left-to-right.
+    #[inline]
+    fn fold4(l: &[f32]) -> f32 {
+        l[0] + l[1] + l[2] + l[3]
+    }
+
+    // ------------------------------------------------------ dot products
+
+    /// AVX2/SSE [`super::dot4`]: the 128-bit accumulator vector *is* the
+    /// scalar version's four lanes.
+    pub(super) fn dot4(a: &[f32], b: &[f32]) -> f32 {
+        assert_avx2();
+        unsafe { dot4_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_impl(a: &[f32], b: &[f32]) -> f32 {
+        unsafe {
+            let n = a.len().min(b.len());
+            let c = n & !3;
+            let mut acc = _mm_setzero_ps();
+            let mut k = 0;
+            while k < c {
+                let av = _mm_loadu_ps(a.as_ptr().add(k));
+                let bv = _mm_loadu_ps(b.as_ptr().add(k));
+                acc = _mm_add_ps(acc, _mm_mul_ps(av, bv));
+                k += 4;
+            }
+            let mut lanes = [0.0f32; 4];
+            _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+            let mut s = fold4(&lanes);
+            for k in c..n {
+                s += a[k] * b[k];
+            }
+            s
+        }
+    }
+
+    /// Duplicate a 128-bit row chunk into both halves of a ymm register.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn dup128(v: __m128) -> __m256 {
+        _mm256_set_m128(v, v)
+    }
+
+    /// AVX2 [`super::dot4_1x4`]: two ymm registers hold the four
+    /// independent dot products (two per register, one per 128-bit half);
+    /// each half accumulates lanes `k ≡ l (mod 4)` in ascending `k`,
+    /// exactly the scalar lane assignment.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_1x4_impl(
+        a: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> [f32; 4] {
+        unsafe {
+            let n = a.len();
+            let c = n & !3;
+            let mut acc01 = _mm256_setzero_ps();
+            let mut acc23 = _mm256_setzero_ps();
+            let mut k = 0;
+            while k < c {
+                let ad = dup128(_mm_loadu_ps(a.as_ptr().add(k)));
+                let b01 = _mm256_set_m128(
+                    _mm_loadu_ps(b1.as_ptr().add(k)),
+                    _mm_loadu_ps(b0.as_ptr().add(k)),
+                );
+                let b23 = _mm256_set_m128(
+                    _mm_loadu_ps(b3.as_ptr().add(k)),
+                    _mm_loadu_ps(b2.as_ptr().add(k)),
+                );
+                acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(ad, b01));
+                acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(ad, b23));
+                k += 4;
+            }
+            let mut l01 = [0.0f32; 8];
+            let mut l23 = [0.0f32; 8];
+            _mm256_storeu_ps(l01.as_mut_ptr(), acc01);
+            _mm256_storeu_ps(l23.as_mut_ptr(), acc23);
+            let mut out =
+                [fold4(&l01[..4]), fold4(&l01[4..]), fold4(&l23[..4]), fold4(&l23[4..])];
+            for k in c..n {
+                let av = a[k];
+                out[0] += av * b0[k];
+                out[1] += av * b1[k];
+                out[2] += av * b2[k];
+                out[3] += av * b3[k];
+            }
+            out
+        }
+    }
+
+    /// AVX2 [`super::dot4_rows`].
+    pub(super) fn dot4_rows(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
+        assert_avx2();
+        unsafe { dot4_rows_impl(a, m, range, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_rows_impl(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
+        unsafe {
+            let mut i = range.start;
+            let mut o = 0;
+            while i + 4 <= range.end {
+                let r = dot4_1x4_impl(a, m.row(i), m.row(i + 1), m.row(i + 2), m.row(i + 3));
+                out[o..o + 4].copy_from_slice(&r);
+                i += 4;
+                o += 4;
+            }
+            while i < range.end {
+                out[o] = dot4_impl(a, m.row(i));
+                i += 1;
+                o += 1;
+            }
+        }
+    }
+
+    /// AVX2 [`super::dot4_2x2`]: `acc01 = [a0·b0 | a0·b1]`,
+    /// `acc23 = [a1·b0 | a1·b1]`, scalar lane fold and tail.
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot4_2x2_impl(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32]) -> [f32; 4] {
+        unsafe {
+            let n = a0.len();
+            let c = n & !3;
+            let mut acc01 = _mm256_setzero_ps();
+            let mut acc23 = _mm256_setzero_ps();
+            let mut k = 0;
+            while k < c {
+                let bb = _mm256_set_m128(
+                    _mm_loadu_ps(b1.as_ptr().add(k)),
+                    _mm_loadu_ps(b0.as_ptr().add(k)),
+                );
+                let x0 = dup128(_mm_loadu_ps(a0.as_ptr().add(k)));
+                let x1 = dup128(_mm_loadu_ps(a1.as_ptr().add(k)));
+                acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(x0, bb));
+                acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(x1, bb));
+                k += 4;
+            }
+            let mut l01 = [0.0f32; 8];
+            let mut l23 = [0.0f32; 8];
+            _mm256_storeu_ps(l01.as_mut_ptr(), acc01);
+            _mm256_storeu_ps(l23.as_mut_ptr(), acc23);
+            let mut out =
+                [fold4(&l01[..4]), fold4(&l01[4..]), fold4(&l23[..4]), fold4(&l23[4..])];
+            for k in c..n {
+                let x0 = a0[k];
+                let x1 = a1[k];
+                let y0 = b0[k];
+                let y1 = b1[k];
+                out[0] += x0 * y0;
+                out[1] += x0 * y1;
+                out[2] += x1 * y0;
+                out[3] += x1 * y1;
+            }
+            out
+        }
+    }
+
+    // ---------------------------------------------------- matmul panels
+
+    /// AVX2 [`super::matmul_panel`]: the MR×NR tile's NR lanes live in two
+    /// ymm registers per row; each output element still accumulates
+    /// `x[i][k]·W[k][j]` over ascending `k` in its own lane.
+    pub(super) fn matmul_panel(
+        rows_out: &mut [f32],
+        row0: usize,
+        x: &MatF32,
+        w: &[f32],
+        d_out: usize,
+    ) {
+        assert_avx2();
+        unsafe { matmul_panel_impl(rows_out, row0, x, w, d_out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn matmul_panel_impl(
+        rows_out: &mut [f32],
+        row0: usize,
+        x: &MatF32,
+        w: &[f32],
+        d_out: usize,
+    ) {
+        unsafe {
+            let rows = rows_out.len() / d_out;
+            let d_in = x.cols;
+            let mut i = 0;
+            while i + MR <= rows {
+                let xr =
+                    [x.row(row0 + i), x.row(row0 + i + 1), x.row(row0 + i + 2), x.row(row0 + i + 3)];
+                let mut j = 0;
+                while j + NR <= d_out {
+                    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                    for k in 0..d_in {
+                        let wp = w.as_ptr().add(k * d_out + j);
+                        let w0 = _mm256_loadu_ps(wp);
+                        let w1 = _mm256_loadu_ps(wp.add(8));
+                        for r in 0..MR {
+                            let xv = _mm256_set1_ps(xr[r][k]);
+                            acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(xv, w0));
+                            acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(xv, w1));
+                        }
+                    }
+                    for r in 0..MR {
+                        let op = rows_out.as_mut_ptr().add((i + r) * d_out + j);
+                        _mm256_storeu_ps(op, _mm256_add_ps(_mm256_loadu_ps(op), acc[r][0]));
+                        _mm256_storeu_ps(
+                            op.add(8),
+                            _mm256_add_ps(_mm256_loadu_ps(op.add(8)), acc[r][1]),
+                        );
+                    }
+                    j += NR;
+                }
+                // column remainder: scalar, identical to the scalar panel
+                while j < d_out {
+                    let mut acc = [0.0f32; MR];
+                    for k in 0..d_in {
+                        let wv = w[k * d_out + j];
+                        for (a, xrr) in acc.iter_mut().zip(&xr) {
+                            *a += xrr[k] * wv;
+                        }
+                    }
+                    for (r, &av) in acc.iter().enumerate() {
+                        rows_out[(i + r) * d_out + j] += av;
+                    }
+                    j += 1;
+                }
+                i += MR;
+            }
+            while i < rows {
+                let xi = x.row(row0 + i);
+                let mut j = 0;
+                while j + NR <= d_out {
+                    let mut a0 = _mm256_setzero_ps();
+                    let mut a1 = _mm256_setzero_ps();
+                    for (k, &xv) in xi.iter().enumerate() {
+                        let wp = w.as_ptr().add(k * d_out + j);
+                        let xb = _mm256_set1_ps(xv);
+                        a0 = _mm256_add_ps(a0, _mm256_mul_ps(xb, _mm256_loadu_ps(wp)));
+                        a1 = _mm256_add_ps(a1, _mm256_mul_ps(xb, _mm256_loadu_ps(wp.add(8))));
+                    }
+                    let op = rows_out.as_mut_ptr().add(i * d_out + j);
+                    _mm256_storeu_ps(op, _mm256_add_ps(_mm256_loadu_ps(op), a0));
+                    _mm256_storeu_ps(op.add(8), _mm256_add_ps(_mm256_loadu_ps(op.add(8)), a1));
+                    j += NR;
+                }
+                while j < d_out {
+                    let mut acc = 0.0f32;
+                    for (k, &xv) in xi.iter().enumerate() {
+                        acc += xv * w[k * d_out + j];
+                    }
+                    rows_out[i * d_out + j] += acc;
+                    j += 1;
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// AVX2 [`super::nt_panel`]: same 2×2 tiling and mask skips, with the
+    /// four independent dot products in ymm halves.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn nt_panel(
+        rows_out: &mut [f32],
+        row0: usize,
+        d_in: usize,
+        d: &MatF32,
+        w: &[f32],
+        d_out: usize,
+        act: Option<&MatF32>,
+    ) {
+        assert_avx2();
+        unsafe { nt_panel_impl(rows_out, row0, d_in, d, w, d_out, act) }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn nt_panel_impl(
+        rows_out: &mut [f32],
+        row0: usize,
+        d_in: usize,
+        d: &MatF32,
+        w: &[f32],
+        d_out: usize,
+        act: Option<&MatF32>,
+    ) {
+        unsafe {
+            let rows = rows_out.len() / d_in;
+            let mut i = 0;
+            while i + 2 <= rows {
+                let d0 = d.row(row0 + i);
+                let d1 = d.row(row0 + i + 1);
+                let mut j = 0;
+                while j + 2 <= d_in {
+                    let keep = match act {
+                        Some(a) => [
+                            a.row(row0 + i)[j] > 0.0,
+                            a.row(row0 + i)[j + 1] > 0.0,
+                            a.row(row0 + i + 1)[j] > 0.0,
+                            a.row(row0 + i + 1)[j + 1] > 0.0,
+                        ],
+                        None => [true; 4],
+                    };
+                    if keep.iter().any(|&k| k) {
+                        let w0 = &w[j * d_out..(j + 1) * d_out];
+                        let w1 = &w[(j + 1) * d_out..(j + 2) * d_out];
+                        let s = dot4_2x2_impl(d0, d1, w0, w1);
+                        if keep[0] {
+                            rows_out[i * d_in + j] += s[0];
+                        }
+                        if keep[1] {
+                            rows_out[i * d_in + j + 1] += s[1];
+                        }
+                        if keep[2] {
+                            rows_out[(i + 1) * d_in + j] += s[2];
+                        }
+                        if keep[3] {
+                            rows_out[(i + 1) * d_in + j + 1] += s[3];
+                        }
+                    }
+                    j += 2;
+                }
+                while j < d_in {
+                    let wj = &w[j * d_out..(j + 1) * d_out];
+                    for (r, dr) in [d0, d1].into_iter().enumerate() {
+                        let keep = match act {
+                            Some(a) => a.row(row0 + i + r)[j] > 0.0,
+                            None => true,
+                        };
+                        if keep {
+                            rows_out[(i + r) * d_in + j] += dot4_impl(dr, wj);
+                        }
+                    }
+                    j += 1;
+                }
+                i += 2;
+            }
+            while i < rows {
+                let di = d.row(row0 + i);
+                for j in 0..d_in {
+                    let keep = match act {
+                        Some(a) => a.row(row0 + i)[j] > 0.0,
+                        None => true,
+                    };
+                    if keep {
+                        rows_out[i * d_in + j] += dot4_impl(di, &w[j * d_out..(j + 1) * d_out]);
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+
+    /// AVX2 [`super::wgrad_panel`]: the MR×NR tile's NR lanes live in two
+    /// ymm registers per feature row, with the same `h == 0` sparsity skip
+    /// and ascending batch order per output element.
+    pub(super) fn wgrad_panel(
+        gw_rows: &mut [f32],
+        k0: usize,
+        input: &MatF32,
+        d: &MatF32,
+        d_out: usize,
+    ) {
+        assert_avx2();
+        unsafe { wgrad_panel_impl(gw_rows, k0, input, d, d_out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn wgrad_panel_impl(
+        gw_rows: &mut [f32],
+        k0: usize,
+        input: &MatF32,
+        d: &MatF32,
+        d_out: usize,
+    ) {
+        unsafe {
+            let kn = gw_rows.len() / d_out;
+            let rows = input.rows;
+            let mut kk = 0;
+            while kk + MR <= kn {
+                let mut j = 0;
+                while j + NR <= d_out {
+                    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+                    for i in 0..rows {
+                        let hi = input.row(i);
+                        let dp = d.row(i).as_ptr().add(j);
+                        let d0 = _mm256_loadu_ps(dp);
+                        let d1 = _mm256_loadu_ps(dp.add(8));
+                        for r in 0..MR {
+                            let h = hi[k0 + kk + r];
+                            if h == 0.0 {
+                                continue;
+                            }
+                            let hb = _mm256_set1_ps(h);
+                            acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(hb, d0));
+                            acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(hb, d1));
+                        }
+                    }
+                    for r in 0..MR {
+                        let gp = gw_rows.as_mut_ptr().add((kk + r) * d_out + j);
+                        _mm256_storeu_ps(gp, _mm256_add_ps(_mm256_loadu_ps(gp), acc[r][0]));
+                        _mm256_storeu_ps(
+                            gp.add(8),
+                            _mm256_add_ps(_mm256_loadu_ps(gp.add(8)), acc[r][1]),
+                        );
+                    }
+                    j += NR;
+                }
+                // column remainder: scalar, identical to the scalar panel
+                while j < d_out {
+                    let mut acc = [0.0f32; MR];
+                    for i in 0..rows {
+                        let hi = input.row(i);
+                        let dv = d.row(i)[j];
+                        for (r, a) in acc.iter_mut().enumerate() {
+                            let h = hi[k0 + kk + r];
+                            if h != 0.0 {
+                                *a += h * dv;
+                            }
+                        }
+                    }
+                    for (r, &av) in acc.iter().enumerate() {
+                        gw_rows[(kk + r) * d_out + j] += av;
+                    }
+                    j += 1;
+                }
+                kk += MR;
+            }
+            while kk < kn {
+                let mut j = 0;
+                while j + NR <= d_out {
+                    let mut a0 = _mm256_setzero_ps();
+                    let mut a1 = _mm256_setzero_ps();
+                    for i in 0..rows {
+                        let h = input.row(i)[k0 + kk];
+                        if h == 0.0 {
+                            continue;
+                        }
+                        let hb = _mm256_set1_ps(h);
+                        let dp = d.row(i).as_ptr().add(j);
+                        a0 = _mm256_add_ps(a0, _mm256_mul_ps(hb, _mm256_loadu_ps(dp)));
+                        a1 = _mm256_add_ps(a1, _mm256_mul_ps(hb, _mm256_loadu_ps(dp.add(8))));
+                    }
+                    let gp = gw_rows.as_mut_ptr().add(kk * d_out + j);
+                    _mm256_storeu_ps(gp, _mm256_add_ps(_mm256_loadu_ps(gp), a0));
+                    _mm256_storeu_ps(gp.add(8), _mm256_add_ps(_mm256_loadu_ps(gp.add(8)), a1));
+                    j += NR;
+                }
+                while j < d_out {
+                    let mut acc = 0.0f32;
+                    for i in 0..rows {
+                        let h = input.row(i)[k0 + kk];
+                        if h != 0.0 {
+                            acc += h * d.row(i)[j];
+                        }
+                    }
+                    gw_rows[kk * d_out + j] += acc;
+                    j += 1;
+                }
+                kk += 1;
+            }
+        }
     }
 }
 

@@ -350,11 +350,22 @@ fn bench_diff_flags(c: Cli) -> Cli {
     c.opt("baseline", "BENCH_perf.json", "committed baseline trajectory (JSON array)")
         .opt("fresh", "fresh.json", "freshly measured records to gate")
         .opt("factor", "2.0", "allowed p50 regression factor (fresh ≤ factor × baseline)")
+        .flag("require-baseline", "fail if the baseline has no gateable records (still the [] seed)")
 }
 
 fn cmd_bench_diff(ctx: &Ctx) -> Result<()> {
     let p = &ctx.args;
     let factor = p.f32("factor")? as f64;
+    if p.bool("require-baseline") {
+        let n = bench_util::baseline_records(Path::new(&p.str("baseline")))?;
+        if n == 0 {
+            bail!(
+                "bench-diff --require-baseline: {} has no gateable records — \
+                 commit a measured baseline (see PERF.md)",
+                p.str("baseline")
+            );
+        }
+    }
     let out = bench_util::diff_baseline(
         Path::new(&p.str("baseline")),
         Path::new(&p.str("fresh")),

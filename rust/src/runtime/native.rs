@@ -82,6 +82,7 @@ impl NativeBackend {
             .into_iter()
             .map(|(w_off, (d_in, d_out), b_off, _)| Layer { w_off, d_in, d_out, b_off })
             .collect();
+        log::debug!("native backend kernels dispatch to the {} ISA", kernel::active_isa());
         NativeBackend { man, layers, ws: WorkspacePool::new() }
     }
 

@@ -1,10 +1,13 @@
 //! Typed runtime configuration — the single place the `CREST_*` process
 //! environment is read.
 //!
-//! Five knobs tune how a process executes without changing *what* any
+//! Six knobs tune how a process executes without changing *what* any
 //! experiment computes: worker threads, the opt-in gram cache, the on-disk
-//! gradient-embedding cache, the default data-store backend, and the packed
-//! corpus root. Historically each consumer read its own env var; every such
+//! gradient-embedding cache, the default data-store backend, the packed
+//! corpus root, and the kernel ISA escape hatch (`CREST_FORCE_SCALAR`,
+//! which pins the scalar microkernels even where AVX2 is available — the
+//! SIMD and scalar paths are bitwise-identical, so this only trades
+//! speed). Historically each consumer read its own env var; every such
 //! site now goes through [`RuntimeConfig::current`], which merges
 //! session-level overrides (installed by
 //! [`Experiment::builder().runtime_config(..)`](crate::api::ExperimentBuilder::runtime_config)
@@ -32,6 +35,7 @@ pub const VARS: &[(&str, &str)] = &[
     ("CREST_EMBED_CACHE", "directory for the on-disk gradient-embedding cache"),
     ("CREST_DATA_STORE", "default dataset backend: mem | mmap"),
     ("CREST_PACK_DIR", "root directory for packed (sharded) corpora"),
+    ("CREST_FORCE_SCALAR", "pin the scalar kernel path (disable SIMD dispatch): 1/true"),
 ];
 
 /// Typed snapshot of the runtime knobs. `None` everywhere means "use the
@@ -50,6 +54,9 @@ pub struct RuntimeConfig {
     pub data_store: Option<StoreKind>,
     /// Packed-corpus root (`CREST_PACK_DIR`); `None` = `<tmp>/crest-pack`.
     pub pack_dir: Option<PathBuf>,
+    /// Pin the scalar kernel ISA (`CREST_FORCE_SCALAR`); `None` = runtime
+    /// feature dispatch picks the widest supported ISA.
+    pub force_scalar: Option<bool>,
 }
 
 /// Session-level overrides installed by [`set_session`]. Fields left `None`
@@ -61,6 +68,7 @@ fn session() -> &'static RwLock<RuntimeConfig> {
         embed_cache: None,
         data_store: None,
         pack_dir: None,
+        force_scalar: None,
     });
     &SESSION
 }
@@ -76,6 +84,8 @@ impl RuntimeConfig {
             embed_cache: var("CREST_EMBED_CACHE").map(PathBuf::from),
             data_store: var("CREST_DATA_STORE").and_then(|v| StoreKind::parse(&v).ok()),
             pack_dir: var("CREST_PACK_DIR").map(PathBuf::from),
+            force_scalar: var("CREST_FORCE_SCALAR")
+                .map(|v| v != "0" && !v.eq_ignore_ascii_case("false")),
         }
     }
 
@@ -95,6 +105,7 @@ impl RuntimeConfig {
             embed_cache: self.embed_cache.clone().or(fallback.embed_cache),
             data_store: self.data_store.or(fallback.data_store),
             pack_dir: self.pack_dir.clone().or(fallback.pack_dir),
+            force_scalar: self.force_scalar.or(fallback.force_scalar),
         }
     }
 
@@ -110,9 +121,9 @@ impl RuntimeConfig {
 }
 
 /// Install `rc` as the session override set (merged over the environment by
-/// every subsequent [`RuntimeConfig::current`] call) and push the two
-/// consumers with their own process-wide cells: the pool worker count and
-/// the data-store default.
+/// every subsequent [`RuntimeConfig::current`] call) and push the three
+/// consumers with their own process-wide cells: the pool worker count, the
+/// data-store default, and the memoized kernel ISA.
 pub fn set_session(rc: RuntimeConfig) {
     if let Some(t) = rc.threads {
         crate::util::pool::set_threads(t);
@@ -121,6 +132,8 @@ pub fn set_session(rc: RuntimeConfig) {
         crate::data::set_default_store(k);
     }
     *session().write().unwrap() = rc;
+    // after the session cell is updated so refresh_isa sees the new value
+    crate::kernel::refresh_isa();
 }
 
 #[cfg(test)]

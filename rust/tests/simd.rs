@@ -1,0 +1,265 @@
+//! SIMD-vs-scalar differential suite for the kernel ISA dispatch layer.
+//!
+//! Every vectorized kernel must be **bitwise** identical to the scalar
+//! tile path at every shape and thread count: AVX2 lanes map across
+//! independent output elements (never within one dot product's
+//! accumulation), so the per-element accumulation order — and therefore
+//! the bits — are unchanged. The tests pin each member of
+//! [`kernel::available_isas`] through the `_isa` kernel variants; on a
+//! machine without AVX2 the list collapses to `[Scalar]` and the suite
+//! degenerates to self-comparison (still checking the dispatch plumbing).
+
+use crest::kernel::{self, KernelIsa};
+use crest::prop::{forall, usize_in, vec_f32};
+use crest::runtime_config::RuntimeConfig;
+use crest::tensor::MatF32;
+use crest::util::pool;
+use crest::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF32 {
+    MatF32::from_vec(rows, cols, vec_f32(rng, rows * cols, scale)).unwrap()
+}
+
+/// Random matrix with roughly half its entries zeroed (post-ReLU pattern —
+/// exercises the masked kernel's keep logic and wgrad's zero-skip).
+fn relu_mat(rng: &mut Rng, rows: usize, cols: usize) -> MatF32 {
+    let mut m = rand_mat(rng, rows, cols, 3.0);
+    for v in m.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    m
+}
+
+fn bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!(
+                "element {k}: {x} ({:#x}) != {y} ({:#x})",
+                x.to_bits(),
+                y.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// The non-scalar ISAs this CPU can run (empty off-AVX2 x86, or on other
+/// arches — each test then reduces to checking the scalar path against
+/// itself, which still exercises the `_isa` plumbing).
+fn simd_isas() -> Vec<KernelIsa> {
+    kernel::available_isas().into_iter().filter(|&i| i != KernelIsa::Scalar).collect()
+}
+
+// --------------------------------------------------------------- matmuls
+
+#[test]
+fn prop_simd_matmuls_match_scalar_bitwise() {
+    forall(
+        "simd-matmul-bitwise",
+        0xA5D2,
+        80,
+        |rng| {
+            // odd shapes around the MR=4/NR=16 tile and the 8-lane ymm
+            // width, so every remainder path (0–7 columns, 1–3 rows) runs
+            let rows = usize_in(rng, 1, 41);
+            let d_in = usize_in(rng, 1, 37);
+            let d_out = usize_in(rng, 1, 43);
+            let x = rand_mat(rng, rows, d_in, 2.0);
+            let w = vec_f32(rng, d_in * d_out, 2.0);
+            let out = rand_mat(rng, rows, d_out, 1.0);
+            let d = rand_mat(rng, rows, d_out, 2.0);
+            let nt_out = rand_mat(rng, rows, d_in, 1.0);
+            let act = relu_mat(rng, rows, d_in);
+            (x, w, out, d, nt_out, act)
+        },
+        |(x, w, out, d, nt_out, act)| {
+            let d_out = out.cols;
+            for isa in simd_isas() {
+                let mut s = out.clone();
+                let mut v = out.clone();
+                kernel::add_matmul_isa(KernelIsa::Scalar, &mut s, x, w, d_out);
+                kernel::add_matmul_isa(isa, &mut v, x, w, d_out);
+                bits_eq(&s.data, &v.data).map_err(|e| format!("add_matmul {isa}: {e}"))?;
+
+                let mut s = nt_out.clone();
+                let mut v = nt_out.clone();
+                kernel::add_matmul_nt_isa(KernelIsa::Scalar, &mut s, d, w, d_out);
+                kernel::add_matmul_nt_isa(isa, &mut v, d, w, d_out);
+                bits_eq(&s.data, &v.data).map_err(|e| format!("add_matmul_nt {isa}: {e}"))?;
+
+                let mut s = nt_out.clone();
+                let mut v = nt_out.clone();
+                kernel::add_matmul_nt_masked_isa(KernelIsa::Scalar, &mut s, d, w, d_out, act);
+                kernel::add_matmul_nt_masked_isa(isa, &mut v, d, w, d_out, act);
+                bits_eq(&s.data, &v.data).map_err(|e| format!("nt_masked {isa}: {e}"))?;
+
+                let mut s = vec![0.5f32; x.cols * d_out];
+                let mut v = s.clone();
+                kernel::accum_wgrad_isa(KernelIsa::Scalar, &mut s, x, d, d_out);
+                kernel::accum_wgrad_isa(isa, &mut v, x, d, d_out);
+                bits_eq(&s, &v).map_err(|e| format!("accum_wgrad {isa}: {e}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------------- dot/distance panels
+
+#[test]
+fn prop_simd_dot_and_distance_panels_match_scalar_bitwise() {
+    forall(
+        "simd-dot-bitwise",
+        0xA5D3,
+        80,
+        |rng| {
+            let n = usize_in(rng, 1, 70);
+            let c = usize_in(rng, 1, 21);
+            let h = usize_in(rng, 1, 19);
+            let g = rand_mat(rng, n, c, 3.0);
+            let a = rand_mat(rng, n, h, 3.0);
+            let j = usize_in(rng, 0, n);
+            let lo = usize_in(rng, 0, n);
+            let hi = usize_in(rng, lo, n + 1);
+            (g, a, j, lo, hi)
+        },
+        |(g, a, j, lo, hi)| {
+            let n = g.rows;
+            let gsq: Vec<f32> = (0..n).map(|i| kernel::dot4(g.row(i), g.row(i))).collect();
+            let asq: Vec<f32> = (0..n)
+                .map(|i| kernel::dot4(a.row(i), a.row(i)) * kernel::dot4(g.row(i), g.row(i)))
+                .collect();
+            for isa in simd_isas() {
+                let s = kernel::dot4_isa(KernelIsa::Scalar, g.row(*j), a.row(*j));
+                let v = kernel::dot4_isa(isa, g.row(*j), a.row(*j));
+                bits_eq(&[s], &[v]).map_err(|e| format!("dot4 {isa}: {e}"))?;
+
+                for range in [0..n, *lo..*hi] {
+                    let mut s = vec![0.0f32; range.len()];
+                    let mut v = vec![0.0f32; range.len()];
+                    kernel::dot4_rows_isa(KernelIsa::Scalar, g.row(*j), g, range.clone(), &mut s);
+                    kernel::dot4_rows_isa(isa, g.row(*j), g, range.clone(), &mut v);
+                    bits_eq(&s, &v).map_err(|e| format!("dot4_rows {isa}: {e}"))?;
+
+                    kernel::euclid_block_isa(KernelIsa::Scalar, g, &gsq, *j, range.clone(), &mut s);
+                    kernel::euclid_block_isa(isa, g, &gsq, *j, range.clone(), &mut v);
+                    bits_eq(&s, &v).map_err(|e| format!("euclid_block {isa}: {e}"))?;
+
+                    kernel::prod_block_isa(KernelIsa::Scalar, a, g, &asq, *j, range.clone(), &mut s);
+                    kernel::prod_block_isa(isa, a, g, &asq, *j, range, &mut v);
+                    bits_eq(&s, &v).map_err(|e| format!("prod_block {isa}: {e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ----------------------------------------------- empty/singleton and tails
+
+#[test]
+fn simd_empty_and_singleton_inputs() {
+    for isa in kernel::available_isas() {
+        // empty: zero rows, zero cols, zero d_out — all no-ops
+        let mut out = MatF32::zeros(0, 5);
+        kernel::add_matmul_isa(isa, &mut out, &MatF32::zeros(0, 3), &[0.0; 15], 5);
+        let mut out = MatF32::zeros(4, 0);
+        kernel::add_matmul_isa(isa, &mut out, &MatF32::zeros(4, 3), &[], 0);
+        let mut gw: Vec<f32> = vec![];
+        kernel::accum_wgrad_isa(isa, &mut gw, &MatF32::zeros(0, 0), &MatF32::zeros(0, 0), 0);
+        assert_eq!(kernel::dot4_isa(isa, &[], &[]).to_bits(), 0.0f32.to_bits(), "{isa}");
+        kernel::dot4_rows_isa(isa, &[], &MatF32::zeros(0, 0), 0..0, &mut []);
+
+        // singleton: 1×1 everywhere — the smallest remainder tile
+        let x = MatF32::from_vec(1, 1, vec![3.0]).unwrap();
+        let mut o = MatF32::from_vec(1, 1, vec![1.0]).unwrap();
+        kernel::add_matmul_isa(isa, &mut o, &x, &[2.0], 1);
+        assert_eq!(o.data[0].to_bits(), 7.0f32.to_bits(), "{isa}: 1 + 3*2");
+        let v = kernel::dot4_isa(isa, &[3.0], &[2.0]);
+        assert_eq!(v.to_bits(), 6.0f32.to_bits(), "{isa}");
+        let mut d1 = [9.0f32];
+        kernel::euclid_block_isa(isa, &x, &[9.0], 0, 0..1, &mut d1);
+        assert_eq!(d1[0].to_bits(), 0.0f32.to_bits(), "{isa}: self-distance");
+    }
+}
+
+// ------------------------------------------------------------ thread sweep
+
+#[test]
+fn simd_matmuls_identical_across_thread_counts() {
+    // sized above the parallel gate with ragged remainder tiles, so the
+    // pool actually splits rows and each worker enters the SIMD panels
+    let mut rng = Rng::new(21);
+    let (rows, d_in, d_out) = (67, 129, 161);
+    let x = relu_mat(&mut rng, rows, d_in);
+    let w = vec_f32(&mut rng, d_in * d_out, 1.0);
+    let d = rand_mat(&mut rng, rows, d_out, 1.0);
+    let act = relu_mat(&mut rng, rows, d_in);
+    for isa in kernel::available_isas() {
+        let run = |t: usize| {
+            pool::with_threads(t, || {
+                let mut mm = MatF32::zeros(rows, d_out);
+                kernel::add_matmul_isa(isa, &mut mm, &x, &w, d_out);
+                let mut nt = MatF32::zeros(rows, d_in);
+                kernel::add_matmul_nt_masked_isa(isa, &mut nt, &d, &w, d_out, &act);
+                let mut gw = vec![0.0f32; d_in * d_out];
+                kernel::accum_wgrad_isa(isa, &mut gw, &x, &d, d_out);
+                (mm.data, nt.data, gw)
+            })
+        };
+        let base = run(1);
+        for t in [2, 4, 8] {
+            assert_eq!(base, run(t), "{isa}: thread count {t} changed a kernel result");
+        }
+    }
+    // and across ISAs at the same thread count
+    let outs: Vec<_> = kernel::available_isas()
+        .into_iter()
+        .map(|isa| {
+            pool::with_threads(4, || {
+                let mut mm = MatF32::zeros(rows, d_out);
+                kernel::add_matmul_isa(isa, &mut mm, &x, &w, d_out);
+                mm.data
+            })
+        })
+        .collect();
+    for o in &outs[1..] {
+        assert_eq!(&outs[0], o, "ISAs disagree under the 4-worker pool");
+    }
+}
+
+// --------------------------------------------------------------- dispatch
+
+#[test]
+fn resolve_isa_honors_force_scalar() {
+    assert_eq!(kernel::resolve_isa(true), KernelIsa::Scalar);
+    // without the override, resolution picks a member of the available set
+    assert!(kernel::available_isas().contains(&kernel::resolve_isa(false)));
+    // scalar is always available and always listed first
+    assert_eq!(kernel::available_isas()[0], KernelIsa::Scalar);
+}
+
+#[test]
+fn session_force_scalar_pins_the_active_isa() {
+    // the one test that touches global dispatch state: set a session-level
+    // force_scalar, check active_isa() follows, then restore. Runs in its
+    // own process-wide critical section via the session config itself —
+    // other tests here only use the pure resolve/_isa paths.
+    let prev = RuntimeConfig::current();
+    let mut forced = prev.clone();
+    forced.force_scalar = Some(true);
+    crest::runtime_config::set_session(forced);
+    assert_eq!(kernel::active_isa(), KernelIsa::Scalar);
+
+    let mut unforced = prev.clone();
+    unforced.force_scalar = Some(false);
+    crest::runtime_config::set_session(unforced);
+    assert_eq!(kernel::active_isa(), kernel::resolve_isa(false));
+
+    crest::runtime_config::set_session(prev);
+}

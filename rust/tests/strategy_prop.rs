@@ -1,0 +1,211 @@
+//! Property suite for the selection-strategy layer's arithmetic edges.
+//!
+//! Driven by the crate's dependency-free seeded generator
+//! ([`crest::prop::forall`], a splitmix-seeded LCG draw per case):
+//!
+//! * largest-remainder budget apportionment — sums to `min(k, Σ sizes)`,
+//!   never exceeds a piece's size, ignores zero-size pieces, and is stable
+//!   under permutation when every remainder is equal;
+//! * [`SparseKnnMetric`] — every finite (non-`far`) pair lies inside the
+//!   candidate window of the projection ordering the build used, rows keep
+//!   at most `neighbors` entries, and the `far` sentinel strictly
+//!   dominates every kept distance.
+
+use crest::coreset::facility::{
+    projection_order, EuclidMetric, SparseKnnMetric, SqDistMetric, KNN_PROJ_SEED,
+};
+use crest::coreset::strategy::apportion;
+use crest::prop::{forall, usize_in, vec_f32};
+use crest::tensor::MatF32;
+use crest::util::rng::Rng;
+
+fn rand_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> MatF32 {
+    MatF32::from_vec(rows, cols, vec_f32(rng, rows * cols, scale)).unwrap()
+}
+
+// ------------------------------------------------------------- apportion
+
+#[test]
+fn prop_apportion_sums_and_caps() {
+    forall(
+        "apportion-sums-caps",
+        0xA110,
+        200,
+        |rng| {
+            let pieces = usize_in(rng, 0, 12);
+            let sizes: Vec<usize> = (0..pieces).map(|_| usize_in(rng, 0, 40)).collect();
+            let k = usize_in(rng, 0, 80);
+            (sizes, k)
+        },
+        |(sizes, k)| {
+            let out = apportion(*k, sizes);
+            if out.len() != sizes.len() {
+                return Err(format!("length {} != {}", out.len(), sizes.len()));
+            }
+            let n: usize = sizes.iter().sum();
+            let total: usize = out.iter().sum();
+            if total != (*k).min(n) {
+                return Err(format!("sum {total} != min(k={k}, n={n})"));
+            }
+            for (i, (&q, &sz)) in out.iter().zip(sizes).enumerate() {
+                if q > sz {
+                    return Err(format!("piece {i}: budget {q} exceeds size {sz}"));
+                }
+            }
+            // determinism: a second call reproduces the split exactly
+            if apportion(*k, sizes) != out {
+                return Err("apportion is not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_apportion_stable_under_permutation_of_equal_remainders() {
+    // all pieces the same size → every fractional remainder is equal, so
+    // any permutation must yield the same multiset of budgets (the extras
+    // just land on different indices)
+    forall(
+        "apportion-equal-remainders",
+        0xA111,
+        200,
+        |rng| {
+            let pieces = usize_in(rng, 1, 10);
+            let size = usize_in(rng, 1, 20);
+            let k = usize_in(rng, 0, pieces * size + 5);
+            // a random permutation via Fisher–Yates on the index array
+            let mut perm: Vec<usize> = (0..pieces).collect();
+            for i in (1..pieces).rev() {
+                perm.swap(i, usize_in(rng, 0, i + 1));
+            }
+            (pieces, size, k, perm)
+        },
+        |(pieces, size, k, perm)| {
+            let sizes = vec![*size; *pieces];
+            let base = apportion(*k, &sizes);
+            let permuted = apportion(*k, &perm.iter().map(|&i| sizes[i]).collect::<Vec<_>>());
+            let mut a = base.clone();
+            let mut b = permuted.clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            if a != b {
+                return Err(format!("budget multiset changed: {base:?} vs {permuted:?}"));
+            }
+            // equal remainders also means budgets differ by at most 1
+            if let (Some(&hi), Some(&lo)) = (a.last(), a.first()) {
+                if hi - lo > 1 {
+                    return Err(format!("equal-size budgets spread beyond 1: {a:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_apportion_ignores_zero_size_pieces() {
+    // inserting zero-size pieces anywhere must not change any other
+    // piece's budget: zeros take no quota, no remainder, no overflow
+    forall(
+        "apportion-zero-pieces",
+        0xA112,
+        150,
+        |rng| {
+            let pieces = usize_in(rng, 1, 8);
+            let sizes: Vec<usize> = (0..pieces).map(|_| usize_in(rng, 1, 30)).collect();
+            let k = usize_in(rng, 0, 60);
+            let insert_at = usize_in(rng, 0, pieces + 1);
+            (sizes, k, insert_at)
+        },
+        |(sizes, k, insert_at)| {
+            let base = apportion(*k, sizes);
+            let mut padded = sizes.clone();
+            padded.insert(*insert_at, 0);
+            let got = apportion(*k, &padded);
+            if got[*insert_at] != 0 {
+                return Err(format!("zero-size piece received budget {}", got[*insert_at]));
+            }
+            let mut stripped = got.clone();
+            stripped.remove(*insert_at);
+            if stripped != base {
+                return Err(format!("zero piece changed neighbors: {base:?} vs {stripped:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------------------- sparse knn
+
+#[test]
+fn prop_sparse_knn_candidate_window_bounds() {
+    forall(
+        "sparse-knn-window",
+        0x5EED,
+        40,
+        |rng| {
+            let n = usize_in(rng, 1, 60);
+            let c = usize_in(rng, 1, 8);
+            let g = rand_mat(rng, n, c, 3.0);
+            let k = usize_in(rng, 1, n + 3);
+            (g, k)
+        },
+        |(g, k)| {
+            let n = g.rows;
+            let euclid = EuclidMetric::new(g);
+            let knn = SparseKnnMetric::build(&euclid, g, *k);
+            let kc = (*k).clamp(1, n);
+            if knn.neighbors() != kc {
+                return Err(format!("neighbors {} != clamped {kc}", knn.neighbors()));
+            }
+            if knn.far() <= 0.0 || !knn.far().is_finite() {
+                return Err(format!("far sentinel {} not positive/finite", knn.far()));
+            }
+            // rank of every element in the projection ordering the build used
+            let order = projection_order(g, KNN_PROJ_SEED);
+            let mut rank = vec![0usize; n];
+            for (p, &i) in order.iter().enumerate() {
+                rank[i] = p;
+            }
+            for i in 0..n {
+                if knn.sqdist(i, i) != 0.0 {
+                    return Err(format!("sqdist({i},{i}) = {}", knn.sqdist(i, i)));
+                }
+                let mut kept = 0usize;
+                for j in 0..n {
+                    if i == j {
+                        continue;
+                    }
+                    let dij = knn.sqdist(i, j);
+                    if dij == knn.far() {
+                        continue;
+                    }
+                    kept += 1;
+                    // every finite pair must be inside the candidate window:
+                    // k projection-ranks either side of row i's own rank
+                    let dr = rank[i].abs_diff(rank[j]);
+                    if dr > kc {
+                        return Err(format!(
+                            "finite pair ({i},{j}) is {dr} ranks apart, window is {kc}"
+                        ));
+                    }
+                    // kept distances match the inner metric and stay below far
+                    let exact = euclid.sqdist(i, j);
+                    if dij.to_bits() != exact.to_bits() {
+                        return Err(format!("kept dist ({i},{j}) {dij} != inner {exact}"));
+                    }
+                    if dij >= knn.far() {
+                        return Err(format!("kept dist {dij} not below far {}", knn.far()));
+                    }
+                }
+                // each row stores exactly kc entries (usually including the
+                // element itself), so at most kc other elements are finite
+                if kept > kc {
+                    return Err(format!("row {i} keeps {kept} finite pairs, cap is {kc}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,47 @@
+/* Shared declarations for the kernel perf proxy.
+ *
+ * Two translation units implement the same panel set:
+ *   kern_scalar.c  — line-for-line port of the Rust scalar tile panels,
+ *                    compiled -O3 with the default x86-64 target (SSE2
+ *                    autovectorization), standing in for the rustc
+ *                    release build of the scalar path;
+ *   kern_avx2.c    — port of the kernel::avx2 intrinsic panels, compiled
+ *                    -O2 -mavx2 -mno-fma (the intrinsics pin the codegen,
+ *                    matching target_feature(enable = "avx2") without
+ *                    FMA contraction).
+ *
+ * Matrices are row-major float32, exactly the MatF32 layout.
+ */
+#ifndef PERF_PROXY_KERN_H
+#define PERF_PROXY_KERN_H
+
+#include <stddef.h>
+
+#define MR 4
+#define NR 16
+#define PROD_BLOCK 64
+
+#define DECL(isa)                                                              \
+    float isa##_dot4(const float *a, const float *b, size_t n);                \
+    void isa##_dot4_rows(const float *a, const float *m, size_t cols,          \
+                         size_t lo, size_t hi, float *out);                    \
+    void isa##_matmul_panel(float *rows_out, size_t rows, const float *x,      \
+                            size_t d_in, const float *w, size_t d_out);        \
+    void isa##_nt_panel(float *rows_out, size_t rows, size_t d_in,             \
+                        const float *d, const float *w, size_t d_out,          \
+                        const float *act);                                     \
+    void isa##_wgrad_panel(float *gw, size_t kn, const float *input,           \
+                           size_t rows, size_t d_in, const float *d,           \
+                           size_t d_out);                                      \
+    void isa##_euclid_block(const float *g, size_t cols, const float *sq,      \
+                            size_t j, size_t n, float *out);                   \
+    void isa##_prod_block(const float *a, size_t h, const float *g,            \
+                          size_t c, const float *sq, size_t j, size_t n,       \
+                          float *out);
+
+DECL(scalar)
+DECL(avx2)
+
+#undef DECL
+
+#endif

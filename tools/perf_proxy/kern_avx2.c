@@ -1,0 +1,328 @@
+/* AVX2 intrinsic panels — a port of rust/src/kernel.rs's `avx2` module.
+ * Compiled -O2 -mavx2 -mno-fma: the intrinsics pin the vector shape the
+ * Rust target_feature(enable = "avx2") functions emit, and -mno-fma keeps
+ * gcc from contracting mul+add into FMA (the Rust layer never uses FMA —
+ * it would change the bits vs the scalar path). */
+#include "kern.h"
+
+#include <immintrin.h>
+#include <string.h>
+
+static inline float fold4(const float *l) { return l[0] + l[1] + l[2] + l[3]; }
+
+float avx2_dot4(const float *a, const float *b, size_t n) {
+    size_t c = n & ~(size_t)3;
+    __m128 acc = _mm_setzero_ps();
+    size_t k = 0;
+    for (; k < c; k += 4)
+        acc = _mm_add_ps(acc, _mm_mul_ps(_mm_loadu_ps(a + k), _mm_loadu_ps(b + k)));
+    float lanes[4];
+    _mm_storeu_ps(lanes, acc);
+    float s = fold4(lanes);
+    for (k = c; k < n; k++)
+        s += a[k] * b[k];
+    return s;
+}
+
+static inline __m256 dup128(__m128 v) { return _mm256_set_m128(v, v); }
+
+static void dot4_1x4(const float *a, const float *b0, const float *b1,
+                     const float *b2, const float *b3, size_t n, float out[4]) {
+    size_t c = n & ~(size_t)3;
+    __m256 acc01 = _mm256_setzero_ps();
+    __m256 acc23 = _mm256_setzero_ps();
+    size_t k = 0;
+    for (; k < c; k += 4) {
+        __m256 ad = dup128(_mm_loadu_ps(a + k));
+        __m256 b01 = _mm256_set_m128(_mm_loadu_ps(b1 + k), _mm_loadu_ps(b0 + k));
+        __m256 b23 = _mm256_set_m128(_mm_loadu_ps(b3 + k), _mm_loadu_ps(b2 + k));
+        acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(ad, b01));
+        acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(ad, b23));
+    }
+    float l01[8], l23[8];
+    _mm256_storeu_ps(l01, acc01);
+    _mm256_storeu_ps(l23, acc23);
+    out[0] = fold4(l01);
+    out[1] = fold4(l01 + 4);
+    out[2] = fold4(l23);
+    out[3] = fold4(l23 + 4);
+    for (k = c; k < n; k++) {
+        float av = a[k];
+        out[0] += av * b0[k];
+        out[1] += av * b1[k];
+        out[2] += av * b2[k];
+        out[3] += av * b3[k];
+    }
+}
+
+void avx2_dot4_rows(const float *a, const float *m, size_t cols, size_t lo,
+                    size_t hi, float *out) {
+    size_t i = lo, o = 0;
+    for (; i + 4 <= hi; i += 4, o += 4)
+        dot4_1x4(a, m + i * cols, m + (i + 1) * cols, m + (i + 2) * cols,
+                 m + (i + 3) * cols, cols, out + o);
+    for (; i < hi; i++, o++)
+        out[o] = avx2_dot4(a, m + i * cols, cols);
+}
+
+void avx2_matmul_panel(float *rows_out, size_t rows, const float *x,
+                       size_t d_in, const float *w, size_t d_out) {
+    size_t i = 0;
+    while (i + MR <= rows) {
+        const float *xr[MR] = {x + i * d_in, x + (i + 1) * d_in,
+                               x + (i + 2) * d_in, x + (i + 3) * d_in};
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            __m256 acc[MR][2];
+            for (size_t r = 0; r < MR; r++)
+                acc[r][0] = acc[r][1] = _mm256_setzero_ps();
+            for (size_t k = 0; k < d_in; k++) {
+                const float *wp = w + k * d_out + j;
+                __m256 w0 = _mm256_loadu_ps(wp);
+                __m256 w1 = _mm256_loadu_ps(wp + 8);
+                for (size_t r = 0; r < MR; r++) {
+                    __m256 xv = _mm256_set1_ps(xr[r][k]);
+                    acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(xv, w0));
+                    acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(xv, w1));
+                }
+            }
+            for (size_t r = 0; r < MR; r++) {
+                float *op = rows_out + (i + r) * d_out + j;
+                _mm256_storeu_ps(op, _mm256_add_ps(_mm256_loadu_ps(op), acc[r][0]));
+                _mm256_storeu_ps(op + 8,
+                                 _mm256_add_ps(_mm256_loadu_ps(op + 8), acc[r][1]));
+            }
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc[MR] = {0, 0, 0, 0};
+            for (size_t k = 0; k < d_in; k++) {
+                float wv = w[k * d_out + j];
+                for (size_t r = 0; r < MR; r++)
+                    acc[r] += xr[r][k] * wv;
+            }
+            for (size_t r = 0; r < MR; r++)
+                rows_out[(i + r) * d_out + j] += acc[r];
+            j++;
+        }
+        i += MR;
+    }
+    while (i < rows) {
+        const float *xi = x + i * d_in;
+        float *orow = rows_out + i * d_out;
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            __m256 a0 = _mm256_setzero_ps();
+            __m256 a1 = _mm256_setzero_ps();
+            for (size_t k = 0; k < d_in; k++) {
+                const float *wp = w + k * d_out + j;
+                __m256 xv = _mm256_set1_ps(xi[k]);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(xv, _mm256_loadu_ps(wp)));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(xv, _mm256_loadu_ps(wp + 8)));
+            }
+            _mm256_storeu_ps(orow + j,
+                             _mm256_add_ps(_mm256_loadu_ps(orow + j), a0));
+            _mm256_storeu_ps(orow + j + 8,
+                             _mm256_add_ps(_mm256_loadu_ps(orow + j + 8), a1));
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc = 0;
+            for (size_t k = 0; k < d_in; k++)
+                acc += xi[k] * w[k * d_out + j];
+            orow[j] += acc;
+            j++;
+        }
+        i++;
+    }
+}
+
+static void dot4_2x2(const float *a0, const float *a1, const float *b0,
+                     const float *b1, size_t n, float out[4]) {
+    size_t c = n & ~(size_t)3;
+    __m256 acc01 = _mm256_setzero_ps();
+    __m256 acc23 = _mm256_setzero_ps();
+    size_t k = 0;
+    for (; k < c; k += 4) {
+        __m256 bb = _mm256_set_m128(_mm_loadu_ps(b1 + k), _mm_loadu_ps(b0 + k));
+        __m256 x0 = dup128(_mm_loadu_ps(a0 + k));
+        __m256 x1 = dup128(_mm_loadu_ps(a1 + k));
+        acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(x0, bb));
+        acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(x1, bb));
+    }
+    float l01[8], l23[8];
+    _mm256_storeu_ps(l01, acc01);
+    _mm256_storeu_ps(l23, acc23);
+    out[0] = fold4(l01);
+    out[1] = fold4(l01 + 4);
+    out[2] = fold4(l23);
+    out[3] = fold4(l23 + 4);
+    for (k = c; k < n; k++) {
+        float x0 = a0[k], x1 = a1[k], y0 = b0[k], y1 = b1[k];
+        out[0] += x0 * y0;
+        out[1] += x0 * y1;
+        out[2] += x1 * y0;
+        out[3] += x1 * y1;
+    }
+}
+
+void avx2_nt_panel(float *rows_out, size_t rows, size_t d_in, const float *d,
+                   const float *w, size_t d_out, const float *act) {
+    size_t i = 0;
+    while (i + 2 <= rows) {
+        const float *d0 = d + i * d_out, *d1 = d0 + d_out;
+        size_t j = 0;
+        while (j + 2 <= d_in) {
+            int keep[4];
+            if (act) {
+                keep[0] = act[i * d_in + j] > 0.0f;
+                keep[1] = act[i * d_in + j + 1] > 0.0f;
+                keep[2] = act[(i + 1) * d_in + j] > 0.0f;
+                keep[3] = act[(i + 1) * d_in + j + 1] > 0.0f;
+            } else {
+                keep[0] = keep[1] = keep[2] = keep[3] = 1;
+            }
+            if (keep[0] || keep[1] || keep[2] || keep[3]) {
+                float s[4];
+                dot4_2x2(d0, d1, w + j * d_out, w + (j + 1) * d_out, d_out, s);
+                if (keep[0])
+                    rows_out[i * d_in + j] += s[0];
+                if (keep[1])
+                    rows_out[i * d_in + j + 1] += s[1];
+                if (keep[2])
+                    rows_out[(i + 1) * d_in + j] += s[2];
+                if (keep[3])
+                    rows_out[(i + 1) * d_in + j + 1] += s[3];
+            }
+            j += 2;
+        }
+        while (j < d_in) {
+            const float *wj = w + j * d_out;
+            for (size_t r = 0; r < 2; r++) {
+                int keep = act ? act[(i + r) * d_in + j] > 0.0f : 1;
+                if (keep)
+                    rows_out[(i + r) * d_in + j] +=
+                        avx2_dot4(d + (i + r) * d_out, wj, d_out);
+            }
+            j++;
+        }
+        i += 2;
+    }
+    while (i < rows) {
+        const float *di = d + i * d_out;
+        for (size_t j = 0; j < d_in; j++) {
+            int keep = act ? act[i * d_in + j] > 0.0f : 1;
+            if (keep)
+                rows_out[i * d_in + j] += avx2_dot4(di, w + j * d_out, d_out);
+        }
+        i++;
+    }
+}
+
+void avx2_wgrad_panel(float *gw, size_t kn, const float *input, size_t rows,
+                      size_t d_in, const float *d, size_t d_out) {
+    size_t kk = 0;
+    while (kk + MR <= kn) {
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            __m256 acc[MR][2];
+            for (size_t r = 0; r < MR; r++)
+                acc[r][0] = acc[r][1] = _mm256_setzero_ps();
+            for (size_t i = 0; i < rows; i++) {
+                const float *hi = input + i * d_in;
+                const float *di = d + i * d_out + j;
+                __m256 d0 = _mm256_loadu_ps(di);
+                __m256 d1 = _mm256_loadu_ps(di + 8);
+                for (size_t r = 0; r < MR; r++) {
+                    float h = hi[kk + r];
+                    if (h == 0.0f)
+                        continue;
+                    __m256 hv = _mm256_set1_ps(h);
+                    acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(hv, d0));
+                    acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(hv, d1));
+                }
+            }
+            for (size_t r = 0; r < MR; r++) {
+                float *g = gw + (kk + r) * d_out + j;
+                _mm256_storeu_ps(g, _mm256_add_ps(_mm256_loadu_ps(g), acc[r][0]));
+                _mm256_storeu_ps(g + 8,
+                                 _mm256_add_ps(_mm256_loadu_ps(g + 8), acc[r][1]));
+            }
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc[MR] = {0, 0, 0, 0};
+            for (size_t i = 0; i < rows; i++) {
+                const float *hi = input + i * d_in;
+                float dv = d[i * d_out + j];
+                for (size_t r = 0; r < MR; r++) {
+                    float h = hi[kk + r];
+                    if (h != 0.0f)
+                        acc[r] += h * dv;
+                }
+            }
+            for (size_t r = 0; r < MR; r++)
+                gw[(kk + r) * d_out + j] += acc[r];
+            j++;
+        }
+        kk += MR;
+    }
+    while (kk < kn) {
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            __m256 a0 = _mm256_setzero_ps();
+            __m256 a1 = _mm256_setzero_ps();
+            for (size_t i = 0; i < rows; i++) {
+                float h = input[i * d_in + kk];
+                if (h == 0.0f)
+                    continue;
+                const float *di = d + i * d_out + j;
+                __m256 hv = _mm256_set1_ps(h);
+                a0 = _mm256_add_ps(a0, _mm256_mul_ps(hv, _mm256_loadu_ps(di)));
+                a1 = _mm256_add_ps(a1, _mm256_mul_ps(hv, _mm256_loadu_ps(di + 8)));
+            }
+            float *g = gw + kk * d_out + j;
+            _mm256_storeu_ps(g, _mm256_add_ps(_mm256_loadu_ps(g), a0));
+            _mm256_storeu_ps(g + 8, _mm256_add_ps(_mm256_loadu_ps(g + 8), a1));
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc = 0;
+            for (size_t i = 0; i < rows; i++) {
+                float h = input[i * d_in + kk];
+                if (h != 0.0f)
+                    acc += h * d[i * d_out + j];
+            }
+            gw[kk * d_out + j] += acc;
+            j++;
+        }
+        kk++;
+    }
+}
+
+void avx2_euclid_block(const float *g, size_t cols, const float *sq, size_t j,
+                       size_t n, float *out) {
+    avx2_dot4_rows(g + j * cols, g, cols, 0, n, out);
+    float sj = sq[j];
+    for (size_t i = 0; i < n; i++) {
+        float v = sq[i] + sj - 2.0f * out[i];
+        out[i] = v > 0.0f ? v : 0.0f;
+    }
+}
+
+void avx2_prod_block(const float *a, size_t h, const float *g, size_t c,
+                     const float *sq, size_t j, size_t n, float *out) {
+    const float *aj = a + j * h;
+    const float *gj = g + j * c;
+    float sj = sq[j];
+    float gbuf[PROD_BLOCK];
+    for (size_t lo = 0; lo < n; lo += PROD_BLOCK) {
+        size_t len = n - lo < PROD_BLOCK ? n - lo : PROD_BLOCK;
+        avx2_dot4_rows(gj, g, c, lo, lo + len, gbuf);
+        avx2_dot4_rows(aj, a, h, lo, lo + len, out + lo);
+        for (size_t k = 0; k < len; k++) {
+            float v = sq[lo + k] + sj - 2.0f * out[lo + k] * gbuf[k];
+            out[lo + k] = v > 0.0f ? v : 0.0f;
+        }
+    }
+}

@@ -1,0 +1,304 @@
+/* Scalar tile panels — a direct port of rust/src/kernel.rs's scalar path
+ * (dot4 / dot4_1x4 / dot4_2x2 / matmul_panel / nt_panel / wgrad_panel and
+ * the blocked distance epilogues). Compiled -O3 without -mavx2 so gcc
+ * autovectorizes to SSE2, the same ceiling rustc's release build has on
+ * the default x86-64 target. */
+#include "kern.h"
+
+#include <string.h>
+
+float scalar_dot4(const float *a, const float *b, size_t n) {
+    float acc[4] = {0, 0, 0, 0};
+    size_t c = n & ~(size_t)3;
+    for (size_t k = 0; k < c; k += 4) {
+        acc[0] += a[k] * b[k];
+        acc[1] += a[k + 1] * b[k + 1];
+        acc[2] += a[k + 2] * b[k + 2];
+        acc[3] += a[k + 3] * b[k + 3];
+    }
+    float s = acc[0] + acc[1] + acc[2] + acc[3];
+    for (size_t k = c; k < n; k++)
+        s += a[k] * b[k];
+    return s;
+}
+
+static void dot4_1x4(const float *a, const float *b0, const float *b1,
+                     const float *b2, const float *b3, size_t n, float out[4]) {
+    float acc[4][4];
+    memset(acc, 0, sizeof acc);
+    size_t c = n & ~(size_t)3;
+    for (size_t k = 0; k < c; k += 4) {
+        for (size_t l = 0; l < 4; l++) {
+            float av = a[k + l];
+            acc[0][l] += av * b0[k + l];
+            acc[1][l] += av * b1[k + l];
+            acc[2][l] += av * b2[k + l];
+            acc[3][l] += av * b3[k + l];
+        }
+    }
+    for (size_t r = 0; r < 4; r++)
+        out[r] = acc[r][0] + acc[r][1] + acc[r][2] + acc[r][3];
+    for (size_t k = c; k < n; k++) {
+        float av = a[k];
+        out[0] += av * b0[k];
+        out[1] += av * b1[k];
+        out[2] += av * b2[k];
+        out[3] += av * b3[k];
+    }
+}
+
+void scalar_dot4_rows(const float *a, const float *m, size_t cols, size_t lo,
+                      size_t hi, float *out) {
+    size_t i = lo, o = 0;
+    for (; i + 4 <= hi; i += 4, o += 4)
+        dot4_1x4(a, m + i * cols, m + (i + 1) * cols, m + (i + 2) * cols,
+                 m + (i + 3) * cols, cols, out + o);
+    for (; i < hi; i++, o++)
+        out[o] = scalar_dot4(a, m + i * cols, cols);
+}
+
+void scalar_matmul_panel(float *rows_out, size_t rows, const float *x,
+                         size_t d_in, const float *w, size_t d_out) {
+    size_t i = 0;
+    while (i + MR <= rows) {
+        const float *x0 = x + i * d_in, *x1 = x0 + d_in, *x2 = x1 + d_in,
+                    *x3 = x2 + d_in;
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            float acc[MR][NR];
+            memset(acc, 0, sizeof acc);
+            for (size_t k = 0; k < d_in; k++) {
+                const float *wk = w + k * d_out + j;
+                float xv[MR] = {x0[k], x1[k], x2[k], x3[k]};
+                for (size_t r = 0; r < MR; r++)
+                    for (size_t l = 0; l < NR; l++)
+                        acc[r][l] += xv[r] * wk[l];
+            }
+            for (size_t r = 0; r < MR; r++) {
+                float *o = rows_out + (i + r) * d_out + j;
+                for (size_t l = 0; l < NR; l++)
+                    o[l] += acc[r][l];
+            }
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc[MR] = {0, 0, 0, 0};
+            for (size_t k = 0; k < d_in; k++) {
+                float wv = w[k * d_out + j];
+                acc[0] += x0[k] * wv;
+                acc[1] += x1[k] * wv;
+                acc[2] += x2[k] * wv;
+                acc[3] += x3[k] * wv;
+            }
+            for (size_t r = 0; r < MR; r++)
+                rows_out[(i + r) * d_out + j] += acc[r];
+            j++;
+        }
+        i += MR;
+    }
+    while (i < rows) {
+        const float *xi = x + i * d_in;
+        float *orow = rows_out + i * d_out;
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            float acc[NR];
+            memset(acc, 0, sizeof acc);
+            for (size_t k = 0; k < d_in; k++) {
+                const float *wk = w + k * d_out + j;
+                for (size_t l = 0; l < NR; l++)
+                    acc[l] += xi[k] * wk[l];
+            }
+            for (size_t l = 0; l < NR; l++)
+                orow[j + l] += acc[l];
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc = 0;
+            for (size_t k = 0; k < d_in; k++)
+                acc += xi[k] * w[k * d_out + j];
+            orow[j] += acc;
+            j++;
+        }
+        i++;
+    }
+}
+
+static void dot4_2x2(const float *a0, const float *a1, const float *b0,
+                     const float *b1, size_t n, float out[4]) {
+    float acc[4][4];
+    memset(acc, 0, sizeof acc);
+    size_t c = n & ~(size_t)3;
+    for (size_t k = 0; k < c; k += 4) {
+        for (size_t l = 0; l < 4; l++) {
+            float x0 = a0[k + l], x1 = a1[k + l];
+            float y0 = b0[k + l], y1 = b1[k + l];
+            acc[0][l] += x0 * y0;
+            acc[1][l] += x0 * y1;
+            acc[2][l] += x1 * y0;
+            acc[3][l] += x1 * y1;
+        }
+    }
+    for (size_t r = 0; r < 4; r++)
+        out[r] = acc[r][0] + acc[r][1] + acc[r][2] + acc[r][3];
+    for (size_t k = c; k < n; k++) {
+        float x0 = a0[k], x1 = a1[k], y0 = b0[k], y1 = b1[k];
+        out[0] += x0 * y0;
+        out[1] += x0 * y1;
+        out[2] += x1 * y0;
+        out[3] += x1 * y1;
+    }
+}
+
+void scalar_nt_panel(float *rows_out, size_t rows, size_t d_in, const float *d,
+                     const float *w, size_t d_out, const float *act) {
+    size_t i = 0;
+    while (i + 2 <= rows) {
+        const float *d0 = d + i * d_out, *d1 = d0 + d_out;
+        size_t j = 0;
+        while (j + 2 <= d_in) {
+            int keep[4];
+            if (act) {
+                keep[0] = act[i * d_in + j] > 0.0f;
+                keep[1] = act[i * d_in + j + 1] > 0.0f;
+                keep[2] = act[(i + 1) * d_in + j] > 0.0f;
+                keep[3] = act[(i + 1) * d_in + j + 1] > 0.0f;
+            } else {
+                keep[0] = keep[1] = keep[2] = keep[3] = 1;
+            }
+            if (keep[0] || keep[1] || keep[2] || keep[3]) {
+                float s[4];
+                dot4_2x2(d0, d1, w + j * d_out, w + (j + 1) * d_out, d_out, s);
+                if (keep[0])
+                    rows_out[i * d_in + j] += s[0];
+                if (keep[1])
+                    rows_out[i * d_in + j + 1] += s[1];
+                if (keep[2])
+                    rows_out[(i + 1) * d_in + j] += s[2];
+                if (keep[3])
+                    rows_out[(i + 1) * d_in + j + 1] += s[3];
+            }
+            j += 2;
+        }
+        while (j < d_in) {
+            const float *wj = w + j * d_out;
+            for (size_t r = 0; r < 2; r++) {
+                int keep = act ? act[(i + r) * d_in + j] > 0.0f : 1;
+                if (keep)
+                    rows_out[(i + r) * d_in + j] +=
+                        scalar_dot4(d + (i + r) * d_out, wj, d_out);
+            }
+            j++;
+        }
+        i += 2;
+    }
+    while (i < rows) {
+        const float *di = d + i * d_out;
+        for (size_t j = 0; j < d_in; j++) {
+            int keep = act ? act[i * d_in + j] > 0.0f : 1;
+            if (keep)
+                rows_out[i * d_in + j] += scalar_dot4(di, w + j * d_out, d_out);
+        }
+        i++;
+    }
+}
+
+void scalar_wgrad_panel(float *gw, size_t kn, const float *input, size_t rows,
+                        size_t d_in, const float *d, size_t d_out) {
+    size_t kk = 0;
+    while (kk + MR <= kn) {
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            float acc[MR][NR];
+            memset(acc, 0, sizeof acc);
+            for (size_t i = 0; i < rows; i++) {
+                const float *hi = input + i * d_in;
+                const float *di = d + i * d_out + j;
+                float hv[MR] = {hi[kk], hi[kk + 1], hi[kk + 2], hi[kk + 3]};
+                for (size_t r = 0; r < MR; r++) {
+                    if (hv[r] == 0.0f)
+                        continue;
+                    for (size_t l = 0; l < NR; l++)
+                        acc[r][l] += hv[r] * di[l];
+                }
+            }
+            for (size_t r = 0; r < MR; r++) {
+                float *g = gw + (kk + r) * d_out + j;
+                for (size_t l = 0; l < NR; l++)
+                    g[l] += acc[r][l];
+            }
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc[MR] = {0, 0, 0, 0};
+            for (size_t i = 0; i < rows; i++) {
+                const float *hi = input + i * d_in;
+                float dv = d[i * d_out + j];
+                for (size_t r = 0; r < MR; r++) {
+                    float h = hi[kk + r];
+                    if (h != 0.0f)
+                        acc[r] += h * dv;
+                }
+            }
+            for (size_t r = 0; r < MR; r++)
+                gw[(kk + r) * d_out + j] += acc[r];
+            j++;
+        }
+        kk += MR;
+    }
+    while (kk < kn) {
+        size_t j = 0;
+        while (j + NR <= d_out) {
+            float acc[NR];
+            memset(acc, 0, sizeof acc);
+            for (size_t i = 0; i < rows; i++) {
+                float h = input[i * d_in + kk];
+                if (h == 0.0f)
+                    continue;
+                const float *di = d + i * d_out + j;
+                for (size_t l = 0; l < NR; l++)
+                    acc[l] += h * di[l];
+            }
+            for (size_t l = 0; l < NR; l++)
+                gw[kk * d_out + j + l] += acc[l];
+            j += NR;
+        }
+        while (j < d_out) {
+            float acc = 0;
+            for (size_t i = 0; i < rows; i++) {
+                float h = input[i * d_in + kk];
+                if (h != 0.0f)
+                    acc += h * d[i * d_out + j];
+            }
+            gw[kk * d_out + j] += acc;
+            j++;
+        }
+        kk++;
+    }
+}
+
+void scalar_euclid_block(const float *g, size_t cols, const float *sq, size_t j,
+                         size_t n, float *out) {
+    scalar_dot4_rows(g + j * cols, g, cols, 0, n, out);
+    float sj = sq[j];
+    for (size_t i = 0; i < n; i++) {
+        float v = sq[i] + sj - 2.0f * out[i];
+        out[i] = v > 0.0f ? v : 0.0f;
+    }
+}
+
+void scalar_prod_block(const float *a, size_t h, const float *g, size_t c,
+                       const float *sq, size_t j, size_t n, float *out) {
+    const float *aj = a + j * h;
+    const float *gj = g + j * c;
+    float sj = sq[j];
+    float gbuf[PROD_BLOCK];
+    for (size_t lo = 0; lo < n; lo += PROD_BLOCK) {
+        size_t len = n - lo < PROD_BLOCK ? n - lo : PROD_BLOCK;
+        scalar_dot4_rows(gj, g, c, lo, lo + len, gbuf);
+        scalar_dot4_rows(aj, a, h, lo, lo + len, out + lo);
+        for (size_t k = 0; k < len; k++) {
+            float v = sq[lo + k] + sj - 2.0f * out[lo + k] * gbuf[k];
+            out[lo + k] = v > 0.0f ? v : 0.0f;
+        }
+    }
+}

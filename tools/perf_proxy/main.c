@@ -1,0 +1,298 @@
+/* Kernel perf-proxy driver.
+ *
+ * Benches every (kernel, ISA) pair at the exact shapes, names, warmup and
+ * rep counts benches/perf.rs and benches/scaling.rs use, then prints a
+ * CREST_BENCH_JSON-format array to stdout (the record fields match
+ * bench_util::BenchResult::to_json, threads pinned to 1). Usage:
+ *
+ *   ./perf_proxy [quick|full]
+ *
+ * `quick` caps reps at 5 and warmup at 1, exactly like CREST_BENCH_QUICK;
+ * run.sh runs both modes and assembles BENCH_perf.json.
+ *
+ * The AVX2 panels are only benched when the CPU reports AVX2 (mirroring
+ * kernel::available_isas).
+ */
+#define _POSIX_C_SOURCE 199309L
+#include "kern.h"
+
+#include <cpuid.h>
+#include <math.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* ------------------------------------------------------------- plumbing */
+
+static uint64_t lcg_state = 0x5eed1234abcd9876ULL;
+
+static float frand(void) {
+    lcg_state = lcg_state * 6364136223846793005ULL + 1442695040888963407ULL;
+    return (float)((lcg_state >> 33) / (double)(1ULL << 31)) * 4.0f - 2.0f;
+}
+
+static float *randv(size_t n) {
+    float *v = malloc(n * sizeof(float));
+    for (size_t i = 0; i < n; i++)
+        v[i] = frand();
+    return v;
+}
+
+static float *reluv(size_t n) {
+    float *v = randv(n);
+    for (size_t i = 0; i < n; i++)
+        if (v[i] < 0.0f)
+            v[i] = 0.0f;
+    return v;
+}
+
+static double now_secs(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec * 1e-9;
+}
+
+static int cmp_dbl(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+/* linear-interpolation percentile on a sorted copy (util::stats) */
+static double percentile(double *xs, size_t n, double p) {
+    double *v = malloc(n * sizeof(double));
+    memcpy(v, xs, n * sizeof(double));
+    qsort(v, n, sizeof(double), cmp_dbl);
+    double rank = p / 100.0 * (double)(n - 1);
+    size_t lo = (size_t)floor(rank), hi = (size_t)ceil(rank);
+    double r = lo == hi ? v[lo] : v[lo] + (rank - lo) * (v[hi] - v[lo]);
+    free(v);
+    return r;
+}
+
+static int first_record = 1;
+
+static void emit(const char *name, const char *isa, size_t reps, double *t,
+                 uint64_t flops, int quick) {
+    double mean = 0, mn = t[0];
+    for (size_t i = 0; i < reps; i++) {
+        mean += t[i];
+        if (t[i] < mn)
+            mn = t[i];
+    }
+    mean /= (double)reps;
+    double p50 = percentile(t, reps, 50.0);
+    double p95 = percentile(t, reps, 95.0);
+    double *dev = malloc(reps * sizeof(double));
+    for (size_t i = 0; i < reps; i++)
+        dev[i] = fabs(t[i] - p50);
+    double mad = percentile(dev, reps, 50.0);
+    free(dev);
+    printf("%s  {\"name\": \"%s\", \"reps\": %zu, \"threads\": 1, "
+           "\"mean_secs\": %.9g, \"min_secs\": %.9g, \"p50_secs\": %.9g, "
+           "\"p95_secs\": %.9g, \"mad_secs\": %.9g, \"quick\": %s, "
+           "\"isa\": \"%s\"",
+           first_record ? "[" : ",", name, reps, mean, mn, p50, p95, mad,
+           quick ? "true" : "false", isa);
+    if (flops > 0 && p50 > 0.0)
+        printf(", \"flops\": %llu, \"gflops_p50\": %.6g",
+               (unsigned long long)flops, (double)flops / p50 / 1e9);
+    printf("}\n");
+    first_record = 0;
+}
+
+static volatile float sink;
+
+#define BENCH(label, isaname, warm, nreps, flops, quickflag, stmt)             \
+    do {                                                                       \
+        size_t w_ = (quickflag) && (warm) > 1 ? 1 : (warm);                    \
+        size_t r_ = (quickflag) && (nreps) > 5 ? 5 : (nreps);                  \
+        for (size_t it_ = 0; it_ < w_; it_++) {                                \
+            stmt;                                                              \
+        }                                                                      \
+        double *t_ = malloc(r_ * sizeof(double));                              \
+        for (size_t it_ = 0; it_ < r_; it_++) {                                \
+            double t0_ = now_secs();                                           \
+            stmt;                                                              \
+            t_[it_] = now_secs() - t0_;                                        \
+        }                                                                      \
+        emit(label, isaname, r_, t_, flops, quickflag);                        \
+        free(t_);                                                              \
+    } while (0)
+
+static int has_avx2(void) {
+    unsigned eax, ebx, ecx, edx;
+    if (!__get_cpuid_count(7, 0, &eax, &ebx, &ecx, &edx))
+        return 0;
+    return (ebx >> 5) & 1; /* AVX2 feature bit */
+}
+
+/* ---------------------------------------------------------------- shapes */
+
+int main(int argc, char **argv) {
+    int quick = argc > 1 && strcmp(argv[1], "quick") == 0;
+    int avx2 = has_avx2();
+
+    /* perf.rs kernel section: fixed odd shapes, threads pinned to 1 */
+    const size_t m = 96, k = 67, n = 130;
+    const size_t bn = 768, bc = 10, bh = 66;
+    float *x = randv(m * k);
+    float *w = randv(k * n);
+    float *d = randv(m * n);
+    float *wt = randv(k * n);
+    float *act = reluv(m * k);
+    float *g = randv(bn * bc);
+    float *a = randv(bn * bh);
+    float *gsq = malloc(bn * sizeof(float));
+    float *asq = malloc(bn * sizeof(float));
+    for (size_t i = 0; i < bn; i++) {
+        gsq[i] = scalar_dot4(g + i * bc, g + i * bc, bc);
+        asq[i] = scalar_dot4(a + i * bh, a + i * bh, bh);
+    }
+    float *out = calloc(m * n, sizeof(float));
+    float *outk = calloc(m * k, sizeof(float));
+    float *gw = calloc(k * n, sizeof(float));
+    float *db = calloc(bn, sizeof(float));
+    uint64_t mmf = 2ULL * m * k * n;
+    char name[128];
+
+    for (int pass = 0; pass < 2; pass++) {
+        const char *isa = pass == 0 ? "scalar" : "avx2";
+        if (pass == 1 && !avx2)
+            break;
+        snprintf(name, sizeof name, "kernel add_matmul m=%zu k=%zu n=%zu isa=%s", m, k, n, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, mmf, quick, scalar_matmul_panel(out, m, x, k, w, n));
+        else
+            BENCH(name, isa, 3, 20, mmf, quick, avx2_matmul_panel(out, m, x, k, w, n));
+        snprintf(name, sizeof name, "kernel add_matmul_nt m=%zu k=%zu n=%zu isa=%s", m, k, n, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, mmf, quick, scalar_nt_panel(outk, m, k, d, wt, n, NULL));
+        else
+            BENCH(name, isa, 3, 20, mmf, quick, avx2_nt_panel(outk, m, k, d, wt, n, NULL));
+        snprintf(name, sizeof name, "kernel add_matmul_nt_masked m=%zu k=%zu n=%zu isa=%s", m, k, n, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, mmf, quick, scalar_nt_panel(outk, m, k, d, wt, n, act));
+        else
+            BENCH(name, isa, 3, 20, mmf, quick, avx2_nt_panel(outk, m, k, d, wt, n, act));
+        snprintf(name, sizeof name, "kernel accum_wgrad m=%zu k=%zu n=%zu isa=%s", m, k, n, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, mmf, quick, scalar_wgrad_panel(gw, k, x, m, k, d, n));
+        else
+            BENCH(name, isa, 3, 20, mmf, quick, avx2_wgrad_panel(gw, k, x, m, k, d, n));
+        snprintf(name, sizeof name, "kernel dot4_rows n=%zu d=%zu isa=%s", bn, bh, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, 2ULL * bn * bh, quick, scalar_dot4_rows(a, a, bh, 0, bn, db));
+        else
+            BENCH(name, isa, 3, 20, 2ULL * bn * bh, quick, avx2_dot4_rows(a, a, bh, 0, bn, db));
+        snprintf(name, sizeof name, "kernel euclid_block n=%zu c=%zu isa=%s", bn, bc, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, (uint64_t)(bn * (2 * bc + 4)), quick, scalar_euclid_block(g, bc, gsq, 0, bn, db));
+        else
+            BENCH(name, isa, 3, 20, (uint64_t)(bn * (2 * bc + 4)), quick, avx2_euclid_block(g, bc, gsq, 0, bn, db));
+        snprintf(name, sizeof name, "kernel prod_block n=%zu c=%zu h=%zu isa=%s", bn, bc, bh, isa);
+        if (pass == 0)
+            BENCH(name, isa, 3, 20, (uint64_t)(bn * (2 * (bc + bh) + 6)), quick, scalar_prod_block(a, bh, g, bc, asq, 0, bn, db));
+        else
+            BENCH(name, isa, 3, 20, (uint64_t)(bn * (2 * (bc + bh) + 6)), quick, avx2_prod_block(a, bh, g, bc, asq, 0, bn, db));
+        sink = out[0] + outk[0] + gw[0] + db[0];
+    }
+
+    /* scaling.rs SIMD section, t=1 row of the thread sweep */
+    {
+        const size_t sm = 512, sk = 256, sn = 256;
+        float *sx = randv(sm * sk);
+        float *sw = randv(sk * sn);
+        float *so = calloc(sm * sn, sizeof(float));
+        uint64_t sf = 2ULL * sm * sk * sn;
+        size_t sreps = quick ? 5 : 10;
+        snprintf(name, sizeof name, "add_matmul m=%zu k=%zu n=%zu isa=scalar t=1", sm, sk, sn);
+        BENCH(name, "scalar", 2, sreps, sf, quick, scalar_matmul_panel(so, sm, sx, sk, sw, sn));
+        if (avx2) {
+            snprintf(name, sizeof name, "add_matmul m=%zu k=%zu n=%zu isa=avx2 t=1", sm, sk, sn);
+            BENCH(name, "avx2", 2, sreps, sf, quick, avx2_matmul_panel(so, sm, sx, sk, sw, sn));
+        }
+        sink = so[0];
+        free(sx);
+        free(sw);
+        free(so);
+    }
+
+    /* perf.rs gain scans: the dense O(n²·d) seeding pass over the prod and
+     * euclid metrics (quick n=1024, full n=2048), threads pinned to 1 */
+    {
+        const size_t gn = quick ? 1024 : 2048, gc = 10, gh = 64;
+        float *gg = randv(gn * gc);
+        float *ga = randv(gn * gh);
+        float *ggsq = malloc(gn * sizeof(float));
+        float *gasq = malloc(gn * sizeof(float));
+        float *mind = malloc(gn * sizeof(float));
+        float *row = malloc(gn * sizeof(float));
+        double *gain = malloc(gn * sizeof(double));
+        for (size_t i = 0; i < gn; i++) {
+            ggsq[i] = scalar_dot4(gg + i * gc, gg + i * gc, gc);
+            gasq[i] = scalar_dot4(ga + i * gh, ga + i * gh, gh) * ggsq[i];
+        }
+        scalar_euclid_block(gg, gc, ggsq, 0, gn, mind);
+        uint64_t ef = (uint64_t)gn * gn * (2 * gc + 4);
+        uint64_t pf = (uint64_t)gn * gn * (2 * (gc + gh) + 6);
+        snprintf(name, sizeof name, "gain scan euclid n=%zu c=%zu", gn, gc);
+        BENCH(name, avx2 ? "avx2" : "scalar", 1, 8, ef, quick, {
+            for (size_t j = 0; j < gn; j++) {
+                if (avx2)
+                    avx2_euclid_block(gg, gc, ggsq, j, gn, row);
+                else
+                    scalar_euclid_block(gg, gc, ggsq, j, gn, row);
+                double s = 0;
+                for (size_t i = 0; i < gn; i++) {
+                    float v = mind[i] - row[i];
+                    if (v > 0.0f)
+                        s += v;
+                }
+                gain[j] = s;
+            }
+        });
+        scalar_prod_block(ga, gh, gg, gc, gasq, 0, gn, mind);
+        snprintf(name, sizeof name, "gain scan prod n=%zu h=%zu c=%zu", gn, gh, gc);
+        BENCH(name, avx2 ? "avx2" : "scalar", 1, 8, pf, quick, {
+            for (size_t j = 0; j < gn; j++) {
+                if (avx2)
+                    avx2_prod_block(ga, gh, gg, gc, gasq, j, gn, row);
+                else
+                    scalar_prod_block(ga, gh, gg, gc, gasq, j, gn, row);
+                double s = 0;
+                for (size_t i = 0; i < gn; i++) {
+                    float v = mind[i] - row[i];
+                    if (v > 0.0f)
+                        s += v;
+                }
+                gain[j] = s;
+            }
+        });
+        sink = (float)gain[0] + row[0];
+        free(gg);
+        free(ga);
+        free(ggsq);
+        free(gasq);
+        free(mind);
+        free(row);
+        free(gain);
+    }
+
+    printf("]\n");
+    free(x);
+    free(w);
+    free(d);
+    free(wt);
+    free(act);
+    free(g);
+    free(a);
+    free(gsq);
+    free(asq);
+    free(out);
+    free(outk);
+    free(gw);
+    free(db);
+    return 0;
+}

@@ -1,0 +1,27 @@
+#!/bin/sh
+# Build and run the kernel perf proxy in both quick and full modes and
+# assemble the merged record array (printed to stdout; redirect into
+# BENCH_perf.json to commit a baseline). See README.md for what the proxy
+# does and does not stand in for.
+set -e
+cd "$(dirname "$0")"
+
+CC="${CC:-gcc}"
+# scalar TU: -O3, default x86-64 target (SSE2 autovec ceiling, like the
+# rustc release build of the scalar path)
+$CC -O3 -c kern_scalar.c -o kern_scalar.o
+# avx2 TU: the intrinsics pin the codegen; -mno-fma forbids mul+add
+# contraction, matching the Rust AVX2 layer's no-FMA rule
+$CC -O2 -mavx2 -mno-fma -c kern_avx2.c -o kern_avx2.o
+$CC -O2 -c main.c -o main.o
+$CC main.o kern_scalar.o kern_avx2.o -lm -o perf_proxy
+
+./perf_proxy quick > records_quick.json
+./perf_proxy full > records_full.json
+
+# merge the two arrays into one trajectory
+python3 - <<'EOF'
+import json
+recs = json.load(open('records_quick.json')) + json.load(open('records_full.json'))
+print(json.dumps(recs, indent=1))
+EOF
