@@ -21,11 +21,14 @@ pub struct CrestOptions {
     pub smooth: bool,
     /// Drop learned examples (false = w/o-excluding ablation).
     pub exclude: bool,
+    /// Force unit γ weights in the greedy-per-batch ablation (isolates
+    /// subset choice from the facility-location weighting).
+    pub unit_gamma: bool,
 }
 
 impl Default for CrestOptions {
     fn default() -> Self {
-        CrestOptions { second_order: true, smooth: true, exclude: true }
+        CrestOptions { second_order: true, smooth: true, exclude: true, unit_gamma: false }
     }
 }
 
@@ -48,6 +51,7 @@ const CONFIG_KEYS: &[&str] = &[
     "second_order",
     "smooth",
     "exclude",
+    "unit_gamma",
     "compiled_selection",
     "selection_threads",
     "selection",
@@ -186,6 +190,7 @@ impl ExperimentConfig {
             .set("second_order", self.crest.second_order)
             .set("smooth", self.crest.smooth)
             .set("exclude", self.crest.exclude)
+            .set("unit_gamma", self.crest.unit_gamma)
             .set("compiled_selection", self.compiled_selection)
             .set("selection_threads", self.selection_threads)
             .set("selection", self.selection.to_string().as_str())
@@ -248,6 +253,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = j.get("exclude") {
             self.crest.exclude = v.as_bool()?;
+        }
+        if let Some(v) = j.get("unit_gamma") {
+            self.crest.unit_gamma = v.as_bool()?;
         }
         if let Some(v) = j.get("compiled_selection") {
             self.compiled_selection = v.as_bool()?;
@@ -365,7 +373,8 @@ mod tests {
         c.h_mult = 8.0;
         c.b_mult = 3;
         c.t2 = 11;
-        c.crest = CrestOptions { second_order: false, smooth: false, exclude: false };
+        c.crest =
+            CrestOptions { second_order: false, smooth: false, exclude: false, unit_gamma: true };
         c.compiled_selection = true;
         c.selection_threads = 2;
         c.selection = SelectionStrategy::Clustered { k: 64 };
@@ -388,6 +397,7 @@ mod tests {
         assert!(!restored.crest.second_order);
         assert!(!restored.crest.smooth);
         assert!(!restored.crest.exclude);
+        assert!(restored.crest.unit_gamma);
         assert!(restored.compiled_selection);
         assert_eq!(restored.selection_threads, 2);
         assert_eq!(restored.selection, SelectionStrategy::Clustered { k: 64 });

@@ -106,6 +106,7 @@ fn make_greedy_per_batch<'a>(ctx: SourceCtx<'a>, rng: Rng) -> Result<Box<dyn Bat
         rt: ctx.rt,
         train: ctx.train,
         selection: ctx.cfg.selection,
+        unit_gamma: ctx.cfg.crest.unit_gamma,
         rng,
         n_updates: 0,
     }))
@@ -464,6 +465,9 @@ struct GreedyPerBatchSource<'a> {
     train: &'a Dataset,
     /// exact vs. approximate traversal of the per-batch pool
     selection: SelectionStrategy,
+    /// force γ = 1 (config `unit_gamma`: isolates subset choice from the
+    /// facility-location weighting in the Fig. 3 ablation)
+    unit_gamma: bool,
     rng: Rng,
     n_updates: usize,
 }
@@ -483,7 +487,7 @@ impl<'a> BatchSource for GreedyPerBatchSource<'a> {
         let (gl, al, _) = self.rt.grad_embed(&state.params, &x, &y)?;
         let sel = strategy::facility_select(self.selection, &al, &gl, &y, m);
         let mut mb = MiniBatchCoreset::from_selection(&sel, &pool, m);
-        if std::env::var("CREST_UNIT_GAMMA").is_ok() {
+        if self.unit_gamma {
             mb.gamma = vec![1.0; mb.gamma.len()];
         }
         self.n_updates += 1;

@@ -110,11 +110,16 @@ pub fn gradmatch_select(gl_full: &MatF32, k: usize, rng: &mut Rng) -> Selection 
             }
         }
     }
-    // random augmentation to reach k (paper §3)
-    let mut in_set: std::collections::HashSet<usize> = picked.iter().copied().collect();
+    // random augmentation to reach k (paper §3); dense membership mask
+    // instead of a hash set so the loop is allocation- and hash-free
+    let mut in_set = vec![false; n];
+    for &j in &picked {
+        in_set[j] = true;
+    }
     while picked.len() < k {
         let j = rng.gen_range(n);
-        if in_set.insert(j) {
+        if !in_set[j] {
+            in_set[j] = true;
             picked.push(j);
             weights.push(1.0);
         }

@@ -48,6 +48,8 @@ impl<'a> LossTopKSource<'a> {
         state: &TrainState,
         timers: &mut PhaseTimers,
     ) -> Result<()> {
+        // lint:allow(DET-CLOCK) phase timer: feeds only the wall-clock
+        // report fields that deterministic_json excludes
         let t0 = Instant::now();
         let ev = evaluate(self.rt, &state.params, self.train)?;
         // the per-example losses as a one-column ground set: under `Exact`

@@ -138,9 +138,11 @@ mod mm {
         len: usize,
     }
 
-    // The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
-    // lifetime, so sharing the pointer across threads is sound.
+    // SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) for its
+    // whole lifetime, so sharing the pointer across threads is sound.
     unsafe impl Send for Mapping {}
+    // SAFETY: same immutability argument as Send — readers never observe
+    // a write because none exist.
     unsafe impl Sync for Mapping {}
 
     impl Mapping {
@@ -150,6 +152,8 @@ mod mm {
             if len == 0 {
                 return None;
             }
+            // SAFETY: plain syscall with a live fd; the kernel validates
+            // len/fd and we check the return value before trusting it
             let p = unsafe {
                 mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
             };
@@ -161,12 +165,16 @@ mod mm {
 
         /// The mapped bytes.
         pub fn bytes(&self) -> &[u8] {
+            // SAFETY: ptr..ptr+len is a live PROT_READ mapping for the
+            // whole &self lifetime (unmapped only in Drop)
             unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
         }
     }
 
     impl Drop for Mapping {
         fn drop(&mut self) {
+            // SAFETY: ptr/len came from a successful mmap and are
+            // unmapped exactly once, here
             unsafe {
                 munmap(self.ptr as *mut c_void, self.len);
             }

@@ -975,9 +975,14 @@ mod avx2 {
     /// scalar version's four lanes.
     pub(super) fn dot4(a: &[f32], b: &[f32]) -> f32 {
         assert_avx2();
+        // SAFETY: AVX2 support was just asserted — the impl's only
+        // precondition beyond safe-slice access
         unsafe { dot4_impl(a, b) }
     }
 
+    // SAFETY: requires AVX2 (wrappers assert it). Vector loads stay in
+    // bounds: k < c ≤ min(a.len(), b.len()) rounded down to a multiple
+    // of the 4-lane width.
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_impl(a: &[f32], b: &[f32]) -> f32 {
         unsafe {
@@ -1002,6 +1007,8 @@ mod avx2 {
     }
 
     /// Duplicate a 128-bit row chunk into both halves of a ymm register.
+    // SAFETY: requires AVX2 (reached only from avx2-enabled callers);
+    // pure register shuffle, touches no memory
     #[inline]
     #[target_feature(enable = "avx2")]
     unsafe fn dup128(v: __m128) -> __m256 {
@@ -1012,6 +1019,9 @@ mod avx2 {
     /// independent dot products (two per register, one per 128-bit half);
     /// each half accumulates lanes `k ≡ l (mod 4)` in ascending `k`,
     /// exactly the scalar lane assignment.
+    // SAFETY: requires AVX2 and b0..b3 at least a.len() long (callers
+    // pass equal-length rows of one matrix); loads stop at the 4-lane
+    // floor of a.len()
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_1x4_impl(
         a: &[f32],
@@ -1060,9 +1070,12 @@ mod avx2 {
     /// AVX2 [`super::dot4_rows`].
     pub(super) fn dot4_rows(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
         assert_avx2();
+        // SAFETY: AVX2 support was just asserted
         unsafe { dot4_rows_impl(a, m, range, out) }
     }
 
+    // SAFETY: requires AVX2; delegates to the dot kernels with rows of
+    // one matrix (equal lengths by construction)
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_rows_impl(a: &[f32], m: &MatF32, range: Range<usize>, out: &mut [f32]) {
         unsafe {
@@ -1084,6 +1097,8 @@ mod avx2 {
 
     /// AVX2 [`super::dot4_2x2`]: `acc01 = [a0·b0 | a0·b1]`,
     /// `acc23 = [a1·b0 | a1·b1]`, scalar lane fold and tail.
+    // SAFETY: requires AVX2 and a1/b0/b1 at least a0.len() long (callers
+    // pass equal-length matrix rows); loads stop at the 4-lane floor
     #[target_feature(enable = "avx2")]
     unsafe fn dot4_2x2_impl(a0: &[f32], a1: &[f32], b0: &[f32], b1: &[f32]) -> [f32; 4] {
         unsafe {
@@ -1136,9 +1151,14 @@ mod avx2 {
         d_out: usize,
     ) {
         assert_avx2();
+        // SAFETY: AVX2 support was just asserted
         unsafe { matmul_panel_impl(rows_out, row0, x, w, d_out) }
     }
 
+    // SAFETY: requires AVX2 and the panel layout invariants
+    // (rows_out.len() = rows·d_out, w.len() = d_in·d_out): every pointer
+    // offset k·d_out + j keeps j + NR ≤ d_out, so the 8-lane loads and
+    // stores stay inside their slices
     #[target_feature(enable = "avx2")]
     unsafe fn matmul_panel_impl(
         rows_out: &mut [f32],
@@ -1236,9 +1256,13 @@ mod avx2 {
         act: Option<&MatF32>,
     ) {
         assert_avx2();
+        // SAFETY: AVX2 support was just asserted
         unsafe { nt_panel_impl(rows_out, row0, d_in, d, w, d_out, act) }
     }
 
+    // SAFETY: requires AVX2; memory access happens only through safe
+    // slice indexing and the dot kernels, whose equal-length row
+    // precondition the `w[j·d_out..(j+1)·d_out]` windows satisfy
     #[allow(clippy::too_many_arguments)]
     #[target_feature(enable = "avx2")]
     unsafe fn nt_panel_impl(
@@ -1328,9 +1352,13 @@ mod avx2 {
         d_out: usize,
     ) {
         assert_avx2();
+        // SAFETY: AVX2 support was just asserted
         unsafe { wgrad_panel_impl(gw_rows, k0, input, d, d_out) }
     }
 
+    // SAFETY: requires AVX2 and the panel layout invariants
+    // (gw_rows.len() = kn·d_out, d rows of length d_out): the 8-lane
+    // loads and stores at offset j keep j + NR ≤ d_out
     #[target_feature(enable = "avx2")]
     unsafe fn wgrad_panel_impl(
         gw_rows: &mut [f32],

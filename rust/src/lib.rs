@@ -38,6 +38,7 @@ pub mod coreset;
 pub mod data;
 pub mod exclusion;
 pub mod kernel;
+pub mod lint;
 pub mod metrics;
 pub mod model;
 pub mod opt;

@@ -1,0 +1,414 @@
+//! A minimal hand-rolled Rust lexer for the contract checker.
+//!
+//! The linter needs exactly four things a regex grep cannot provide:
+//! tokens with **comments and string literals stripped** (so `fmadd` in a
+//! doc comment is not a finding), **string literal contents** (so
+//! `CREST_*` env names can be checked against the README), **comment
+//! text with position** (so `// SAFETY:` and `// lint:allow(..)`
+//! directives can be attached to code lines), and **line numbers** for
+//! diagnostics. It does not parse — rules work on the token stream —
+//! and it tolerates invalid Rust (fixtures need not compile).
+//!
+//! Handled: line comments, nested block comments, normal/raw/byte string
+//! literals, char literals vs. lifetimes, identifiers, numbers, and
+//! punctuation (`::` is fused into one token because the rules match
+//! qualified paths).
+
+/// Token class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric literal (lexed loosely; the rules never read the value).
+    Num,
+    /// String literal; `text` holds the raw contents between the quotes.
+    Str,
+    /// Punctuation, one char each except the fused `::`.
+    Punct,
+}
+
+/// One token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// Token class.
+    pub kind: Kind,
+    /// Token text (for [`Kind::Str`], the contents between the quotes).
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: usize,
+}
+
+/// One comment (line or block) with its span and position context.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: usize,
+    /// 1-based line the comment ends on (same as `line` for `//`).
+    pub end_line: usize,
+    /// Comment text without the `//` / `/* */` markers.
+    pub text: String,
+    /// True when code tokens precede the comment on its starting line.
+    pub trailing: bool,
+}
+
+/// Lexer output: the token stream plus the stripped comments.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Tokens in source order, comments and literals stripped.
+    pub toks: Vec<Tok>,
+    /// Comments in source order.
+    pub comments: Vec<Comment>,
+    /// Total number of source lines.
+    pub n_lines: usize,
+}
+
+impl Lexed {
+    /// True when any token starts on `line`.
+    pub fn line_has_code(&self, line: usize) -> bool {
+        self.toks.iter().any(|t| t.line == line)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Lexer {
+    cs: Vec<char>,
+    i: usize,
+    line: usize,
+    line_has_tok: bool,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.cs.get(self.i).copied();
+        if let Some(ch) = c {
+            self.i += 1;
+            if ch == '\n' {
+                self.line += 1;
+                self.line_has_tok = false;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, kind: Kind, text: String, line: usize) {
+        self.line_has_tok = true;
+        self.out.toks.push(Tok { kind, text, line });
+    }
+
+    fn line_comment(&mut self) {
+        let start = self.line;
+        let trailing = self.line_has_tok;
+        let mut text = String::new();
+        self.i += 2; // the `//`
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { line: start, end_line: start, text, trailing });
+    }
+
+    fn block_comment(&mut self) {
+        let start = self.line;
+        let trailing = self.line_has_tok;
+        let mut text = String::new();
+        self.i += 2; // the `/*`
+        let mut depth = 1usize;
+        while depth > 0 {
+            match (self.peek(0), self.peek(1)) {
+                (Some('/'), Some('*')) => {
+                    depth += 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some('*'), Some('/')) => {
+                    depth -= 1;
+                    self.bump();
+                    self.bump();
+                }
+                (Some(_), _) => {
+                    text.push(self.peek(0).unwrap());
+                    self.bump();
+                }
+                (None, _) => break,
+            }
+        }
+        let end = self.line;
+        self.out.comments.push(Comment { line: start, end_line: end, text, trailing });
+    }
+
+    /// Consume a normal string body starting after the opening quote.
+    fn string_body(&mut self, line: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            match c {
+                '\\' => {
+                    // keep escapes verbatim — the rules only scan for
+                    // CREST_* names, which contain no escapes
+                    text.push(c);
+                    self.bump();
+                    if let Some(e) = self.peek(0) {
+                        text.push(e);
+                        self.bump();
+                    }
+                }
+                '"' => {
+                    self.bump();
+                    break;
+                }
+                _ => {
+                    text.push(c);
+                    self.bump();
+                }
+            }
+        }
+        self.push(Kind::Str, text, line);
+    }
+
+    /// Consume a raw string starting at the first `#` or `"` after `r`/`br`.
+    fn raw_string_body(&mut self, line: usize) {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        if self.peek(0) != Some('"') {
+            return; // not actually a raw string; nothing sensible to emit
+        }
+        self.bump();
+        let mut text = String::new();
+        'outer: while let Some(c) = self.peek(0) {
+            if c == '"' {
+                // candidate closer: `"` followed by `hashes` hashes
+                for k in 0..hashes {
+                    if self.peek(1 + k) != Some('#') {
+                        text.push(c);
+                        self.bump();
+                        continue 'outer;
+                    }
+                }
+                self.bump();
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(Kind::Str, text, line);
+    }
+
+    /// `'` — char literal or lifetime. Consumes either; lifetimes emit no
+    /// token (the rules never match on lifetime names).
+    fn quote(&mut self) {
+        self.bump(); // the `'`
+        match self.peek(0) {
+            Some('\\') => {
+                // escape char literal: consume to the closing quote
+                self.bump();
+                self.bump(); // the escaped char (enough for \n, \', \\, \0)
+                while let Some(c) = self.peek(0) {
+                    let done = c == '\'';
+                    self.bump();
+                    if done {
+                        break;
+                    }
+                }
+            }
+            Some(c) if self.peek(1) == Some('\'') => {
+                // one-char literal 'x' (covers idents, digits and puncts)
+                let _ = c;
+                self.bump();
+                self.bump();
+            }
+            Some(c) if is_ident_start(c) => {
+                // lifetime: consume the identifier, no closing quote
+                while let Some(c2) = self.peek(0) {
+                    if !is_ident_cont(c2) {
+                        break;
+                    }
+                    self.bump();
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            match c {
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => {
+                    let line = self.line;
+                    self.bump();
+                    self.string_body(line);
+                }
+                '\'' => self.quote(),
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                c if is_ident_start(c) => {
+                    let line = self.line;
+                    let mut id = String::new();
+                    while let Some(c2) = self.peek(0) {
+                        if !is_ident_cont(c2) {
+                            break;
+                        }
+                        id.push(c2);
+                        self.bump();
+                    }
+                    // string prefixes: r"..", r#".."#, b"..", br".."
+                    let prefix = matches!(id.as_str(), "r" | "b" | "br");
+                    match self.peek(0) {
+                        Some('"') if prefix => {
+                            if id == "b" {
+                                self.bump();
+                                self.string_body(line);
+                            } else {
+                                self.raw_string_body(line);
+                            }
+                        }
+                        Some('#') if prefix && id != "b" => self.raw_string_body(line),
+                        Some('\'') if id == "b" => self.quote(),
+                        _ => self.push(Kind::Ident, id, line),
+                    }
+                }
+                c if c.is_ascii_digit() => {
+                    let line = self.line;
+                    let mut num = String::new();
+                    while let Some(c2) = self.peek(0) {
+                        // a `.` continues the number only before a digit, so
+                        // `x.0.method()` keeps `method` as its own identifier
+                        let frac = c2 == '.' && self.peek(1).is_some_and(|d| d.is_ascii_digit());
+                        if !(c2.is_alphanumeric() || c2 == '_' || frac) {
+                            break;
+                        }
+                        num.push(c2);
+                        self.bump();
+                    }
+                    self.push(Kind::Num, num, line);
+                }
+                ':' if self.peek(1) == Some(':') => {
+                    let line = self.line;
+                    self.bump();
+                    self.bump();
+                    self.push(Kind::Punct, "::".to_string(), line);
+                }
+                c => {
+                    let line = self.line;
+                    self.bump();
+                    self.push(Kind::Punct, c.to_string(), line);
+                }
+            }
+        }
+        self.out.n_lines = self.line;
+        self.out
+    }
+}
+
+/// Lex `src` into tokens and comments.
+pub fn lex(src: &str) -> Lexed {
+    Lexer {
+        cs: src.chars().collect(),
+        i: 0,
+        line: 1,
+        line_has_tok: false,
+        out: Lexed::default(),
+    }
+    .run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_stripped_but_kept() {
+        let lx = lex("let a = 1; // trailing fmadd\n/* block\nfmadd */ let b = 2;\n");
+        assert!(lx.toks.iter().all(|t| t.text != "fmadd"));
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].trailing);
+        assert_eq!(lx.comments[0].text.trim(), "trailing fmadd");
+        assert!(!lx.comments[1].trailing);
+        assert_eq!(lx.comments[1].end_line, 3);
+    }
+
+    #[test]
+    fn strings_capture_contents() {
+        let lx = lex(r#"let v = std::env::var("CREST_THREADS");"#);
+        let strs: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == Kind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs, vec!["CREST_THREADS"]);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let lx = lex("let a = r#\"CREST_A \"quoted\" tail\"#; let b = b\"CREST_B\"; let r = r;");
+        let strs: Vec<_> =
+            lx.toks.iter().filter(|t| t.kind == Kind::Str).map(|t| t.text.clone()).collect();
+        assert_eq!(strs.len(), 2);
+        assert!(strs[0].contains("CREST_A"));
+        assert!(strs[1].contains("CREST_B"));
+        // a bare `r` identifier survives as an identifier
+        assert!(lx.toks.iter().any(|t| t.kind == Kind::Ident && t.text == "r"));
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ids = idents("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(ids.contains(&"str".to_string()));
+        // neither the lifetime name nor the char literal become idents
+        // that the rules could mistake for code identifiers
+        assert!(!ids.contains(&"x".to_string()) || ids.iter().filter(|s| *s == "x").count() == 1);
+        let lx = lex("let c = '\\n'; let l: &'static str = \"s\";");
+        assert!(lx.toks.iter().any(|t| t.kind == Kind::Str && t.text == "s"));
+    }
+
+    #[test]
+    fn qualified_path_tokens() {
+        let lx = lex("std::env::var(\"X\")");
+        let texts: Vec<_> = lx.toks.iter().map(|t| t.text.clone()).collect();
+        assert_eq!(texts, vec!["std", "::", "env", "::", "var", "(", "X", ")"]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let lx = lex("a\nb\n  c d\n");
+        let lines: Vec<_> = lx.toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 3, 3]);
+        assert_eq!(lx.n_lines, 4);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lx = lex("/* outer /* inner */ still comment */ code");
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.toks.len(), 1);
+        assert_eq!(lx.toks[0].text, "code");
+    }
+}

@@ -1,0 +1,225 @@
+//! `crest lint` — a dependency-free contract checker over the crate's
+//! own sources.
+//!
+//! The determinism guarantees the sweep/resume, mmap-vs-mem and
+//! SIMD-vs-scalar gates pin are *bitwise*, and most of the ways to break
+//! them (a `HashMap` fold in selection math, a fused multiply-add in a
+//! kernel, a stray `env::var` read) compile cleanly and pass any finite
+//! test set. This module turns those prose contracts (`CONTRACTS.md`)
+//! into machine-checked rules: a small hand-rolled lexer ([`lex`]) feeds
+//! token-level checks ([`rules`]), and `crest lint` exits nonzero on any
+//! finding, so CI holds the line.
+//!
+//! Findings render as `file:line: [RULE-ID] message`. A justified
+//! exception is written in-source as `// lint:allow(RULE-ID) reason`
+//! (trailing on the offending line, or a standalone comment directly
+//! above it); directives without a real reason are themselves findings.
+
+pub mod lex;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One lint finding.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Repo-relative file path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Rule ID, e.g. `DET-HASH`.
+    pub rule: &'static str,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Rule metadata, for `crest lint --list-rules` and the docs tests.
+#[derive(Debug)]
+pub struct RuleInfo {
+    /// Stable rule ID as it appears in diagnostics and `lint:allow`.
+    pub id: &'static str,
+    /// One-line summary of the contract the rule enforces.
+    pub summary: &'static str,
+}
+
+/// Every rule the checker knows, in diagnostic-ID order. `CONTRACTS.md`
+/// documents each one; a test asserts the two lists agree.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "DET-CLOCK",
+        summary: "no Instant/SystemTime in modules feeding deterministic_json",
+    },
+    RuleInfo {
+        id: "DET-FMA",
+        summary: "no fused multiply-add in the kernel layer (bitwise SIMD-vs-scalar contract)",
+    },
+    RuleInfo {
+        id: "DET-HASH",
+        summary: "no HashMap/HashSet in determinism-critical modules",
+    },
+    RuleInfo {
+        id: "ENV-HYGIENE",
+        summary: "env reads only in runtime_config.rs + registered readers; CREST_* documented",
+    },
+    RuleInfo {
+        id: "ISA-DISPATCH",
+        summary: "#[target_feature] bodies private to kernel.rs behind the KernelIsa dispatch",
+    },
+    RuleInfo {
+        id: "LINT-ALLOW",
+        summary: "every lint:allow names a real rule, attaches to code, and carries a reason",
+    },
+    RuleInfo {
+        id: "UNSAFE-SCOPE",
+        summary: "unsafe only in registered modules, each block SAFETY-justified",
+    },
+];
+
+/// Rule IDs a `lint:allow` directive may name (everything except the
+/// meta-rule, which must not be suppressible).
+pub(crate) fn allowable_rules() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).filter(|id| *id != "LINT-ALLOW").collect()
+}
+
+/// The contract checker. Holds the README text so ENV-HYGIENE can check
+/// `CREST_*` literals against the documented env table.
+#[derive(Debug)]
+pub struct Linter {
+    readme: String,
+}
+
+impl Linter {
+    /// Checker with an explicit README text (fixture tests use this to
+    /// control the documented-variable set).
+    pub fn with_readme(readme: &str) -> Linter {
+        Linter { readme: readme.to_string() }
+    }
+
+    /// Checker for the repo at `root`, loading `README.md` from it.
+    pub fn for_tree(root: &Path) -> Result<Linter> {
+        let path = root.join("README.md");
+        let readme = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} for the env table", path.display()))?;
+        Ok(Linter { readme })
+    }
+
+    /// Run every rule over one source file. `rel` is the repo-relative
+    /// path with forward slashes (e.g. `rust/src/kernel.rs`); the rules
+    /// use it to decide which module lists and registries apply.
+    pub fn lint_file(&self, rel: &str, src: &str) -> Vec<Diagnostic> {
+        let lx = lex::lex(src);
+        let cx = rules::FileCx::new(rel, &lx);
+        let allowable = allowable_rules();
+        let mut out = Vec::new();
+        rules::det_hash(&cx, &allowable, &mut out);
+        rules::det_clock(&cx, &allowable, &mut out);
+        rules::det_fma(&cx, &allowable, &mut out);
+        rules::unsafe_scope(&cx, &allowable, &mut out);
+        rules::env_hygiene(&cx, &self.readme, &allowable, &mut out);
+        rules::isa_dispatch(&cx, &allowable, &mut out);
+        rules::lint_allow(&cx, &allowable, &mut out);
+        out.sort_by(|a, b| (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message)));
+        out
+    }
+}
+
+/// Source roots the tree walk covers, relative to the repo root.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Directory names excluded from the walk: the golden fixtures contain
+/// deliberate violations.
+const SKIP_DIRS: &[&str] = &["lint_fixtures"];
+
+/// Lint every `.rs` file under [`SCAN_ROOTS`] of the repo at `root`.
+/// Files are visited in sorted order, so output is deterministic.
+pub fn lint_tree(root: &Path) -> Result<Vec<Diagnostic>> {
+    let linter = Linter::for_tree(root)?;
+    let mut files: Vec<PathBuf> = Vec::new();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    let mut out = Vec::new();
+    for path in files {
+        let rel: Vec<String> = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy().into_owned())
+            .collect();
+        let rel = rel.join("/");
+        let src = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} for lint", path.display()))?;
+        out.extend(linter.lint_file(&rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("walking {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        let name = path.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        if path.is_dir() {
+            if !SKIP_DIRS.contains(&name.as_str()) {
+                collect_rs(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostic_render_format() {
+        let d = Diagnostic {
+            file: "rust/src/kernel.rs".to_string(),
+            line: 7,
+            rule: "DET-FMA",
+            message: "msg".to_string(),
+        };
+        assert_eq!(d.to_string(), "rust/src/kernel.rs:7: [DET-FMA] msg");
+    }
+
+    #[test]
+    fn rules_table_is_sorted_and_complete() {
+        let ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "RULES must stay in ID order");
+        assert!(ids.contains(&"LINT-ALLOW"));
+        assert_eq!(allowable_rules().len(), RULES.len() - 1);
+    }
+
+    #[test]
+    fn lint_file_sorts_by_line() {
+        let linter = Linter::with_readme("");
+        let src = "fn g() { let b = std::time::Instant::now(); }\n\
+                   fn f() { let m = std::collections::HashMap::<u32, u32>::new(); }\n";
+        let d = linter.lint_file("rust/src/coreset/x.rs", src);
+        assert_eq!(d.len(), 2);
+        assert!(d[0].line < d[1].line);
+        assert_eq!(d[0].rule, "DET-CLOCK");
+        assert_eq!(d[1].rule, "DET-HASH");
+    }
+}

@@ -1,0 +1,795 @@
+//! The contract rules: module lists, registered exceptions, and the
+//! token-level checks behind each rule ID.
+//!
+//! Every rule is a *machine-checkable approximation* of a prose contract
+//! from `CONTRACTS.md` (rationale and precise scope live there). The
+//! approximations are deliberately conservative: they match type and
+//! function *names* in the token stream, so renaming-based evasion is
+//! possible but accidental violations — the only kind that happens in
+//! practice — are caught. Violations that are individually justified
+//! carry an in-source `// lint:allow(RULE-ID) reason` directive on or
+//! directly above the offending line; a directive without a written
+//! reason is itself a finding (`LINT-ALLOW`).
+
+use super::lex::{Kind, Lexed};
+use super::Diagnostic;
+
+/// Module prefixes (and exact files) whose selection math must stay a
+/// deterministic function of data and seed: no hash-order iteration.
+pub const DET_MODULES: &[&str] = &[
+    "rust/src/coreset/",
+    "rust/src/sweep/",
+    "rust/src/data/",
+    "rust/src/kernel.rs",
+    "rust/src/runtime/native.rs",
+];
+
+/// Modules whose outputs feed `deterministic_json`: no wall-clock reads.
+/// The coordinator's phase timers are exempt by scope — their output goes
+/// only to the wall-clock report fields that `deterministic_json` drops.
+pub const CLOCK_MODULES: &[&str] = &[
+    "rust/src/coreset/",
+    "rust/src/sweep/",
+    "rust/src/data/",
+    "rust/src/kernel.rs",
+    "rust/src/runtime/native.rs",
+    "rust/src/report.rs",
+];
+
+/// Files whose float kernels must keep multiply and add as separate
+/// instructions (the bitwise SIMD-vs-scalar contract forbids fused
+/// rounding).
+pub const FMA_MODULES: &[&str] = &["rust/src/kernel.rs", "rust/src/runtime/native.rs"];
+
+/// One registered `unsafe` scope: the only file+module pairs allowed to
+/// contain the `unsafe` keyword, each with the reason on record.
+#[derive(Debug)]
+pub struct UnsafeScope {
+    /// Repo-relative file allowed to contain `unsafe`.
+    pub file: &'static str,
+    /// The single module inside that file the blocks must live in.
+    pub module: &'static str,
+    /// Why this scope exists.
+    pub reason: &'static str,
+}
+
+/// The crate's registered `unsafe` scopes (mirrors the `Cargo.toml`
+/// `unsafe_code = "deny"` exceptions).
+pub const UNSAFE_SCOPES: &[UnsafeScope] = &[
+    UnsafeScope {
+        file: "rust/src/kernel.rs",
+        module: "avx2",
+        reason: "std::arch SIMD intrinsics behind the KernelIsa runtime dispatch",
+    },
+    UnsafeScope {
+        file: "rust/src/data/store.rs",
+        module: "mm",
+        reason: "raw mmap(2)/munmap(2) binding; the offline registry has no libc/memmap2",
+    },
+];
+
+/// One registered environment reader: a file allowed to call
+/// `std::env::var*` outside `runtime_config.rs`, with the reason on
+/// record.
+#[derive(Debug)]
+pub struct EnvReader {
+    /// Repo-relative file allowed to read the environment.
+    pub file: &'static str,
+    /// Why this reader is exempt from the consolidation.
+    pub reason: &'static str,
+}
+
+/// The registered environment readers. Everything else goes through
+/// `RuntimeConfig` so env is read in one typed, documented place.
+pub const ENV_READERS: &[EnvReader] = &[
+    EnvReader {
+        file: "rust/src/runtime_config.rs",
+        reason: "the consolidation point itself — the one place CREST_* knobs are read",
+    },
+    EnvReader {
+        file: "rust/src/util/logging.rs",
+        reason: "CREST_LOG at logger install; verbosity only, cannot affect computed results",
+    },
+    EnvReader {
+        file: "rust/src/bench_util/mod.rs",
+        reason: "bench-harness knobs (CREST_BENCH_*): workload size and trajectory output \
+                 for `cargo bench` runs; never consulted on library paths",
+    },
+    EnvReader {
+        file: "rust/src/bench_util/scenario.rs",
+        reason: "bench scenario sizing (CREST_BENCH_*, CREST_ARTIFACTS, CREST_SWEEP_CKPT); \
+                 never consulted on library paths",
+    },
+];
+
+const ENV_READS: &[&str] = &["var", "var_os", "vars", "vars_os"];
+const ENV_WRITES: &[&str] = &["set_var", "remove_var"];
+
+/// Parsed `// lint:allow(RULE-ID) reason` directive.
+#[derive(Debug)]
+struct Allow {
+    rule: String,
+    reason: String,
+    /// Line the directive suppresses (usize::MAX when unattached).
+    target: usize,
+    /// Line the directive itself sits on (for LINT-ALLOW findings).
+    line: usize,
+}
+
+impl Allow {
+    fn valid(&self, allowable: &[&str]) -> bool {
+        allowable.contains(&self.rule.as_str()) && reason_ok(&self.reason)
+    }
+}
+
+fn reason_ok(reason: &str) -> bool {
+    reason.chars().filter(|c| c.is_alphanumeric()).count() >= 3
+}
+
+/// Everything the rules need about one lexed file.
+pub(crate) struct FileCx<'a> {
+    rel: &'a str,
+    lx: &'a Lexed,
+    /// Per 1-based line: inside a `#[cfg(test)]` / `#[test]` region (or a
+    /// `rust/tests/` integration-test file, which is test code wholesale).
+    test_line: Vec<bool>,
+    /// Per token: part of a `#[...]` / `#![...]` attribute.
+    attr_tok: Vec<bool>,
+    /// Per token: part of a `use ...;` declaration.
+    use_tok: Vec<bool>,
+    allows: Vec<Allow>,
+}
+
+/// `(start, end)` inclusive token-index spans.
+type Span = (usize, usize);
+
+fn balance(toks: &[super::lex::Tok], open_idx: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.kind == Kind::Punct {
+            if t.text == open {
+                depth += 1;
+            } else if t.text == close {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+impl<'a> FileCx<'a> {
+    pub(crate) fn new(rel: &'a str, lx: &'a Lexed) -> FileCx<'a> {
+        let toks = &lx.toks;
+        let n = toks.len();
+        let mut attr_tok = vec![false; n];
+        let mut use_tok = vec![false; n];
+        let mut test_line = vec![false; lx.n_lines + 2];
+
+        // attribute spans, and which of them mark test regions
+        let mut attr_spans: Vec<(Span, bool)> = Vec::new();
+        let mut i = 0;
+        while i < n {
+            let punct = |k: usize, s: &str| {
+                toks.get(k).is_some_and(|t| t.kind == Kind::Punct && t.text == s)
+            };
+            if toks[i].kind == Kind::Punct && toks[i].text == "#" {
+                let open = if punct(i + 1, "[") {
+                    Some(i + 1)
+                } else if punct(i + 1, "!") && punct(i + 2, "[") {
+                    Some(i + 2)
+                } else {
+                    None
+                };
+                if let Some(o) = open {
+                    let j = balance(toks, o, "[", "]");
+                    for k in i..=j {
+                        attr_tok[k] = true;
+                    }
+                    let mut has_test = false;
+                    let mut has_not = false;
+                    for t in &toks[o..=j] {
+                        if t.kind == Kind::Ident {
+                            has_test |= t.text == "test";
+                            has_not |= t.text == "not";
+                        }
+                    }
+                    attr_spans.push(((i, j), has_test && !has_not));
+                    i = j + 1;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+
+        // use-declaration spans
+        let mut i = 0;
+        while i < n {
+            if toks[i].kind == Kind::Ident && toks[i].text == "use" && !attr_tok[i] {
+                let mut j = i;
+                while j < n && !(toks[j].kind == Kind::Punct && toks[j].text == ";") {
+                    use_tok[j] = true;
+                    j += 1;
+                }
+                if j < n {
+                    use_tok[j] = true;
+                }
+                i = j + 1;
+                continue;
+            }
+            i += 1;
+        }
+
+        // test regions: whole file for integration tests, else the item
+        // following each #[cfg(test)] / #[test] attribute
+        if rel.starts_with("rust/tests/") {
+            test_line.fill(true);
+        } else {
+            for &((astart, aend), is_test) in &attr_spans {
+                if !is_test {
+                    continue;
+                }
+                // skip any further attributes stacked on the same item
+                let mut k = aend + 1;
+                while k < n && attr_tok[k] {
+                    k += 1;
+                }
+                // the item region: to the matching `}` of its first brace,
+                // or to the `;` when the item has no body
+                let mut end_tok = n.saturating_sub(1);
+                let mut m = k;
+                while m < n {
+                    let t = &toks[m];
+                    if t.kind == Kind::Punct && t.text == ";" {
+                        end_tok = m;
+                        break;
+                    }
+                    if t.kind == Kind::Punct && t.text == "{" {
+                        end_tok = balance(toks, m, "{", "}");
+                        break;
+                    }
+                    m += 1;
+                }
+                let from = toks[astart].line;
+                let to = toks.get(end_tok).map(|t| t.line).unwrap_or(from);
+                for line in from..=to.min(lx.n_lines + 1) {
+                    test_line[line] = true;
+                }
+            }
+        }
+
+        // directive parsing: a comment is a directive only when its text
+        // *starts with* the `lint:allow` token, so prose and doc comments
+        // that merely mention the syntax are not parsed as directives
+        let mut allows = Vec::new();
+        for c in &lx.comments {
+            let trimmed = c.text.trim_start();
+            if !trimmed.starts_with("lint:allow") {
+                continue;
+            }
+            let rest = &trimmed["lint:allow".len()..];
+            let (rule, reason) = match rest.strip_prefix('(').and_then(|r| r.split_once(')')) {
+                Some((id, why)) => (id.trim().to_string(), why.trim().to_string()),
+                None => (String::new(), String::new()),
+            };
+            let target = if c.trailing {
+                c.line
+            } else {
+                (c.end_line + 1..=lx.n_lines + 1)
+                    .find(|&l| lx.line_has_code(l))
+                    .unwrap_or(usize::MAX)
+            };
+            allows.push(Allow { rule, reason, target, line: c.line });
+        }
+
+        FileCx { rel, lx, test_line, attr_tok, use_tok, allows }
+    }
+
+    fn is_test_line(&self, line: usize) -> bool {
+        self.test_line.get(line).copied().unwrap_or(false)
+    }
+
+    fn suppressed(&self, rule: &str, line: usize, allowable: &[&str]) -> bool {
+        self.allows.iter().any(|a| a.rule == rule && a.target == line && a.valid(allowable))
+    }
+
+    /// Whether any line of `lines` (descending walk from an `unsafe`
+    /// token) carries a `SAFETY:` comment. Blank, comment-only and
+    /// attribute-only lines are looked through; the walk stops at the
+    /// first other code line.
+    fn safety_covered(&self, line: usize) -> bool {
+        let has_safety = |ln: usize| {
+            self.lx
+                .comments
+                .iter()
+                .any(|c| (c.line..=c.end_line).contains(&ln) && c.text.contains("SAFETY:"))
+        };
+        if has_safety(line) {
+            return true;
+        }
+        let mut ln = line;
+        for _ in 0..10 {
+            if ln <= 1 {
+                return false;
+            }
+            ln -= 1;
+            if has_safety(ln) {
+                return true;
+            }
+            let toks_on_line: Vec<_> =
+                self.lx.toks.iter().enumerate().filter(|(_, t)| t.line == ln).collect();
+            if toks_on_line.is_empty() {
+                continue; // blank or comment-only
+            }
+            if toks_on_line.iter().all(|(i, _)| self.attr_tok[*i]) {
+                continue; // attribute-only line (e.g. #[target_feature])
+            }
+            return false; // a code line without a SAFETY comment
+        }
+        false
+    }
+}
+
+fn in_modules(rel: &str, modules: &[&str]) -> bool {
+    modules.iter().any(|m| if m.ends_with('/') { rel.starts_with(m) } else { rel == *m })
+}
+
+fn push(out: &mut Vec<Diagnostic>, rel: &str, line: usize, rule: &'static str, msg: String) {
+    out.push(Diagnostic { file: rel.to_string(), line, rule, message: msg });
+}
+
+/// DET-HASH: no `HashMap`/`HashSet` in determinism-critical modules
+/// outside test code and `use` declarations. Hash containers iterate in
+/// randomized order; a fold over one inside selection math silently
+/// breaks the bitwise reproducibility the sweep/resume and
+/// mmap-vs-mem gates pin.
+pub(crate) fn det_hash(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    if !in_modules(cx.rel, DET_MODULES) {
+        return;
+    }
+    for (i, t) in cx.lx.toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        if cx.use_tok[i] || cx.attr_tok[i] || cx.is_test_line(t.line) {
+            continue;
+        }
+        if cx.suppressed("DET-HASH", t.line, allowable) {
+            continue;
+        }
+        push(
+            out,
+            cx.rel,
+            t.line,
+            "DET-HASH",
+            format!(
+                "`{}` in a determinism-critical module: hash iteration order is \
+                 randomized; use Vec/BTreeMap or justify a membership-only use \
+                 with `// lint:allow(DET-HASH) reason`",
+                t.text
+            ),
+        );
+    }
+}
+
+/// DET-CLOCK: no `Instant`/`SystemTime` in modules whose outputs feed
+/// `deterministic_json`.
+pub(crate) fn det_clock(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    if !in_modules(cx.rel, CLOCK_MODULES) {
+        return;
+    }
+    for (i, t) in cx.lx.toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "Instant" && t.text != "SystemTime") {
+            continue;
+        }
+        if cx.use_tok[i] || cx.attr_tok[i] || cx.is_test_line(t.line) {
+            continue;
+        }
+        if cx.suppressed("DET-CLOCK", t.line, allowable) {
+            continue;
+        }
+        push(
+            out,
+            cx.rel,
+            t.line,
+            "DET-CLOCK",
+            format!(
+                "`{}` in a module feeding deterministic_json: wall-clock reads \
+                 must stay behind the report's excluded timing fields",
+                t.text
+            ),
+        );
+    }
+}
+
+/// DET-FMA: no fused multiply-add in the kernel layer. `a.mul_add(b, c)`
+/// and `_mm256_fmadd_ps` round once where `a*b + c` rounds twice, so a
+/// fused path would diverge bitwise from the scalar reference.
+pub(crate) fn det_fma(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    if !in_modules(cx.rel, FMA_MODULES) {
+        return;
+    }
+    for t in &cx.lx.toks {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let fused = t.text == "mul_add" || t.text.to_ascii_lowercase().contains("fmadd");
+        if !fused {
+            continue;
+        }
+        if cx.suppressed("DET-FMA", t.line, allowable) {
+            continue;
+        }
+        push(
+            out,
+            cx.rel,
+            t.line,
+            "DET-FMA",
+            format!(
+                "`{}` fuses multiply and add into one rounding; the bitwise \
+                 SIMD-vs-scalar contract requires separate mul + add",
+                t.text
+            ),
+        );
+    }
+}
+
+/// UNSAFE-SCOPE: `unsafe` only inside the registered file+module scopes,
+/// each block justified by a `// SAFETY:` comment, each scope under
+/// `#[allow(unsafe_code)]` (the crate denies it globally).
+pub(crate) fn unsafe_scope(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    let toks = &cx.lx.toks;
+    let unsafe_idxs: Vec<usize> = toks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind == Kind::Ident && t.text == "unsafe")
+        .map(|(i, _)| i)
+        .collect();
+    if unsafe_idxs.is_empty() {
+        return;
+    }
+    let Some(scope) = UNSAFE_SCOPES.iter().find(|s| s.file == cx.rel) else {
+        let mut last_line = 0;
+        for &i in &unsafe_idxs {
+            let line = toks[i].line;
+            if line == last_line || cx.suppressed("UNSAFE-SCOPE", line, allowable) {
+                continue;
+            }
+            last_line = line;
+            push(
+                out,
+                cx.rel,
+                line,
+                "UNSAFE-SCOPE",
+                "`unsafe` outside the registered scopes (kernel.rs::avx2, \
+                 data/store.rs::mm); register a new scope in lint::rules \
+                 with its reason, or stay safe"
+                    .to_string(),
+            );
+        }
+        return;
+    };
+
+    // (a) the scope must be opted in via a scoped #[allow(unsafe_code)]
+    let has_scoped_allow = toks.windows(3).enumerate().any(|(i, w)| {
+        cx.attr_tok[i]
+            && w[0].kind == Kind::Ident
+            && w[0].text == "allow"
+            && w[2].kind == Kind::Ident
+            && w[2].text == "unsafe_code"
+    });
+    if !has_scoped_allow {
+        push(
+            out,
+            cx.rel,
+            1,
+            "UNSAFE-SCOPE",
+            format!(
+                "registered unsafe scope `{}` must sit under a scoped \
+                 #[allow(unsafe_code)] (the crate denies unsafe_code globally)",
+                scope.module
+            ),
+        );
+    }
+
+    // (b) locate the registered module's brace span
+    let mut mod_span: Option<Span> = None;
+    for i in 0..toks.len().saturating_sub(1) {
+        if toks[i].kind == Kind::Ident
+            && toks[i].text == "mod"
+            && toks[i + 1].kind == Kind::Ident
+            && toks[i + 1].text == scope.module
+        {
+            let mut m = i + 2;
+            while m < toks.len() && !(toks[m].kind == Kind::Punct && toks[m].text == "{") {
+                m += 1;
+            }
+            if m < toks.len() {
+                mod_span = Some((m, balance(toks, m, "{", "}")));
+            }
+            break;
+        }
+    }
+    let Some((mstart, mend)) = mod_span else {
+        push(
+            out,
+            cx.rel,
+            1,
+            "UNSAFE-SCOPE",
+            format!("registered unsafe module `{}` not found in this file", scope.module),
+        );
+        return;
+    };
+
+    // (c) every unsafe token: inside the module, SAFETY-justified
+    let mut covered: Vec<Span> = Vec::new();
+    for &i in &unsafe_idxs {
+        let line = toks[i].line;
+        if !(mstart..=mend).contains(&i) {
+            if !cx.suppressed("UNSAFE-SCOPE", line, allowable) {
+                push(
+                    out,
+                    cx.rel,
+                    line,
+                    "UNSAFE-SCOPE",
+                    format!("`unsafe` outside the registered module `{}`", scope.module),
+                );
+            }
+            continue;
+        }
+        if covered.iter().any(|&(s, e)| (s..=e).contains(&i)) {
+            continue; // nested inside an already-justified unsafe fn/block
+        }
+        if cx.safety_covered(line) {
+            // the justified region extends to the matching close brace, so
+            // inner unsafe blocks share the justification
+            let mut m = i + 1;
+            while m < toks.len() && !(toks[m].kind == Kind::Punct && toks[m].text == "{") {
+                m += 1;
+            }
+            if m < toks.len() {
+                covered.push((m, balance(toks, m, "{", "}")));
+            }
+            continue;
+        }
+        if !cx.suppressed("UNSAFE-SCOPE", line, allowable) {
+            push(
+                out,
+                cx.rel,
+                line,
+                "UNSAFE-SCOPE",
+                "`unsafe` without a `// SAFETY:` comment on or directly above \
+                 the block stating why it is sound"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// ENV-HYGIENE: `std::env::var*` only in `runtime_config.rs` plus the
+/// registered readers; no env mutation outside test code; every
+/// `CREST_*` name in non-test code documented in README's env table
+/// (tests may use synthetic names and already mutate env freely).
+pub(crate) fn env_hygiene(
+    cx: &FileCx,
+    readme: &str,
+    allowable: &[&str],
+    out: &mut Vec<Diagnostic>,
+) {
+    let toks = &cx.lx.toks;
+    let registered = ENV_READERS.iter().any(|r| r.file == cx.rel);
+    for w in toks.windows(3) {
+        let qualified = w[0].kind == Kind::Ident
+            && w[0].text == "env"
+            && w[1].text == "::"
+            && w[2].kind == Kind::Ident;
+        if !qualified {
+            continue;
+        }
+        let call = w[2].text.as_str();
+        let line = w[2].line;
+        if ENV_READS.contains(&call)
+            && !registered
+            && !cx.suppressed("ENV-HYGIENE", line, allowable)
+        {
+            push(
+                out,
+                cx.rel,
+                line,
+                "ENV-HYGIENE",
+                format!(
+                    "`env::{call}` outside runtime_config.rs: read the knob \
+                     through RuntimeConfig, or register this file in \
+                     lint::rules::ENV_READERS with its reason"
+                ),
+            );
+        }
+        if ENV_WRITES.contains(&call)
+            && !cx.is_test_line(line)
+            && !cx.suppressed("ENV-HYGIENE", line, allowable)
+        {
+            push(
+                out,
+                cx.rel,
+                line,
+                "ENV-HYGIENE",
+                format!("`env::{call}` outside test code mutates process-global state"),
+            );
+        }
+    }
+    // every CREST_* string literal in non-test code must appear in README
+    for t in toks {
+        if t.kind != Kind::Str || cx.is_test_line(t.line) {
+            continue;
+        }
+        for name in crest_names(&t.text) {
+            if !readme.contains(&name) && !cx.suppressed("ENV-HYGIENE", t.line, allowable) {
+                push(
+                    out,
+                    cx.rel,
+                    t.line,
+                    "ENV-HYGIENE",
+                    format!("`{name}` is not documented in README.md's env table"),
+                );
+            }
+        }
+    }
+}
+
+/// Extract `CREST_*` env-var names from one string literal. Trailing
+/// underscores are trimmed (prose like "CREST_BENCH_*" names a prefix,
+/// not a variable); a bare "CREST_" matches nothing.
+fn crest_names(s: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    let bytes = s.as_bytes();
+    let name_byte = |b: u8| b.is_ascii_uppercase() || b.is_ascii_digit() || b == b'_';
+    let mut i = 0;
+    while let Some(pos) = s[i..].find("CREST_") {
+        let start = i + pos;
+        let mut end = start + "CREST_".len();
+        while end < bytes.len() && name_byte(bytes[end]) {
+            end += 1;
+        }
+        let name = s[start..end].trim_end_matches('_');
+        if name.len() > "CREST_".len() {
+            names.push(name.to_string());
+        }
+        i = end;
+    }
+    names
+}
+
+/// ISA-DISPATCH: `#[target_feature]` bodies live only in `kernel.rs`,
+/// stay private, and are reachable only through the `KernelIsa` dispatch
+/// wrappers — no direct `avx2::` or `is_x86_feature_detected!` use
+/// elsewhere.
+pub(crate) fn isa_dispatch(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    let toks = &cx.lx.toks;
+    let in_kernel = cx.rel == "rust/src/kernel.rs";
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident {
+            continue;
+        }
+        let line = t.line;
+        if !in_kernel {
+            let bad = match t.text.as_str() {
+                "target_feature" => Some(
+                    "#[target_feature] outside kernel.rs: ISA-specific code \
+                     belongs behind the KernelIsa dispatch table",
+                ),
+                "is_x86_feature_detected" => Some(
+                    "feature detection outside kernel.rs: resolve_isa is the \
+                     one dispatch decision point",
+                ),
+                "avx2" if i + 1 < toks.len() && toks[i + 1].text == "::" => Some(
+                    "direct `avx2::` call outside kernel.rs: use the public \
+                     `_isa` kernel wrappers so dispatch stays centralized",
+                ),
+                _ => None,
+            };
+            if let Some(msg) = bad {
+                if !cx.suppressed("ISA-DISPATCH", line, allowable) {
+                    push(out, cx.rel, line, "ISA-DISPATCH", msg.to_string());
+                }
+            }
+        } else if t.text == "target_feature" && cx.attr_tok[i] {
+            // the attributed fn must be private: scan from the end of the
+            // attribute stack to the `fn` keyword for a `pub`
+            let mut k = i;
+            while k < toks.len() && cx.attr_tok[k] {
+                k += 1;
+            }
+            let mut is_pub = false;
+            while k < toks.len() && !(toks[k].kind == Kind::Ident && toks[k].text == "fn") {
+                if toks[k].kind == Kind::Ident && toks[k].text == "pub" {
+                    is_pub = true;
+                }
+                k += 1;
+            }
+            if is_pub && !cx.suppressed("ISA-DISPATCH", line, allowable) {
+                push(
+                    out,
+                    cx.rel,
+                    line,
+                    "ISA-DISPATCH",
+                    "#[target_feature] fn must be private: only the KernelIsa \
+                     dispatch wrappers may reach ISA-specific bodies"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// LINT-ALLOW: every `lint:allow` directive must parse, name a real
+/// rule, attach to a code line, and carry a written reason.
+pub(crate) fn lint_allow(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    for a in &cx.allows {
+        let problem = if a.rule.is_empty() {
+            Some("malformed directive: expected `lint:allow(RULE-ID) reason`".to_string())
+        } else if !allowable.contains(&a.rule.as_str()) {
+            Some(format!("unknown rule id `{}` in lint:allow", a.rule))
+        } else if !reason_ok(&a.reason) {
+            Some(format!("lint:allow({}) carries no written reason", a.rule))
+        } else if a.target == usize::MAX {
+            Some(format!("lint:allow({}) has no code line to attach to", a.rule))
+        } else {
+            None
+        };
+        if let Some(msg) = problem {
+            push(out, cx.rel, a.line, "LINT-ALLOW", msg);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lex::lex;
+
+    fn cx_diags(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let lx = lex(src);
+        let cx = FileCx::new(rel, &lx);
+        let allowable = crate::lint::allowable_rules();
+        let mut out = Vec::new();
+        det_hash(&cx, &allowable, &mut out);
+        det_clock(&cx, &allowable, &mut out);
+        out
+    }
+
+    #[test]
+    fn use_lines_and_tests_are_exempt() {
+        let src = "use std::collections::HashMap;\n\
+                   #[cfg(test)]\nmod tests {\n    fn f() { let m = HashMap::new(); }\n}\n";
+        assert!(cx_diags("rust/src/coreset/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_in_code_fires_and_allow_suppresses() {
+        let bad = "fn f() { let m = std::collections::HashMap::<u32, u32>::new(); }\n";
+        let d = cx_diags("rust/src/sweep/x.rs", bad);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, "DET-HASH");
+        let ok = "// lint:allow(DET-HASH) lookup-only in this fixture\n\
+                  fn f() { let m = std::collections::HashMap::<u32, u32>::new(); }\n";
+        assert!(cx_diags("rust/src/sweep/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn module_scoping_is_prefix_based() {
+        let bad = "fn f() { let m = std::collections::HashSet::<u32>::new(); }\n";
+        assert!(!cx_diags("rust/src/coreset/deep/x.rs", bad).is_empty());
+        assert!(cx_diags("rust/src/util/x.rs", bad).is_empty());
+        assert!(cx_diags("rust/tests/x.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn crest_name_extraction() {
+        assert_eq!(crest_names("CREST_THREADS"), vec!["CREST_THREADS"]);
+        assert_eq!(crest_names("prefix CREST_BENCH_* prose"), vec!["CREST_BENCH"]);
+        assert!(crest_names("CREST_ alone").is_empty());
+        assert_eq!(crest_names("CREST_A and CREST_B"), vec!["CREST_A", "CREST_B"]);
+    }
+}

@@ -9,6 +9,7 @@
 //!   inspect  print a variant's computation interface and active backend
 //!   gen-data generate a proxy dataset and write the binary cache
 //!   pack     generate a proxy dataset as a sharded pack (mmap store)
+//!   lint     run the contract checker over the crate's own sources
 //!
 //! Every subcommand flows through one shared pre-dispatch setup path
 //! (`dispatch`): the common `--artifacts`/`--threads`/`--data-store`
@@ -102,6 +103,12 @@ const COMMANDS: &[Command] = &[
         about: "generate a proxy dataset as a sharded on-disk pack",
         flags: pack_flags,
         run: cmd_pack,
+    },
+    Command {
+        name: "lint",
+        about: "run the contract checker over the crate's own sources",
+        flags: lint_flags,
+        run: cmd_lint,
     },
 ];
 
@@ -461,5 +468,32 @@ fn cmd_pack(ctx: &Ctx) -> Result<()> {
         "train with: CREST_PACK_DIR={} crest train --variant {variant} --data-store mmap",
         root.parent().unwrap_or(&root).display()
     );
+    Ok(())
+}
+
+// ------------------------------------------------------------------- lint
+
+fn lint_flags(c: Cli) -> Cli {
+    c.opt("root", ".", "repo root to scan (README.md env table + the Rust source roots)")
+        .flag("list-rules", "print the rule table and exit")
+}
+
+fn cmd_lint(ctx: &Ctx) -> Result<()> {
+    let p = &ctx.args;
+    if p.bool("list-rules") {
+        for r in crest::lint::RULES {
+            println!("{:<13} {}", r.id, r.summary);
+        }
+        return Ok(());
+    }
+    let root = PathBuf::from(p.str("root"));
+    let diags = crest::lint::lint_tree(&root)?;
+    for d in &diags {
+        println!("{d}");
+    }
+    if !diags.is_empty() {
+        bail!("crest lint: {} finding(s) — see CONTRACTS.md for the contracts", diags.len());
+    }
+    println!("crest lint: clean ({} rules, see CONTRACTS.md)", crest::lint::RULES.len());
     Ok(())
 }

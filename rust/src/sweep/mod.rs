@@ -173,6 +173,8 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
     // One corpus per (variant, seed), shared by every method/budget cell
     // of that pair. A race may generate a pair twice; the first insert
     // wins and both copies are identical, so results are unaffected.
+    // lint:allow(DET-HASH) membership-only cache: keyed get/insert, never
+    // iterated, so hash order cannot reach any result
     let splits_cache: Mutex<HashMap<(String, u64), Arc<Splits>>> = Mutex::new(HashMap::new());
     let splits_for = |key: &CellKey| -> Result<Arc<Splits>> {
         let pair = (key.variant.clone(), key.seed);

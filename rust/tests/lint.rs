@@ -1,0 +1,147 @@
+//! Golden-fixture suite for the contract checker (`crest lint`), plus
+//! the end-to-end run over the real tree.
+//!
+//! Each fixture under `tests/lint_fixtures/` seeds one rule's violation
+//! (or its justified/clean counterpart) and is linted under a *virtual*
+//! repo path, so the module-scoping logic is exercised without the
+//! fixture living in the real source tree. The fixtures directory is
+//! excluded from the tree walk — `repo_tree_is_clean` below would fail
+//! otherwise, and doubles as the CI gate's in-process twin.
+
+use std::path::Path;
+
+use crest::lint::{lint_tree, Linter, RULES};
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{}: {e}", path.display()))
+}
+
+/// Lint one fixture under a virtual repo path with an empty README and
+/// return the (line, rule) pairs.
+fn findings(rel: &str, name: &str) -> Vec<(usize, &'static str)> {
+    Linter::with_readme("")
+        .lint_file(rel, &fixture(name))
+        .into_iter()
+        .map(|d| (d.line, d.rule))
+        .collect()
+}
+
+#[test]
+fn det_hash_fires_on_selection_code() {
+    assert_eq!(findings("rust/src/coreset/fixture.rs", "det_hash_bad.rs"), [(4, "DET-HASH")]);
+}
+
+#[test]
+fn det_hash_outside_det_modules_is_quiet() {
+    assert!(findings("rust/src/util/fixture.rs", "det_hash_bad.rs").is_empty());
+}
+
+#[test]
+fn det_hash_allow_suppresses_both_directive_forms() {
+    assert!(findings("rust/src/coreset/fixture.rs", "det_hash_allowed.rs").is_empty());
+}
+
+#[test]
+fn det_clock_fires_on_call_site_not_use_line() {
+    assert_eq!(findings("rust/src/sweep/fixture.rs", "det_clock_bad.rs"), [(7, "DET-CLOCK")]);
+}
+
+#[test]
+fn det_fma_fires_on_method_and_intrinsic() {
+    assert_eq!(findings("rust/src/kernel.rs", "det_fma_bad.rs"), [(5, "DET-FMA"), (9, "DET-FMA")]);
+}
+
+#[test]
+fn unsafe_outside_registered_scopes_fires() {
+    assert_eq!(findings("rust/src/coreset/fixture.rs", "unsafe_bad.rs"), [(4, "UNSAFE-SCOPE")]);
+}
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    // the justified block in the same registered module stays quiet
+    assert_eq!(findings("rust/src/data/store.rs", "unsafe_nosafety.rs"), [(13, "UNSAFE-SCOPE")]);
+}
+
+#[test]
+fn env_hygiene_fires_on_read_and_undocumented_name() {
+    let d = findings("rust/src/coordinator/fixture.rs", "env_bad.rs");
+    assert_eq!(d, [(6, "ENV-HYGIENE"), (6, "ENV-HYGIENE")]);
+}
+
+#[test]
+fn env_hygiene_documented_name_in_registered_reader_is_quiet() {
+    // same fixture, but linted as a registered reader with the name in
+    // the README table: both findings disappear
+    let src = fixture("env_bad.rs");
+    let readme = "| `CREST_BOGUS_KNOB` | documented |";
+    let d = Linter::with_readme(readme).lint_file("rust/src/bench_util/mod.rs", &src);
+    assert!(d.is_empty(), "{d:?}");
+}
+
+#[test]
+fn isa_dispatch_fires_outside_kernel() {
+    let d = findings("rust/src/util/fixture.rs", "isa_bad.rs");
+    assert_eq!(d, [(4, "ISA-DISPATCH"), (10, "ISA-DISPATCH")]);
+}
+
+#[test]
+fn lint_allow_meta_rule_fires_on_broken_directives() {
+    let d = findings("rust/src/coreset/fixture.rs", "allow_bad.rs");
+    assert_eq!(d, [(4, "LINT-ALLOW"), (7, "LINT-ALLOW")]);
+}
+
+#[test]
+fn lint_allow_cannot_suppress_itself() {
+    let src = "// lint:allow(LINT-ALLOW) nice try\nfn x() {}\n";
+    let d = Linter::with_readme("").lint_file("rust/src/coreset/fixture.rs", src);
+    assert_eq!(d.len(), 1);
+    assert_eq!(d[0].rule, "LINT-ALLOW");
+}
+
+#[test]
+fn clean_fixture_is_quiet() {
+    assert!(findings("rust/src/coreset/fixture.rs", "clean.rs").is_empty());
+}
+
+#[test]
+fn diagnostics_render_with_rule_id() {
+    let d = Linter::with_readme("").lint_file("rust/src/kernel.rs", &fixture("det_fma_bad.rs"));
+    let line = d[0].to_string();
+    assert!(line.starts_with("rust/src/kernel.rs:5: [DET-FMA]"), "{line}");
+}
+
+// ------------------------------------------------------------ real tree
+
+fn repo_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap()
+}
+
+/// The CI gate's in-process twin: the real tree must lint clean. A
+/// failure message lists the findings verbatim.
+#[test]
+fn repo_tree_is_clean() {
+    let diags = lint_tree(repo_root()).unwrap();
+    let rendered: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(diags.is_empty(), "crest lint found:\n{}", rendered.join("\n"));
+}
+
+/// Every rule ID must be documented in CONTRACTS.md (the same pattern
+/// as the README env-table coverage test in `runtime_config`).
+#[test]
+fn contracts_documents_every_rule() {
+    let text = std::fs::read_to_string(repo_root().join("CONTRACTS.md")).unwrap();
+    for r in RULES {
+        assert!(text.contains(r.id), "CONTRACTS.md is missing rule {}", r.id);
+    }
+    assert!(text.contains("lint:allow"), "CONTRACTS.md must document the allow syntax");
+}
+
+/// README's CLI table must carry the `lint` subcommand row and link the
+/// contracts document.
+#[test]
+fn readme_documents_lint_command() {
+    let text = std::fs::read_to_string(repo_root().join("README.md")).unwrap();
+    assert!(text.contains("| `lint` |"));
+    assert!(text.contains("CONTRACTS.md"));
+}

@@ -1,0 +1,8 @@
+// Golden fixture: broken allow directives. Linted under
+// `rust/src/coreset/fixture.rs`; must trip LINT-ALLOW twice — an
+// unknown rule ID, and a directive with no written reason.
+// lint:allow(NO-SUCH-RULE) the id does not exist
+fn a() {}
+
+// lint:allow(DET-HASH)
+fn b() {}

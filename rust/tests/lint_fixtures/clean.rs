@@ -1,0 +1,24 @@
+// Golden fixture: a representative clean file. Linted under
+// `rust/src/coreset/fixture.rs`; must produce zero findings — the hash
+// import sits in a `use` declaration, the ordered map is fine, and the
+// hash set plus timer live in test code.
+use std::collections::HashMap;
+
+fn ordered(n: usize) -> Vec<usize> {
+    let mut m = std::collections::BTreeMap::new();
+    for i in 0..n {
+        m.insert(i, i * 2);
+    }
+    m.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn uniqueness() {
+        let t0 = std::time::Instant::now();
+        let s: std::collections::HashSet<usize> = super::ordered(8).into_iter().collect();
+        assert_eq!(s.len(), 8);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

@@ -1,0 +1,9 @@
+// Golden fixture: a wall-clock read in a module feeding
+// deterministic_json. Linted under `rust/src/sweep/fixture.rs`; must
+// trip DET-CLOCK once (the `use` line is exempt, the call site is not).
+use std::time::Instant;
+
+fn cell_secs() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

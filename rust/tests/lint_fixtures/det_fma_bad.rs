@@ -1,0 +1,10 @@
+// Golden fixture: fused multiply-adds in the kernel layer. Linted under
+// `rust/src/kernel.rs`; must trip DET-FMA twice (the method and the
+// intrinsic), while the mention in this comment — mul_add — stays quiet.
+fn axpy(a: f32, x: f32, y: f32) -> f32 {
+    a.mul_add(x, y)
+}
+
+fn tile(acc: F, a: F, b: F) -> F {
+    _mm256_fmadd_ps(a, b, acc)
+}

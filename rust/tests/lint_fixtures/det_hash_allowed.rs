@@ -1,0 +1,13 @@
+// Golden fixture: the same hash container, justified. Both directive
+// forms appear — trailing and standalone-above — and must suppress the
+// findings without tripping LINT-ALLOW.
+fn lookup_cache() {
+    let m = std::collections::HashMap::<u64, u64>::new(); // lint:allow(DET-HASH) keyed get/insert only, never iterated
+    drop(m);
+}
+
+fn membership() {
+    // lint:allow(DET-HASH) membership-only set, iteration order unreachable
+    let s = std::collections::HashSet::<u64>::new();
+    drop(s);
+}

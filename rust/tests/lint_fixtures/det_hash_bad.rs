@@ -1,0 +1,9 @@
+// Golden fixture: a hash container in selection code. Linted under the
+// virtual path `rust/src/coreset/fixture.rs`; must trip DET-HASH once.
+fn fold_gains(idx: &[usize]) -> f32 {
+    let mut gains = std::collections::HashMap::new();
+    for &i in idx {
+        gains.insert(i, i as f32);
+    }
+    gains.values().sum()
+}

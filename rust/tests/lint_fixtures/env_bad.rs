@@ -1,0 +1,7 @@
+// Golden fixture: an environment read outside the registered readers,
+// naming a variable the README does not document. Linted under
+// `rust/src/coordinator/fixture.rs`; must trip ENV-HYGIENE twice — once
+// for the read location, once for the undocumented name.
+pub fn knob() -> bool {
+    std::env::var("CREST_BOGUS_KNOB").is_ok()
+}

@@ -1,0 +1,11 @@
+// Golden fixture: ISA-specific code outside kernel.rs. Linted under
+// `rust/src/util/fixture.rs`; must trip ISA-DISPATCH twice — the
+// #[target_feature] body and the stray feature probe.
+#[target_feature(enable = "avx2")]
+fn fast_path(a: &[f32]) -> f32 {
+    a[0]
+}
+
+pub fn caller() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}

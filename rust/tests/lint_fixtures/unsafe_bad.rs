@@ -1,0 +1,5 @@
+// Golden fixture: `unsafe` in a file with no registered scope. Linted
+// under `rust/src/coreset/fixture.rs`; must trip UNSAFE-SCOPE once.
+fn peek(v: &[f32]) -> f32 {
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,15 @@
+// Golden fixture: a registered unsafe scope where one block carries a
+// SAFETY comment and one does not. Linted under the registered path
+// `rust/src/data/store.rs`; must trip UNSAFE-SCOPE exactly once, on the
+// unjustified block.
+#[allow(unsafe_code)]
+mod mm {
+    pub fn justified(v: &[f32]) -> f32 {
+        // SAFETY: the caller guarantees v is non-empty
+        unsafe { *v.get_unchecked(0) }
+    }
+
+    pub fn unjustified(v: &[f32]) -> f32 {
+        unsafe { *v.get_unchecked(0) }
+    }
+}

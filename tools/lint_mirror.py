@@ -1,0 +1,615 @@
+#!/usr/bin/env python3
+"""Reference mirror of `crest lint` (rust/src/lint/) for toolchain-free CI.
+
+This is a line-for-line port of the Rust contract checker — the lexer in
+`rust/src/lint/lex.rs` and the rules in `rust/src/lint/rules.rs` — kept
+in sync by hand so environments without a Rust toolchain can still run
+the contract checks (and so the checker itself has an independent
+implementation to diff against). `python3 tools/lint_mirror.py [root]`
+prints the same `file:line: [RULE-ID] message` diagnostics and exits
+nonzero on any finding.
+
+If this mirror and `crest lint` ever disagree, the Rust implementation
+is the specification.
+"""
+
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------- lexer
+
+IDENT, NUM, STR, PUNCT = "Ident", "Num", "Str", "Punct"
+
+
+class Tok:
+    __slots__ = ("kind", "text", "line")
+
+    def __init__(self, kind, text, line):
+        self.kind, self.text, self.line = kind, text, line
+
+
+class Comment:
+    __slots__ = ("line", "end_line", "text", "trailing")
+
+    def __init__(self, line, end_line, text, trailing):
+        self.line, self.end_line, self.text, self.trailing = line, end_line, text, trailing
+
+
+class Lexed:
+    def __init__(self):
+        self.toks = []
+        self.comments = []
+        self.n_lines = 0
+        self._code_lines = None
+
+    def line_has_code(self, line):
+        if self._code_lines is None:
+            self._code_lines = {t.line for t in self.toks}
+        return line in self._code_lines
+
+
+def is_ident_start(c):
+    return c.isalpha() or c == "_"
+
+
+def is_ident_cont(c):
+    return c.isalnum() or c == "_"
+
+
+class Lexer:
+    def __init__(self, src):
+        self.cs = list(src)
+        self.i = 0
+        self.line = 1
+        self.line_has_tok = False
+        self.out = Lexed()
+
+    def peek(self, ahead=0):
+        j = self.i + ahead
+        return self.cs[j] if j < len(self.cs) else None
+
+    def bump(self):
+        c = self.peek()
+        if c is not None:
+            self.i += 1
+            if c == "\n":
+                self.line += 1
+                self.line_has_tok = False
+        return c
+
+    def push(self, kind, text, line):
+        self.line_has_tok = True
+        self.out.toks.append(Tok(kind, text, line))
+
+    def line_comment(self):
+        start, trailing = self.line, self.line_has_tok
+        text = []
+        self.i += 2
+        while self.peek() is not None and self.peek() != "\n":
+            text.append(self.peek())
+            self.bump()
+        self.out.comments.append(Comment(start, start, "".join(text), trailing))
+
+    def block_comment(self):
+        start, trailing = self.line, self.line_has_tok
+        text = []
+        self.i += 2
+        depth = 1
+        while depth > 0:
+            a, b = self.peek(), self.peek(1)
+            if a == "/" and b == "*":
+                depth += 1
+                self.bump()
+                self.bump()
+            elif a == "*" and b == "/":
+                depth -= 1
+                self.bump()
+                self.bump()
+            elif a is not None:
+                text.append(a)
+                self.bump()
+            else:
+                break
+        self.out.comments.append(Comment(start, self.line, "".join(text), trailing))
+
+    def string_body(self, line):
+        text = []
+        while self.peek() is not None:
+            c = self.peek()
+            if c == "\\":
+                text.append(c)
+                self.bump()
+                e = self.peek()
+                if e is not None:
+                    text.append(e)
+                    self.bump()
+            elif c == '"':
+                self.bump()
+                break
+            else:
+                text.append(c)
+                self.bump()
+        self.push(STR, "".join(text), line)
+
+    def raw_string_body(self, line):
+        hashes = 0
+        while self.peek() == "#":
+            hashes += 1
+            self.bump()
+        if self.peek() != '"':
+            return
+        self.bump()
+        text = []
+        while self.peek() is not None:
+            c = self.peek()
+            if c == '"':
+                if all(self.peek(1 + k) == "#" for k in range(hashes)):
+                    self.bump()
+                    for _ in range(hashes):
+                        self.bump()
+                    break
+                text.append(c)
+                self.bump()
+            else:
+                text.append(c)
+                self.bump()
+        self.push(STR, "".join(text), line)
+
+    def quote(self):
+        self.bump()  # the '
+        c = self.peek()
+        if c == "\\":
+            self.bump()
+            self.bump()
+            while self.peek() is not None:
+                done = self.peek() == "'"
+                self.bump()
+                if done:
+                    break
+        elif c is not None and self.peek(1) == "'":
+            self.bump()
+            self.bump()
+        elif c is not None and is_ident_start(c):
+            while self.peek() is not None and is_ident_cont(self.peek()):
+                self.bump()
+
+    def run(self):
+        while self.peek() is not None:
+            c = self.peek()
+            if c == "/" and self.peek(1) == "/":
+                self.line_comment()
+            elif c == "/" and self.peek(1) == "*":
+                self.block_comment()
+            elif c == '"':
+                line = self.line
+                self.bump()
+                self.string_body(line)
+            elif c == "'":
+                self.quote()
+            elif c.isspace():
+                self.bump()
+            elif is_ident_start(c):
+                line = self.line
+                ident = []
+                while self.peek() is not None and is_ident_cont(self.peek()):
+                    ident.append(self.peek())
+                    self.bump()
+                ident = "".join(ident)
+                prefix = ident in ("r", "b", "br")
+                if self.peek() == '"' and prefix:
+                    if ident == "b":
+                        self.bump()
+                        self.string_body(line)
+                    else:
+                        self.raw_string_body(line)
+                elif self.peek() == "#" and prefix and ident != "b":
+                    self.raw_string_body(line)
+                elif self.peek() == "'" and ident == "b":
+                    self.quote()
+                else:
+                    self.push(IDENT, ident, line)
+            elif c.isdigit():
+                line = self.line
+                num = []
+                while self.peek() is not None:
+                    c2 = self.peek()
+                    nxt = self.peek(1)
+                    frac = c2 == "." and nxt is not None and nxt.isdigit()
+                    if not (c2.isalnum() or c2 == "_" or frac):
+                        break
+                    num.append(c2)
+                    self.bump()
+                self.push(NUM, "".join(num), line)
+            elif c == ":" and self.peek(1) == ":":
+                line = self.line
+                self.bump()
+                self.bump()
+                self.push(PUNCT, "::", line)
+            else:
+                line = self.line
+                self.bump()
+                self.push(PUNCT, c, line)
+        self.out.n_lines = self.line
+        return self.out
+
+
+def lex(src):
+    return Lexer(src).run()
+
+
+# --------------------------------------------------------------------- rules
+
+DET_MODULES = [
+    "rust/src/coreset/",
+    "rust/src/sweep/",
+    "rust/src/data/",
+    "rust/src/kernel.rs",
+    "rust/src/runtime/native.rs",
+]
+CLOCK_MODULES = DET_MODULES + ["rust/src/report.rs"]
+FMA_MODULES = ["rust/src/kernel.rs", "rust/src/runtime/native.rs"]
+UNSAFE_SCOPES = {"rust/src/kernel.rs": "avx2", "rust/src/data/store.rs": "mm"}
+ENV_READERS = [
+    "rust/src/runtime_config.rs",
+    "rust/src/util/logging.rs",
+    "rust/src/bench_util/mod.rs",
+    "rust/src/bench_util/scenario.rs",
+]
+ENV_READS = ("var", "var_os", "vars", "vars_os")
+ENV_WRITES = ("set_var", "remove_var")
+ALLOWABLE = ["DET-CLOCK", "DET-FMA", "DET-HASH", "ENV-HYGIENE", "ISA-DISPATCH", "UNSAFE-SCOPE"]
+
+
+def reason_ok(reason):
+    return sum(1 for ch in reason if ch.isalnum()) >= 3
+
+
+def balance(toks, open_idx, op, cl):
+    depth = 0
+    for j in range(open_idx, len(toks)):
+        t = toks[j]
+        if t.kind == PUNCT:
+            if t.text == op:
+                depth += 1
+            elif t.text == cl:
+                depth -= 1
+                if depth == 0:
+                    return j
+    return max(len(toks) - 1, 0)
+
+
+class FileCx:
+    def __init__(self, rel, lx):
+        self.rel = rel
+        self.lx = lx
+        toks = lx.toks
+        n = len(toks)
+        self.attr_tok = [False] * n
+        self.use_tok = [False] * n
+        self.test_line = [False] * (lx.n_lines + 2)
+
+        def punct(k, s):
+            return k < n and toks[k].kind == PUNCT and toks[k].text == s
+
+        attr_spans = []
+        i = 0
+        while i < n:
+            if toks[i].kind == PUNCT and toks[i].text == "#":
+                if punct(i + 1, "["):
+                    o = i + 1
+                elif punct(i + 1, "!") and punct(i + 2, "["):
+                    o = i + 2
+                else:
+                    o = None
+                if o is not None:
+                    j = balance(toks, o, "[", "]")
+                    for k in range(i, j + 1):
+                        self.attr_tok[k] = True
+                    span = toks[o : j + 1]
+                    has_test = any(t.kind == IDENT and t.text == "test" for t in span)
+                    has_not = any(t.kind == IDENT and t.text == "not" for t in span)
+                    attr_spans.append((i, j, has_test and not has_not))
+                    i = j + 1
+                    continue
+            i += 1
+
+        i = 0
+        while i < n:
+            if toks[i].kind == IDENT and toks[i].text == "use" and not self.attr_tok[i]:
+                j = i
+                while j < n and not (toks[j].kind == PUNCT and toks[j].text == ";"):
+                    self.use_tok[j] = True
+                    j += 1
+                if j < n:
+                    self.use_tok[j] = True
+                i = j + 1
+                continue
+            i += 1
+
+        if rel.startswith("rust/tests/"):
+            self.test_line = [True] * (lx.n_lines + 2)
+        else:
+            for astart, aend, is_test in attr_spans:
+                if not is_test:
+                    continue
+                k = aend + 1
+                while k < n and self.attr_tok[k]:
+                    k += 1
+                end_tok = max(n - 1, 0)
+                m = k
+                while m < n:
+                    t = toks[m]
+                    if t.kind == PUNCT and t.text == ";":
+                        end_tok = m
+                        break
+                    if t.kind == PUNCT and t.text == "{":
+                        end_tok = balance(toks, m, "{", "}")
+                        break
+                    m += 1
+                frm = toks[astart].line
+                to = toks[end_tok].line if end_tok < n else frm
+                for line in range(frm, min(to, lx.n_lines + 1) + 1):
+                    self.test_line[line] = True
+
+        self.allows = []
+        for c in lx.comments:
+            trimmed = c.text.lstrip()
+            if not trimmed.startswith("lint:allow"):
+                continue
+            rest = trimmed[len("lint:allow") :]
+            rule, reason = "", ""
+            if rest.startswith("(") and ")" in rest:
+                rule, _, reason = rest[1:].partition(")")
+                rule, reason = rule.strip(), reason.strip()
+            if c.trailing:
+                target = c.line
+            else:
+                target = None
+                for ln in range(c.end_line + 1, lx.n_lines + 2):
+                    if lx.line_has_code(ln):
+                        target = ln
+                        break
+            self.allows.append((rule, reason, target, c.line))
+
+    def is_test_line(self, line):
+        return 0 <= line < len(self.test_line) and self.test_line[line]
+
+    def suppressed(self, rule, line):
+        return any(
+            r == rule and t == line and r in ALLOWABLE and reason_ok(re)
+            for (r, re, t, _) in self.allows
+        )
+
+    def safety_covered(self, line):
+        def has_safety(ln):
+            return any(
+                c.line <= ln <= c.end_line and "SAFETY:" in c.text for c in self.lx.comments
+            )
+
+        if has_safety(line):
+            return True
+        ln = line
+        for _ in range(10):
+            if ln <= 1:
+                return False
+            ln -= 1
+            if has_safety(ln):
+                return True
+            on_line = [k for k, t in enumerate(self.lx.toks) if t.line == ln]
+            if not on_line:
+                continue
+            if all(self.attr_tok[k] for k in on_line):
+                continue
+            return False
+        return False
+
+
+def in_modules(rel, modules):
+    return any(rel.startswith(m) if m.endswith("/") else rel == m for m in modules)
+
+
+def crest_names(s):
+    names = []
+    i = 0
+    while True:
+        pos = s.find("CREST_", i)
+        if pos < 0:
+            break
+        end = pos + len("CREST_")
+        while end < len(s) and (s[end].isupper() or s[end].isdigit() or s[end] == "_"):
+            end += 1
+        name = s[pos:end].rstrip("_")
+        if len(name) > len("CREST_"):
+            names.append(name)
+        i = end
+    return names
+
+
+def lint_file(rel, src, readme):
+    lx = lex(src)
+    cx = FileCx(rel, lx)
+    toks = lx.toks
+    out = []
+
+    def push(line, rule, message):
+        out.append((rel, line, rule, message))
+
+    # DET-HASH / DET-CLOCK
+    for scope, names, rule in (
+        (DET_MODULES, ("HashMap", "HashSet"), "DET-HASH"),
+        (CLOCK_MODULES, ("Instant", "SystemTime"), "DET-CLOCK"),
+    ):
+        if in_modules(rel, scope):
+            for i, t in enumerate(toks):
+                if t.kind != IDENT or t.text not in names:
+                    continue
+                if cx.use_tok[i] or cx.attr_tok[i] or cx.is_test_line(t.line):
+                    continue
+                if not cx.suppressed(rule, t.line):
+                    push(t.line, rule, f"`{t.text}`")
+
+    # DET-FMA
+    if in_modules(rel, FMA_MODULES):
+        for t in toks:
+            if t.kind == IDENT and (t.text == "mul_add" or "fmadd" in t.text.lower()):
+                if not cx.suppressed("DET-FMA", t.line):
+                    push(t.line, "DET-FMA", f"`{t.text}`")
+
+    # UNSAFE-SCOPE
+    unsafe_idxs = [i for i, t in enumerate(toks) if t.kind == IDENT and t.text == "unsafe"]
+    if unsafe_idxs:
+        module = UNSAFE_SCOPES.get(rel)
+        if module is None:
+            last = 0
+            for i in unsafe_idxs:
+                line = toks[i].line
+                if line != last and not cx.suppressed("UNSAFE-SCOPE", line):
+                    push(line, "UNSAFE-SCOPE", "unsafe outside registered scopes")
+                    last = line
+        else:
+            scoped_allow = any(
+                cx.attr_tok[i]
+                and toks[i].kind == IDENT
+                and toks[i].text == "allow"
+                and i + 2 < len(toks)
+                and toks[i + 2].kind == IDENT
+                and toks[i + 2].text == "unsafe_code"
+                for i in range(len(toks))
+            )
+            if not scoped_allow:
+                push(1, "UNSAFE-SCOPE", "missing scoped #[allow(unsafe_code)]")
+            mod_span = None
+            for i in range(len(toks) - 1):
+                if (
+                    toks[i].kind == IDENT
+                    and toks[i].text == "mod"
+                    and toks[i + 1].kind == IDENT
+                    and toks[i + 1].text == module
+                ):
+                    m = i + 2
+                    while m < len(toks) and not (
+                        toks[m].kind == PUNCT and toks[m].text == "{"
+                    ):
+                        m += 1
+                    if m < len(toks):
+                        mod_span = (m, balance(toks, m, "{", "}"))
+                    break
+            if mod_span is None:
+                push(1, "UNSAFE-SCOPE", f"registered module `{module}` not found")
+            else:
+                mstart, mend = mod_span
+                covered = []
+                for i in unsafe_idxs:
+                    line = toks[i].line
+                    if not (mstart <= i <= mend):
+                        if not cx.suppressed("UNSAFE-SCOPE", line):
+                            push(line, "UNSAFE-SCOPE", f"unsafe outside module `{module}`")
+                        continue
+                    if any(s <= i <= e for (s, e) in covered):
+                        continue
+                    if cx.safety_covered(line):
+                        m = i + 1
+                        while m < len(toks) and not (
+                            toks[m].kind == PUNCT and toks[m].text == "{"
+                        ):
+                            m += 1
+                        if m < len(toks):
+                            covered.append((m, balance(toks, m, "{", "}")))
+                        continue
+                    if not cx.suppressed("UNSAFE-SCOPE", line):
+                        push(line, "UNSAFE-SCOPE", "unsafe without SAFETY comment")
+
+    # ENV-HYGIENE
+    registered = rel in ENV_READERS
+    for i in range(len(toks) - 2):
+        w0, w1, w2 = toks[i], toks[i + 1], toks[i + 2]
+        if not (w0.kind == IDENT and w0.text == "env" and w1.text == "::" and w2.kind == IDENT):
+            continue
+        call, line = w2.text, w2.line
+        if call in ENV_READS and not registered and not cx.suppressed("ENV-HYGIENE", line):
+            push(line, "ENV-HYGIENE", f"env::{call} outside runtime_config.rs")
+        if (
+            call in ENV_WRITES
+            and not cx.is_test_line(line)
+            and not cx.suppressed("ENV-HYGIENE", line)
+        ):
+            push(line, "ENV-HYGIENE", f"env::{call} outside test code")
+    for t in toks:
+        if t.kind != STR or cx.is_test_line(t.line):
+            continue
+        for name in crest_names(t.text):
+            if name not in readme and not cx.suppressed("ENV-HYGIENE", t.line):
+                push(t.line, "ENV-HYGIENE", f"`{name}` not documented in README.md")
+
+    # ISA-DISPATCH
+    in_kernel = rel == "rust/src/kernel.rs"
+    for i, t in enumerate(toks):
+        if t.kind != IDENT:
+            continue
+        line = t.line
+        if not in_kernel:
+            bad = None
+            if t.text == "target_feature":
+                bad = "#[target_feature] outside kernel.rs"
+            elif t.text == "is_x86_feature_detected":
+                bad = "feature detection outside kernel.rs"
+            elif t.text == "avx2" and i + 1 < len(toks) and toks[i + 1].text == "::":
+                bad = "direct avx2:: call outside kernel.rs"
+            if bad and not cx.suppressed("ISA-DISPATCH", line):
+                push(line, "ISA-DISPATCH", bad)
+        elif t.text == "target_feature" and cx.attr_tok[i]:
+            k = i
+            while k < len(toks) and cx.attr_tok[k]:
+                k += 1
+            is_pub = False
+            while k < len(toks) and not (toks[k].kind == IDENT and toks[k].text == "fn"):
+                if toks[k].kind == IDENT and toks[k].text == "pub":
+                    is_pub = True
+                k += 1
+            if is_pub and not cx.suppressed("ISA-DISPATCH", line):
+                push(line, "ISA-DISPATCH", "#[target_feature] fn must be private")
+
+    # LINT-ALLOW
+    for rule, reason, target, cline in cx.allows:
+        if not rule:
+            push(cline, "LINT-ALLOW", "malformed lint:allow directive")
+        elif rule not in ALLOWABLE:
+            push(cline, "LINT-ALLOW", f"unknown rule id `{rule}`")
+        elif not reason_ok(reason):
+            push(cline, "LINT-ALLOW", f"lint:allow({rule}) carries no written reason")
+        elif target is None:
+            push(cline, "LINT-ALLOW", f"lint:allow({rule}) has no code line to attach to")
+
+    out.sort(key=lambda d: (d[1], d[2], d[3]))
+    return out
+
+
+SCAN_ROOTS = ["rust/src", "rust/tests", "rust/benches", "examples"]
+SKIP_DIRS = {"lint_fixtures"}
+
+
+def main():
+    root = Path(sys.argv[1]) if len(sys.argv) > 1 else Path(".")
+    readme = (root / "README.md").read_text()
+    files = []
+    for sub in SCAN_ROOTS:
+        base = root / sub
+        if base.is_dir():
+            for p in sorted(base.rglob("*.rs")):
+                if SKIP_DIRS.isdisjoint(p.parts):
+                    files.append(p)
+    findings = []
+    for p in files:
+        rel = p.relative_to(root).as_posix()
+        findings.extend(lint_file(rel, p.read_text(), readme))
+    for rel, line, rule, msg in findings:
+        print(f"{rel}:{line}: [{rule}] {msg}")
+    if findings:
+        print(f"lint mirror: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"lint mirror: clean ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
