@@ -16,8 +16,13 @@
 //! changes wall-clock, never a report.
 //!
 //! Off by default; enabled by pointing `CREST_EMBED_CACHE` at a
-//! directory. Entries are size-validated on read and any mismatch is
-//! treated as a miss, so a torn write degrades to recomputation.
+//! directory. All I/O goes through the
+//! [`artifact_io`](crate::util::artifact_io) facade: entries publish
+//! atomically (temp file + fsync + rename) with a trailing CRC-32, and
+//! reads size- and CRC-validate the entry. Any mismatch — a torn write
+//! that slipped past rename, a flipped payload byte, a stale
+//! pre-integrity entry — evicts the file and reads as a miss, so
+//! corruption degrades to recomputation, never to wrong embeddings.
 //!
 //! Entry file layout (little-endian):
 //!
@@ -30,13 +35,15 @@
 //! gl     rows*gcols f32
 //! al     rows*acols f32
 //! losses rows f32
+//! crc    u32      CRC-32 of every preceding byte
 //! ```
 
-use std::io::{BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::data::store::decode_f32le;
 use crate::tensor::MatF32;
+use crate::util::artifact_io::{self, READ_DETECTED, WRITE_DEGRADED};
+use crate::util::faults::Site;
 
 const MAGIC: &[u8; 8] = b"CRSTEC1\0";
 
@@ -121,83 +128,105 @@ impl EmbedCache {
         }
         self.region = Some(region);
         let keep = format!("emb-{region}-");
-        if let Ok(entries) = std::fs::read_dir(&self.dir) {
-            for e in entries.flatten() {
-                let name = e.file_name();
+        if let Ok(entries) = artifact_io::read_dir_sorted(&self.dir) {
+            for p in entries {
+                let Some(name) = p.file_name() else { continue };
                 let name = name.to_string_lossy();
                 if name.starts_with("emb-") && !name.starts_with(&keep) {
-                    let _ = std::fs::remove_file(e.path());
+                    let _ = artifact_io::remove_file(&p);
                 }
             }
         }
     }
 
-    /// Look up the embeddings of a subset in the current region. Any
-    /// malformed or missing entry is a miss.
+    /// Look up the embeddings of a subset in the current region. A
+    /// missing entry is a quiet miss; a malformed or CRC-mismatched
+    /// entry is evicted (one warning naming the file) and then misses,
+    /// so the selector recomputes instead of trusting corrupt bytes.
     pub fn load(&self, key: u64) -> Option<(MatF32, MatF32, Vec<f32>)> {
         let region = self.region?;
         let path = self.entry_path(region, key);
-        let mut f = std::fs::File::open(&path).ok()?;
-        let total = f.metadata().ok()?.len();
-        let mut head = [0u8; 40];
-        f.read_exact(&mut head).ok()?;
-        if &head[..8] != MAGIC {
-            return None;
+        let bytes = match artifact_io::read_with(Site::EmbedRead, &path, READ_DETECTED) {
+            Ok(b) => b,
+            Err(e) if e.is_not_found() => return None,
+            Err(e) => {
+                log::warn!("embed-cache entry {}: {e}; evicting", path.display());
+                let _ = artifact_io::remove_file(&path);
+                return None;
+            }
+        };
+        match decode_entry(region, &bytes) {
+            Some(hit) => Some(hit),
+            None => {
+                log::warn!(
+                    "embed-cache entry {}: corrupt or stale layout; evicting",
+                    path.display()
+                );
+                let _ = artifact_io::remove_file(&path);
+                None
+            }
         }
-        let word = |o: usize| u64::from_le_bytes(head[o..o + 8].try_into().unwrap());
-        if word(8) != region {
-            return None;
-        }
-        let rows = word(16) as usize;
-        let gcols = word(24) as usize;
-        let acols = word(32) as usize;
-        let payload = rows
-            .checked_mul(gcols + acols + 1)
-            .and_then(|e| e.checked_mul(4))? as u64;
-        if total != 40 + payload {
-            return None;
-        }
-        let mut raw = vec![0u8; payload as usize];
-        f.read_exact(&mut raw).ok()?;
-        let mut all = vec![0.0f32; raw.len() / 4];
-        decode_f32le(&raw, &mut all);
-        let losses = all.split_off(rows * (gcols + acols));
-        let al_data = all.split_off(rows * gcols);
-        let gl = MatF32::from_vec(rows, gcols, all).ok()?;
-        let al = MatF32::from_vec(rows, acols, al_data).ok()?;
-        Some((gl, al, losses))
     }
 
     /// Record the embeddings of a subset in the current region. I/O
-    /// failures are swallowed: the cache is an accelerator, never a
-    /// correctness dependency.
+    /// failures are logged and swallowed: the cache is an accelerator,
+    /// never a correctness dependency.
     pub fn store(&self, key: u64, gl: &MatF32, al: &MatF32, losses: &[f32]) {
         let Some(region) = self.region else { return };
-        if std::fs::create_dir_all(&self.dir).is_err() {
+        if artifact_io::create_dir_all(&self.dir).is_err() {
             return;
         }
         let path = self.entry_path(region, key);
-        let write = |path: &Path| -> std::io::Result<()> {
-            let mut w = BufWriter::new(std::fs::File::create(path)?);
-            w.write_all(MAGIC)?;
-            for v in [region, gl.rows as u64, gl.cols as u64, al.cols as u64] {
-                w.write_all(&v.to_le_bytes())?;
+        let n_f32 = gl.data.len() + al.data.len() + losses.len();
+        let mut bytes = Vec::with_capacity(44 + 4 * n_f32);
+        bytes.extend_from_slice(MAGIC);
+        for v in [region, gl.rows as u64, gl.cols as u64, al.cols as u64] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for part in [gl.data.as_slice(), al.data.as_slice(), losses] {
+            for v in part {
+                bytes.extend_from_slice(&v.to_le_bytes());
             }
-            for part in [gl.data.as_slice(), al.data.as_slice(), losses] {
-                for v in part {
-                    w.write_all(&v.to_le_bytes())?;
-                }
-            }
-            w.flush()
-        };
-        // write-then-rename so a concurrent reader never sees a torn entry
-        let tmp = path.with_extension(format!("tmp{}", std::process::id()));
-        if write(&tmp).is_ok() {
-            let _ = std::fs::rename(&tmp, &path);
-        } else {
-            let _ = std::fs::remove_file(&tmp);
+        }
+        let crc = artifact_io::crc32(&bytes);
+        bytes.extend_from_slice(&crc.to_le_bytes());
+        if let Err(e) = artifact_io::publish_with(Site::EmbedWrite, &path, &bytes, WRITE_DEGRADED) {
+            log::warn!("embed-cache store {} failed: {e}; continuing uncached", path.display());
         }
     }
+}
+
+/// Decode one entry's bytes, validating magic, region, geometry, and the
+/// trailing CRC-32. `None` on any mismatch — including pre-integrity
+/// entries that lack the CRC suffix (their length check fails).
+fn decode_entry(region: u64, bytes: &[u8]) -> Option<(MatF32, MatF32, Vec<f32>)> {
+    if bytes.len() < 44 || &bytes[..8] != *MAGIC {
+        return None;
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    if artifact_io::crc32(body) != stored {
+        return None;
+    }
+    let word = |o: usize| u64::from_le_bytes(body[o..o + 8].try_into().unwrap());
+    if word(8) != region {
+        return None;
+    }
+    let rows = word(16) as usize;
+    let gcols = word(24) as usize;
+    let acols = word(32) as usize;
+    let payload = rows.checked_mul(gcols + acols + 1).and_then(|e| e.checked_mul(4))?;
+    // geometry check before any allocation sized from header words
+    if body.len() != 40 + payload {
+        return None;
+    }
+    let mut all = vec![0.0f32; payload / 4];
+    decode_f32le(&body[40..], &mut all);
+    let losses = all.split_off(rows * (gcols + acols));
+    let al_data = all.split_off(rows * gcols);
+    let gl = MatF32::from_vec(rows, gcols, all).ok()?;
+    let al = MatF32::from_vec(rows, acols, al_data).ok()?;
+    Some((gl, al, losses))
 }
 
 #[cfg(test)]
@@ -267,6 +296,27 @@ mod tests {
         assert!(c.load(key).is_none(), "truncated entry must miss");
         std::fs::write(&path, b"shrt").unwrap();
         assert!(c.load(key).is_none(), "tiny entry must miss");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_evicted_not_served() {
+        let dir = tdir("flip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = EmbedCache::new(&dir);
+        let (gl, al, losses) = sample();
+        let key = subset_key(&[6, 6, 6]);
+        c.enter_region(3);
+        c.store(key, &gl, &al, &losses);
+        let path = c.entry_path(3, key);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit in the middle of the f32 payload: geometry stays
+        // plausible, only the CRC can catch it
+        let mid = 40 + bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(c.load(key).is_none(), "flipped byte must miss, never serve garbage floats");
+        assert!(!path.exists(), "corrupt entry must be evicted");
         std::fs::remove_dir_all(&dir).ok();
     }
 

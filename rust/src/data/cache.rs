@@ -20,14 +20,15 @@
 //! ([`super::shard`], written by `crest pack`), which has no cap and
 //! backs the mmap store.
 
-use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::data::dataset::Dataset;
 use crate::tensor::MatF32;
+use crate::util::artifact_io::{self, ArtifactError, READ_STRICT};
+use crate::util::faults::Site;
 
 const MAGIC: &[u8; 8] = b"CRSTDS1\0";
 
@@ -48,7 +49,9 @@ fn expected_len(n: u64, d: u64) -> Option<u64> {
 /// disk-backed dataset can be re-cached without materializing it (the
 /// *result* must still fit the resident cap to be loadable).
 pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    let f = artifact_io::create(Site::CacheStore, path)
+        .with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
     w.write_all(MAGIC)?;
     for v in [ds.n() as u64, ds.d() as u64, ds.classes as u64] {
         w.write_all(&v.to_le_bytes())?;
@@ -78,74 +81,90 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         w.write_all(&c.to_le_bytes())?;
     }
     w.flush()?;
+    artifact_io::sync_file(w.get_ref())?;
     Ok(())
 }
 
-/// Read a dataset written by [`save`].
-///
-/// The header dims are validated against the file's actual size before
-/// any payload is read, so truncated or padded files fail with one clear
-/// error instead of a mid-stream `read_exact` failure.
+/// Read a dataset written by [`save`] — the `anyhow` wrapper over
+/// [`load_typed`] that examples and benches call.
 pub fn load(path: &Path) -> Result<Dataset> {
-    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
-    let file_len = file.metadata()?.len();
-    let mut r = BufReader::new(file);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{path:?}: bad magic (not a CREST dataset file)");
+    load_typed(path).map_err(|e| anyhow!("loading {path:?}: {e}"))
+}
+
+/// Read a dataset written by [`save`], with the typed failure taxonomy.
+///
+/// Every malformed-content condition — zero-length or short file, bad
+/// magic, implausible or over-cap dims, a payload that disagrees with
+/// the header — classifies as [`ArtifactError::Corrupt`], never a
+/// panic; I/O failures keep their transient/fatal distinction from the
+/// facade. The header dims are validated against the file's actual size
+/// before the payload is decoded, so truncated or padded files fail
+/// with one clear error.
+pub fn load_typed(path: &Path) -> Result<Dataset, ArtifactError> {
+    let bytes = artifact_io::read_with(Site::CacheLoad, path, READ_STRICT)?;
+    const HEADER: usize = 8 + 24;
+    if bytes.len() < HEADER {
+        return Err(ArtifactError::corrupt(format!(
+            "{path:?}: {} bytes on disk is shorter than the {HEADER}-byte header",
+            bytes.len()
+        )));
     }
-    let mut u64buf = [0u8; 8];
-    let mut read_u64 = |r: &mut BufReader<File>| -> Result<u64> {
-        r.read_exact(&mut u64buf)?;
-        Ok(u64::from_le_bytes(u64buf))
-    };
-    let n64 = read_u64(&mut r)?;
-    let d64 = read_u64(&mut r)?;
-    let classes = read_u64(&mut r)? as usize;
-    let elems = match n64.checked_mul(d64) {
-        Some(e) => e,
-        None => bail!("{path:?}: implausible dims n={n64} d={d64}"),
+    if &bytes[..8] != MAGIC {
+        return Err(ArtifactError::corrupt(format!(
+            "{path:?}: bad magic (not a CREST dataset file)"
+        )));
+    }
+    let u64_at = |i: usize| u64::from_le_bytes(bytes[i..i + 8].try_into().unwrap());
+    let (n64, d64, classes) = (u64_at(8), u64_at(16), u64_at(24) as usize);
+    let Some(elems) = n64.checked_mul(d64) else {
+        return Err(ArtifactError::corrupt(format!("{path:?}: implausible dims n={n64} d={d64}")));
     };
     if elems > MAX_RESIDENT_ELEMS {
-        bail!(
+        return Err(ArtifactError::corrupt(format!(
             "{path:?}: n*d = {elems} exceeds the monolithic cache cap ({MAX_RESIDENT_ELEMS}); \
              pack corpora this large into the sharded format (`crest pack`) instead"
-        );
+        )));
     }
     match expected_len(n64, d64) {
-        Some(want) if want == file_len => {}
-        Some(want) => bail!(
-            "{path:?}: {file_len} bytes on disk, expected {want} for n={n64} d={d64} \
-             (truncated or corrupt cache)"
-        ),
-        None => bail!("{path:?}: implausible dims n={n64} d={d64}"),
+        Some(want) if want == bytes.len() as u64 => {}
+        Some(want) => {
+            return Err(ArtifactError::corrupt(format!(
+                "{path:?}: {} bytes on disk, expected {want} for n={n64} d={d64} \
+                 (truncated or corrupt cache)",
+                bytes.len()
+            )))
+        }
+        None => {
+            return Err(ArtifactError::corrupt(format!(
+                "{path:?}: implausible dims n={n64} d={d64}"
+            )))
+        }
     }
     let (n, d) = (n64 as usize, d64 as usize);
+    let (x_at, y_at) = (HEADER, HEADER + n * d * 4);
+    let (diff_at, noisy_at, cluster_at) = (y_at + n * 4, y_at + n * 8, y_at + n * 9);
 
-    let mut xbuf = vec![0u8; n * d * 4];
-    r.read_exact(&mut xbuf)?;
-    let x: Vec<f32> = xbuf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    let x: Vec<f32> = bytes[x_at..y_at]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let y: Vec<i32> = bytes[y_at..diff_at]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let difficulty: Vec<f32> = bytes[diff_at..noisy_at]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let is_noisy: Vec<bool> = bytes[noisy_at..cluster_at].iter().map(|&b| b != 0).collect();
+    let cluster: Vec<u32> = bytes[cluster_at..cluster_at + n * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
 
-    let mut ybuf = vec![0u8; n * 4];
-    r.read_exact(&mut ybuf)?;
-    let y: Vec<i32> = ybuf.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
-
-    let mut dbuf = vec![0u8; n * 4];
-    r.read_exact(&mut dbuf)?;
-    let difficulty: Vec<f32> =
-        dbuf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
-
-    let mut nbuf = vec![0u8; n];
-    r.read_exact(&mut nbuf)?;
-    let is_noisy: Vec<bool> = nbuf.iter().map(|&b| b != 0).collect();
-
-    let mut cbuf = vec![0u8; n * 4];
-    r.read_exact(&mut cbuf)?;
-    let cluster: Vec<u32> =
-        cbuf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
-
-    Ok(Dataset::from_mat(MatF32::from_vec(n, d, x)?, y, classes, difficulty, is_noisy, cluster))
+    let mat = MatF32::from_vec(n, d, x)
+        .map_err(|e| ArtifactError::corrupt(format!("{path:?}: {e}")))?;
+    Ok(Dataset::from_mat(mat, y, classes, difficulty, is_noisy, cluster))
 }
 
 #[cfg(test)]
@@ -237,6 +256,45 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn edge_cases_classify_as_corrupt_not_panic() {
+        // zero-length file: shorter than the header
+        let path = tmpfile("zerolen.bin");
+        std::fs::write(&path, b"").unwrap();
+        let err = load_typed(&path).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+        assert!(err.to_string().contains("header"), "{err}");
+        std::fs::remove_file(&path).ok();
+
+        // truncated payload: header parses, size check catches it
+        let ds = generate(&small(7)).train;
+        let path = tmpfile("typed_trunc.bin");
+        save(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        let err = load_typed(&path).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+        assert!(err.to_string().contains("expected"), "{err}");
+        std::fs::remove_file(&path).ok();
+
+        // oversized header dims vs the n*d cap
+        let path = tmpfile("typed_huge.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(1u64 << 33).to_le_bytes()); // n
+        bytes.extend_from_slice(&8u64.to_le_bytes()); // d
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // classes
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_typed(&path).unwrap_err();
+        assert!(matches!(err, ArtifactError::Corrupt(_)), "{err}");
+        assert!(err.to_string().contains("cap"), "{err}");
+        std::fs::remove_file(&path).ok();
+
+        // a missing file is NOT corruption — it keeps the I/O taxonomy
+        let err = load_typed(&tmpfile("never_written.bin")).unwrap_err();
+        assert!(err.is_not_found(), "{err}");
     }
 
     #[test]

@@ -23,7 +23,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 pub use dataset::{Dataset, Splits};
-pub use store::{default_store, set_default_store, DataStore, MemStore, MmapStore, StoreKind};
+pub use store::{
+    default_store, set_default_store, DataStore, MemStore, MmapStore, StoreFallback, StoreKind,
+};
 pub use synth::{generate, generate_packed, SynthSpec};
 
 /// Root directory for lazily packed corpora: `CREST_PACK_DIR` (or a

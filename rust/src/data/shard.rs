@@ -18,10 +18,18 @@
 //! there is no element-count cap: shards are what `crest pack` and the
 //! ≥10^6-example scaling scenario write.
 //!
-//! All sizes are validated against file metadata up front, so truncated
-//! or corrupt packs fail loudly at load instead of mid-training.
+//! All sizes are validated against file metadata up front, and packs
+//! written by this version carry a per-file CRC-32 table in `meta.json`
+//! that is verified on every load — so a truncated, torn, or bit-flipped
+//! pack fails loudly at load (naming the file at fault) instead of
+//! handing garbage floats to training. Packs from older versions carry
+//! no `crc` key and load without content verification. All filesystem
+//! touches go through [`crate::util::artifact_io`] (the `IO-FACADE`
+//! contract), so fault injection and bounded transient retry cover the
+//! whole surface.
 
-use std::io::{BufWriter, Read, Write};
+use std::fs::File;
+use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -29,6 +37,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::data::dataset::{Dataset, Splits};
 use crate::data::store::MmapStore;
+use crate::util::artifact_io::{self, Crc32, READ_STRICT, WRITE_STRICT};
+use crate::util::faults::Site;
 use crate::util::json::Json;
 
 /// Default rows per shard file (`8192 * d * 4` bytes per shard).
@@ -54,36 +64,55 @@ pub struct PackMeta {
     pub shard_rows: usize,
     /// Number of shard files.
     pub n_shards: usize,
+    /// Per-file CRC-32 table (`labels.bin` + each shard), in file-name
+    /// order. Empty for packs written before integrity landed — those
+    /// load without content verification.
+    pub crc: Vec<(String, u32)>,
 }
 
 impl PackMeta {
     fn new(n: usize, d: usize, classes: usize, shard_rows: usize) -> PackMeta {
         let n_shards = if n == 0 { 0 } else { (n + shard_rows - 1) / shard_rows };
-        PackMeta { n, d, classes, shard_rows, n_shards }
+        PackMeta { n, d, classes, shard_rows, n_shards, crc: Vec::new() }
+    }
+
+    /// The recorded CRC-32 for `file`, if the pack carries one.
+    pub fn crc_of(&self, file: &str) -> Option<u32> {
+        self.crc.iter().find(|(name, _)| name == file).map(|&(_, c)| c)
     }
 
     fn save(&self, dir: &Path) -> Result<()> {
+        let mut crc = Json::obj();
+        for (name, c) in &self.crc {
+            crc = crc.set(name, *c as usize);
+        }
         let j = Json::obj()
             .set("version", 1usize)
             .set("n", self.n)
             .set("d", self.d)
             .set("classes", self.classes)
             .set("shard_rows", self.shard_rows)
-            .set("n_shards", self.n_shards);
-        std::fs::write(dir.join("meta.json"), j.to_string_pretty())?;
+            .set("n_shards", self.n_shards)
+            .set("crc", crc);
+        // meta.json is the pack's commit record (`is_packed` keys off its
+        // existence), so it publishes atomically with full fsync ordering
+        let path = dir.join("meta.json");
+        artifact_io::publish_with(Site::PackWrite, &path, j.to_string_pretty().as_bytes(), WRITE_STRICT)
+            .with_context(|| format!("publishing {path:?}"))?;
         Ok(())
     }
 
     /// Read and validate a packed split's `meta.json`.
     pub fn load(dir: &Path) -> Result<PackMeta> {
         let path = dir.join("meta.json");
-        let text = std::fs::read_to_string(&path).with_context(|| format!("read {path:?}"))?;
+        let text = artifact_io::read_to_string_with(Site::PackRead, &path, READ_STRICT)
+            .with_context(|| format!("read {path:?}"))?;
         let j = Json::parse(&text).with_context(|| format!("parse {path:?}"))?;
         let version = j.req("version")?.as_usize()?;
         if version != 1 {
             bail!("{path:?}: unsupported pack version {version}");
         }
-        let meta = PackMeta::new(
+        let mut meta = PackMeta::new(
             j.req("n")?.as_usize()?,
             j.req("d")?.as_usize()?,
             j.req("classes")?.as_usize()?,
@@ -94,6 +123,15 @@ impl PackMeta {
         }
         if meta.shard_rows == 0 && meta.n > 0 {
             bail!("{path:?}: shard_rows must be positive");
+        }
+        if let Some(crc) = j.get("crc") {
+            for (name, val) in crc.as_obj()? {
+                let c = val.as_usize()?;
+                if c > u32::MAX as usize {
+                    bail!("{path:?}: crc entry {name} out of range");
+                }
+                meta.crc.push((name.clone(), c as u32));
+            }
         }
         Ok(meta)
     }
@@ -110,7 +148,7 @@ pub struct SplitWriter {
     dir: PathBuf,
     meta: PackMeta,
     rows_written: usize,
-    shard: Option<BufWriter<std::fs::File>>,
+    shard: Option<(BufWriter<File>, Crc32)>,
     shard_idx: usize,
     rows_in_shard: usize,
     y: Vec<i32>,
@@ -131,7 +169,7 @@ impl SplitWriter {
         if shard_rows == 0 {
             bail!("shard_rows must be positive");
         }
-        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        artifact_io::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
         Ok(SplitWriter {
             dir: dir.to_path_buf(),
             meta: PackMeta::new(n, d, classes, shard_rows),
@@ -163,19 +201,21 @@ impl SplitWriter {
         }
         if self.shard.is_none() {
             let path = self.dir.join(shard_file(self.shard_idx));
-            let f = std::fs::File::create(&path).with_context(|| format!("create {path:?}"))?;
-            self.shard = Some(BufWriter::new(f));
+            let f = artifact_io::create(Site::PackWrite, &path)
+                .with_context(|| format!("create {path:?}"))?;
+            self.shard = Some((BufWriter::new(f), Crc32::new()));
             self.rows_in_shard = 0;
         }
-        let w = self.shard.as_mut().expect("shard writer opened above");
+        let (w, crc) = self.shard.as_mut().expect("shard writer opened above");
         for v in row {
-            w.write_all(&v.to_le_bytes())?;
+            let bytes = v.to_le_bytes();
+            w.write_all(&bytes)?;
+            crc.update(&bytes);
         }
         self.rows_in_shard += 1;
         self.rows_written += 1;
         if self.rows_in_shard == self.meta.shard_rows {
-            self.shard.take().expect("open shard").flush()?;
-            self.shard_idx += 1;
+            self.close_shard()?;
         }
         self.y.push(y);
         self.difficulty.push(difficulty);
@@ -184,31 +224,53 @@ impl SplitWriter {
         Ok(())
     }
 
-    /// Flush the tail shard, write `labels.bin` and `meta.json`.
+    /// Flush + fsync the open shard and record its CRC in the meta table.
+    fn close_shard(&mut self) -> Result<()> {
+        if let Some((mut w, crc)) = self.shard.take() {
+            w.flush()?;
+            artifact_io::sync_file(w.get_ref())?;
+            self.meta.crc.push((shard_file(self.shard_idx), crc.finish()));
+            self.shard_idx += 1;
+        }
+        Ok(())
+    }
+
+    /// Seal the pack: flush + fsync the tail shard and `labels.bin`,
+    /// then atomically publish `meta.json` — the commit record carrying
+    /// every file's CRC-32.
     pub fn finish(mut self) -> Result<PackMeta> {
         if self.rows_written != self.meta.n {
             bail!("pack got {} of the declared {} rows", self.rows_written, self.meta.n);
         }
-        if let Some(mut w) = self.shard.take() {
-            w.flush()?;
-        }
+        self.close_shard()?;
         let path = self.dir.join("labels.bin");
-        let mut w = BufWriter::new(std::fs::File::create(&path)?);
-        w.write_all(LABELS_MAGIC)?;
-        w.write_all(&(self.meta.n as u64).to_le_bytes())?;
+        let f = artifact_io::create(Site::PackWrite, &path)
+            .with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        let mut crc = Crc32::new();
+        let mut put = |w: &mut BufWriter<File>, crc: &mut Crc32, bytes: &[u8]| -> Result<()> {
+            w.write_all(bytes)?;
+            crc.update(bytes);
+            Ok(())
+        };
+        put(&mut w, &mut crc, LABELS_MAGIC)?;
+        put(&mut w, &mut crc, &(self.meta.n as u64).to_le_bytes())?;
         for v in &self.y {
-            w.write_all(&v.to_le_bytes())?;
+            put(&mut w, &mut crc, &v.to_le_bytes())?;
         }
         for v in &self.difficulty {
-            w.write_all(&v.to_le_bytes())?;
+            put(&mut w, &mut crc, &v.to_le_bytes())?;
         }
         for &b in &self.is_noisy {
-            w.write_all(&[b as u8])?;
+            put(&mut w, &mut crc, &[b as u8])?;
         }
         for v in &self.cluster {
-            w.write_all(&v.to_le_bytes())?;
+            put(&mut w, &mut crc, &v.to_le_bytes())?;
         }
         w.flush()?;
+        artifact_io::sync_file(w.get_ref())?;
+        self.meta.crc.push(("labels.bin".to_string(), crc.finish()));
+        self.meta.crc.sort();
         self.meta.save(&self.dir)?;
         Ok(self.meta)
     }
@@ -247,45 +309,65 @@ pub fn pack_splits(splits: &Splits, root: &Path, shard_rows: usize) -> Result<()
 
 // ------------------------------------------------------------------- read
 
-fn load_labels(dir: &Path, n: usize) -> Result<(Vec<i32>, Vec<f32>, Vec<bool>, Vec<u32>)> {
+fn load_labels(
+    dir: &Path,
+    n: usize,
+    want_crc: Option<u32>,
+) -> Result<(Vec<i32>, Vec<f32>, Vec<bool>, Vec<u32>)> {
     let path = dir.join("labels.bin");
-    let file = std::fs::File::open(&path).with_context(|| format!("open {path:?}"))?;
-    let want = 16 + (n as u64) * 13;
-    let got = file.metadata()?.len();
-    if got != want {
-        bail!("{path:?}: {got} bytes on disk, expected {want} for n={n}");
+    let bytes = artifact_io::read_with(Site::PackRead, &path, READ_STRICT)
+        .with_context(|| format!("read {path:?}"))?;
+    let want = 16 + n * 13;
+    if bytes.len() != want {
+        bail!("{path:?}: {} bytes on disk, expected {want} for n={n}", bytes.len());
     }
-    let mut r = std::io::BufReader::new(file);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != LABELS_MAGIC {
+    if let Some(c) = want_crc {
+        let got = artifact_io::crc32(&bytes);
+        if got != c {
+            bail!("{path:?}: CRC-32 mismatch ({got:08x} on disk, meta says {c:08x})");
+        }
+    }
+    if &bytes[..8] != LABELS_MAGIC {
         bail!("{path:?}: bad magic (not a CREST shard-labels file)");
     }
-    let mut nbuf = [0u8; 8];
-    r.read_exact(&mut nbuf)?;
-    if u64::from_le_bytes(nbuf) != n as u64 {
+    if u64::from_le_bytes(bytes[8..16].try_into().unwrap()) != n as u64 {
         bail!("{path:?}: row count disagrees with meta.json");
     }
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    let y = buf.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
-    r.read_exact(&mut buf)?;
-    let difficulty =
-        buf.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
-    let mut bbuf = vec![0u8; n];
-    r.read_exact(&mut bbuf)?;
-    let is_noisy = bbuf.iter().map(|&b| b != 0).collect();
-    r.read_exact(&mut buf)?;
-    let cluster = buf.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    let (y_at, diff_at, noisy_at, cluster_at) = (16, 16 + n * 4, 16 + n * 8, 16 + n * 9);
+    let y = bytes[y_at..y_at + n * 4]
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let difficulty = bytes[diff_at..diff_at + n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let is_noisy = bytes[noisy_at..noisy_at + n].iter().map(|&b| b != 0).collect();
+    let cluster = bytes[cluster_at..cluster_at + n * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
     Ok((y, difficulty, is_noisy, cluster))
 }
 
 /// Load one packed split as an mmap-backed [`Dataset`]. Features stay on
-/// disk behind [`MmapStore`]; labels and provenance load into RAM.
+/// disk behind [`MmapStore`]; labels and provenance load into RAM. When
+/// `meta.json` carries a CRC table, every file's content is verified
+/// here — a flipped byte anywhere in the pack fails the load naming the
+/// file, it never reaches training as garbage floats.
 pub fn load_packed(dir: &Path) -> Result<Dataset> {
     let meta = PackMeta::load(dir)?;
-    let (y, difficulty, is_noisy, cluster) = load_labels(dir, meta.n)?;
+    let (y, difficulty, is_noisy, cluster) = load_labels(dir, meta.n, meta.crc_of("labels.bin"))?;
     let paths: Vec<PathBuf> = (0..meta.n_shards).map(|s| dir.join(shard_file(s))).collect();
+    for (s, path) in paths.iter().enumerate() {
+        let Some(want) = meta.crc_of(&shard_file(s)) else { continue };
+        let bytes = artifact_io::read_with(Site::PackRead, path, READ_STRICT)
+            .with_context(|| format!("read {path:?}"))?;
+        let got = artifact_io::crc32(&bytes);
+        if got != want {
+            bail!("shard {path:?}: CRC-32 mismatch ({got:08x} on disk, meta says {want:08x})");
+        }
+    }
     let store = MmapStore::open(&paths, meta.n, meta.d, meta.shard_rows.max(1))
         .with_context(|| format!("opening shards under {dir:?}"))?;
     Ok(Dataset::with_store(Arc::new(store), y, meta.classes, difficulty, is_noisy, cluster))

@@ -21,11 +21,14 @@
 //! go through [`crate::data::prepare_splits`].
 
 use std::fmt;
+use std::fs::File;
 use std::sync::{OnceLock, RwLock};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::tensor::MatF32;
+use crate::util::artifact_io;
+use crate::util::faults::Site;
 
 /// Feature storage of one split: `n` rows of `d` f32 features, served
 /// through block reads.
@@ -115,6 +118,7 @@ mod mm {
     //! no `libc`/`memmap2`, so the two syscalls are declared directly;
     //! constants are the Linux/BSD values for a read-only private mapping.
     use std::ffi::c_void;
+    use std::fs::File;
     use std::os::unix::io::AsRawFd;
 
     extern "C" {
@@ -148,7 +152,7 @@ mod mm {
     impl Mapping {
         /// Map `len` bytes of `file` read-only; `None` when the kernel
         /// refuses (callers fall back to pread).
-        pub fn map(file: &std::fs::File, len: usize) -> Option<Mapping> {
+        pub fn map(file: &File, len: usize) -> Option<Mapping> {
             if len == 0 {
                 return None;
             }
@@ -194,12 +198,13 @@ enum ShardData {
     /// Memory-mapped read-only (the fast path).
     #[cfg(unix)]
     Mapped(mm::Mapping),
-    /// Positional reads (`pread`) when the kernel refuses to map.
+    /// Positional reads (`pread`) when the kernel refuses to map — the
+    /// first rung of the degradation ladder.
     #[cfg(unix)]
-    Pread(std::fs::File),
-    /// Whole shard resident in RAM — the non-unix fallback (also keeps
-    /// the store usable where neither mmap nor pread exists).
-    #[allow(dead_code)]
+    Pread(File),
+    /// Whole shard resident in RAM — the non-unix default, and the
+    /// second degradation rung (`CREST_STORE_FALLBACK=mem`) for hosts
+    /// where pread on the held fd is also failing.
     Resident(Vec<f32>),
 }
 
@@ -207,6 +212,9 @@ enum ShardData {
 struct Shard {
     data: ShardData,
     rows: usize,
+    /// Kept so a mid-run read failure can name the artifact at fault.
+    #[cfg_attr(not(unix), allow(dead_code))]
+    path: std::path::PathBuf,
 }
 
 /// Sharded on-disk store: fixed-size row chunks, one raw-f32le file per
@@ -245,35 +253,62 @@ impl MmapStore {
         for (s, path) in paths.iter().enumerate() {
             let rows = shard_rows.min(n - s * shard_rows);
             let want = (rows as u64) * (d as u64) * 4;
-            let file = std::fs::File::open(path)
-                .map_err(|e| anyhow::anyhow!("open shard {path:?}: {e}"))?;
+            let file = artifact_io::open(Site::PackRead, path)
+                .with_context(|| format!("open shard {path:?}"))?;
             let got = file.metadata()?.len();
             if got != want {
                 bail!(
                     "shard {path:?}: {got} bytes on disk, expected {want} ({rows} rows x {d} f32)"
                 );
             }
-            shards.push(Shard { data: Self::shard_data(file, want as usize), rows });
+            shards.push(Shard {
+                data: Self::shard_data(file, want as usize, path)?,
+                rows,
+                path: path.clone(),
+            });
         }
         Ok(MmapStore { n, d, shard_rows, shards })
     }
 
+    /// Serve one shard, walking the degradation ladder: mmap → pread →
+    /// (with `CREST_STORE_FALLBACK=mem`) a resident copy. The `mmap-map`
+    /// fault site simulates a kernel that refuses the mapping.
     #[cfg(unix)]
-    fn shard_data(file: std::fs::File, len: usize) -> ShardData {
-        match mm::Mapping::map(&file, len) {
-            Some(m) => ShardData::Mapped(m),
-            None => ShardData::Pread(file),
+    fn shard_data(file: File, len: usize, path: &std::path::Path) -> Result<ShardData> {
+        let refused = crate::util::faults::draw(Site::MmapMap).is_some();
+        if !refused {
+            if let Some(m) = mm::Mapping::map(&file, len) {
+                return Ok(ShardData::Mapped(m));
+            }
+        }
+        match crate::runtime_config::RuntimeConfig::current().store_fallback {
+            Some(StoreFallback::Mem) => {
+                log::warn!(
+                    "mmap refused for {}: loading shard resident (CREST_STORE_FALLBACK=mem)",
+                    path.display()
+                );
+                Ok(ShardData::Resident(Self::read_resident(file, len)?))
+            }
+            _ => {
+                log::warn!("mmap refused for {}: degrading to pread", path.display());
+                Ok(ShardData::Pread(file))
+            }
         }
     }
 
     #[cfg(not(unix))]
-    fn shard_data(mut file: std::fs::File, len: usize) -> ShardData {
+    fn shard_data(file: File, len: usize, path: &std::path::Path) -> Result<ShardData> {
+        let _ = path;
+        Ok(ShardData::Resident(Self::read_resident(file, len)?))
+    }
+
+    fn read_resident(mut file: File, len: usize) -> Result<Vec<f32>> {
         use std::io::Read;
         let mut bytes = vec![0u8; len];
-        file.read_exact(&mut bytes).expect("shard size validated above");
+        file.read_exact(&mut bytes)?;
         let mut vals = vec![0.0f32; len / 4];
         decode_f32le(&bytes, &mut vals);
-        ShardData::Resident(vals)
+        Ok(vals)
     }
 
     /// Rows per shard (the pack-time chunking).
@@ -296,8 +331,13 @@ impl MmapStore {
             ShardData::Pread(file) => {
                 use std::os::unix::fs::FileExt;
                 let mut bytes = vec![0u8; rows * d * 4];
-                file.read_exact_at(&mut bytes, (row0 * d * 4) as u64)
-                    .expect("shard size validated at open");
+                // `read_exact_at` already retries `Interrupted`; the size
+                // was validated at open, so a failure here is real I/O
+                // breakage mid-run — fail naming the shard, never hand
+                // garbage floats to the trainer
+                if let Err(e) = file.read_exact_at(&mut bytes, (row0 * d * 4) as u64) {
+                    panic!("shard {}: pread failed mid-run: {e}", shard.path.display());
+                }
                 decode_f32le(&bytes, &mut out[..rows * d]);
             }
             ShardData::Resident(vals) => {
@@ -379,6 +419,36 @@ impl StoreKind {
         match self {
             StoreKind::Mem => "mem",
             StoreKind::Mmap => "mmap",
+        }
+    }
+}
+
+/// Degradation target when the kernel refuses a shard mapping
+/// (`CREST_STORE_FALLBACK`). Either rung serves bitwise-identical
+/// bytes — the knob trades memory for syscall traffic, never results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreFallback {
+    /// Positional reads on the held fd (the default rung).
+    Pread,
+    /// Load the affected shard fully resident.
+    Mem,
+}
+
+impl StoreFallback {
+    /// Parse a CLI/env value (`pread` | `mem`).
+    pub fn parse(s: &str) -> Result<StoreFallback> {
+        match s {
+            "pread" => Ok(StoreFallback::Pread),
+            "mem" => Ok(StoreFallback::Mem),
+            other => bail!("unknown store fallback {other:?} (expected pread|mem)"),
+        }
+    }
+
+    /// Canonical name (`"pread"` / `"mem"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            StoreFallback::Pread => "pread",
+            StoreFallback::Mem => "mem",
         }
     }
 }

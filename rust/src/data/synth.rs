@@ -329,7 +329,12 @@ pub fn generate_packed(spec: &SynthSpec, root: &Path, shard_rows: usize) -> Resu
     }
 
     match std::fs::rename(&tmp, root) {
-        Ok(()) => Ok(()),
+        Ok(()) => {
+            // land the rename itself: a crash right after this point must
+            // not roll the directory entry back to the temp name
+            crate::util::artifact_io::sync_parent(root);
+            Ok(())
+        }
         Err(e) => {
             let _ = std::fs::remove_dir_all(&tmp);
             if shard.is_packed(root) {

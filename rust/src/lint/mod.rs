@@ -72,6 +72,10 @@ pub const RULES: &[RuleInfo] = &[
         summary: "env reads only in runtime_config.rs + registered readers; CREST_* documented",
     },
     RuleInfo {
+        id: "IO-FACADE",
+        summary: "artifact modules do file I/O only through the artifact_io facade",
+    },
+    RuleInfo {
         id: "ISA-DISPATCH",
         summary: "#[target_feature] bodies private to kernel.rs behind the KernelIsa dispatch",
     },
@@ -126,6 +130,7 @@ impl Linter {
         rules::det_fma(&cx, &allowable, &mut out);
         rules::unsafe_scope(&cx, &allowable, &mut out);
         rules::env_hygiene(&cx, &self.readme, &allowable, &mut out);
+        rules::io_facade(&cx, &allowable, &mut out);
         rules::isa_dispatch(&cx, &allowable, &mut out);
         rules::lint_allow(&cx, &allowable, &mut out);
         out.sort_by(|a, b| (a.line, a.rule, &a.message).cmp(&(b.line, b.rule, &b.message)));

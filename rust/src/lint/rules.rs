@@ -105,6 +105,24 @@ pub const ENV_READERS: &[EnvReader] = &[
 const ENV_READS: &[&str] = &["var", "var_os", "vars", "vars_os"];
 const ENV_WRITES: &[&str] = &["set_var", "remove_var"];
 
+/// Exact files whose artifact I/O must go through the `artifact_io`
+/// facade (fault injection, bounded retries, CRC stamping, fsync
+/// discipline). An exact list, not a prefix: e.g. `data/synth.rs` writes
+/// packs via `SplitWriter`, whose I/O already lives in `data/shard.rs`.
+pub const ARTIFACT_MODULES: &[&str] = &[
+    "rust/src/coreset/embed_cache.rs",
+    "rust/src/data/cache.rs",
+    "rust/src/data/shard.rs",
+    "rust/src/data/store.rs",
+    "rust/src/sweep/store.rs",
+];
+
+/// The registered facade scopes: the files where raw `std::fs` calls
+/// *implement* artifact I/O, and therefore the only places they may
+/// appear. (Listed for the record and CONTRACTS.md; the scan exempts
+/// them by construction since they are not artifact modules.)
+pub const IO_FACADE_SCOPES: &[&str] = &["rust/src/util/artifact_io.rs"];
+
 /// Parsed `// lint:allow(RULE-ID) reason` directive.
 #[derive(Debug)]
 struct Allow {
@@ -659,6 +677,52 @@ fn crest_names(s: &str) -> Vec<String> {
         i = end;
     }
     names
+}
+
+/// IO-FACADE: artifact modules perform file I/O only through the
+/// `artifact_io` facade — no raw `fs::` / `File::` call-sites outside
+/// `use` declarations, attributes, and test code. The facade is where
+/// fault injection, bounded retries, CRC verification, and the
+/// fsync-before-rename discipline live; a raw call-site silently
+/// bypasses all four. One finding per line (`std::fs::File::open`
+/// matches twice).
+pub(crate) fn io_facade(cx: &FileCx, allowable: &[&str], out: &mut Vec<Diagnostic>) {
+    if !in_modules(cx.rel, ARTIFACT_MODULES) || IO_FACADE_SCOPES.contains(&cx.rel) {
+        return;
+    }
+    let toks = &cx.lx.toks;
+    let mut last_line = 0;
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "fs" && t.text != "File") {
+            continue;
+        }
+        let qualified =
+            toks.get(i + 1).is_some_and(|n| n.kind == Kind::Punct && n.text == "::");
+        if !qualified {
+            continue; // type positions (`BufWriter<File>`) are fine
+        }
+        let line = t.line;
+        if cx.use_tok[i] || cx.attr_tok[i] || cx.is_test_line(line) {
+            continue;
+        }
+        if line == last_line || cx.suppressed("IO-FACADE", line, allowable) {
+            continue;
+        }
+        last_line = line;
+        push(
+            out,
+            cx.rel,
+            line,
+            "IO-FACADE",
+            format!(
+                "raw `{}::` call in an artifact module bypasses the artifact_io \
+                 facade (fault injection, retries, CRC, fsync); route the I/O \
+                 through util::artifact_io or justify with \
+                 `// lint:allow(IO-FACADE) reason`",
+                t.text
+            ),
+        );
+    }
 }
 
 /// ISA-DISPATCH: `#[target_feature]` bodies live only in `kernel.rs`,

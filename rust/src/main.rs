@@ -335,20 +335,34 @@ fn cmd_sweep(ctx: &Ctx) -> Result<()> {
         spec.jobs = j.parse().context("parsing --jobs")?;
     }
 
-    let outcome = sweep::run(&spec)?;
+    let outcome = sweep::run_collect(&spec)?;
+    // extras appear only when nonzero, keeping the common-case summary
+    // line stable for scripts that grep it
+    let mut extra = String::new();
+    if outcome.recovered > 0 {
+        extra.push_str(&format!(", {} recovered from corrupt checkpoints", outcome.recovered));
+    }
+    if !outcome.failed.is_empty() {
+        extra.push_str(&format!(", {} failed", outcome.failed.len()));
+    }
     println!(
-        "# sweep: {} cells ({} executed, {} restored from checkpoints)",
-        outcome.cells.len(),
+        "# sweep: {} cells ({} executed, {} restored from checkpoints{extra})",
+        outcome.cells.len() + outcome.failed.len(),
         outcome.n_executed(),
         outcome.n_restored()
     );
+    for f in &outcome.failed {
+        eprintln!("# failed cell {}: {}", f.key.label(), f.error);
+    }
     print!("{}", aggregate_markdown(&outcome.rows));
     if let Some(out) = p.get("out") {
         let records: Vec<Json> = outcome.rows.iter().map(|r| r.to_json()).collect();
         let n = bench_util::append_json_records(Path::new(out), records)?;
         println!("appended {n} aggregate rows to {out}");
     }
-    Ok(())
+    // the partial table above still helps diagnosis, but the exit code
+    // must say the grid is incomplete
+    outcome.ensure_complete()
 }
 
 // ------------------------------------------------------------- bench-diff

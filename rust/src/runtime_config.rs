@@ -1,13 +1,14 @@
 //! Typed runtime configuration — the single place the `CREST_*` process
 //! environment is read.
 //!
-//! Six knobs tune how a process executes without changing *what* any
+//! Eight knobs tune how a process executes without changing *what* any
 //! experiment computes: worker threads, the opt-in gram cache, the on-disk
 //! gradient-embedding cache, the default data-store backend, the packed
-//! corpus root, and the kernel ISA escape hatch (`CREST_FORCE_SCALAR`,
+//! corpus root, the kernel ISA escape hatch (`CREST_FORCE_SCALAR`,
 //! which pins the scalar microkernels even where AVX2 is available — the
 //! SIMD and scalar paths are bitwise-identical, so this only trades
-//! speed). Historically each consumer read its own env var; every such
+//! speed), the fault-injection schedule (`CREST_FAULTS`, testing only),
+//! and the mmap degradation target (`CREST_STORE_FALLBACK`). Historically each consumer read its own env var; every such
 //! site now goes through [`RuntimeConfig::current`], which merges
 //! session-level overrides (installed by
 //! [`Experiment::builder().runtime_config(..)`](crate::api::ExperimentBuilder::runtime_config)
@@ -25,7 +26,7 @@ use std::path::PathBuf;
 use std::sync::RwLock;
 
 use crate::coreset::facility::gram_cap;
-use crate::data::StoreKind;
+use crate::data::{StoreFallback, StoreKind};
 
 /// One env var's name and its one-line role (drives `--help` text and the
 /// README-coverage test).
@@ -36,6 +37,8 @@ pub const VARS: &[(&str, &str)] = &[
     ("CREST_DATA_STORE", "default dataset backend: mem | mmap"),
     ("CREST_PACK_DIR", "root directory for packed (sharded) corpora"),
     ("CREST_FORCE_SCALAR", "pin the scalar kernel path (disable SIMD dispatch): 1/true"),
+    ("CREST_FAULTS", "fault-injection schedule for artifact I/O (testing only)"),
+    ("CREST_STORE_FALLBACK", "degradation target when mmap fails: pread | mem"),
 ];
 
 /// Typed snapshot of the runtime knobs. `None` everywhere means "use the
@@ -57,6 +60,12 @@ pub struct RuntimeConfig {
     /// Pin the scalar kernel ISA (`CREST_FORCE_SCALAR`); `None` = runtime
     /// feature dispatch picks the widest supported ISA.
     pub force_scalar: Option<bool>,
+    /// Fault-injection schedule for artifact I/O (`CREST_FAULTS`);
+    /// `None` = injection off. See [`crate::util::faults`].
+    pub faults: Option<String>,
+    /// Degradation target when `mmap(2)` refuses a shard mapping
+    /// (`CREST_STORE_FALLBACK`); `None` = pread.
+    pub store_fallback: Option<StoreFallback>,
 }
 
 /// Session-level overrides installed by [`set_session`]. Fields left `None`
@@ -69,6 +78,8 @@ fn session() -> &'static RwLock<RuntimeConfig> {
         data_store: None,
         pack_dir: None,
         force_scalar: None,
+        faults: None,
+        store_fallback: None,
     });
     &SESSION
 }
@@ -86,6 +97,9 @@ impl RuntimeConfig {
             pack_dir: var("CREST_PACK_DIR").map(PathBuf::from),
             force_scalar: var("CREST_FORCE_SCALAR")
                 .map(|v| v != "0" && !v.eq_ignore_ascii_case("false")),
+            faults: var("CREST_FAULTS"),
+            store_fallback: var("CREST_STORE_FALLBACK")
+                .and_then(|v| StoreFallback::parse(&v).ok()),
         }
     }
 
@@ -106,6 +120,8 @@ impl RuntimeConfig {
             data_store: self.data_store.or(fallback.data_store),
             pack_dir: self.pack_dir.clone().or(fallback.pack_dir),
             force_scalar: self.force_scalar.or(fallback.force_scalar),
+            faults: self.faults.clone().or(fallback.faults),
+            store_fallback: self.store_fallback.or(fallback.store_fallback),
         }
     }
 
@@ -134,6 +150,8 @@ pub fn set_session(rc: RuntimeConfig) {
     *session().write().unwrap() = rc;
     // after the session cell is updated so refresh_isa sees the new value
     crate::kernel::refresh_isa();
+    // ...and so the fault injector re-samples its schedule
+    crate::util::faults::refresh();
 }
 
 #[cfg(test)]

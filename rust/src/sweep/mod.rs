@@ -24,13 +24,13 @@ pub mod grid;
 pub mod store;
 
 pub use grid::{CellKey, SweepGrid};
-pub use store::CheckpointStore;
+pub use store::{CheckpointLoad, CheckpointStore};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::api::{Experiment, SelectionStrategy};
 use crate::data::{prepare_splits, Splits};
@@ -86,13 +86,28 @@ pub struct CellResult {
     pub executed: bool,
 }
 
+/// One cell that failed (an error or a panic) while the rest of the
+/// grid completed.
+#[derive(Debug, Clone)]
+pub struct CellFailure {
+    /// Identity of the failed cell.
+    pub key: CellKey,
+    /// Rendered error (or panic payload) text.
+    pub error: String,
+}
+
 /// Everything a finished sweep produced.
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
-    /// Per-cell results in grid order.
+    /// Per-cell results in grid order (failed cells excluded).
     pub cells: Vec<CellResult>,
     /// Mean±std rows per (variant, method, budget) group, in grid order.
     pub rows: Vec<AggregateRow>,
+    /// Cells whose execution errored or panicked, in grid order.
+    pub failed: Vec<CellFailure>,
+    /// Cells whose checkpoint existed but could not be trusted (corrupt,
+    /// torn, or identity-mismatched) and were therefore recomputed.
+    pub recovered: usize,
 }
 
 impl SweepOutcome {
@@ -104,6 +119,17 @@ impl SweepOutcome {
     /// Cells restored from checkpoints.
     pub fn n_restored(&self) -> usize {
         self.cells.len() - self.n_executed()
+    }
+
+    /// Error out when any cell failed, listing every failed cell — the
+    /// strict contract behind [`run`].
+    pub fn ensure_complete(&self) -> Result<()> {
+        if self.failed.is_empty() {
+            return Ok(());
+        }
+        let list: Vec<String> =
+            self.failed.iter().map(|f| format!("  {}: {}", f.key.label(), f.error)).collect();
+        bail!("{} sweep cell(s) failed:\n{}", self.failed.len(), list.join("\n"))
     }
 }
 
@@ -146,21 +172,46 @@ pub fn run_cell(key: &CellKey, epochs_full: usize, artifact_root: &Path) -> Resu
     run_cell_on(key, epochs_full, SelectionStrategy::Exact, artifact_root, cell_splits(key)?)
 }
 
+/// Render a panic payload for a failed-cell record. Panics raised by
+/// `panic!("...")` carry a `&str` or `String`; anything else (a
+/// `panic_any` value) gets a fixed placeholder.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("opaque panic payload")
+}
+
 /// Execute a sweep: restore completed cells from the checkpoint store,
 /// schedule the missing ones over the thread pool, persist each as it
-/// finishes, and aggregate. Errors propagate after the whole batch has
-/// been attempted, so completed cells are checkpointed even when a
-/// sibling cell fails — the failed sweep resumes instead of restarting.
-pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
+/// finishes, and aggregate. Like [`run`], but a failing cell — an error
+/// or a panic — becomes a [`CellFailure`] record in the outcome instead
+/// of an error: the rest of the grid completes, its cells stay
+/// checkpointed, and the caller decides whether a partial table is
+/// acceptable. Only infrastructure errors (an unopenable checkpoint
+/// directory) fail the call itself.
+pub fn run_collect(spec: &SweepSpec) -> Result<SweepOutcome> {
     let cells = spec.grid.cells();
     let store = match &spec.checkpoint_dir {
         Some(dir) => Some(CheckpointStore::open(dir)?),
         None => None,
     };
     let sel = spec.selection.to_string();
+    let mut recovered = 0usize;
     let mut restored: Vec<Option<RunReport>> = cells
         .iter()
-        .map(|k| store.as_ref().and_then(|s| s.load(k, spec.epochs_full, &sel)))
+        .map(|k| match &store {
+            None => None,
+            Some(s) => match s.load_outcome(k, spec.epochs_full, &sel) {
+                CheckpointLoad::Restored(r) => Some(*r),
+                CheckpointLoad::Missing => None,
+                CheckpointLoad::Recovered => {
+                    recovered += 1;
+                    None
+                }
+            },
+        })
         .collect();
     let todo: Vec<usize> = (0..cells.len()).filter(|&i| restored[i].is_none()).collect();
     log::info!(
@@ -201,31 +252,57 @@ pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
         }
         j => j,
     };
-    let fresh: Vec<Result<RunReport>> = Pool::new(jobs).map(todo.len(), |t| {
+    let fresh: Vec<Result<RunReport, String>> = Pool::new(jobs).map(todo.len(), |t| {
         let key = &cells[todo[t]];
         log::info!("sweep cell {} ({}/{})", key.label(), t + 1, todo.len());
-        let splits = splits_for(key)?;
-        let report = run_cell_on(key, spec.epochs_full, spec.selection, &spec.artifact_root, splits)
-            .with_context(|| format!("sweep cell {}", key.label()))?;
+        // A panicking cell must not take the grid down with it: catch the
+        // unwind here, inside the worker, and turn it into a failed-cell
+        // record. AssertUnwindSafe is sound because a failed cell's
+        // captures are never reused — its only output is the error string.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || -> Result<RunReport> {
+                let splits = splits_for(key)?;
+                run_cell_on(key, spec.epochs_full, spec.selection, &spec.artifact_root, splits)
+            },
+        ));
+        let report = match caught {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => return Err(format!("{e:#}")),
+            Err(payload) => return Err(format!("panicked: {}", panic_text(&*payload))),
+        };
         if let Some(s) = &store {
-            s.save(key, spec.epochs_full, &sel, &report)
-                .with_context(|| format!("checkpointing {}", key.label()))?;
+            // A lost checkpoint only costs recomputation on the next
+            // resume; the in-memory report is intact, so the cell counts
+            // as completed.
+            if let Err(e) = s.save(key, spec.epochs_full, &sel, &report) {
+                log::warn!("checkpoint save failed for {}: {e:#}", key.label());
+            }
         }
         Ok(report)
     });
 
     let mut fresh_iter = fresh.into_iter();
     let mut out: Vec<CellResult> = Vec::with_capacity(cells.len());
+    let mut failed: Vec<CellFailure> = Vec::new();
     for (i, key) in cells.into_iter().enumerate() {
-        let (report, executed) = match restored[i].take() {
-            Some(r) => (r, false),
-            None => {
-                let r = fresh_iter.next().expect("sweep bookkeeping: missing fresh result")?;
-                (r, true)
-            }
-        };
-        out.push(CellResult { key, report, executed });
+        match restored[i].take() {
+            Some(report) => out.push(CellResult { key, report, executed: false }),
+            None => match fresh_iter.next().expect("sweep bookkeeping: missing fresh result") {
+                Ok(report) => out.push(CellResult { key, report, executed: true }),
+                Err(error) => failed.push(CellFailure { key, error }),
+            },
+        }
     }
     let rows = agg::aggregate(&out);
-    Ok(SweepOutcome { cells: out, rows })
+    Ok(SweepOutcome { cells: out, rows, failed, recovered })
+}
+
+/// Execute a sweep with strict semantics: any failed cell fails the call,
+/// listing every failed cell. Errors propagate after the whole batch has
+/// been attempted, so completed cells are checkpointed even when a
+/// sibling cell fails — the failed sweep resumes instead of restarting.
+pub fn run(spec: &SweepSpec) -> Result<SweepOutcome> {
+    let outcome = run_collect(spec)?;
+    outcome.ensure_complete()?;
+    Ok(outcome)
 }

@@ -2,17 +2,28 @@
 //!
 //! Layout: `<dir>/<variant>__<method>__s<seed>__b<budget>.json`, each file
 //! holding `{"key": ..., "epochs_full": ..., "selection": ..., "report":
-//! ...}`. Writes go through a temp file + rename, so an interrupted sweep
-//! never leaves a half-written checkpoint that could poison a resume;
-//! unreadable or key-mismatched files are treated as missing and the cell
-//! simply re-executes.
+//! ..., "crc": ...}`. Writes publish through the
+//! [`artifact_io`](crate::util::artifact_io) facade (temp file + fsync +
+//! rename + parent fsync), so neither an interrupted sweep nor a power
+//! cut can leave a half-written checkpoint under the real name; the
+//! `crc` field is a CRC-32 of the serialized report, verified on load.
+//!
+//! A cell's checkpoint [`load_outcome`](CheckpointStore::load_outcome)
+//! is three-valued: `Restored` (verified, identity matches), `Missing`
+//! (no file — the quiet first-run case), or `Recovered` (a file exists
+//! but is corrupt, unparseable, CRC-mismatched, or belongs to a
+//! different experiment identity). `Recovered` logs one warning naming
+//! the file and the cell re-executes; the sweep summary surfaces the
+//! count so silent corruption can't hide inside "0 restored".
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::report::RunReport;
-use crate::util::json::{self, Json};
+use crate::util::artifact_io::{self, READ_DETECTED, WRITE_DEGRADED};
+use crate::util::faults::Site;
+use crate::util::json::Json;
 
 use super::grid::CellKey;
 
@@ -22,10 +33,23 @@ pub struct CheckpointStore {
     dir: PathBuf,
 }
 
+/// Classified result of a checkpoint lookup.
+#[derive(Debug)]
+pub enum CheckpointLoad {
+    /// A verified checkpoint with matching identity: use the report.
+    Restored(Box<RunReport>),
+    /// No checkpoint file — the quiet first-run case.
+    Missing,
+    /// A file exists but could not be trusted (corrupt, unparseable,
+    /// CRC mismatch, or different experiment identity). A warning
+    /// naming the file has been logged; the cell must re-execute.
+    Recovered,
+}
+
 impl CheckpointStore {
     /// Open the store at `dir`, creating the directory if needed.
     pub fn open(dir: &Path) -> Result<CheckpointStore> {
-        std::fs::create_dir_all(dir)
+        artifact_io::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
         Ok(CheckpointStore { dir: dir.to_path_buf() })
     }
@@ -36,34 +60,81 @@ impl CheckpointStore {
     }
 
     /// Load the completed report for `key`, or `None` when the cell has no
-    /// readable checkpoint matching the key, the requested `epochs_full`,
-    /// and the `selection` strategy (canonical display form) — the caller
-    /// re-executes it. `epochs_full` is part of the identity because it
-    /// sets the budget denominator, and `selection` because an approximate
-    /// strategy changes what the cell trained on; a cell checkpointed
-    /// under either knob set differently is a different experiment and
-    /// must not be restored silently. Checkpoints written before the
-    /// selection layer carry no `selection` field and read as `"exact"`.
-    /// (Artifact-root manifest overrides are *not* tracked; point
-    /// different roots at different checkpoint dirs.)
+    /// trustworthy checkpoint matching the key, the requested
+    /// `epochs_full`, and the `selection` strategy — the compatibility
+    /// wrapper over [`CheckpointStore::load_outcome`].
     pub fn load(&self, key: &CellKey, epochs_full: usize, selection: &str) -> Option<RunReport> {
-        let text = std::fs::read_to_string(self.path(key)).ok()?;
-        let doc = Json::parse(&text).ok()?;
-        let stored = CellKey::from_json(doc.get("key")?).ok()?;
-        if stored != *key || doc.get("epochs_full")?.as_usize().ok()? != epochs_full {
-            return None;
+        match self.load_outcome(key, epochs_full, selection) {
+            CheckpointLoad::Restored(r) => Some(*r),
+            CheckpointLoad::Missing | CheckpointLoad::Recovered => None,
         }
-        let stored_sel = match doc.get("selection") {
-            Some(v) => v.as_str().ok()?.to_string(),
-            None => "exact".to_string(),
-        };
-        if stored_sel != selection {
-            return None;
-        }
-        RunReport::from_json(doc.get("report")?).ok()
     }
 
-    /// Persist a completed cell atomically (temp file + rename).
+    /// Classified checkpoint lookup. `epochs_full` is part of the
+    /// identity because it sets the budget denominator, and `selection`
+    /// (canonical display form) because an approximate strategy changes
+    /// what the cell trained on; a cell checkpointed under either knob
+    /// set differently is a different experiment and must not be
+    /// restored silently. Checkpoints written before the selection layer
+    /// carry no `selection` field and read as `"exact"`; checkpoints
+    /// written before integrity landed carry no `crc` field and skip
+    /// content verification. (Artifact-root manifest overrides are *not*
+    /// tracked; point different roots at different checkpoint dirs.)
+    pub fn load_outcome(
+        &self,
+        key: &CellKey,
+        epochs_full: usize,
+        selection: &str,
+    ) -> CheckpointLoad {
+        let path = self.path(key);
+        let recovered = |reason: &str| {
+            log::warn!(
+                "checkpoint {}: {reason}; the cell will be recomputed",
+                path.display()
+            );
+            CheckpointLoad::Recovered
+        };
+        let text = match artifact_io::read_to_string_with(Site::CkptRead, &path, READ_DETECTED) {
+            Ok(text) => text,
+            Err(e) if e.is_not_found() => return CheckpointLoad::Missing,
+            Err(e) => return recovered(&e.to_string()),
+        };
+        let Ok(doc) = Json::parse(&text) else {
+            return recovered("unparseable JSON");
+        };
+        let Some(report_doc) = doc.get("report") else {
+            return recovered("no report field");
+        };
+        if let Some(crc_doc) = doc.get("crc") {
+            let stored = crc_doc.as_usize().ok();
+            let got = artifact_io::crc32(report_doc.to_string_pretty().as_bytes()) as usize;
+            if stored != Some(got) {
+                return recovered("report CRC-32 mismatch (torn or flipped bytes)");
+            }
+        }
+        let identity_ok = (|| {
+            let stored = CellKey::from_json(doc.get("key")?).ok()?;
+            if stored != *key || doc.get("epochs_full")?.as_usize().ok()? != epochs_full {
+                return None;
+            }
+            let stored_sel = match doc.get("selection") {
+                Some(v) => v.as_str().ok()?.to_string(),
+                None => "exact".to_string(),
+            };
+            (stored_sel == selection).then_some(())
+        })()
+        .is_some();
+        if !identity_ok {
+            return recovered("identity mismatch (different key, epochs_full, or selection)");
+        }
+        match RunReport::from_json(report_doc) {
+            Ok(r) => CheckpointLoad::Restored(Box::new(r)),
+            Err(_) => recovered("malformed report"),
+        }
+    }
+
+    /// Persist a completed cell atomically (temp file + fsync + rename +
+    /// parent fsync), stamping the serialized report's CRC-32.
     pub fn save(
         &self,
         key: &CellKey,
@@ -71,18 +142,30 @@ impl CheckpointStore {
         selection: &str,
         report: &RunReport,
     ) -> Result<()> {
+        let report_doc = report.to_json();
+        let crc = artifact_io::crc32(report_doc.to_string_pretty().as_bytes());
         let doc = Json::obj()
             .set("key", key.to_json())
             .set("epochs_full", epochs_full)
             .set("selection", selection)
-            .set("report", report.to_json());
-        json::write_atomic(&self.path(key), &doc)
-            .with_context(|| format!("checkpointing {}", key.label()))
+            .set("report", report_doc)
+            .set("crc", crc as usize);
+        let path = self.path(key);
+        artifact_io::publish_with(
+            Site::CkptWrite,
+            &path,
+            doc.to_string_pretty().as_bytes(),
+            WRITE_DEGRADED,
+        )
+        .with_context(|| format!("checkpointing {}", key.label()))
     }
 
     /// Delete one cell's checkpoint; returns whether a file was removed.
     pub fn remove(&self, key: &CellKey) -> bool {
-        std::fs::remove_file(self.path(key)).is_ok()
+        let path = self.path(key);
+        let existed = path.exists();
+        let _ = artifact_io::remove_file(&path);
+        existed
     }
 }
 
@@ -90,6 +173,7 @@ impl CheckpointStore {
 mod tests {
     use super::*;
     use crate::config::Method;
+    use crate::util::json;
 
     fn tmp_store(tag: &str) -> CheckpointStore {
         let dir = std::env::temp_dir().join(format!("crest-ckpt-{tag}-{}", std::process::id()));
@@ -124,6 +208,7 @@ mod tests {
         let store = tmp_store("roundtrip");
         let k = key(1);
         assert!(store.load(&k, 2, "exact").is_none(), "empty store has no checkpoint");
+        assert!(matches!(store.load_outcome(&k, 2, "exact"), CheckpointLoad::Missing));
         let r = report(0.75);
         store.save(&k, 2, "exact", &r).unwrap();
         let restored = store.load(&k, 2, "exact").expect("checkpoint restores");
@@ -134,6 +219,7 @@ mod tests {
         );
         // a different epochs-full setting is a different experiment
         assert!(store.load(&k, 60, "exact").is_none(), "epochs_full mismatch must not restore");
+        assert!(matches!(store.load_outcome(&k, 60, "exact"), CheckpointLoad::Recovered));
     }
 
     #[test]
@@ -148,6 +234,23 @@ mod tests {
         // corrupt file -> missing, not an error
         std::fs::write(store.path(&k), "{truncated").unwrap();
         assert!(store.load(&k, 2, "exact").is_none(), "corrupt checkpoint must read as missing");
+        assert!(matches!(store.load_outcome(&k, 2, "exact"), CheckpointLoad::Recovered));
+    }
+
+    #[test]
+    fn crc_detects_flipped_report_bytes() {
+        let store = tmp_store("crc");
+        let k = key(1);
+        store.save(&k, 2, "exact", &report(0.625)).unwrap();
+        let path = store.path(&k);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit inside the serialized report's accuracy digits —
+        // the document stays parseable, only the CRC can catch it
+        let at = bytes.windows(5).position(|w| w == b"0.625").expect("acc in doc") + 2;
+        bytes[at] ^= 0x01; // '6' -> '7'
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(store.load(&k, 2, "exact").is_none(), "flipped byte must not restore");
+        assert!(matches!(store.load_outcome(&k, 2, "exact"), CheckpointLoad::Recovered));
     }
 
     #[test]
@@ -158,7 +261,8 @@ mod tests {
         assert!(store.load(&k, 2, "exact").is_none(), "selection mismatch must not restore");
         assert!(store.load(&k, 2, "clustered:64").is_some(), "matching strategy restores");
         // checkpoints from before the selection layer carry no selection
-        // field and must restore as exact only
+        // field (and none from before integrity carry a crc) and must
+        // restore as exact only
         let legacy = Json::obj()
             .set("key", k.to_json())
             .set("epochs_full", 2usize)

@@ -1,0 +1,504 @@
+//! The artifact-I/O facade: every filesystem touch on an artifact path
+//! goes through here.
+//!
+//! The five artifact surfaces (`data/shard.rs`, `data/store.rs`,
+//! `data/cache.rs`, `sweep/store.rs`, `coreset/embed_cache.rs`) never
+//! call `std::fs` directly — the `IO-FACADE` lint rule enforces it.
+//! Routing through one module buys three things at once:
+//!
+//! 1. **Fault injection** — the [`faults`] injector wraps each call, so
+//!    the chaos suite can attack every artifact path from one choke
+//!    point. Call sites pass a *kind menu* declaring which fault kinds
+//!    their consumer can absorb: a path whose reader CRC-verifies and
+//!    recomputes may be handed flipped bytes ([`READ_DETECTED`]); a
+//!    path whose corruption would change results only ever sees
+//!    transient/short faults ([`READ_STRICT`]). Injected transient
+//!    faults fail only the first attempt, so the bounded retry below
+//!    always converges — both properties together are what keep every
+//!    committed chaos schedule bitwise identity-preserving.
+//! 2. **Typed errors + bounded retry** — [`ArtifactError`] separates
+//!    retry-worthy conditions from corruption from hard failures, and
+//!    transient errors (`Interrupted`/`WouldBlock`) are retried a fixed
+//!    [`ATTEMPTS`] times with *no wall-clock sleeps* (CONTRACTS.md
+//!    DET-CLOCK covers the calling modules): retry happens on the next
+//!    loop iteration or not at all.
+//! 3. **Crash-safe publication** — [`publish_with`] is the single
+//!    tmp+rename implementation: tmp is fsynced before the rename and
+//!    the parent directory after, so a power cut can lose an update but
+//!    can never publish a partial artifact.
+//!
+//! Integrity is end-to-end, not per-call: writers append a hand-rolled
+//! [`Crc32`] to their formats (shard-pack `meta.json`, checkpoint
+//! cells, embed-cache entries) and readers verify on every load, so a
+//! torn or flipped artifact is *detected* — never silently loaded.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{ErrorKind, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::faults::{self, Draw, Site};
+
+/// Fixed attempt budget for transient-error retry. Deterministic by
+/// construction: a plain loop bound, no backoff clock.
+pub const ATTEMPTS: usize = 4;
+
+// ---------------------------------------------------------------- errors
+
+/// Typed failure taxonomy for artifact I/O. The variant tells the
+/// caller what to *do*: retry ([`Transient`](ArtifactError::Transient)
+/// — already exhausted by the facade's own bounded loop by the time the
+/// caller sees it), discard-and-recompute
+/// ([`Corrupt`](ArtifactError::Corrupt)), or propagate
+/// ([`Fatal`](ArtifactError::Fatal)).
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// A retryable condition (`Interrupted`/`WouldBlock`) that survived
+    /// the facade's [`ATTEMPTS`]-bounded retry loop.
+    Transient(std::io::Error),
+    /// Content failed validation — size, magic, or CRC. Retrying cannot
+    /// help; the artifact must be discarded or the run must stop.
+    Corrupt(String),
+    /// Everything else: missing file, permissions, disk full, ...
+    Fatal(std::io::Error),
+}
+
+impl ArtifactError {
+    /// Build a [`Corrupt`](ArtifactError::Corrupt) error from a message.
+    pub fn corrupt(msg: impl Into<String>) -> ArtifactError {
+        ArtifactError::Corrupt(msg.into())
+    }
+
+    /// True when the underlying cause is a missing file — callers that
+    /// treat absence as a cache miss branch on this, not on the text.
+    pub fn is_not_found(&self) -> bool {
+        matches!(
+            self,
+            ArtifactError::Transient(e) | ArtifactError::Fatal(e)
+                if e.kind() == ErrorKind::NotFound
+        )
+    }
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Transient(e) => {
+                write!(f, "transient I/O failure ({ATTEMPTS} attempts exhausted): {e}")
+            }
+            ArtifactError::Corrupt(m) => write!(f, "corrupt artifact: {m}"),
+            ArtifactError::Fatal(e) => write!(f, "I/O failure: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Transient(e) | ArtifactError::Fatal(e) => Some(e),
+            ArtifactError::Corrupt(_) => None,
+        }
+    }
+}
+
+// ------------------------------------------------------------- fault kinds
+
+/// The concrete fault shapes the injector can impose on one operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The first attempt fails with `ErrorKind::Interrupted`; the retry
+    /// loop recovers. Exercises the bounded-retry path.
+    Transient,
+    /// The first `read` call returns fewer bytes than requested; the
+    /// read loop must complete the tail. Exercises short-read handling.
+    ShortRead,
+    /// One bit of the returned payload is flipped. Exercises CRC /
+    /// validation detection; only offered to consumers that recover.
+    FlipByte,
+    /// A partial tmp file is written and the rename never happens —
+    /// the aftermath of a crash mid-publish. The operation reports
+    /// failure; the destination is untouched.
+    Torn,
+}
+
+/// Menu for readers that CRC-verify and degrade (checkpoint cells,
+/// embed-cache entries): corruption is detectable, so flips are fair.
+pub const READ_DETECTED: &[FaultKind] =
+    &[FaultKind::Transient, FaultKind::ShortRead, FaultKind::FlipByte];
+
+/// Menu for readers whose corruption would have to fail the run (pack
+/// payloads on the training path): recoverable kinds only.
+pub const READ_STRICT: &[FaultKind] = &[FaultKind::Transient, FaultKind::ShortRead];
+
+/// Menu for publishers whose loss is tolerated (checkpoints, cache
+/// entries — the value is recomputed next time).
+pub const WRITE_DEGRADED: &[FaultKind] = &[FaultKind::Transient, FaultKind::Torn];
+
+/// Menu for publishers that must land for the run to proceed.
+pub const WRITE_STRICT: &[FaultKind] = &[FaultKind::Transient];
+
+fn pick(d: Draw, menu: &[FaultKind]) -> Option<(FaultKind, Draw)> {
+    if menu.is_empty() {
+        return None;
+    }
+    Some((menu[(d.a % menu.len() as u64) as usize], d))
+}
+
+fn is_transient(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::Interrupted | ErrorKind::WouldBlock)
+}
+
+fn injected_interrupt() -> std::io::Error {
+    std::io::Error::new(ErrorKind::Interrupted, "injected transient fault")
+}
+
+// ------------------------------------------------------------------ reads
+
+/// Read a whole artifact with the given fault menu. Transient errors
+/// (real or injected) are retried up to [`ATTEMPTS`] times; short reads
+/// are completed by the chunk loop; an injected flip corrupts the
+/// returned bytes (the caller's validation is expected to catch it).
+pub fn read_with(site: Site, path: &Path, menu: &[FaultKind]) -> Result<Vec<u8>, ArtifactError> {
+    let (mut fail_first, mut short_cap, mut flip) = (false, None, None);
+    if let Some((kind, d)) = faults::draw(site).and_then(|d| pick(d, menu)) {
+        match kind {
+            FaultKind::Transient => fail_first = true,
+            FaultKind::ShortRead => short_cap = Some((d.b % (32 * 1024)) as usize + 1),
+            FaultKind::FlipByte => flip = Some(d.b),
+            FaultKind::Torn => {} // write-only kind; read menus never carry it
+        }
+        log::debug!("fault[{}]: {kind:?} at {}", site.name(), path.display());
+    }
+    let mut last = None;
+    for attempt in 0..ATTEMPTS {
+        if attempt == 0 && fail_first {
+            last = Some(injected_interrupt());
+            continue;
+        }
+        match read_once(path, short_cap.take()) {
+            Ok(mut bytes) => {
+                if let Some(word) = flip {
+                    if !bytes.is_empty() {
+                        let bit = (word % (bytes.len() as u64 * 8)) as usize;
+                        bytes[bit / 8] ^= 1 << (bit % 8);
+                    }
+                }
+                return Ok(bytes);
+            }
+            Err(e) if is_transient(&e) => last = Some(e),
+            Err(e) => return Err(ArtifactError::Fatal(e)),
+        }
+    }
+    Err(ArtifactError::Transient(last.unwrap_or_else(injected_interrupt)))
+}
+
+/// [`read_with`] + UTF-8 decode; invalid UTF-8 (e.g. a flipped byte in
+/// a JSON document) classifies as [`ArtifactError::Corrupt`].
+pub fn read_to_string_with(
+    site: Site,
+    path: &Path,
+    menu: &[FaultKind],
+) -> Result<String, ArtifactError> {
+    let bytes = read_with(site, path, menu)?;
+    String::from_utf8(bytes)
+        .map_err(|_| ArtifactError::corrupt(format!("{}: invalid UTF-8", path.display())))
+}
+
+fn read_once(path: &Path, short_cap: Option<usize>) -> std::io::Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    let mut out = Vec::new();
+    let mut cap = short_cap;
+    let mut buf = [0u8; 64 * 1024];
+    let mut spurious = 0;
+    loop {
+        // an injected short read caps only the first chunk; the loop
+        // then finishes the tail like any honest reader must
+        let want = cap.take().map_or(buf.len(), |c| c.clamp(1, buf.len()));
+        match f.read(&mut buf[..want]) {
+            Ok(0) => return Ok(out),
+            Ok(n) => out.extend_from_slice(&buf[..n]),
+            Err(e) if e.kind() == ErrorKind::Interrupted && spurious < ATTEMPTS => spurious += 1,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Open an artifact for reading (streaming consumers: the mmap store,
+/// the dataset cache). Injection and retry cover the open itself; what
+/// the caller streams afterwards is its own contract.
+pub fn open(site: Site, path: &Path) -> Result<File, ArtifactError> {
+    retry_file(site, path, File::open)
+}
+
+/// Create an artifact for streaming writes (shard/labels files). The
+/// caller owns flushing and must [`sync_file`] before treating the
+/// artifact as durable.
+pub fn create(site: Site, path: &Path) -> Result<File, ArtifactError> {
+    retry_file(site, path, |p| File::create(p))
+}
+
+fn retry_file(
+    site: Site,
+    path: &Path,
+    op: impl Fn(&Path) -> std::io::Result<File>,
+) -> Result<File, ArtifactError> {
+    let fail_first = matches!(
+        faults::draw(site).and_then(|d| pick(d, WRITE_STRICT)),
+        Some((FaultKind::Transient, _))
+    );
+    let mut last = None;
+    for attempt in 0..ATTEMPTS {
+        if attempt == 0 && fail_first {
+            last = Some(injected_interrupt());
+            continue;
+        }
+        match op(path) {
+            Ok(f) => return Ok(f),
+            Err(e) if is_transient(&e) => last = Some(e),
+            Err(e) => return Err(ArtifactError::Fatal(e)),
+        }
+    }
+    Err(ArtifactError::Transient(last.unwrap_or_else(injected_interrupt)))
+}
+
+// ----------------------------------------------------------- publication
+
+/// Atomically publish `bytes` at `path`: write `path.<pid>.tmp`, fsync
+/// the tmp file, rename over the destination, fsync the parent
+/// directory. A crash at any point leaves either the old artifact or
+/// the new one — never a partial file under the real name. An injected
+/// [`FaultKind::Torn`] simulates exactly that crash: partial tmp bytes,
+/// no rename, error returned.
+pub fn publish_with(
+    site: Site,
+    path: &Path,
+    bytes: &[u8],
+    menu: &[FaultKind],
+) -> Result<(), ArtifactError> {
+    let tmp = tmp_path(path);
+    let mut fail_first = false;
+    if let Some((kind, d)) = faults::draw(site).and_then(|d| pick(d, menu)) {
+        log::debug!("fault[{}]: {kind:?} at {}", site.name(), path.display());
+        match kind {
+            FaultKind::Transient => fail_first = true,
+            FaultKind::Torn => {
+                let keep = if bytes.is_empty() { 0 } else { (d.b % bytes.len() as u64) as usize };
+                let _ = std::fs::write(&tmp, &bytes[..keep]);
+                return Err(ArtifactError::Fatal(std::io::Error::other(format!(
+                    "injected torn write at {} (partial tmp, no rename)",
+                    path.display()
+                ))));
+            }
+            FaultKind::ShortRead | FaultKind::FlipByte => {} // read-only kinds
+        }
+    }
+    let mut last = None;
+    for attempt in 0..ATTEMPTS {
+        if attempt == 0 && fail_first {
+            last = Some(injected_interrupt());
+            continue;
+        }
+        match publish_once(&tmp, path, bytes) {
+            Ok(()) => return Ok(()),
+            Err(e) if is_transient(&e) => last = Some(e),
+            Err(e) => return Err(ArtifactError::Fatal(e)),
+        }
+    }
+    Err(ArtifactError::Transient(last.unwrap_or_else(injected_interrupt)))
+}
+
+/// [`publish_with`] outside any fault site — for non-artifact callers
+/// (the bench trajectory writer behind `json::write_atomic`) that still
+/// want the fsync-correct tmp+rename sequence.
+pub fn publish_raw(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    publish_once(&tmp_path(path), path, bytes)
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(format!(".{}.tmp", std::process::id()));
+    PathBuf::from(name)
+}
+
+fn publish_once(tmp: &Path, path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let mut f = File::create(tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    std::fs::rename(tmp, path)?;
+    sync_parent(path);
+    Ok(())
+}
+
+/// fsync a streamed artifact before it is treated as durable.
+pub fn sync_file(f: &File) -> std::io::Result<()> {
+    f.sync_all()
+}
+
+/// fsync the parent directory of a just-renamed artifact so the
+/// directory entry itself is durable. Best-effort: a filesystem that
+/// refuses directory fsync (or a non-unix target) degrades to a no-op —
+/// the rename's atomicity is not affected, only its durability.
+pub fn sync_parent(path: &Path) {
+    #[cfg(unix)]
+    {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = path;
+    }
+}
+
+// -------------------------------------------------------------- utilities
+
+/// Remove an artifact; absence counts as success (removal is how
+/// consumers *evict*, and eviction is idempotent).
+pub fn remove_file(path: &Path) -> Result<(), ArtifactError> {
+    match std::fs::remove_file(path) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(ArtifactError::Fatal(e)),
+    }
+}
+
+/// Create a directory tree for artifact storage.
+pub fn create_dir_all(path: &Path) -> Result<(), ArtifactError> {
+    std::fs::create_dir_all(path).map_err(ArtifactError::Fatal)
+}
+
+/// Directory listing in sorted order (deterministic iteration for
+/// eviction sweeps). I/O errors on individual entries are skipped.
+pub fn read_dir_sorted(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    out.sort();
+    Ok(out)
+}
+
+// ------------------------------------------------------------------- crc32
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+/// Incremental IEEE CRC-32 (the `cksum`/zlib polynomial), hand-rolled
+/// because the offline registry has no checksum crate. Streaming
+/// writers feed it as they write so integrity costs no second pass.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
+impl Crc32 {
+    /// Fresh hasher.
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb `bytes`.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = CRC_TABLE[((self.state ^ b as u32) & 0xFF) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    /// The digest of everything absorbed so far (does not consume).
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::faults::Site;
+
+    // injection behaviour is exercised in `rust/tests/faults.rs`, which
+    // owns the process-global fault state behind a serializing mutex;
+    // the unit tests here stay injection-free so they can run in
+    // parallel with the rest of the lib suite.
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("crest-aio-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_vector() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        let mut h = Crc32::new();
+        h.update(b"1234");
+        h.update(b"56789");
+        assert_eq!(h.finish(), 0xCBF4_3926, "incremental == one-shot");
+    }
+
+    #[test]
+    fn publish_then_read_round_trips_and_leaves_no_tmp() {
+        let d = tdir("pub");
+        let p = d.join("artifact.bin");
+        publish_with(Site::CkptWrite, &p, b"payload", WRITE_STRICT).unwrap();
+        assert_eq!(read_with(Site::CkptRead, &p, READ_STRICT).unwrap(), b"payload");
+        let leftovers = read_dir_sorted(&d).unwrap();
+        assert_eq!(leftovers, vec![p.clone()], "no tmp residue");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_classifies_as_not_found() {
+        let e = read_with(Site::CkptRead, Path::new("/nonexistent/x.bin"), READ_STRICT)
+            .unwrap_err();
+        assert!(e.is_not_found(), "{e}");
+        assert!(matches!(e, ArtifactError::Fatal(_)));
+    }
+
+    #[test]
+    fn remove_is_idempotent() {
+        let d = tdir("rm");
+        let p = d.join("gone.bin");
+        std::fs::write(&p, b"x").unwrap();
+        remove_file(&p).unwrap();
+        remove_file(&p).unwrap(); // second removal: absence is success
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn error_display_names_the_taxonomy() {
+        let c = ArtifactError::corrupt("bad crc");
+        assert!(c.to_string().contains("corrupt artifact"));
+        let t = ArtifactError::Transient(injected_interrupt());
+        assert!(t.to_string().contains("attempts exhausted"));
+    }
+}

@@ -1,0 +1,296 @@
+//! Seeded, dependency-free fault injector for artifact I/O.
+//!
+//! Every artifact read/write in the repo funnels through the
+//! [`artifact_io`](crate::util::artifact_io) facade, and the facade asks
+//! this module — per *site class* — whether the current operation should
+//! fail, and how. A schedule is named by `CREST_FAULTS` (or the
+//! `RuntimeConfig::faults` session knob): a comma-separated spec like
+//!
+//! ```text
+//! seed=7,ckpt-write=0.5,embed-read=0.25,mmap-map=1.0
+//! ```
+//!
+//! naming per-site injection probabilities in `[0, 1]`. Decisions are a
+//! pure function of `(seed, site, per-site counter)` via a splitmix64
+//! stream: the counter is a per-site atomic that increments on every
+//! draw, so a fixed spec replays the same decision sequence bitwise in a
+//! single-threaded run, and the same decision *multiset* under parallel
+//! scheduling. No wall clock, no OS randomness, no dependencies — the
+//! injector is as deterministic as the code it attacks, which is what
+//! lets the chaos suite (`rust/tests/faults.rs`) assert that
+//! `deterministic_json` survives a schedule bit-for-bit.
+//!
+//! The spec is sampled from [`RuntimeConfig`] lazily on first draw and
+//! re-sampled by [`refresh`] (called from
+//! [`set_session`](crate::runtime_config::set_session)), *not* on every
+//! draw — the disabled fast path must stay one relaxed atomic load
+//! because `draw` sits on block-read hot paths.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Once, RwLock};
+
+use crate::runtime_config::RuntimeConfig;
+
+/// Site classes the injector can target. Each names one artifact-I/O
+/// surface; the spec keys are the kebab-case [`Site::name`] strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// Reads of packed-corpus artifacts (`meta.json`, `labels.bin`,
+    /// shard payload verification).
+    PackRead,
+    /// Packed-corpus writes (shard/labels creation, `meta.json` publish).
+    PackWrite,
+    /// Sweep checkpoint cell loads.
+    CkptRead,
+    /// Sweep checkpoint cell publishes.
+    CkptWrite,
+    /// Monolithic dataset-cache loads (`data/cache.rs`).
+    CacheLoad,
+    /// Monolithic dataset-cache saves.
+    CacheStore,
+    /// Gradient-embedding cache entry loads.
+    EmbedRead,
+    /// Gradient-embedding cache entry publishes.
+    EmbedWrite,
+    /// `mmap(2)` establishment in `MmapStore` (injection refuses the
+    /// map, forcing the pread / in-memory degradation ladder).
+    MmapMap,
+}
+
+/// Number of site classes (sizes the probability/counter tables).
+pub const N_SITES: usize = 9;
+
+/// Every site, in spec/table order.
+pub const ALL_SITES: [Site; N_SITES] = [
+    Site::PackRead,
+    Site::PackWrite,
+    Site::CkptRead,
+    Site::CkptWrite,
+    Site::CacheLoad,
+    Site::CacheStore,
+    Site::EmbedRead,
+    Site::EmbedWrite,
+    Site::MmapMap,
+];
+
+impl Site {
+    /// The kebab-case spec key for this site.
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::PackRead => "pack-read",
+            Site::PackWrite => "pack-write",
+            Site::CkptRead => "ckpt-read",
+            Site::CkptWrite => "ckpt-write",
+            Site::CacheLoad => "cache-load",
+            Site::CacheStore => "cache-store",
+            Site::EmbedRead => "embed-read",
+            Site::EmbedWrite => "embed-write",
+            Site::MmapMap => "mmap-map",
+        }
+    }
+
+    fn idx(self) -> usize {
+        ALL_SITES.iter().position(|&s| s == self).expect("site in table")
+    }
+
+    fn parse(key: &str) -> Option<Site> {
+        ALL_SITES.into_iter().find(|s| s.name() == key)
+    }
+}
+
+/// One positive injection decision. The two words are independent
+/// splitmix64 outputs derived from the decision hash; the facade uses
+/// them to pick the fault kind and its parameter (cut offset, flipped
+/// bit, ...) so a schedule fixes not just *whether* but *how* each
+/// operation fails.
+#[derive(Debug, Clone, Copy)]
+pub struct Draw {
+    /// Kind-selection word.
+    pub a: u64,
+    /// Parameter word (offset / bit index / byte count).
+    pub b: u64,
+}
+
+struct State {
+    /// The spec string this state was parsed from (for change detection).
+    spec: String,
+    seed: u64,
+    prob: [f64; N_SITES],
+    counters: [AtomicU64; N_SITES],
+}
+
+fn state_cell() -> &'static RwLock<Option<State>> {
+    static CELL: RwLock<Option<State>> = RwLock::new(None);
+    &CELL
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn init_once() {
+    static INIT: Once = Once::new();
+    INIT.call_once(refresh);
+}
+
+/// splitmix64 — the same finalizer the RNG substrate uses; one round is
+/// a full-avalanche mix of its input.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Parse a `CREST_FAULTS` spec into `(seed, per-site probabilities)`.
+/// Grammar: comma-separated `key=value` pairs; `seed=<u64>` (default 0)
+/// plus `<site-name>=<prob in [0,1]>` entries. Unknown keys and
+/// out-of-range probabilities are errors — a chaos schedule that
+/// silently drops a typoed site would "pass" by testing nothing.
+pub fn parse_spec(spec: &str) -> Result<(u64, [f64; N_SITES]), String> {
+    let mut seed = 0u64;
+    let mut prob = [0.0; N_SITES];
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (key, value) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault spec entry `{part}` is not key=value"))?;
+        let (key, value) = (key.trim(), value.trim());
+        if key == "seed" {
+            seed = value.parse().map_err(|_| format!("fault seed `{value}` is not a u64"))?;
+            continue;
+        }
+        let site = Site::parse(key).ok_or_else(|| {
+            let known: Vec<&str> = ALL_SITES.iter().map(|s| s.name()).collect();
+            format!("unknown fault site `{key}` (known: seed, {})", known.join(", "))
+        })?;
+        let p: f64 =
+            value.parse().map_err(|_| format!("fault probability `{value}` is not a number"))?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("fault probability {p} for `{key}` is outside [0, 1]"));
+        }
+        prob[site.idx()] = p;
+    }
+    Ok((seed, prob))
+}
+
+/// Re-sample the fault spec from [`RuntimeConfig::current`] and install
+/// it, resetting every per-site counter. Called from `set_session` and
+/// lazily on the first [`draw`]; a malformed spec logs one error line
+/// and disables injection rather than poisoning the run.
+pub fn refresh() {
+    let spec = RuntimeConfig::current().faults;
+    let mut guard = state_cell().write().unwrap();
+    match spec {
+        None => {
+            *guard = None;
+            ENABLED.store(false, Ordering::Relaxed);
+        }
+        Some(spec) => {
+            if let Some(st) = guard.as_ref() {
+                if st.spec == spec {
+                    return; // same schedule: keep the counter streams
+                }
+            }
+            match parse_spec(&spec) {
+                Ok((seed, prob)) => {
+                    log::warn!("fault injection armed: {spec}");
+                    *guard = Some(State {
+                        spec,
+                        seed,
+                        prob,
+                        counters: std::array::from_fn(|_| AtomicU64::new(0)),
+                    });
+                    ENABLED.store(true, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    log::error!("ignoring malformed fault spec `{spec}`: {e}");
+                    *guard = None;
+                    ENABLED.store(false, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// The currently armed spec string, if any (diagnostics and tests).
+pub fn active_spec() -> Option<String> {
+    init_once();
+    state_cell().read().unwrap().as_ref().map(|s| s.spec.clone())
+}
+
+/// Ask whether the next operation at `site` should fail. `None` means
+/// proceed normally; `Some(draw)` carries the decision words the facade
+/// maps onto a concrete fault. Each call consumes one tick of the
+/// site's counter stream, so decisions replay under a fixed spec.
+pub fn draw(site: Site) -> Option<Draw> {
+    init_once();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let guard = state_cell().read().unwrap();
+    let st = guard.as_ref()?;
+    let i = site.idx();
+    let p = st.prob[i];
+    if p <= 0.0 {
+        return None;
+    }
+    let c = st.counters[i].fetch_add(1, Ordering::Relaxed);
+    let h = splitmix64(splitmix64(st.seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F)) ^ c);
+    let unit = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    if unit < p {
+        Some(Draw { a: splitmix64(h ^ 0x2545_F491_4F6C_DD1D), b: splitmix64(h ^ 0x6C62_272E_07BB_0142) })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_seed_and_sites() {
+        let (seed, prob) = parse_spec("seed=7, ckpt-write=0.5,mmap-map=1").unwrap();
+        assert_eq!(seed, 7);
+        assert_eq!(prob[Site::CkptWrite.idx()], 0.5);
+        assert_eq!(prob[Site::MmapMap.idx()], 1.0);
+        assert_eq!(prob[Site::PackRead.idx()], 0.0);
+    }
+
+    #[test]
+    fn spec_rejects_unknown_sites_and_bad_probabilities() {
+        assert!(parse_spec("pack-raed=0.5").unwrap_err().contains("unknown fault site"));
+        assert!(parse_spec("pack-read=1.5").unwrap_err().contains("outside [0, 1]"));
+        assert!(parse_spec("pack-read").unwrap_err().contains("not key=value"));
+        assert!(parse_spec("seed=x").unwrap_err().contains("not a u64"));
+    }
+
+    #[test]
+    fn decision_stream_is_a_pure_function_of_seed_site_counter() {
+        // replay the decision math by hand for a few ticks and check the
+        // accept rate lands near the nominal probability
+        let (seed, prob) = parse_spec("seed=42,embed-read=0.25").unwrap();
+        let i = Site::EmbedRead.idx();
+        let mut hits = 0;
+        for c in 0..4000u64 {
+            let h = splitmix64(
+                splitmix64(seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F)) ^ c,
+            );
+            let unit = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if unit < prob[i] {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / 4000.0;
+        assert!((rate - 0.25).abs() < 0.03, "rate {rate}");
+    }
+
+    #[test]
+    fn every_site_name_round_trips() {
+        for s in ALL_SITES {
+            assert_eq!(Site::parse(s.name()), Some(s));
+        }
+    }
+}

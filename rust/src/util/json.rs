@@ -194,21 +194,18 @@ impl Json {
     }
 }
 
-/// Write `doc` to `path` atomically (temp file + rename), so a killed
-/// process never leaves a truncated document behind. The temp name embeds
-/// the process id so concurrent writers from different processes (e.g.
-/// two sweeps sharing one `--out` trajectory) cannot interleave into one
-/// temp file; last rename wins with an internally-consistent document.
-/// Shared by the sweep checkpoint store and the bench trajectory writer.
+/// Write `doc` to `path` atomically (temp file + fsync + rename + parent
+/// fsync, via [`artifact_io::publish_raw`](crate::util::artifact_io)),
+/// so neither a killed process nor a power cut can leave a truncated
+/// document behind. The temp name embeds the process id so concurrent
+/// writers from different processes (e.g. two sweeps sharing one `--out`
+/// trajectory) cannot interleave into one temp file; last rename wins
+/// with an internally-consistent document. Shared by the bench
+/// trajectory writer; the sweep checkpoint store publishes through the
+/// fault-injectable `artifact_io::publish_with` directly.
 pub fn write_atomic(path: &Path, doc: &Json) -> Result<()> {
-    let mut tmp_name = path.as_os_str().to_os_string();
-    tmp_name.push(format!(".{}.tmp", std::process::id()));
-    let tmp = std::path::PathBuf::from(tmp_name);
-    std::fs::write(&tmp, doc.to_string_pretty())
-        .with_context(|| format!("writing {}", tmp.display()))?;
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("committing {}", path.display()))?;
-    Ok(())
+    crate::util::artifact_io::publish_raw(path, doc.to_string_pretty().as_bytes())
+        .with_context(|| format!("committing {}", path.display()))
 }
 
 fn write_number(out: &mut String, n: f64) {

@@ -4,7 +4,9 @@
 //! (rand / serde / clap / env_logger), so the project builds these pieces
 //! itself — each sized to exactly what the coordinator needs.
 
+pub mod artifact_io;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod logging;
 pub mod pool;

@@ -1,0 +1,339 @@
+//! Chaos suite for the fault-injection harness (ISSUE 10 acceptance):
+//!
+//! * the facade's injected faults behave as specified — transients are
+//!   retried to success, torn writes never touch the destination,
+//!   flipped bytes replay bitwise under a fixed schedule
+//! * a smoke sweep run under committed fault schedules produces
+//!   `deterministic_json` output bitwise-identical to a fault-free run
+//!   (faults cost retries and recomputation, never results)
+//! * corrupt artifacts (flipped pack shards) are detected and fail loud
+//!   with the offending path — never silently loaded
+//! * the mmap degradation ladder (mmap → pread → resident) yields
+//!   bitwise-identical features at every rung
+//! * a panicking sweep cell becomes a failed-cell record while the rest
+//!   of the grid completes
+//!
+//! The fault injector is process-global (armed via the
+//! `RuntimeConfig::faults` session knob), so every test here serializes
+//! on one mutex and disarms on drop — including on panic.
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::Result;
+use crest::api::{Method, MethodRegistry, MethodSpec, SourceCtx};
+use crest::coordinator::sources::BatchSource;
+use crest::data::shard::{load_packed_splits, pack_splits};
+use crest::data::{generate, StoreFallback, SynthSpec};
+use crest::report::aggregate_markdown;
+use crest::runtime_config::{set_session, RuntimeConfig};
+use crest::sweep::{self, SweepGrid, SweepOutcome, SweepSpec};
+use crest::util::artifact_io::{self, FaultKind, READ_STRICT, WRITE_STRICT};
+use crest::util::faults::Site;
+use crest::util::rng::Rng;
+
+/// Serializes every test in this binary: the fault schedule is
+/// process-global session state.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Lock held + session config installed; disarms everything on drop
+/// (also when the owning test panics).
+struct Armed(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Armed {
+    fn with(rc: RuntimeConfig) -> Armed {
+        let g = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        set_session(rc);
+        Armed(g)
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        set_session(RuntimeConfig::default());
+    }
+}
+
+/// Arm a fault schedule (counters reset: the previous drop cleared the
+/// injector state, so an identical spec string replays from tick 0).
+fn arm(spec: &str) -> Armed {
+    Armed::with(RuntimeConfig { faults: Some(spec.to_string()), ..Default::default() })
+}
+
+/// Hold the lock with injection off (for fault-free baselines and tests
+/// that must not race an armed sibling).
+fn arm_none() -> Armed {
+    Armed::with(RuntimeConfig::default())
+}
+
+fn tdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("crest-faults-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// --------------------------------------------------------- facade behavior
+
+#[test]
+fn transient_injection_retries_to_success_and_round_trips() {
+    let _a = arm("seed=3,ckpt-write=1.0,ckpt-read=1.0");
+    let d = tdir("transient");
+    for i in 0..8usize {
+        let p = d.join(format!("a{i}.bin"));
+        let payload: Vec<u8> = (0..100 + i).map(|v| (v * 7 + i) as u8).collect();
+        // probability 1.0 + WRITE_STRICT menu: every publish fails its
+        // first attempt with an injected Interrupted and must retry
+        artifact_io::publish_with(Site::CkptWrite, &p, &payload, WRITE_STRICT).unwrap();
+        // READ_STRICT menu: every read is hit by a transient or a short
+        // first chunk; either way the caller sees the full payload
+        let back = artifact_io::read_with(Site::CkptRead, &p, READ_STRICT).unwrap();
+        assert_eq!(back, payload, "attempt {i}");
+    }
+    let residue: Vec<_> = artifact_io::read_dir_sorted(&d)
+        .unwrap()
+        .into_iter()
+        .filter(|p| p.to_string_lossy().ends_with(".tmp"))
+        .collect();
+    assert!(residue.is_empty(), "tmp residue after retried publishes: {residue:?}");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn torn_write_fails_loud_and_never_touches_the_destination() {
+    let _a = arm("seed=11,ckpt-write=1.0");
+    let d = tdir("torn");
+    let p = d.join("cell.json");
+    let err = artifact_io::publish_with(Site::CkptWrite, &p, b"full payload", &[FaultKind::Torn])
+        .unwrap_err();
+    assert!(err.to_string().contains("torn"), "{err}");
+    assert!(!p.exists(), "a torn publish must leave the destination untouched");
+    // the same schedule keeps firing, but WRITE_STRICT only offers the
+    // recoverable transient kind: the next publish lands cleanly over
+    // the crash debris
+    artifact_io::publish_with(Site::CkptWrite, &p, b"second try", WRITE_STRICT).unwrap();
+    assert_eq!(std::fs::read(&p).unwrap(), b"second try");
+    std::fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn flip_injection_replays_bitwise_under_a_fixed_schedule() {
+    let d = tdir("flip");
+    let p = d.join("entry.bin");
+    std::fs::write(&p, vec![0u8; 256]).unwrap();
+    let run = || -> Vec<Vec<u8>> {
+        (0..4)
+            .map(|_| artifact_io::read_with(Site::EmbedRead, &p, &[FaultKind::FlipByte]).unwrap())
+            .collect()
+    };
+    let first = {
+        let _a = arm("seed=5,embed-read=1.0");
+        run()
+    };
+    let second = {
+        let _a = arm("seed=5,embed-read=1.0");
+        run()
+    };
+    assert_eq!(first, second, "identical schedule must replay the same flips bitwise");
+    for (i, b) in first.iter().enumerate() {
+        assert_eq!(b.len(), 256);
+        assert!(b.iter().any(|&x| x != 0), "read {i} was not flipped");
+    }
+    std::fs::remove_dir_all(&d).ok();
+}
+
+// ------------------------------------------------------- sweep under chaos
+
+/// The acceptance grid: smoke × {crest, random} × seeds {1, 2} @ 10%.
+fn smoke_spec(dir: Option<PathBuf>, jobs: usize) -> SweepSpec {
+    let grid = SweepGrid {
+        variants: vec!["smoke".to_string()],
+        methods: vec![Method::crest(), Method::random()],
+        seeds: vec![1, 2],
+        budgets: vec![0.1],
+    };
+    let mut spec = SweepSpec::new(grid, 2);
+    spec.checkpoint_dir = dir;
+    spec.jobs = jobs;
+    spec
+}
+
+/// Bitwise fingerprint of a sweep's deterministic content.
+fn fingerprint(outcome: &SweepOutcome) -> Vec<String> {
+    let mut out: Vec<String> = outcome
+        .cells
+        .iter()
+        .map(|c| format!("{}\n{}", c.key.label(), c.report.deterministic_json().to_string_pretty()))
+        .collect();
+    out.push(aggregate_markdown(&outcome.rows));
+    out.extend(outcome.rows.iter().map(|r| r.to_json().to_string_pretty()));
+    out
+}
+
+#[test]
+fn checkpoint_chaos_schedule_preserves_sweep_results_bitwise() {
+    let baseline = {
+        let _a = arm_none();
+        sweep::run(&smoke_spec(None, 1)).unwrap()
+    };
+    let dir = tdir("ckpt-chaos");
+    // torn/transient saves, flipped/short/transient loads — every kind
+    // the checkpoint path can absorb, at aggressive rates
+    let sched = "seed=7,ckpt-write=0.6,ckpt-read=0.6";
+    let (fresh, resumed) = {
+        let _a = arm(sched);
+        let fresh = sweep::run_collect(&smoke_spec(Some(dir.clone()), 1)).unwrap();
+        let resumed = sweep::run_collect(&smoke_spec(Some(dir.clone()), 1)).unwrap();
+        (fresh, resumed)
+    };
+    assert!(fresh.failed.is_empty(), "{:?}", fresh.failed);
+    assert!(resumed.failed.is_empty(), "{:?}", resumed.failed);
+    assert_eq!(fresh.cells.len(), 4);
+    assert_eq!(resumed.cells.len(), 4);
+    assert_eq!(
+        fingerprint(&fresh),
+        fingerprint(&baseline),
+        "fresh sweep under checkpoint chaos diverged"
+    );
+    assert_eq!(
+        fingerprint(&resumed),
+        fingerprint(&baseline),
+        "resumed sweep under checkpoint chaos diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn embed_cache_chaos_never_changes_reports() {
+    let baseline = {
+        let _a = arm_none();
+        sweep::run(&smoke_spec(None, 1)).unwrap()
+    };
+    let cache = tdir("embed-chaos");
+    let under = {
+        let _a = Armed::with(RuntimeConfig {
+            faults: Some("seed=13,embed-write=0.8,embed-read=0.8".to_string()),
+            embed_cache: Some(cache.clone()),
+            ..Default::default()
+        });
+        sweep::run(&smoke_spec(None, 1)).unwrap()
+    };
+    assert_eq!(
+        fingerprint(&under),
+        fingerprint(&baseline),
+        "embed-cache chaos changed a deterministic report"
+    );
+    std::fs::remove_dir_all(&cache).ok();
+}
+
+// -------------------------------------------------- degradation + detection
+
+#[test]
+fn mmap_refusal_ladder_yields_identical_features() {
+    let base = SynthSpec::preset("smoke", 21).unwrap();
+    let spec = SynthSpec { n_train: 96, n_val: 24, n_test: 24, ..base };
+    let mem = generate(&spec);
+    let root = tdir("mmap-ladder");
+    pack_splits(&mem, &root, 40).unwrap();
+
+    let clean = {
+        let _a = arm_none();
+        load_packed_splits(&root).unwrap()
+    };
+    assert_eq!(clean.train.store_kind(), "mmap");
+    // every map attempt refused -> pread rung
+    let pread = {
+        let _a = arm("seed=1,mmap-map=1.0");
+        load_packed_splits(&root).unwrap()
+    };
+    // every map attempt refused + CREST_STORE_FALLBACK=mem -> resident rung
+    let resident = {
+        let _a = Armed::with(RuntimeConfig {
+            faults: Some("seed=1,mmap-map=1.0".to_string()),
+            store_fallback: Some(StoreFallback::Mem),
+            ..Default::default()
+        });
+        load_packed_splits(&root).unwrap()
+    };
+    for (name, degraded) in [("pread", &pread), ("resident", &resident)] {
+        for (split, a, b) in [
+            ("train", &clean.train, &degraded.train),
+            ("val", &clean.val, &degraded.val),
+            ("test", &clean.test, &degraded.test),
+        ] {
+            assert_eq!(
+                a.to_mat().data,
+                b.to_mat().data,
+                "{name} rung diverged from mmap on the {split} split"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn flipped_pack_shard_is_detected_and_names_the_path() {
+    let _a = arm_none();
+    let base = SynthSpec::preset("smoke", 22).unwrap();
+    let spec = SynthSpec { n_train: 64, n_val: 16, n_test: 16, ..base };
+    let mem = generate(&spec);
+    let root = tdir("pack-flip");
+    pack_splits(&mem, &root, 32).unwrap();
+
+    let shard = root.join("train").join("shard_00000.bin");
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x04; // one flipped bit in the f32 payload
+    std::fs::write(&shard, &bytes).unwrap();
+
+    let err = load_packed_splits(&root).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("CRC-32 mismatch"), "flip must be caught by CRC, got: {text}");
+    assert!(text.contains("shard_00000.bin"), "error must name the shard, got: {text}");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------- panicking cell
+
+fn make_panic<'a>(_ctx: SourceCtx<'a>, _rng: Rng) -> Result<Box<dyn BatchSource + 'a>> {
+    panic!("injected panic in batch-source factory")
+}
+
+#[test]
+fn panicking_cell_is_recorded_while_the_grid_completes() {
+    let _a = arm_none();
+    let method = MethodRegistry::register(MethodSpec {
+        name: "panic-cell".to_string(),
+        aliases: vec![],
+        help: "test method: panics at construction".to_string(),
+        reference: false,
+        full_horizon_schedule: false,
+        coreset_lr_scale: false,
+        factory: Box::new(make_panic),
+    })
+    .unwrap();
+    let grid = SweepGrid {
+        variants: vec!["smoke".to_string()],
+        methods: vec![method, Method::crest()],
+        seeds: vec![1],
+        budgets: vec![0.1],
+    };
+    let mut spec = SweepSpec::new(grid, 2);
+    spec.jobs = 1;
+
+    let outcome = sweep::run_collect(&spec).unwrap();
+    assert_eq!(outcome.failed.len(), 1, "exactly the panicking cell fails");
+    assert!(outcome.failed[0].key.label().contains("panic-cell"));
+    assert!(
+        outcome.failed[0].error.contains("panicked") && outcome.failed[0].error.contains("factory"),
+        "failure record must carry the panic text: {}",
+        outcome.failed[0].error
+    );
+    assert_eq!(outcome.cells.len(), 1, "the sibling cell still completes");
+    assert!(outcome.cells[0].executed);
+    assert_eq!(outcome.cells[0].key.label(), "smoke/crest/seed=1/budget=0.1");
+
+    // the strict entry point surfaces the same failure as an error
+    let err = sweep::run(&spec).unwrap_err();
+    assert!(format!("{err:#}").contains("sweep cell(s) failed"), "{err:#}");
+}

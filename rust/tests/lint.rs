@@ -80,6 +80,24 @@ fn env_hygiene_documented_name_in_registered_reader_is_quiet() {
 }
 
 #[test]
+fn io_facade_fires_once_per_offending_line() {
+    // line 6 (`std::fs::File::open`) matches two tokens but dedupes;
+    // line 15's metadata probe carries a justified trailing allow
+    assert_eq!(
+        findings("rust/src/sweep/store.rs", "io_facade_bad.rs"),
+        [(6, "IO-FACADE"), (11, "IO-FACADE")]
+    );
+}
+
+#[test]
+fn io_facade_outside_artifact_modules_is_quiet() {
+    // the facade itself, and files not in the exact artifact list, may
+    // use raw std::fs freely
+    assert!(findings("rust/src/util/artifact_io.rs", "io_facade_bad.rs").is_empty());
+    assert!(findings("rust/src/data/synth.rs", "io_facade_bad.rs").is_empty());
+}
+
+#[test]
 fn isa_dispatch_fires_outside_kernel() {
     let d = findings("rust/src/util/fixture.rs", "isa_bad.rs");
     assert_eq!(d, [(4, "ISA-DISPATCH"), (10, "ISA-DISPATCH")]);

@@ -1,0 +1,16 @@
+// Golden fixture: raw `std::fs` call-sites in an artifact module.
+// Linted under the virtual path `rust/src/sweep/store.rs`; must trip
+// IO-FACADE once per offending line — `std::fs::File::open` on line 6
+// matches both `fs::` and `File::` but dedupes to a single finding.
+fn read_raw(path: &std::path::Path) -> std::io::Result<Vec<u8>> {
+    let _f = std::fs::File::open(path)?;
+    Ok(Vec::new())
+}
+
+fn publish_raw(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    std::fs::write(path, bytes)
+}
+
+fn probe(path: &std::path::Path) -> bool {
+    std::fs::metadata(path).is_ok() // lint:allow(IO-FACADE) metadata probe: no payload bytes move
+}

@@ -257,7 +257,23 @@ ENV_READERS = [
 ]
 ENV_READS = ("var", "var_os", "vars", "vars_os")
 ENV_WRITES = ("set_var", "remove_var")
-ALLOWABLE = ["DET-CLOCK", "DET-FMA", "DET-HASH", "ENV-HYGIENE", "ISA-DISPATCH", "UNSAFE-SCOPE"]
+ARTIFACT_MODULES = [
+    "rust/src/coreset/embed_cache.rs",
+    "rust/src/data/cache.rs",
+    "rust/src/data/shard.rs",
+    "rust/src/data/store.rs",
+    "rust/src/sweep/store.rs",
+]
+IO_FACADE_SCOPES = ["rust/src/util/artifact_io.rs"]
+ALLOWABLE = [
+    "DET-CLOCK",
+    "DET-FMA",
+    "DET-HASH",
+    "ENV-HYGIENE",
+    "IO-FACADE",
+    "ISA-DISPATCH",
+    "UNSAFE-SCOPE",
+]
 
 
 def reason_ok(reason):
@@ -540,6 +556,22 @@ def lint_file(rel, src, readme):
         for name in crest_names(t.text):
             if name not in readme and not cx.suppressed("ENV-HYGIENE", t.line):
                 push(t.line, "ENV-HYGIENE", f"`{name}` not documented in README.md")
+
+    # IO-FACADE
+    if in_modules(rel, ARTIFACT_MODULES) and rel not in IO_FACADE_SCOPES:
+        last = 0
+        for i, t in enumerate(toks):
+            if t.kind != IDENT or t.text not in ("fs", "File"):
+                continue
+            if not (i + 1 < len(toks) and toks[i + 1].kind == PUNCT and toks[i + 1].text == "::"):
+                continue
+            line = t.line
+            if cx.use_tok[i] or cx.attr_tok[i] or cx.is_test_line(line):
+                continue
+            if line == last or cx.suppressed("IO-FACADE", line):
+                continue
+            last = line
+            push(line, "IO-FACADE", f"raw `{t.text}::` call bypasses the artifact_io facade")
 
     # ISA-DISPATCH
     in_kernel = rel == "rust/src/kernel.rs"
